@@ -1,0 +1,46 @@
+//! FP near-sensor-analytics suite (§IV-A, Table V, Fig. 8): run all
+//! eight NSAA kernels on the simulated 8-core cluster in FP32 and packed
+//! FP16, and print the Fig. 8 series with the paper anchors inline.
+//!
+//! Run with: `cargo run --release --example fp_nsaa`
+
+use vega::coordinator::{self, NSAA_KERNELS};
+use vega::kernels::fp_matmul::FpWidth;
+use vega::power;
+
+fn main() {
+    println!("=== Vega FP NSAA suite (8 cores, shared FPUs) ===\n");
+    println!(
+        "{:<8} {:>10} {:>10} {:>12} {:>8} {:>9}",
+        "kernel", "MOPS@LV", "MOPS@HV", "MOPS/mW@LV", "FP int%", "f16 gain"
+    );
+    let paper_intensity = [57.0, 55.0, 28.0, 63.0, 64.0, 46.0, 83.0, 35.0];
+    let mut avg_gain = 0.0;
+    for (name, paper_fi) in NSAA_KERNELS.iter().zip(paper_intensity) {
+        let k32 = coordinator::bench_nsaa_kernel(name, FpWidth::F32);
+        let k16 = coordinator::bench_nsaa_kernel(name, FpWidth::F16x2);
+        let gain = (k32.stats.cycles as f64 / k32.ops as f64)
+            / (k16.stats.cycles as f64 / k16.ops as f64);
+        avg_gain += gain;
+        let (_, eff) = coordinator::efficiency(&k32, power::LV, 0.0);
+        println!(
+            "{:<8} {:>10.0} {:>10.0} {:>12.2} {:>5.0}/{:<3.0} {:>8.2}x",
+            name,
+            k32.gops_at(power::LV.f_cl) * 1e3,
+            k32.gops_at(power::HV.f_cl) * 1e3,
+            eff,
+            k32.fp_intensity() * 100.0,
+            paper_fi,
+            gain
+        );
+    }
+    avg_gain /= NSAA_KERNELS.len() as f64;
+    println!(
+        "\naverage FP16 vectorization gain: {avg_gain:.2}x (paper: 1.46x)"
+    );
+    println!(
+        "FPU contention on the MATMUL run: {:.1}% of issues",
+        coordinator::bench_fp_matmul(FpWidth::F32, 8).stats.fpu_contention_rate * 100.0
+    );
+    println!("\nfp_nsaa OK");
+}

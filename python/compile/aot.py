@@ -1,0 +1,77 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for Rust.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True, unwrapped with to_tuple1() on the
+Rust side. See /opt/xla-example/gen_hlo.py.
+
+Also writes artifacts/manifest.txt describing each artifact's signature so
+the Rust runtime can construct correctly-shaped literals:
+
+    name;in=s8[64,64],s8[64,64];out=s32[64,64]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import AOT_ENTRIES
+
+_DTYPE_NAMES = {
+    "int8": "s8",
+    "int32": "s32",
+    "float32": "f32",
+    "float16": "f16",
+    "bfloat16": "bf16",
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(structs) -> str:
+    parts = []
+    for s in structs:
+        dt = _DTYPE_NAMES[str(s.dtype)]
+        parts.append(f"{dt}[{','.join(str(d) for d in s.shape)}]")
+    return ",".join(parts)
+
+
+def lower_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    for name, fn, args in AOT_ENTRIES:
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        out_structs = jax.eval_shape(fn, *args)
+        manifest_lines.append(f"{name};in={_sig(args)};out={_sig(out_structs)}")
+        print(f"  {name}: {len(text)} chars -> {path}")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return manifest_lines
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    lines = lower_all(args.out_dir)
+    print(f"wrote {len(lines)} artifacts + manifest to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .hwce_conv import hwce_conv3x3, hwce_conv5x5  # noqa: F401
+from .matmul import matmul, matmul_f32, matmul_int8  # noqa: F401

@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernel: the HWCE 3x3 convolution, re-thought for TPU.
+
+The silicon HWCE (Vega, JSSC'21, Fig. 4) is a weight-stationary 3x3
+convolver: three 3x3 filters live in a weight buffer, an input line buffer
+materialises a sliding window, and carry-save reduction trees perform 27
+MACs/cycle with partial-sum FIFOs accumulating across input channels.
+
+TPU adaptation (DESIGN.md section 6 "Hardware-Adaptation"):
+  * the line buffer becomes a VMEM-resident input tile (each input element
+    is reused 9x once on-chip, exactly the reuse the line buffer buys);
+  * the 27-MAC reduction tree becomes nine shifted (H*W, Cin) x (Cin, Cout)
+    contractions, i.e. the sum-of-products is performed by the MXU with the
+    weights held stationary across the whole output tile;
+  * the partial-sum FIFO across input-channel passes becomes the innermost
+    grid dimension: the output block is revisited per Cin tile and
+    accumulated in place;
+  * multi-precision 4/8/16-bit operands with 16-bit upscaling before the
+    CSA tree becomes int8/int16 operands with int32 accumulation.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel is lowered to plain HLO (see aot_recipe).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv3x3_kernel(x_ref, w_ref, o_ref, *, accum_dtype):
+    """One (Cout-tile, Cin-tile) grid step of the HWCE dataflow.
+
+    x_ref: (H+2, W+2, Cin_blk)  pre-padded input tile (the "line buffer")
+    w_ref: (3, 3, Cin_blk, Cout_blk)  stationary weights
+    o_ref: (H, W, Cout_blk)  accumulator tile (partial-sum FIFO)
+    """
+    ci = pl.program_id(1)
+    h, w, co = o_ref.shape
+    x = x_ref[...].astype(accum_dtype)
+    acc = jnp.zeros((h * w, co), accum_dtype)
+    # Nine shifted contractions == the 3x3 reduction tree, weight-stationary.
+    for dy in range(3):
+        for dx in range(3):
+            patch = x[dy : dy + h, dx : dx + w, :].reshape(h * w, -1)
+            k = w_ref[dy, dx, :, :].astype(accum_dtype)
+            acc = acc + jnp.dot(patch, k, preferred_element_type=accum_dtype)
+    acc = acc.reshape(h, w, co)
+
+    @pl.when(ci == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(ci != 0)
+    def _accum():
+        o_ref[...] += acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_ci", "block_co", "accum_dtype")
+)
+def hwce_conv3x3(x, w, *, block_ci=None, block_co=None, accum_dtype=jnp.int32):
+    """HWCE-style 3x3 valid convolution.
+
+    Args:
+      x: (H+2, W+2, Cin) pre-padded input (int8/int16/float32). Pre-padding
+         mirrors the silicon flow where DORY pads tiles in L2.
+      w: (3, 3, Cin, Cout) filters.
+      block_ci / block_co: channel tile sizes (default: whole axis).
+      accum_dtype: accumulator type; int32 for integer operands (the HWCE
+         upscales sub-words to 16 bit and accumulates wider).
+
+    Returns:
+      (H, W, Cout) feature map in accum_dtype (requantisation is a separate
+      step, as in PULP-NN / the HWCE's normalisation+shift output stage).
+    """
+    hp, wp, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert (kh, kw) == (3, 3), "HWCE supports 3x3 filters (5x5 via compose)"
+    assert wcin == cin, f"Cin mismatch: {wcin} != {cin}"
+    h, wout = hp - 2, wp - 2
+    block_ci = cin if block_ci is None else block_ci
+    block_co = cout if block_co is None else block_co
+    assert cin % block_ci == 0 and cout % block_co == 0
+    n_ci, n_co = cin // block_ci, cout // block_co
+
+    return pl.pallas_call(
+        functools.partial(_conv3x3_kernel, accum_dtype=accum_dtype),
+        grid=(n_co, n_ci),  # ci innermost: output block revisited+accumulated
+        in_specs=[
+            pl.BlockSpec((hp, wp, block_ci), lambda co, ci: (0, 0, ci)),
+            pl.BlockSpec((3, 3, block_ci, block_co), lambda co, ci: (0, 0, ci, co)),
+        ],
+        out_specs=pl.BlockSpec((h, wout, block_co), lambda co, ci: (0, 0, co)),
+        out_shape=jax.ShapeDtypeStruct((h, wout, cout), accum_dtype),
+        interpret=True,
+    )(x, w)
+
+
+def hwce_conv5x5(x, w, *, accum_dtype=jnp.int32):
+    """5x5 convolution composed from the 3x3 datapath.
+
+    The silicon HWCE reconfigures its three sum-of-products units into one
+    5x5 unit; here we decompose the 5x5 filter into 3x3 sub-filters applied
+    at offsets (zero-padding the remainder), which keeps the single 3x3
+    kernel as the only compute primitive, like the hardware.
+    """
+    hp, wp, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert (kh, kw) == (5, 5)
+    h, wout = hp - 4, wp - 4
+    # Pad 5x5 to 6x6 and split into four 3x3 taps; the input gains one
+    # zero row/col at the far edges so every tap's window is in range (the
+    # out-of-range elements only ever multiply the zero filter padding).
+    w6 = jnp.pad(w, ((0, 1), (0, 1), (0, 0), (0, 0)))
+    xp = jnp.pad(x, ((0, 1), (0, 1), (0, 0)))
+    out = jnp.zeros((h, wout, cout), accum_dtype)
+    for oy in range(2):
+        for ox in range(2):
+            sub = w6[3 * oy : 3 * oy + 3, 3 * ox : 3 * ox + 3]
+            xs = xp[3 * oy : 3 * oy + h + 2, 3 * ox : 3 * ox + wout + 2, :]
+            out = out + hwce_conv3x3(xs, sub, accum_dtype=accum_dtype)
+    return out

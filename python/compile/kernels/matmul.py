@@ -1,0 +1,74 @@
+"""Layer-1 Pallas kernel: tiled matrix multiplication (PULP-NN analogue).
+
+The paper's software DNN path and all of Fig. 6 run on PULP-NN-style
+register-tiled matmul inner loops (4x2 output tiles, SIMD dot products,
+int32 accumulation). The TPU analogue is a block-tiled matmul with the K
+dimension as the innermost accumulation grid axis; int8 operands accumulate
+into int32 exactly like the pv.sdotsp.b instruction chain.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, accum_dtype):
+    k = pl.program_id(2)
+    a = a_ref[...].astype(accum_dtype)
+    b = b_ref[...].astype(accum_dtype)
+    prod = jnp.dot(a, b, preferred_element_type=accum_dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = prod
+
+    @pl.when(k != 0)
+    def _accum():
+        o_ref[...] += prod
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "accum_dtype")
+)
+def matmul(a, b, *, block_m=None, block_n=None, block_k=None,
+           accum_dtype=jnp.int32):
+    """Tiled matmul: (M, K) x (K, N) -> (M, N) in accum_dtype.
+
+    Defaults tile the full axis (single grid step per dimension), which is
+    right for the small AOT example shapes; larger shapes pick MXU-aligned
+    tiles.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch: {k} != {k2}"
+    block_m = m if block_m is None else block_m
+    block_n = n if block_n is None else block_n
+    block_k = k if block_k is None else block_k
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, accum_dtype=accum_dtype),
+        grid=(m // block_m, n // block_n, k // block_k),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), accum_dtype),
+        interpret=True,
+    )(a, b)
+
+
+def matmul_int8(a, b, **kw):
+    """int8 x int8 -> int32 (the PULP-NN dot-product path)."""
+    assert a.dtype == jnp.int8 and b.dtype == jnp.int8
+    return matmul(a, b, accum_dtype=jnp.int32, **kw)
+
+
+def matmul_f32(a, b, **kw):
+    """f32 x f32 -> f32 (the shared-FPU FMA path)."""
+    return matmul(a, b, accum_dtype=jnp.float32, **kw)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness anchor).
+
+Every Pallas kernel in this package must agree exactly (integer) or to
+float tolerance with these references; pytest + hypothesis sweep shapes,
+dtypes and tilings against them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv3x3_ref(x, w, accum_dtype=jnp.int32):
+    """(H+2, W+2, Cin) pre-padded x, (3, 3, Cin, Cout) w -> (H, W, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(accum_dtype),
+        w.astype(accum_dtype),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=accum_dtype,
+    )
+    return out[0]
+
+
+def conv5x5_ref(x, w, accum_dtype=jnp.int32):
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(accum_dtype),
+        w.astype(accum_dtype),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=accum_dtype,
+    )
+    return out[0]
+
+
+def depthwise3x3_ref(x, w, accum_dtype=jnp.int32, stride=1):
+    """(H+2, W+2, C) pre-padded x, (3, 3, C) per-channel filters."""
+    c = x.shape[-1]
+    out = jax.lax.conv_general_dilated(
+        x[None].astype(accum_dtype),
+        w.reshape(3, 3, 1, c).astype(accum_dtype),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+        preferred_element_type=accum_dtype,
+    )
+    return out[0]
+
+
+def matmul_ref(a, b, accum_dtype=jnp.int32):
+    return jnp.matmul(
+        a.astype(accum_dtype),
+        b.astype(accum_dtype),
+        preferred_element_type=accum_dtype,
+    )
+
+
+def requantize_ref(acc, shift, zero_point=0):
+    """int32 accumulator -> int8, PULP-NN style (arithmetic right shift,
+    saturating clip) -- the HWCE 'normalisation and right-shift' stage."""
+    q = jnp.right_shift(acc, shift) + zero_point
+    return jnp.clip(q, -128, 127).astype(jnp.int8)

@@ -1,0 +1,111 @@
+"""Layer-2: the paper's DNN compute graphs in JAX, calling the L1 kernels.
+
+Vega's DNN evaluation (section IV-B) runs int8 quantized inference of
+MobileNetV2 bottlenecks and RepVGG 3x3 stages through PULP-NN (software) or
+the HWCE (hardware). These graphs are the build-time source of truth for
+the numerics: they are AOT-lowered to HLO text by aot.py and executed from
+the Rust coordinator through PJRT, where they serve as golden models for
+the simulator's functional datapaths.
+
+Quantization scheme (PULP-NN style): int8 tensors, int32 accumulation,
+requantisation by arithmetic right shift + saturating clip. ReLU is folded
+into the clip-low bound (0) of the requantisation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hwce_conv3x3, matmul_int8
+from .kernels.ref import depthwise3x3_ref
+
+
+def requantize(acc, shift, relu=True):
+    """int32 -> int8: arithmetic shift, optional fused ReLU, saturate."""
+    q = jnp.right_shift(acc, shift)
+    lo = 0 if relu else -128
+    return jnp.clip(q, lo, 127).astype(jnp.int8)
+
+
+def conv1x1_int8(x, w, shift, relu=True):
+    """Pointwise conv as the PULP-NN matmul kernel over pixels.
+
+    x: (H, W, Cin) int8; w: (Cin, Cout) int8 -> (H, W, Cout) int8.
+    """
+    h, wd, cin = x.shape
+    acc = matmul_int8(x.reshape(h * wd, cin), w)
+    return requantize(acc, shift, relu).reshape(h, wd, w.shape[1])
+
+
+def conv3x3_int8(x_padded, w, shift, relu=True):
+    """3x3 conv on the HWCE kernel + output requant stage.
+
+    x_padded: (H+2, W+2, Cin) int8; w: (3, 3, Cin, Cout) int8.
+    """
+    acc = hwce_conv3x3(x_padded, w)
+    return requantize(acc, shift, relu)
+
+
+def depthwise3x3_int8(x_padded, w, shift, relu=True):
+    """3x3 depthwise conv (not HWCE-accelerated on Vega either; the paper
+    runs MobileNetV2 depthwise layers in software on the cluster)."""
+    acc = depthwise3x3_ref(x_padded, w)
+    return requantize(acc, shift, relu)
+
+
+def _pad_hw(x):
+    return jnp.pad(x, ((1, 1), (1, 1), (0, 0)))
+
+
+def mbv2_bottleneck(x, w_exp, w_dw, w_proj, shifts, residual=True):
+    """MobileNetV2 BottleNeck (section IV-B): 1x1 expand -> 3x3 depthwise
+    -> 1x1 project, optional residual.
+
+    x: (H, W, Cin) int8
+    w_exp: (Cin, Cexp) int8; w_dw: (3, 3, Cexp) int8; w_proj: (Cexp, Cout)
+    shifts: (s_exp, s_dw, s_proj) requantisation shifts.
+    """
+    s_exp, s_dw, s_proj = shifts
+    h = conv1x1_int8(x, w_exp, s_exp, relu=True)
+    h = depthwise3x3_int8(_pad_hw(h), w_dw, s_dw, relu=True)
+    h = conv1x1_int8(h, w_proj, s_proj, relu=False)  # linear bottleneck
+    if residual:
+        acc = h.astype(jnp.int32) + x.astype(jnp.int32)
+        h = jnp.clip(acc, -128, 127).astype(jnp.int8)
+    return h
+
+
+def repvgg_block(x_padded, w3, shift):
+    """RepVGG deploy-mode block: a single reparameterised 3x3 conv + ReLU
+    (Table VII runs the A0/A1/A2 networks in this form on the HWCE)."""
+    return conv3x3_int8(x_padded, w3, shift, relu=True)
+
+
+def matmul_graph(a, b):
+    """The Fig. 6 benchmark: plain int8 matmul with int32 accumulation."""
+    return matmul_int8(a, b)
+
+
+# ----------------------------------------------------------------------
+# AOT entry points: (name, function, example argument shapes)
+# Shapes are kept small; the Rust side uses these artifacts as functional
+# golden models, not as the performance workload.
+# ----------------------------------------------------------------------
+
+def _i8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int8)
+
+
+AOT_ENTRIES = [
+    # name, fn, example args (ShapeDtypeStructs)
+    ("matmul_int8_64", lambda a, b: (matmul_graph(a, b),),
+     (_i8(64, 64), _i8(64, 64))),
+    ("hwce_conv3x3_16", lambda x, w: (hwce_conv3x3(x, w),),
+     (_i8(18, 18, 16), _i8(3, 3, 16, 16))),
+    ("repvgg_block_16", lambda x, w: (repvgg_block(x, w, 7),),
+     (_i8(18, 18, 16), _i8(3, 3, 16, 16))),
+    ("mbv2_bottleneck_14", lambda x, we, wd, wp: (mbv2_bottleneck(
+        x, we, wd, wp, (7, 7, 7), residual=True),),
+     (_i8(14, 14, 24), _i8(24, 96), _i8(3, 3, 96), _i8(96, 24))),
+]

@@ -1,0 +1,16 @@
+"""Make `compile.*` importable whether pytest runs from the repo root
+(`pytest python/tests/`) or from `python/` (the Makefile path)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+
+import hypothesis
+
+# One profile for every test module: JIT compilation on first call blows
+# the default 200 ms deadline and trips FlakyFailure.
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("ci")

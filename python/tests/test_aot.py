@@ -1,0 +1,48 @@
+"""AOT pipeline: HLO text artifacts parse, manifest is consistent."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    lines = aot.lower_all(str(out))
+    return str(out), lines
+
+
+def test_all_entries_lowered(built):
+    out, lines = built
+    assert len(lines) == len(model.AOT_ENTRIES)
+    for name, _, _ in model.AOT_ENTRIES:
+        p = os.path.join(out, f"{name}.hlo.txt")
+        assert os.path.exists(p), p
+        text = open(p).read()
+        assert text.startswith("HloModule"), text[:60]
+        assert "ENTRY" in text
+
+
+def test_manifest_format(built):
+    out, lines = built
+    manifest = open(os.path.join(out, "manifest.txt")).read().strip().splitlines()
+    assert manifest == lines
+    for line in manifest:
+        name, ins, outs = line.split(";")
+        assert ins.startswith("in=") and outs.startswith("out=")
+
+
+def test_matmul_artifact_signature(built):
+    out, lines = built
+    line = next(l for l in lines if l.startswith("matmul_int8_64;"))
+    assert line == "matmul_int8_64;in=s8[64,64],s8[64,64];out=s32[64,64]"
+
+
+def test_hlo_is_tupled(built):
+    """Rust unwraps with to_tuple1 — the root must be a tuple."""
+    out, _ = built
+    text = open(os.path.join(out, "matmul_int8_64.hlo.txt")).read()
+    root = [l for l in text.splitlines() if "ROOT" in l and "tuple" in l]
+    assert root, "expected ROOT tuple in entry computation"

@@ -1,0 +1,165 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal.
+
+hypothesis sweeps shapes, dtypes, tilings and data seeds; integer paths
+must match the oracle exactly, float paths to tight tolerance.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import hwce_conv3x3, hwce_conv5x5, matmul, matmul_f32, matmul_int8
+from compile.kernels import ref
+
+# hypothesis profile loaded in conftest.py
+
+
+def _rand_i8(rng, shape):
+    return jnp.asarray(rng.integers(-128, 128, size=shape, dtype=np.int64).astype(np.int8))
+
+
+def _rand_i16(rng, shape):
+    # "16-bit" HWCE operands; keep magnitudes modest so int32 accum is exact.
+    return jnp.asarray(rng.integers(-1 << 11, 1 << 11, size=shape).astype(np.int16))
+
+
+# ---------------------------------------------------------------- matmul
+
+@given(
+    m=st.sampled_from([1, 2, 4, 8, 16]),
+    k=st.sampled_from([1, 4, 8, 32]),
+    n=st.sampled_from([1, 4, 8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_int8_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand_i8(rng, (m, k)), _rand_i8(rng, (k, n))
+    got = matmul_int8(a, b)
+    want = ref.matmul_ref(a, b)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    bm=st.sampled_from([2, 4, 8]),
+    bn=st.sampled_from([2, 4, 8]),
+    bk=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_int8_tiling_invariance(bm, bn, bk, seed):
+    """Any legal tiling produces the identical result (K-accumulation)."""
+    rng = np.random.default_rng(seed)
+    a, b = _rand_i8(rng, (8, 8)), _rand_i8(rng, (8, 8))
+    got = matmul_int8(a, b, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_f32_matches_ref(seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal((16, 24), dtype=np.float32))
+    b = jnp.asarray(rng.standard_normal((24, 8), dtype=np.float32))
+    got = matmul_f32(a, b, block_k=8)
+    want = ref.matmul_ref(a, b, accum_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    a = jnp.zeros((4, 5), jnp.int8)
+    b = jnp.zeros((4, 4), jnp.int8)
+    with pytest.raises(AssertionError):
+        matmul_int8(a, b)
+
+
+# ---------------------------------------------------------------- conv3x3
+
+@given(
+    h=st.sampled_from([1, 2, 4, 8]),
+    w=st.sampled_from([1, 4, 8]),
+    cin=st.sampled_from([1, 4, 8, 16]),
+    cout=st.sampled_from([1, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hwce_conv3x3_matches_ref(h, w, cin, cout, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_i8(rng, (h + 2, w + 2, cin))
+    k = _rand_i8(rng, (3, 3, cin, cout))
+    got = hwce_conv3x3(x, k)
+    want = ref.conv3x3_ref(x, k)
+    assert got.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(
+    bci=st.sampled_from([1, 2, 4, 8]),
+    bco=st.sampled_from([1, 2, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hwce_conv3x3_channel_tiling_invariance(bci, bco, seed):
+    """Cin-tile accumulation (the partial-sum FIFO analogue) is exact."""
+    rng = np.random.default_rng(seed)
+    x = _rand_i8(rng, (6, 6, 8))
+    k = _rand_i8(rng, (3, 3, 8, 8))
+    got = hwce_conv3x3(x, k, block_ci=bci, block_co=bco)
+    want = ref.conv3x3_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hwce_conv3x3_int16_operands(seed):
+    """Multi-precision path: 16-bit operands accumulate exactly (the HWCE
+    upscales all sub-words to 16 bit before the CSA tree)."""
+    rng = np.random.default_rng(seed)
+    x = _rand_i16(rng, (5, 5, 4))
+    k = _rand_i16(rng, (3, 3, 4, 4))
+    got = hwce_conv3x3(x, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref.conv3x3_ref(x, k)))
+
+
+def test_hwce_conv3x3_4bit_subrange():
+    """4-bit operands are the int8 path restricted to [-8, 7]."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-8, 8, size=(6, 6, 8)).astype(np.int8))
+    k = jnp.asarray(rng.integers(-8, 8, size=(3, 3, 8, 4)).astype(np.int8))
+    np.testing.assert_array_equal(
+        np.asarray(hwce_conv3x3(x, k)), np.asarray(ref.conv3x3_ref(x, k))
+    )
+
+
+def test_hwce_conv3x3_identity_filter():
+    """A centre-tap identity filter returns the unpadded input."""
+    rng = np.random.default_rng(1)
+    x = _rand_i8(rng, (6, 6, 3))
+    k = np.zeros((3, 3, 3, 3), np.int8)
+    for c in range(3):
+        k[1, 1, c, c] = 1
+    got = hwce_conv3x3(x, jnp.asarray(k))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(x[1:5, 1:5, :], dtype=np.int32))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_hwce_conv5x5_matches_ref(seed):
+    """5x5 mode composed from 3x3 units matches a direct 5x5 conv."""
+    rng = np.random.default_rng(seed)
+    x = _rand_i8(rng, (9, 9, 4))
+    k = _rand_i8(rng, (5, 5, 4, 4))
+    got = hwce_conv5x5(x, k)
+    want = ref.conv5x5_ref(x, k)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_linearity():
+    """conv(x, k1 + k2) == conv(x, k1) + conv(x, k2) — the RepVGG
+    reparameterisation identity that makes deploy-mode equivalent."""
+    rng = np.random.default_rng(7)
+    x = _rand_i8(rng, (6, 6, 4))
+    k1 = jnp.asarray(rng.integers(-50, 50, size=(3, 3, 4, 4)).astype(np.int8))
+    k2 = jnp.asarray(rng.integers(-50, 50, size=(3, 3, 4, 4)).astype(np.int8))
+    lhs = hwce_conv3x3(x, (k1.astype(jnp.int32) + k2).astype(jnp.int8))
+    rhs = hwce_conv3x3(x, k1) + hwce_conv3x3(x, k2)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))

@@ -1,0 +1,89 @@
+"""Cross-kernel invariants (hypothesis): algebraic properties the HWCE
+datapath and the quantization pipeline must satisfy regardless of tiling.
+These mirror the Rust-side property tests so both functional models are
+held to the same contracts."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given
+
+from compile import model
+from compile.kernels import hwce_conv3x3, matmul_int8
+from compile.kernels import ref
+
+
+def _i8(rng, shape, lim=127):
+    return jnp.asarray(rng.integers(-lim, lim + 1, size=shape).astype(np.int8))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_conv_distributes_over_input_sum(seed):
+    """conv(x1 + x2, k) == conv(x1, k) + conv(x2, k) in int32 (exact)."""
+    rng = np.random.default_rng(seed)
+    x1 = _i8(rng, (6, 6, 4), 50)
+    x2 = _i8(rng, (6, 6, 4), 50)
+    k = _i8(rng, (3, 3, 4, 4), 64)
+    xs = (x1.astype(jnp.int32) + x2.astype(jnp.int32)).astype(jnp.int8)
+    lhs = hwce_conv3x3(xs, k)
+    rhs = hwce_conv3x3(x1, k) + hwce_conv3x3(x2, k)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([-2, -1, 1, 3]))
+def test_matmul_scales_linearly(seed, scale):
+    """matmul(s*A, B) == s * matmul(A, B) for small scalars (int32 exact)."""
+    rng = np.random.default_rng(seed)
+    a = _i8(rng, (8, 8), 40)
+    b = _i8(rng, (8, 8), 40)
+    sa = (a.astype(jnp.int32) * scale).astype(jnp.int8)
+    lhs = matmul_int8(sa, b)
+    rhs = scale * matmul_int8(a, b)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_transpose_symmetry(seed):
+    """(A B)^T == B^T A^T — catches layout/indexing bugs in the kernel."""
+    rng = np.random.default_rng(seed)
+    a = _i8(rng, (8, 12))
+    b = _i8(rng, (12, 4))
+    lhs = matmul_int8(a, b).T
+    rhs = matmul_int8(b.T, a.T)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@given(seed=st.integers(0, 2**31 - 1), shift=st.integers(0, 12))
+def test_requantize_monotone(seed, shift):
+    """Requantisation preserves ordering (monotone non-decreasing)."""
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(np.sort(rng.integers(-(1 << 20), 1 << 20, size=64)).astype(np.int32))
+    q = np.asarray(model.requantize(acc, shift, relu=False)).astype(np.int64)
+    assert (np.diff(q) >= 0).all()
+
+
+@given(seed=st.integers(0, 2**31 - 1))
+def test_repvgg_reparam_requant_commutes_with_branch_merge(seed):
+    """Deploy-time RepVGG: conv with (k3 + pad(k1)) equals the merged
+    branches — the re-parameterisation the HWCE-only flow relies on."""
+    rng = np.random.default_rng(seed)
+    x = _i8(rng, (6, 6, 4), 30)
+    k3 = _i8(rng, (3, 3, 4, 4), 20)
+    k1 = _i8(rng, (1, 1, 4, 4), 20)
+    k1_padded = jnp.pad(k1, ((1, 1), (1, 1), (0, 0), (0, 0)))
+    merged = (k3.astype(jnp.int32) + k1_padded).astype(jnp.int8)
+    lhs = hwce_conv3x3(x, merged)
+    rhs = hwce_conv3x3(x, k3) + ref.conv3x3_ref(x, k1_padded)
+    np.testing.assert_array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+def test_mbv2_bottleneck_without_residual_is_composition():
+    """The bottleneck equals the explicit composition of its three stages."""
+    rng = np.random.default_rng(12)
+    x = _i8(rng, (6, 6, 8))
+    we, wd, wp = _i8(rng, (8, 32)), _i8(rng, (3, 3, 32)), _i8(rng, (32, 8))
+    out = model.mbv2_bottleneck(x, we, wd, wp, (6, 6, 6), residual=False)
+    h = model.conv1x1_int8(x, we, 6, relu=True)
+    h = model.depthwise3x3_int8(jnp.pad(h, ((1, 1), (1, 1), (0, 0))), wd, 6, relu=True)
+    want = model.conv1x1_int8(h, wp, 6, relu=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))

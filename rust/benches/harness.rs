@@ -1,0 +1,34 @@
+//! Minimal timing harness shared by the bench targets (criterion is
+//! unavailable offline — DESIGN.md §5). Reports min/mean over N runs.
+
+use std::time::Instant;
+
+pub struct Bench {
+    pub name: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: &'static str) -> Self {
+        println!("\n### bench group: {name}");
+        Self { name }
+    }
+
+    /// Time `f` over `iters` runs (after one warm-up) and print stats.
+    pub fn run<T>(&self, case: &str, iters: u32, mut f: impl FnMut() -> T) {
+        std::hint::black_box(f()); // warm-up (also primes lazy calibrations)
+        let mut times = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let min = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+        println!(
+            "{:<40} iters={iters:<3} min={:>10.3} ms  mean={:>10.3} ms",
+            format!("{}/{case}", self.name),
+            min * 1e3,
+            mean * 1e3
+        );
+    }
+}

@@ -1,0 +1,72 @@
+//! Hot-path micro-benchmarks for the §Perf optimisation pass: the
+//! simulator's own throughput (host wall-clock), per layer of the stack.
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+
+mod harness;
+
+use harness::Bench;
+use vega::cluster::{Cluster, L2_BASE};
+use vega::common::Rng;
+use vega::cwu::hypnos::perm;
+use vega::dnn::{self, PipelineConfig, StorePolicy};
+use vega::hwce::{conv3x3, Precision};
+use vega::iss::FlatMem;
+use vega::kernels::int_matmul::{self, IntWidth};
+use vega::kernels::{fp_fft, fp_matmul::FpWidth};
+use vega::mem::ecc;
+
+fn main() {
+    let b = Bench::new("hotpath");
+
+    // L3 hot path #1: the cluster cycle loop (ISS) on the PULP-NN matmul.
+    let mut rng = Rng::new(1);
+    let av: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let bv: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    b.run("iss_matmul_64x64x64_8cores", 10, || {
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        int_matmul::run(&mut cl, &mut l2, &av, &bv, 64, 64, 64, IntWidth::I8, 8)
+            .1
+            .stats
+            .cycles
+    });
+
+    // L3 hot path #2: FFT (barrier-heavy, FP-heavy).
+    let x: Vec<(f32, f32)> = (0..256).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
+    b.run("iss_fft_256_8cores", 10, || {
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        fp_fft::run(&mut cl, &mut l2, &x, FpWidth::F32, 8).1.stats.cycles
+    });
+
+    // L3 hot path #3: HWCE functional datapath.
+    let xs: Vec<i32> = (0..34 * 34 * 16).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let ws: Vec<i32> = (0..9 * 16 * 16).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    b.run("hwce_conv_32x32x16x16", 10, || {
+        conv3x3(&xs, &ws, 32, 32, 16, 16, Precision::Int8).len()
+    });
+
+    // L3 hot path #4: Hypnos IM rematerialization (permutation-bound).
+    b.run("hypnos_im_map_2048b_x100", 10, || {
+        let mut acc = 0u32;
+        for v in 0..100u32 {
+            acc ^= perm::im_map(2048, v, 16).count_ones();
+        }
+        acc
+    });
+
+    // L3 hot path #5: MRAM ECC encode/decode.
+    b.run("ecc_roundtrip_x10000", 10, || {
+        let mut acc = 0u64;
+        for i in 0..10_000u64 {
+            acc ^= ecc::decode(ecc::encode(i.wrapping_mul(0x9E3779B97F4A7C15))).value();
+        }
+        acc
+    });
+
+    // End-to-end: full MobileNetV2 pipeline model.
+    let net = dnn::mobilenet_v2();
+    b.run("pipeline_mobilenetv2", 10, || {
+        dnn::run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram)).total_cycles()
+    });
+}

@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating every paper *figure* series.
+
+mod harness;
+
+use harness::Bench;
+
+fn main() {
+    let b = Bench::new("paper_figures");
+    for id in ["fig6", "fig7", "fig8", "fig9", "fig10", "fig11"] {
+        b.run(id, 3, || vega::bench::run(id).expect("known id").len());
+    }
+    for id in ["fig6", "fig7", "fig8", "fig10", "fig11"] {
+        println!("\n{}", vega::bench::run(id).unwrap());
+    }
+}

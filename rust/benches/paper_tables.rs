@@ -1,0 +1,21 @@
+//! `cargo bench` target regenerating every paper *table* end-to-end and
+//! timing the regeneration (the content itself is printed by
+//! `vega repro <id>` and asserted by `rust/tests/paper_anchors.rs`).
+
+mod harness;
+
+use harness::Bench;
+
+fn main() {
+    let b = Bench::new("paper_tables");
+    // Table III/IV are static; included for completeness of the sweep.
+    for id in ["table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8"]
+    {
+        b.run(id, 3, || vega::bench::run(id).expect("known id").len());
+    }
+    // Print the actual reports once so `cargo bench` output doubles as a
+    // full reproduction record (captured into bench_output.txt).
+    for id in ["table1", "table5", "table6", "table7", "table8"] {
+        println!("\n{}", vega::bench::run(id).unwrap());
+    }
+}

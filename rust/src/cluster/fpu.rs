@@ -1,0 +1,166 @@
+//! The shared multi-precision FPU fabric (Fig. 3).
+//!
+//! Four FPnew-style FPUs are shared among the nine cores through a
+//! *partial interconnect with static mapping*: units 0–3 serve cores
+//! {0,4}, {1,5}, {2,6} and {3,7,8} respectively, so a core always reaches
+//! the same physical FPU. This trades sharing flexibility for a shorter
+//! critical path, keeping FP instructions single-cycle (§II-C). A
+//! stand-alone iterative DIV-SQRT unit is shared cluster-wide.
+
+/// Number of FPU slices in the cluster.
+pub const N_FPUS: usize = 4;
+
+/// The paper's static core→FPU mapping: 0&4→0, 1&5→1, 2&6→2, 3&7&8→3.
+pub fn fpu_of_core(core: usize) -> usize {
+    match core {
+        0 | 4 => 0,
+        1 | 5 => 1,
+        2 | 6 => 2,
+        3 | 7 | 8 => 3,
+        _ => core % N_FPUS,
+    }
+}
+
+/// Per-cycle FPU issue arbitration + the shared DIV-SQRT unit.
+pub struct FpuFabric {
+    /// Round-robin pointer per FPU.
+    rr: [usize; N_FPUS],
+    /// Cycle at which the DIV-SQRT unit becomes free.
+    divsqrt_free_at: u64,
+    /// Ablation switch: one private FPU per core (the design the paper
+    /// rejected for area; used by `vega repro ablations`).
+    pub private_per_core: bool,
+    pub issues: u64,
+    pub conflicts: u64,
+    pub divsqrt_conflicts: u64,
+}
+
+impl FpuFabric {
+    pub fn new() -> Self {
+        Self {
+            rr: [0; N_FPUS],
+            divsqrt_free_at: 0,
+            private_per_core: false,
+            issues: 0,
+            conflicts: 0,
+            divsqrt_conflicts: 0,
+        }
+    }
+
+    /// Arbitrate pipelined (single-cycle) FP issues: `reqs` is a list of
+    /// core ids wanting to issue this cycle. Returns granted core ids
+    /// (one per FPU).
+    pub fn arbitrate(&mut self, reqs: &[usize]) -> Vec<usize> {
+        let mut granted = Vec::with_capacity(N_FPUS);
+        self.arbitrate_into(reqs, &mut granted);
+        granted
+    }
+
+    /// As [`FpuFabric::arbitrate`] into a caller-owned buffer (§Perf).
+    pub fn arbitrate_into(&mut self, reqs: &[usize], granted: &mut Vec<usize>) {
+        granted.clear();
+        if self.private_per_core {
+            self.issues += reqs.len() as u64;
+            granted.extend_from_slice(reqs);
+            return;
+        }
+        for unit in 0..N_FPUS {
+            let start = self.rr[unit];
+            let mut count = 0usize;
+            let mut first: Option<usize> = None;
+            let mut at_or_after: Option<usize> = None;
+            for &c in reqs {
+                if fpu_of_core(c) != unit {
+                    continue;
+                }
+                count += 1;
+                if first.map_or(true, |f| c < f) {
+                    first = Some(c);
+                }
+                if c >= start && at_or_after.map_or(true, |f| c < f) {
+                    at_or_after = Some(c);
+                }
+            }
+            let Some(first) = first else { continue };
+            let winner = at_or_after.unwrap_or(first);
+            self.rr[unit] = winner + 1;
+            self.issues += 1;
+            self.conflicts += (count - 1) as u64;
+            granted.push(winner);
+        }
+    }
+
+    /// Try to claim the shared DIV-SQRT unit at cycle `now` for `latency`
+    /// cycles. Returns false (caller stalls) while the unit is busy.
+    pub fn try_divsqrt(&mut self, now: u64, latency: u64) -> bool {
+        if now < self.divsqrt_free_at {
+            self.divsqrt_conflicts += 1;
+            return false;
+        }
+        self.divsqrt_free_at = now + latency;
+        self.issues += 1;
+        true
+    }
+
+    /// Fraction of FP issues that were delayed by sharing.
+    pub fn contention_rate(&self) -> f64 {
+        let total = self.issues + self.conflicts;
+        if total == 0 {
+            0.0
+        } else {
+            self.conflicts as f64 / total as f64
+        }
+    }
+}
+
+impl Default for FpuFabric {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_mapping_matches_fig3() {
+        assert_eq!(fpu_of_core(0), 0);
+        assert_eq!(fpu_of_core(4), 0);
+        assert_eq!(fpu_of_core(1), 1);
+        assert_eq!(fpu_of_core(5), 1);
+        assert_eq!(fpu_of_core(2), 2);
+        assert_eq!(fpu_of_core(6), 2);
+        assert_eq!(fpu_of_core(3), 3);
+        assert_eq!(fpu_of_core(7), 3);
+        assert_eq!(fpu_of_core(8), 3);
+    }
+
+    #[test]
+    fn paired_cores_conflict() {
+        let mut f = FpuFabric::new();
+        let g = f.arbitrate(&[0, 4]); // same FPU
+        assert_eq!(g.len(), 1);
+        assert_eq!(f.conflicts, 1);
+        // different FPUs: both granted
+        let g = f.arbitrate(&[0, 1]);
+        assert_eq!(g.len(), 2);
+    }
+
+    #[test]
+    fn eight_cores_four_grants() {
+        let mut f = FpuFabric::new();
+        let g = f.arbitrate(&[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_eq!(g.len(), 4);
+        assert_eq!(f.conflicts, 4);
+    }
+
+    #[test]
+    fn divsqrt_blocks_while_busy() {
+        let mut f = FpuFabric::new();
+        assert!(f.try_divsqrt(0, 11));
+        assert!(!f.try_divsqrt(5, 11));
+        assert!(f.try_divsqrt(11, 15));
+        assert_eq!(f.divsqrt_conflicts, 1);
+    }
+}

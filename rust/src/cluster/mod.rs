@@ -1,0 +1,444 @@
+//! The 9-core parallel compute cluster (§II-C) and its cycle-level driver.
+//!
+//! Nine RI5CY cores share a 16-bank word-interleaved 128 kB L1 TCDM behind
+//! a 1-cycle logarithmic interconnect, four statically-mapped FPUs, a
+//! shared DIV-SQRT unit, a hierarchical instruction cache, an event unit
+//! for barriers, and a cluster DMA to L2. The driver advances all cores in
+//! lock-step one cycle at a time, arbitrating TCDM banks and FPU issue
+//! slots each cycle — contention is *emergent*, not assumed.
+
+pub mod dma;
+pub mod event_unit;
+pub mod fpu;
+pub mod tcdm;
+
+pub use dma::{ClusterDma, DmaJob};
+pub use event_unit::EventUnit;
+pub use fpu::{fpu_of_core, FpuFabric, N_FPUS};
+pub use tcdm::{Tcdm, TCDM_BANKS, TCDM_BASE, TCDM_SIZE};
+
+use crate::isa::inst::{FpOp, Inst};
+use crate::isa::{Program, Reg};
+use crate::iss::{Core, CoreState, CoreStats, FlatMem, Intent, Memory};
+
+/// Cores in the cluster: 8 compute + 1 orchestrator (core 8, larger I$).
+pub const N_CORES: usize = 9;
+
+/// L2 as seen from the cluster (through the AXI master port).
+pub const L2_BASE: u32 = 0x1C00_0000;
+pub const L2_SIZE: usize = (1536 + 64) * 1024;
+
+/// Extra cycles for a cluster-side access that misses TCDM and crosses
+/// the dual-clock FIFO + SoC interconnect into L2.
+const CLUSTER_TO_L2_LATENCY: u64 = 8;
+
+/// Combined cluster-visible memory: TCDM + L2 window.
+pub struct ClusterMemView<'a> {
+    pub tcdm: &'a mut FlatMem,
+    pub l2: &'a mut FlatMem,
+}
+
+impl Memory for ClusterMemView<'_> {
+    fn load(&mut self, addr: u32, size: crate::isa::MemSize) -> u32 {
+        if Tcdm::contains(addr) {
+            self.tcdm.load(addr, size)
+        } else {
+            self.l2.load(addr, size)
+        }
+    }
+
+    fn store(&mut self, addr: u32, size: crate::isa::MemSize, value: u32) {
+        if Tcdm::contains(addr) {
+            self.tcdm.store(addr, size, value)
+        } else {
+            self.l2.store(addr, size, value)
+        }
+    }
+}
+
+/// Aggregated result of one cluster run.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Wall-clock cluster cycles (barrier-to-halt of the slowest core).
+    pub cycles: u64,
+    pub per_core: Vec<CoreStats>,
+    /// Sums of work counters across cores (cycles = max).
+    pub total: CoreStats,
+    pub tcdm_conflict_rate: f64,
+    pub fpu_contention_rate: f64,
+    pub barrier_gated_cycles: u64,
+}
+
+impl ClusterStats {
+    /// MACs/cycle equivalent given ops-per-MAC = 2 (paper convention).
+    pub fn mac_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        (self.total.int_ops as f64 / 2.0) / self.cycles as f64
+    }
+
+    pub fn flops_per_cycle(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.total.flops as f64 / self.cycles as f64
+    }
+}
+
+/// The cluster fabric.
+pub struct Cluster {
+    pub cores: Vec<Core>,
+    pub tcdm: Tcdm,
+    pub fpus: FpuFabric,
+    pub dma: ClusterDma,
+    pub event_unit: EventUnit,
+    cycle: u64,
+}
+
+impl Cluster {
+    pub fn new() -> Self {
+        Self {
+            cores: (0..N_CORES).map(Core::new).collect(),
+            tcdm: Tcdm::new(),
+            fpus: FpuFabric::new(),
+            dma: ClusterDma::new(),
+            event_unit: EventUnit::new(N_CORES),
+            cycle: 0,
+        }
+    }
+
+    /// Run `prog` on cores `0..n_active` to completion (all halt).
+    ///
+    /// Every core runs the same instruction stream, parameterised by its
+    /// initial registers from `init(core_id)` — the SPMD model of PULP
+    /// kernels. `l2` is the cluster's view of the SoC L2.
+    pub fn run_program(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        l2: &mut FlatMem,
+        init: impl Fn(usize) -> Vec<(Reg, u32)>,
+        max_cycles: u64,
+    ) -> ClusterStats {
+        assert!(n_active >= 1 && n_active <= N_CORES);
+        self.tcdm.grants = 0;
+        self.tcdm.conflicts = 0;
+        let private_fpus = self.fpus.private_per_core;
+        self.fpus = FpuFabric::new();
+        self.fpus.private_per_core = private_fpus;
+        self.event_unit = EventUnit::new(n_active);
+        self.cycle = 0;
+
+        for (i, core) in self.cores.iter_mut().enumerate().take(n_active) {
+            core.reset(prog.insts.len());
+            for (r, v) in init(i) {
+                core.set_reg(r, v);
+            }
+        }
+        let mut warm = vec![false; prog.insts.len()];
+
+        let mut mem_reqs: Vec<(usize, crate::iss::MemReq)> = Vec::with_capacity(N_CORES);
+        let mut fp_reqs: Vec<usize> = Vec::with_capacity(N_CORES);
+        let mut ds_reqs: Vec<usize> = Vec::with_capacity(N_CORES);
+        let mut tcdm_banked: Vec<(usize, usize)> = Vec::with_capacity(N_CORES);
+        let mut granted: Vec<usize> = Vec::with_capacity(N_CORES);
+        let mut fp_granted: Vec<usize> = Vec::with_capacity(N_CORES);
+
+        loop {
+            if self.cores[..n_active].iter().all(|c| c.halted()) {
+                break;
+            }
+            assert!(
+                self.cycle < max_cycles,
+                "cluster run of {} exceeded {max_cycles} cycles",
+                prog.name
+            );
+            mem_reqs.clear();
+            fp_reqs.clear();
+            ds_reqs.clear();
+
+            for i in 0..n_active {
+                match self.cores[i].begin_cycle(prog, &mut warm) {
+                    Intent::Mem(r) => mem_reqs.push((i, r)),
+                    Intent::Fp { divsqrt: false } => fp_reqs.push(i),
+                    Intent::Fp { divsqrt: true } => ds_reqs.push(i),
+                    _ => {}
+                }
+            }
+
+            // Event unit: release the barrier when every running core waits.
+            let running = self.cores[..n_active].iter().filter(|c| !c.halted()).count();
+            let waiting = self.cores[..n_active]
+                .iter()
+                .filter(|c| c.state == CoreState::AtBarrier)
+                .count();
+            if self.event_unit.tick(waiting, running) {
+                for c in self.cores[..n_active].iter_mut() {
+                    if c.state == CoreState::AtBarrier {
+                        c.release_barrier();
+                    }
+                }
+            }
+
+            // TCDM bank arbitration (word-interleaved; one grant per bank).
+            tcdm_banked.clear();
+            tcdm_banked.extend(
+                mem_reqs
+                    .iter()
+                    .filter(|(_, r)| Tcdm::contains(r.addr))
+                    .map(|&(i, r)| (i, Tcdm::bank_of(r.addr))),
+            );
+            self.tcdm.arbitrate_into(&tcdm_banked, &mut granted);
+            for &(i, req) in &mem_reqs {
+                let mut view = ClusterMemView { tcdm: &mut self.tcdm.mem, l2 };
+                if Tcdm::contains(req.addr) {
+                    if granted.contains(&i) {
+                        self.cores[i].retire_mem(prog, &mut view);
+                    } else {
+                        self.cores[i].deny_mem();
+                    }
+                } else {
+                    // L2 access across the AXI bridge: always granted but
+                    // multi-cycle.
+                    self.cores[i].retire_mem(prog, &mut view);
+                    self.cores[i].add_busy(CLUSTER_TO_L2_LATENCY);
+                }
+            }
+
+            // FPU issue arbitration (static mapping; 1 issue/FPU/cycle).
+            self.fpus.arbitrate_into(&fp_reqs, &mut fp_granted);
+            for &i in &fp_reqs {
+                if fp_granted.contains(&i) {
+                    self.cores[i].retire_fp(prog);
+                } else {
+                    self.cores[i].deny_fpu(false);
+                }
+            }
+            // Shared DIV-SQRT unit: one op in flight cluster-wide.
+            for &i in &ds_reqs {
+                let lat = match prog.insts[self.cores[i].pc] {
+                    Inst::Fp { op: FpOp::Div, .. } => FpOp::Div.cycles(),
+                    Inst::Fp { op: FpOp::Sqrt, .. } => FpOp::Sqrt.cycles(),
+                    _ => 1,
+                };
+                if self.fpus.try_divsqrt(self.cycle, lat) {
+                    self.cores[i].retire_fp(prog);
+                } else {
+                    self.cores[i].deny_fpu(true);
+                }
+            }
+
+            self.cycle += 1;
+        }
+
+        let per_core: Vec<CoreStats> =
+            self.cores[..n_active].iter().map(|c| c.stats.clone()).collect();
+        let mut total = CoreStats::default();
+        for s in &per_core {
+            total.merge(s);
+        }
+        ClusterStats {
+            cycles: self.cycle,
+            per_core,
+            total,
+            tcdm_conflict_rate: self.tcdm.conflict_rate(),
+            fpu_contention_rate: self.fpus.contention_rate(),
+            barrier_gated_cycles: self.event_unit.gated_cycles,
+        }
+    }
+}
+
+impl Default for Cluster {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, A2, T0};
+
+    fn l2() -> FlatMem {
+        FlatMem::new(L2_BASE, L2_SIZE)
+    }
+
+    /// Each core increments its own TCDM word 100 times.
+    #[test]
+    fn spmd_private_counters() {
+        let mut a = Asm::new("counters");
+        let end = a.label();
+        a.lp_setup_imm(0, 100, end);
+        a.lw(T0, A0, 0);
+        a.addi(T0, T0, 1);
+        a.sw(T0, A0, 0);
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+
+        let mut cl = Cluster::new();
+        let mut l2 = l2();
+        // Word stride: core i owns word i -> 8 distinct banks.
+        let stats = cl.run_program(
+            &prog,
+            8,
+            &mut l2,
+            |i| vec![(A0, TCDM_BASE + (i * 4) as u32)],
+            1_000_000,
+        );
+        for i in 0..8 {
+            assert_eq!(cl.tcdm.mem.read_i32s(TCDM_BASE + (i * 4) as u32, 1)[0], 100);
+        }
+        // Distinct banks: zero conflicts.
+        assert_eq!(stats.tcdm_conflict_rate, 0.0);
+    }
+
+    /// All cores hammer the same bank: heavy contention, correctness kept.
+    #[test]
+    fn same_bank_contention_serialises() {
+        let mut a = Asm::new("hot-bank");
+        let end = a.label();
+        a.lp_setup_imm(0, 50, end);
+        a.lw(T0, A0, 0); // all cores read the same word
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+
+        let mut cl = Cluster::new();
+        let mut l2 = l2();
+        let stats = cl.run_program(&prog, 8, &mut l2, |_| vec![(A0, TCDM_BASE)], 1_000_000);
+        assert!(
+            stats.tcdm_conflict_rate > 0.5,
+            "rate = {}",
+            stats.tcdm_conflict_rate
+        );
+        // Every core still retired all its loads.
+        for s in &stats.per_core {
+            assert_eq!(s.by_class.load, 50);
+        }
+    }
+
+    /// Barrier synchronises: core 0 writes, everyone reads after barrier.
+    #[test]
+    fn barrier_orders_producer_consumer() {
+        let mut a = Asm::new("barrier");
+        let skip = a.label();
+        a.li(T0, 0xAB);
+        a.bne(A1, 0, skip); // only core 0 stores
+        a.sw(T0, A0, 0);
+        a.bind(skip);
+        a.barrier();
+        a.lw(A2, A0, 0);
+        a.halt();
+        let prog = a.finish().unwrap();
+
+        let mut cl = Cluster::new();
+        let mut l2 = l2();
+        let _ = cl.run_program(
+            &prog,
+            8,
+            &mut l2,
+            |i| vec![(A0, TCDM_BASE + 0x100), (A1, i as u32)],
+            1_000_000,
+        );
+        for c in &cl.cores[..8] {
+            assert_eq!(c.reg(A2), 0xAB, "core {} read after barrier", c.id);
+        }
+    }
+
+    /// Unit-stride SPMD streaming: contention must be well under 10%
+    /// (the paper's claim for data-intensive kernels).
+    #[test]
+    fn unit_stride_contention_below_10pct() {
+        let mut a = Asm::new("stream");
+        let end = a.label();
+        a.lp_setup_imm(0, 256, end);
+        a.lw_pi(T0, A0, 4);
+        a.add(A2, A2, T0);
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+
+        let mut cl = Cluster::new();
+        let mut l2 = l2();
+        // Cores start 1 word apart: worst-ish case alignment.
+        let stats = cl.run_program(
+            &prog,
+            8,
+            &mut l2,
+            |i| vec![(A0, TCDM_BASE + (4 * i) as u32)],
+            1_000_000,
+        );
+        assert!(
+            stats.tcdm_conflict_rate < 0.10,
+            "conflict rate = {}",
+            stats.tcdm_conflict_rate
+        );
+    }
+
+    /// FPU sharing: cores 0 and 4 contend for FPU0; cores 0..4 don't.
+    #[test]
+    fn fpu_static_mapping_contention() {
+        let mut a = Asm::new("fp");
+        let end = a.label();
+        a.li(A0, 1.0f32.to_bits() as i32);
+        a.li(A1, 1.5f32.to_bits() as i32);
+        a.lp_setup_imm(0, 200, end);
+        a.fmac_s(A2, A0, A1);
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+
+        // 4 cores on 4 distinct FPUs: no contention.
+        let mut cl = Cluster::new();
+        let mut l2m = l2();
+        let s4 = cl.run_program(&prog, 4, &mut l2m, |_| vec![], 1_000_000);
+        assert_eq!(s4.fpu_contention_rate, 0.0);
+
+        // 8 cores on 4 FPUs, back-to-back FP: ~50% issue conflicts.
+        let mut cl = Cluster::new();
+        let s8 = cl.run_program(&prog, 8, &mut l2m, |_| vec![], 1_000_000);
+        assert!(s8.fpu_contention_rate > 0.3, "rate = {}", s8.fpu_contention_rate);
+        // But everyone still finishes with the right value.
+        let acc = f32::from_bits(cl.cores[0].reg(A2));
+        assert!((acc - 300.0).abs() < 1e-3);
+    }
+
+    /// Cluster-side L2 access works and costs extra latency.
+    #[test]
+    fn l2_access_from_cluster() {
+        let mut a = Asm::new("l2");
+        a.lw(T0, A0, 0);
+        a.addi(T0, T0, 1);
+        a.sw(T0, A0, 0);
+        a.halt();
+        let prog = a.finish().unwrap();
+        let mut cl = Cluster::new();
+        let mut l2m = l2();
+        l2m.write_i32s(L2_BASE + 0x40, &[41]);
+        let stats = cl.run_program(&prog, 1, &mut l2m, |_| vec![(A0, L2_BASE + 0x40)], 10_000);
+        assert_eq!(l2m.read_i32s(L2_BASE + 0x40, 1)[0], 42);
+        assert!(stats.total.multicycle_busy >= 2 * CLUSTER_TO_L2_LATENCY);
+    }
+
+    /// 8-way near-linear speedup on an embarrassingly parallel loop.
+    #[test]
+    fn parallel_speedup_scales() {
+        let mut a = Asm::new("scale");
+        let end = a.label();
+        a.lp_setup(0, A1, end);
+        a.mac(A2, A0, A0);
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+        let mut l2m = l2();
+
+        let mut cl = Cluster::new();
+        let s1 = cl.run_program(&prog, 1, &mut l2m, |_| vec![(A1, 8000)], 1_000_000);
+        let mut cl = Cluster::new();
+        let s8 = cl.run_program(&prog, 8, &mut l2m, |_| vec![(A1, 1000)], 1_000_000);
+        let speedup = s1.cycles as f64 / s8.cycles as f64;
+        assert!(speedup > 7.0, "speedup = {speedup}");
+    }
+}

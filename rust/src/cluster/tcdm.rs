@@ -1,0 +1,161 @@
+//! L1 tightly-coupled data memory: 16 × 8 kB word-interleaved SRAM banks
+//! behind the single-cycle logarithmic interconnect (§II-C, [27]).
+//!
+//! Word-level interleaving spreads consecutive words across banks so that
+//! unit-stride parallel access patterns hit distinct banks; the
+//! interconnect resolves residual conflicts by stalling all but one
+//! requester per bank per cycle (round-robin). The paper measures < 10%
+//! contention with 16 requesters on data-intensive kernels — an emergent
+//! property checked by `cluster_integration` tests.
+
+use crate::iss::FlatMem;
+
+/// Base address of the cluster L1 TCDM in the Vega memory map.
+pub const TCDM_BASE: u32 = 0x1000_0000;
+
+/// Total TCDM capacity: 128 kB in 16 banks of 8 kB (16 × 8 kB SRAM cuts).
+pub const TCDM_SIZE: usize = 128 * 1024;
+pub const TCDM_BANKS: usize = 16;
+
+/// The banked L1 with per-cycle arbitration state.
+pub struct Tcdm {
+    pub mem: FlatMem,
+    /// Round-robin pointer per bank (fair arbitration).
+    rr: [usize; TCDM_BANKS],
+    /// Statistics.
+    pub grants: u64,
+    pub conflicts: u64,
+}
+
+impl Tcdm {
+    pub fn new() -> Self {
+        Self {
+            mem: FlatMem::new(TCDM_BASE, TCDM_SIZE),
+            rr: [0; TCDM_BANKS],
+            grants: 0,
+            conflicts: 0,
+        }
+    }
+
+    /// Word-level interleave: bank = word-address mod #banks.
+    pub fn bank_of(addr: u32) -> usize {
+        ((addr >> 2) as usize) % TCDM_BANKS
+    }
+
+    pub fn contains(addr: u32) -> bool {
+        (TCDM_BASE..TCDM_BASE + TCDM_SIZE as u32).contains(&addr)
+    }
+
+    /// Arbitrate one cycle of requests: `reqs` maps requester-id → bank.
+    /// Returns the granted requester per bank; losers are conflicts.
+    ///
+    /// Round-robin: the pointer advances past the granted requester so a
+    /// hot bank is shared fairly. Allocation-free per bank (§Perf: this
+    /// runs every simulated cycle).
+    pub fn arbitrate(&mut self, reqs: &[(usize, usize)]) -> Vec<usize> {
+        let mut granted = Vec::with_capacity(reqs.len().min(TCDM_BANKS));
+        self.arbitrate_into(reqs, &mut granted);
+        granted
+    }
+
+    /// As [`Tcdm::arbitrate`], writing grants into a caller-owned buffer
+    /// (the cluster cycle loop reuses it; single pass over the requests).
+    pub fn arbitrate_into(&mut self, reqs: &[(usize, usize)], granted: &mut Vec<usize>) {
+        granted.clear();
+        // Per-bank aggregation in one pass: count, lowest id, lowest id
+        // at/after the RR pointer. u8 is enough for <=16 requesters.
+        let mut count = [0u8; TCDM_BANKS];
+        let mut first = [u8::MAX; TCDM_BANKS];
+        let mut at_or_after = [u8::MAX; TCDM_BANKS];
+        for &(id, b) in reqs {
+            let id8 = id as u8;
+            count[b] += 1;
+            if id8 < first[b] {
+                first[b] = id8;
+            }
+            if id >= self.rr[b] && id8 < at_or_after[b] {
+                at_or_after[b] = id8;
+            }
+        }
+        for bank in 0..TCDM_BANKS {
+            if count[bank] == 0 {
+                continue;
+            }
+            let winner =
+                if at_or_after[bank] != u8::MAX { at_or_after[bank] } else { first[bank] }
+                    as usize;
+            self.rr[bank] = winner + 1;
+            self.grants += 1;
+            self.conflicts += (count[bank] - 1) as u64;
+            granted.push(winner);
+        }
+    }
+
+    /// Fraction of requests that lost arbitration.
+    pub fn conflict_rate(&self) -> f64 {
+        let total = self.grants + self.conflicts;
+        if total == 0 {
+            0.0
+        } else {
+            self.conflicts as f64 / total as f64
+        }
+    }
+}
+
+impl Default for Tcdm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interleaving_spreads_unit_stride() {
+        // 16 consecutive words -> 16 distinct banks
+        let banks: Vec<usize> = (0..16).map(|i| Tcdm::bank_of(TCDM_BASE + 4 * i)).collect();
+        let mut sorted = banks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 16);
+    }
+
+    #[test]
+    fn same_word_different_bytes_same_bank() {
+        assert_eq!(Tcdm::bank_of(0x1000_0000), Tcdm::bank_of(0x1000_0003));
+        assert_ne!(Tcdm::bank_of(0x1000_0000), Tcdm::bank_of(0x1000_0004));
+    }
+
+    #[test]
+    fn arbitration_grants_one_per_bank() {
+        let mut t = Tcdm::new();
+        // 3 requesters on bank 0, 1 on bank 1
+        let grants = t.arbitrate(&[(0, 0), (1, 0), (2, 0), (3, 1)]);
+        assert_eq!(grants.len(), 2);
+        assert_eq!(t.conflicts, 2);
+        assert_eq!(t.grants, 2);
+    }
+
+    #[test]
+    fn round_robin_is_fair() {
+        let mut t = Tcdm::new();
+        let mut wins = [0u32; 2];
+        for _ in 0..10 {
+            let g = t.arbitrate(&[(0, 0), (1, 0)]);
+            wins[g[0]] += 1;
+        }
+        assert_eq!(wins[0], 5);
+        assert_eq!(wins[1], 5);
+    }
+
+    #[test]
+    fn conflict_free_when_distinct_banks() {
+        let mut t = Tcdm::new();
+        let reqs: Vec<(usize, usize)> = (0..16).map(|i| (i, i)).collect();
+        let g = t.arbitrate(&reqs);
+        assert_eq!(g.len(), 16);
+        assert_eq!(t.conflict_rate(), 0.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Shared primitive types: cycles, energy, frequencies, errors, and the
+//! deterministic PRNG used throughout the simulator and the hand-rolled
+//! property-testing helper (proptest is unavailable offline; see
+//! DESIGN.md §5 substitutions).
+
+use thiserror::Error;
+
+/// Clock cycles of whichever domain is being discussed.
+pub type Cycles = u64;
+
+/// Energy in picojoules. All per-event energies in the power model are
+/// picojoule-denominated (Table VI is given in pJ/B).
+pub type PicoJoules = f64;
+
+/// Frequency in Hz.
+pub type Hertz = f64;
+
+#[derive(Error, Debug)]
+pub enum VegaError {
+    #[error("assembler error: {0}")]
+    Asm(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("configuration error: {0}")]
+    Config(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, VegaError>;
+
+/// xorshift64* — deterministic, seedable, dependency-free PRNG.
+///
+/// Used for synthetic weights/activations, sensor waveform generation and
+/// the property-test helper. Not cryptographic; determinism across runs is
+/// the requirement here (EXPERIMENTS.md records seeds).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // Avoid the all-zero fixed point.
+        Self { state: seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1 }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n.max(1)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo <= hi);
+        lo + (self.below((hi - lo + 1) as u64) as i64)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in `[-1, 1)`.
+    pub fn f32_pm1(&mut self) -> f32 {
+        (self.f64() * 2.0 - 1.0) as f32
+    }
+
+    /// Random i8 over the full range (an int8 tensor element).
+    pub fn i8(&mut self) -> i8 {
+        self.next_u64() as i8
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// A random bit-vector of `bits` bits packed into u64 words.
+    pub fn bitvec(&mut self, bits: usize) -> Vec<u64> {
+        let words = bits.div_ceil(64);
+        let mut v: Vec<u64> = (0..words).map(|_| self.next_u64()).collect();
+        let tail = bits % 64;
+        if tail != 0 {
+            v[words - 1] &= (1u64 << tail) - 1;
+        }
+        v
+    }
+}
+
+/// Minimal property-test driver: runs `f` on `n` seeded cases; panics with
+/// the failing case index + seed so the case can be replayed exactly.
+pub fn property(name: &str, n: u64, mut f: impl FnMut(&mut Rng)) {
+    for case in 0..n {
+        let seed = 0xC0FFEE ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property '{name}' failed at case {case} (seed={seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Pretty-print a byte count.
+pub fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MB", b as f64 / (1 << 20) as f64)
+    } else if b >= 1 << 10 {
+        format!("{:.1} kB", b as f64 / (1 << 10) as f64)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// Relative error |got - want| / |want| (for calibration assertions).
+pub fn rel_err(got: f64, want: f64) -> f64 {
+    if want == 0.0 {
+        got.abs()
+    } else {
+        (got - want).abs() / want.abs()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            assert!(r.below(10) < 10);
+            let v = r.range_i64(-5, 5);
+            assert!((-5..=5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn rng_f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut acc = 0.0;
+        for _ in 0..1000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            acc += x;
+        }
+        // Mean should be near 0.5 for a uniform source.
+        assert!((acc / 1000.0 - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn bitvec_tail_is_masked() {
+        let mut r = Rng::new(9);
+        let v = r.bitvec(70);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[1] >> 6, 0);
+    }
+
+    #[test]
+    fn rel_err_basics() {
+        assert!(rel_err(1.0, 1.0) == 0.0);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0;
+        property("count", 10, |_| count += 1);
+        assert_eq!(count, 10);
+    }
+}

@@ -1,0 +1,206 @@
+//! Experiment coordinator: the shared drivers behind every table/figure
+//! reproduction (invoked by `vega repro <id>`, the cargo benches, and the
+//! integration tests).
+
+pub mod report;
+
+use crate::cluster::Cluster;
+use crate::common::Rng;
+use crate::cwu::{ChannelConfig, Cwu};
+use crate::hdc::{self, datasets, EncoderConfig};
+use crate::iss::FlatMem;
+use crate::kernels::fp_matmul::FpWidth;
+use crate::kernels::int_matmul::IntWidth;
+use crate::kernels::{fp_conv, fp_fft, fp_filters, fp_kmeans, fp_matmul, fp_svm, int_matmul,
+    KernelRun};
+use crate::power::tables::OperatingPoint;
+
+pub use report::Table;
+
+fn fresh() -> (Cluster, FlatMem) {
+    (Cluster::new(), FlatMem::new(crate::cluster::L2_BASE, crate::cluster::L2_SIZE))
+}
+
+/// Run the int matmul benchmark at a width on `cores` cores (Fig. 6).
+pub fn bench_int_matmul(w: IntWidth, cores: usize) -> KernelRun {
+    let (mut cl, mut l2) = fresh();
+    let mut rng = Rng::new(0xF16_6);
+    let (m, n, k) = (64, 64, 64);
+    let lim = match w {
+        IntWidth::I8 => 127,
+        IntWidth::I16 => 2047,
+        IntWidth::I32 => 1000,
+    };
+    let av: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+    let bv: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+    let (_, kr) = int_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, w, cores);
+    kr
+}
+
+/// Run the FP matmul benchmark (Fig. 6 / Fig. 8).
+pub fn bench_fp_matmul(w: FpWidth, cores: usize) -> KernelRun {
+    let (mut cl, mut l2) = fresh();
+    let mut rng = Rng::new(0xF16_8);
+    let (m, n, k) = (32, 32, 64);
+    let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+    let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+    let (_, kr) = fp_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, w, cores);
+    kr
+}
+
+/// One Fig. 8 / Table V kernel run on 8 cores.
+pub fn bench_nsaa_kernel(name: &str, w: FpWidth) -> KernelRun {
+    let mut rng = Rng::new(0x85AA ^ name.len() as u64);
+    let (mut cl, mut l2) = fresh();
+    match name {
+        "MATMUL" => bench_fp_matmul(w, 8),
+        "CONV" => {
+            let (h, wd) = (16, 32);
+            let x: Vec<f32> = (0..(h + 2) * (wd + 2)).map(|_| rng.f32_pm1()).collect();
+            let k: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
+            fp_conv::run(&mut cl, &mut l2, &x, &k, h, wd, w, 8).1
+        }
+        "DWT" => {
+            let x: Vec<f32> = (0..1024).map(|_| rng.f32_pm1()).collect();
+            fp_filters::run_dwt(&mut cl, &mut l2, &x, w, 8).2
+        }
+        "FFT" => {
+            let x: Vec<(f32, f32)> =
+                (0..256).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
+            fp_fft::run(&mut cl, &mut l2, &x, w, 8).1
+        }
+        "FIR" => {
+            let taps: Vec<f32> = (0..fp_filters::FIR_TAPS).map(|_| rng.f32_pm1()).collect();
+            let x: Vec<f32> = (0..512 + 16).map(|_| rng.f32_pm1()).collect();
+            fp_filters::run_fir(&mut cl, &mut l2, &x, &taps, 512, w, 8).1
+        }
+        "IIR" => {
+            let b = fp_filters::Biquad::lowpass();
+            let chans: Vec<Vec<f32>> = (0..8)
+                .map(|_| (0..256).map(|_| rng.f32_pm1()).collect())
+                .collect();
+            fp_filters::run_iir(&mut cl, &mut l2, &chans, b, b, w).1
+        }
+        "KMEANS" => {
+            let centroids: Vec<f32> =
+                (0..fp_kmeans::K * fp_kmeans::D).map(|_| 2.0 * rng.f32_pm1()).collect();
+            let pts: Vec<f32> = (0..256 * fp_kmeans::D).map(|_| 2.0 * rng.f32_pm1()).collect();
+            fp_kmeans::run(&mut cl, &mut l2, &pts, &centroids, w, 8).1
+        }
+        "SVM" => {
+            let d = 16;
+            let wv: Vec<f32> = (0..fp_svm::CLASSES * d).map(|_| rng.f32_pm1()).collect();
+            let b: Vec<f32> = (0..fp_svm::CLASSES).map(|_| rng.f32_pm1()).collect();
+            let pts: Vec<f32> = (0..128 * d).map(|_| rng.f32_pm1()).collect();
+            fp_svm::run(&mut cl, &mut l2, &pts, &wv, &b, d, w, 8).1
+        }
+        other => panic!("unknown NSAA kernel {other}"),
+    }
+}
+
+/// The Table V / Fig. 8 kernel list.
+pub const NSAA_KERNELS: [&str; 8] =
+    ["MATMUL", "CONV", "DWT", "FFT", "FIR", "IIR", "KMEANS", "SVM"];
+
+/// Result of the CWU reference workload (Table I's measurement setup:
+/// 3×16-bit SPI channels, real-time HDC classification).
+pub struct CwuRun {
+    pub cwu: Cwu,
+    pub accuracy: f64,
+    pub frames: u64,
+    pub duty_at_150sps: f64,
+}
+
+/// Train the EMG HDC model, program Hypnos, and stream test windows
+/// through the full CWU pipeline (the Table I / Table II workload).
+pub fn cwu_reference_run(f_clk: f64) -> CwuRun {
+    let cfg = EncoderConfig {
+        dim: 2048,
+        input_width: 16,
+        cim_max: 4095,
+        channels: 3,
+        window: 16,
+        ngram: 1,
+        discrete: false,
+    };
+    let mut gen = datasets::EmgGenerator::new(0xE39);
+    let train_data = gen.dataset(5, cfg.window);
+    let model = hdc::train(cfg, &train_data);
+
+    // Watch for gesture class 1 ("fist") with a modest threshold.
+    let hypnos = model.program_hypnos(1, (cfg.dim / 4) as u16);
+    let mut cwu = Cwu::with_config(
+        None,
+        &[ChannelConfig { in_width: 16, ..Default::default() }; 3],
+        hypnos,
+        f_clk,
+    );
+
+    // Stream labelled windows; accuracy = wake on class-1, silence else.
+    let mut correct = 0;
+    let mut total = 0;
+    for class in 0..gen.n_classes() {
+        for _ in 0..10 {
+            let w = gen.window(class, cfg.window);
+            let mut woke = false;
+            for frame in &w {
+                if cwu.step_with_raw(frame).is_some() {
+                    woke = true;
+                }
+            }
+            if woke == (class == 1) {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let duty = cwu.datapath_duty(150.0);
+    CwuRun {
+        accuracy: correct as f64 / total as f64,
+        frames: cwu.hypnos.stats.frames,
+        duty_at_150sps: duty,
+        cwu,
+    }
+}
+
+/// GOPS and GOPS/W of a kernel run at an operating point, including the
+/// SoC-domain share (the paper's efficiency figures are chip-level).
+pub fn efficiency(kr: &KernelRun, op: OperatingPoint, hwce: f64) -> (f64, f64) {
+    let gops = kr.gops_at(op.f_cl);
+    let util = 1.0 - kr.stats.barrier_gated_cycles as f64
+        / (kr.stats.cycles as f64 * kr.stats.per_core.len().max(1) as f64);
+    let p = crate::power::cluster_power_w(op, util.clamp(0.0, 1.0), hwce)
+        + crate::power::soc_power_w(op, 0.1);
+    (gops, gops / p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nsaa_kernels_all_run_both_widths() {
+        for name in NSAA_KERNELS {
+            for w in [FpWidth::F32, FpWidth::F16x2] {
+                let kr = bench_nsaa_kernel(name, w);
+                assert!(kr.stats.cycles > 0, "{name} {w:?}");
+                assert!(kr.ops > 0, "{name} {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn cwu_reference_accuracy() {
+        let run = cwu_reference_run(32_000.0);
+        assert!(run.accuracy > 0.85, "accuracy = {}", run.accuracy);
+        assert!(run.duty_at_150sps > 0.0 && run.duty_at_150sps < 1.0);
+    }
+
+    #[test]
+    fn efficiency_is_positive_and_sane() {
+        let kr = bench_int_matmul(IntWidth::I8, 8);
+        let (gops, eff) = efficiency(&kr, crate::power::LV, 0.0);
+        assert!(gops > 3.0 && gops < 10.0, "gops = {gops}");
+        assert!(eff > 300.0 && eff < 900.0, "eff = {eff}");
+    }
+}

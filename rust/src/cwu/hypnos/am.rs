@@ -1,0 +1,165 @@
+//! The 32-kbit standard-cell associative memory (§II-B).
+//!
+//! 16 rows of up to 2048 bits, latch-based with one integrated clock gate
+//! per row as write enable. Doubles as scratchpad for intermediate
+//! hypervectors and as the prototype store for the associative lookup:
+//! rows are compared sequentially against the search vector, the Hamming
+//! distance computed combinationally, and the minimum tracked. The lookup
+//! result (index + distance) feeds the wake-up decision.
+
+use super::bitvec::HdVec;
+
+/// AM geometry: 16 rows × 2048 bits = 32 kbit.
+pub const AM_ROWS: usize = 16;
+pub const AM_ROW_BITS: usize = 2048;
+
+/// Result of an associative lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LookupResult {
+    pub index: usize,
+    pub distance: u32,
+}
+
+/// The associative memory.
+#[derive(Debug, Clone)]
+pub struct Am {
+    dim: usize,
+    rows: Vec<Option<HdVec>>,
+    /// Rows participating in associative search (prototype rows); other
+    /// occupied rows are scratchpad.
+    search_mask: u16,
+    pub lookups: u64,
+    pub row_compares: u64,
+}
+
+impl Am {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim <= AM_ROW_BITS);
+        Self {
+            dim,
+            rows: vec![None; AM_ROWS],
+            search_mask: 0,
+            lookups: 0,
+            row_compares: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn write(&mut self, row: usize, v: HdVec) {
+        assert!(row < AM_ROWS, "AM has {AM_ROWS} rows");
+        assert_eq!(v.bits, self.dim);
+        self.rows[row] = Some(v);
+    }
+
+    pub fn read(&self, row: usize) -> Option<&HdVec> {
+        self.rows.get(row).and_then(|r| r.as_ref())
+    }
+
+    pub fn clear(&mut self, row: usize) {
+        self.rows[row] = None;
+        self.search_mask &= !(1 << row);
+    }
+
+    /// Mark `row` as a prototype (included in associative search).
+    pub fn mark_prototype(&mut self, row: usize, is_proto: bool) {
+        assert!(row < AM_ROWS);
+        if is_proto {
+            assert!(self.rows[row].is_some(), "prototype row must be written");
+            self.search_mask |= 1 << row;
+        } else {
+            self.search_mask &= !(1 << row);
+        }
+    }
+
+    pub fn prototype_count(&self) -> usize {
+        self.search_mask.count_ones() as usize
+    }
+
+    /// Sequential associative lookup: minimum-Hamming prototype row.
+    /// Ties resolve to the lowest index (sequential scan order).
+    pub fn lookup(&mut self, search: &HdVec) -> Option<LookupResult> {
+        assert_eq!(search.bits, self.dim);
+        self.lookups += 1;
+        let mut best: Option<LookupResult> = None;
+        for row in 0..AM_ROWS {
+            if self.search_mask & (1 << row) == 0 {
+                continue;
+            }
+            self.row_compares += 1;
+            let d = self.rows[row].as_ref().unwrap().hamming(search);
+            if best.map_or(true, |b| d < b.distance) {
+                best = Some(LookupResult { index: row, distance: d });
+            }
+        }
+        best
+    }
+
+    /// Cycles for one lookup: each prototype row streams through the
+    /// 512-bit comparator in `dim/512` beats.
+    pub fn lookup_cycles(&self) -> u64 {
+        self.prototype_count() as u64 * (self.dim as u64).div_ceil(512)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cwu::hypnos::perm;
+
+    #[test]
+    fn capacity_is_32_kbit() {
+        assert_eq!(AM_ROWS * AM_ROW_BITS, 32 * 1024);
+    }
+
+    #[test]
+    fn lookup_finds_nearest_prototype() {
+        let dim = 512;
+        let mut am = Am::new(dim);
+        let protos: Vec<_> = (0..4).map(|i| perm::im_map(dim, i, 8)).collect();
+        for (i, p) in protos.iter().enumerate() {
+            am.write(i, p.clone());
+            am.mark_prototype(i, true);
+        }
+        // Search with a noisy copy of prototype 2.
+        let mut q = protos[2].clone();
+        for b in 0..40 {
+            q.flip(b * 12);
+        }
+        let r = am.lookup(&q).unwrap();
+        assert_eq!(r.index, 2);
+        assert_eq!(r.distance, 40);
+    }
+
+    #[test]
+    fn scratchpad_rows_excluded_from_search() {
+        let dim = 512;
+        let mut am = Am::new(dim);
+        let a = perm::im_map(dim, 1, 8);
+        let b = perm::im_map(dim, 2, 8);
+        am.write(0, a.clone());
+        am.mark_prototype(0, true);
+        am.write(5, b.clone()); // scratch, not marked
+        let r = am.lookup(&b).unwrap();
+        assert_eq!(r.index, 0); // found the only prototype, not row 5
+        assert!(r.distance > 0);
+    }
+
+    #[test]
+    fn lookup_cycles_scale_with_rows_and_dim() {
+        let mut am = Am::new(2048);
+        for i in 0..3 {
+            am.write(i, HdVec::zero(2048));
+            am.mark_prototype(i, true);
+        }
+        assert_eq!(am.lookup_cycles(), 3 * 4);
+    }
+
+    #[test]
+    fn empty_am_lookup_is_none() {
+        let mut am = Am::new(512);
+        assert!(am.lookup(&HdVec::zero(512)).is_none());
+    }
+}

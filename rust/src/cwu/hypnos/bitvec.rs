@@ -1,0 +1,197 @@
+//! HD bit-vectors: the 512/1024/1536/2048-bit hypervectors Hypnos
+//! operates on (§II-B), packed into u64 words.
+
+/// Supported HD dimensions (§II-B: "512, 1024, 1536, or 2048-bit").
+pub const HD_DIMS: [usize; 4] = [512, 1024, 1536, 2048];
+
+/// Datapath width: 512 bits processed per cycle.
+pub const DATAPATH_BITS: usize = 512;
+
+/// A fixed-width binary hypervector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HdVec {
+    pub bits: usize,
+    words: Vec<u64>,
+}
+
+impl HdVec {
+    pub fn zero(bits: usize) -> Self {
+        assert!(HD_DIMS.contains(&bits), "unsupported HD dimension {bits}");
+        Self { bits, words: vec![0; bits / 64] }
+    }
+
+    pub fn from_words(bits: usize, words: Vec<u64>) -> Self {
+        assert_eq!(words.len(), bits / 64);
+        Self { bits, words }
+    }
+
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    pub fn get(&self, i: usize) -> bool {
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    pub fn set(&mut self, i: usize, v: bool) {
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    pub fn flip(&mut self, i: usize) {
+        self.words[i / 64] ^= 1 << (i % 64);
+    }
+
+    /// XOR (the HDC *bind* primitive).
+    pub fn xor(&self, o: &Self) -> Self {
+        assert_eq!(self.bits, o.bits);
+        Self {
+            bits: self.bits,
+            words: self.words.iter().zip(&o.words).map(|(a, b)| a ^ b).collect(),
+        }
+    }
+
+    pub fn and(&self, o: &Self) -> Self {
+        assert_eq!(self.bits, o.bits);
+        Self {
+            bits: self.bits,
+            words: self.words.iter().zip(&o.words).map(|(a, b)| a & b).collect(),
+        }
+    }
+
+    pub fn not(&self) -> Self {
+        let mut v = Self {
+            bits: self.bits,
+            words: self.words.iter().map(|a| !a).collect(),
+        };
+        v.mask_tail();
+        v
+    }
+
+    fn mask_tail(&mut self) {
+        let tail = self.bits % 64;
+        if tail != 0 {
+            let last = self.words.len() - 1;
+            self.words[last] &= (1u64 << tail) - 1;
+        }
+    }
+
+    /// Cyclic rotation by `n` bits (the HDC *permute* primitive ρ, used
+    /// for sequence/n-gram encoding). Word-level: two shifts per word
+    /// (§Perf — the bit-by-bit version dominated the encode loop).
+    pub fn rotate(&self, n: usize) -> Self {
+        let n = n % self.bits;
+        if n == 0 {
+            return self.clone();
+        }
+        let nw = self.words.len();
+        let (ws, bs) = (n / 64, n % 64);
+        let mut out = Self::zero(self.bits);
+        for i in 0..nw {
+            let w = self.words[i];
+            let lo_idx = (i + ws) % nw;
+            out.words[lo_idx] |= w << bs;
+            if bs != 0 {
+                let hi_idx = (i + ws + 1) % nw;
+                out.words[hi_idx] |= w >> (64 - bs);
+            }
+        }
+        out
+    }
+
+    /// Hamming distance (the AM similarity metric).
+    pub fn hamming(&self, o: &Self) -> u32 {
+        assert_eq!(self.bits, o.bits);
+        self.words
+            .iter()
+            .zip(&o.words)
+            .map(|(a, b)| (a ^ b).count_ones())
+            .sum()
+    }
+
+    pub fn count_ones(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    /// Datapath cycles to stream this vector through the 512-bit engine.
+    pub fn datapath_cycles(&self) -> u64 {
+        (self.bits / DATAPATH_BITS).max(1) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_flip() {
+        let mut v = HdVec::zero(512);
+        v.set(0, true);
+        v.set(511, true);
+        assert!(v.get(0) && v.get(511) && !v.get(100));
+        v.flip(511);
+        assert!(!v.get(511));
+        assert_eq!(v.count_ones(), 1);
+    }
+
+    #[test]
+    fn bind_is_involutive() {
+        let mut a = HdVec::zero(512);
+        let mut b = HdVec::zero(512);
+        for i in (0..512).step_by(3) {
+            a.set(i, true);
+        }
+        for i in (0..512).step_by(5) {
+            b.set(i, true);
+        }
+        let bound = a.xor(&b);
+        assert_eq!(bound.xor(&b), a); // unbind recovers the operand
+        assert_eq!(a.hamming(&bound), b.count_ones());
+    }
+
+    #[test]
+    fn rotate_preserves_ones_and_inverts() {
+        let mut a = HdVec::zero(1024);
+        for i in [0, 5, 900, 1023] {
+            a.set(i, true);
+        }
+        let r = a.rotate(17);
+        assert_eq!(r.count_ones(), a.count_ones());
+        assert!(r.get(17) && r.get((1023 + 17) % 1024));
+        assert_eq!(r.rotate(1024 - 17), a);
+    }
+
+    #[test]
+    fn not_masks_tail() {
+        let v = HdVec::zero(512).not();
+        assert_eq!(v.count_ones(), 512);
+    }
+
+    #[test]
+    fn hamming_basics() {
+        let z = HdVec::zero(2048);
+        let o = z.not();
+        assert_eq!(z.hamming(&o), 2048);
+        assert_eq!(z.hamming(&z), 0);
+    }
+
+    #[test]
+    fn datapath_cycles_scale_with_dim() {
+        assert_eq!(HdVec::zero(512).datapath_cycles(), 1);
+        assert_eq!(HdVec::zero(2048).datapath_cycles(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_unsupported_dim() {
+        HdVec::zero(777);
+    }
+}

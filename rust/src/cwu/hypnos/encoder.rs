@@ -1,0 +1,184 @@
+//! The Vector Encoder: 512 Encoder Units + the similarity manipulator.
+//!
+//! Each Encoder Unit (EU) owns one bit lane: XOR/AND/NOT logic plus a
+//! saturating bidirectional 8-bit counter for *bundling* (majority
+//! accumulation). Hypnos instantiates 512 EUs — one per datapath bit; for
+//! 1024/1536/2048-bit vectors the engine iterates 512-bit chunks, so the
+//! counters are modelled per HD bit with the cycle cost scaled by
+//! `bits / 512`.
+//!
+//! The *similarity manipulator* implements continuous item memory (CIM):
+//! flipping a value-proportional number of bits of a base hypervector so
+//! that nearby input values land at nearby Hamming distances (§II-B).
+
+use super::bitvec::HdVec;
+use super::perm;
+
+/// Saturating bidirectional counter range (8-bit signed in the EUs).
+pub const COUNTER_MAX: i16 = 127;
+pub const COUNTER_MIN: i16 = -128;
+
+/// The EU array state: one bundling counter per HD bit.
+#[derive(Debug, Clone)]
+pub struct EuArray {
+    pub bits: usize,
+    counters: Vec<i16>,
+}
+
+impl EuArray {
+    pub fn new(bits: usize) -> Self {
+        Self { bits, counters: vec![0; bits] }
+    }
+
+    pub fn reset(&mut self) {
+        self.counters.fill(0);
+    }
+
+    /// Bundle-accumulate: +1 for a one-bit, −1 for a zero-bit, saturating.
+    pub fn accumulate(&mut self, v: &HdVec) {
+        assert_eq!(v.bits, self.bits);
+        for i in 0..self.bits {
+            let c = &mut self.counters[i];
+            if v.get(i) {
+                *c = (*c + 1).min(COUNTER_MAX);
+            } else {
+                *c = (*c - 1).max(COUNTER_MIN);
+            }
+        }
+    }
+
+    /// Majority threshold: counter > 0 → 1, < 0 → 0, tie broken by lane
+    /// parity (a fixed hardware tie-break keeps bundles unbiased).
+    pub fn threshold(&self) -> HdVec {
+        let mut out = HdVec::zero(self.bits);
+        for i in 0..self.bits {
+            let bit = match self.counters[i].cmp(&0) {
+                std::cmp::Ordering::Greater => true,
+                std::cmp::Ordering::Less => false,
+                std::cmp::Ordering::Equal => i % 2 == 0,
+            };
+            out.set(i, bit);
+        }
+        out
+    }
+
+    pub fn counter(&self, i: usize) -> i16 {
+        self.counters[i]
+    }
+}
+
+/// CIM base vector for a channel: a fixed quasi-orthogonal anchor.
+pub fn cim_base(dim: usize) -> HdVec {
+    perm::apply(&perm::seed_vector(dim), 3)
+}
+
+/// Continuous item-memory mapping: flip `round(value/max · dim/2)` bits of
+/// the base vector in a hardwired order. Values close in input space stay
+/// close in Hamming space; the extremes are ~dim/2 apart (quasi-
+/// orthogonal), the standard CIM construction [23].
+pub fn cim_map(dim: usize, value: u32, max_value: u32) -> HdVec {
+    let mut v = cim_base(dim);
+    let flips = ((value.min(max_value) as u64 * (dim as u64 / 2)) / max_value.max(1) as u64)
+        as usize;
+    // Hardwired flip order: the identity scan over lane indices scrambled
+    // by permutation 1 (fixed in silicon; any fixed order works).
+    let order = flip_order(dim);
+    for &bit in order.iter().take(flips) {
+        v.flip(bit);
+    }
+    v
+}
+
+fn flip_order(dim: usize) -> Vec<usize> {
+    // Reuse hardwired permutation 1 as the flip schedule.
+    let mut probe = HdVec::zero(dim);
+    probe.set(0, true);
+    // Build order by permuting an index vector once: table lookup through
+    // the perm module's public API (apply on unit vectors would be O(n²));
+    // instead derive a deterministic LCG-style order.
+    let mut order: Vec<usize> = (0..dim).collect();
+    let mut state = 0x9E37u64;
+    for i in (1..dim).rev() {
+        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let j = (state >> 33) as usize % (i + 1);
+        order.swap(i, j);
+    }
+    order
+}
+
+/// Cycle cost of one EU-array pass (bundle/threshold/bind) for `bits`-bit
+/// vectors on the 512-bit datapath.
+pub fn eu_pass_cycles(bits: usize) -> u64 {
+    (bits as u64).div_ceil(512).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundling_majority() {
+        let dim = 512;
+        let mut eu = EuArray::new(dim);
+        let a = perm::im_map(dim, 1, 8);
+        let b = perm::im_map(dim, 2, 8);
+        // Bundle a twice, b once: result should be closer to a.
+        eu.accumulate(&a);
+        eu.accumulate(&a);
+        eu.accumulate(&b);
+        let bundle = eu.threshold();
+        assert!(bundle.hamming(&a) < bundle.hamming(&b));
+    }
+
+    #[test]
+    fn counters_saturate() {
+        let dim = 512;
+        let mut eu = EuArray::new(dim);
+        let ones = HdVec::zero(dim).not();
+        for _ in 0..300 {
+            eu.accumulate(&ones);
+        }
+        assert_eq!(eu.counter(0), COUNTER_MAX);
+        let zeros = HdVec::zero(dim);
+        for _ in 0..300 {
+            eu.accumulate(&zeros);
+        }
+        assert_eq!(eu.counter(0), COUNTER_MIN);
+    }
+
+    #[test]
+    fn bundle_of_one_is_identity() {
+        let dim = 1024;
+        let mut eu = EuArray::new(dim);
+        let a = perm::im_map(dim, 7, 16);
+        eu.accumulate(&a);
+        assert_eq!(eu.threshold(), a);
+    }
+
+    #[test]
+    fn cim_preserves_locality() {
+        let dim = 2048;
+        let max = 4095;
+        let near = cim_map(dim, 100, max).hamming(&cim_map(dim, 110, max));
+        let far = cim_map(dim, 100, max).hamming(&cim_map(dim, 4000, max));
+        assert!(near < 40, "near = {near}");
+        assert!(far > 700, "far = {far}");
+        // Monotone-ish: mid value sits between.
+        let mid = cim_map(dim, 100, max).hamming(&cim_map(dim, 2000, max));
+        assert!(near < mid && mid < far, "{near} {mid} {far}");
+    }
+
+    #[test]
+    fn cim_extremes_quasi_orthogonal() {
+        let dim = 2048;
+        let d = cim_map(dim, 0, 4095).hamming(&cim_map(dim, 4095, 4095));
+        let frac = d as f64 / dim as f64;
+        assert!((0.42..0.58).contains(&frac), "frac = {frac}");
+    }
+
+    #[test]
+    fn pass_cycles_scale() {
+        assert_eq!(eu_pass_cycles(512), 1);
+        assert_eq!(eu_pass_cycles(1536), 3);
+    }
+}

@@ -1,0 +1,178 @@
+//! The 64×26-bit microcode store and lightweight sequencer (§II-B).
+//!
+//! "The CWU contains another 64×26-bit SCM to encode the HDC algorithm in
+//! a sequence of compact micro-code instructions. The lightweight
+//! controller fetches these instructions in an infinite loop and
+//! reconfigures AM and Vector Encoder accordingly in each cycle."
+//!
+//! The micro-ISA below is our register-transfer-level reading of that
+//! description: one architectural result register (RES), a temporary from
+//! the mapper (TMP), the EU counter array, the AM, and a single hardware
+//! repeat counter. Every op packs into 26 bits (opcode ≤ 5 bits, operands
+//! ≤ 21), asserted by `encoding_fits_26_bits`.
+
+/// One microcode instruction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroOp {
+    /// TMP = IM(sample[chan]) — item-memory rematerialization of the
+    /// channel's *value* (discrete symbols, e.g. characters).
+    ImMap { chan: u8 },
+    /// TMP = IM(chan) — item-memory mapping of the channel *label*
+    /// ("IM mapping is used to encode channel labels", §II-B).
+    ImLabel { chan: u8 },
+    /// TMP = CIM(sample[chan]) — continuous (similarity-preserving) map.
+    CimMap { chan: u8 },
+    /// RES = TMP.
+    MovTmp,
+    /// RES ^= TMP (bind).
+    BindTmp,
+    /// RES = ρ(RES, n) — cyclic rotate (sequence encoding).
+    Permute { n: u8 },
+    /// EU counters accumulate RES (bundle).
+    BundleAcc,
+    /// Clear EU counters.
+    BundleReset,
+    /// RES = majority(EU counters).
+    BundleThr,
+    /// RES ^= AM[row].
+    BindAm { row: u8 },
+    /// RES = AM[row].
+    LoadAm { row: u8 },
+    /// AM[row] = RES (scratchpad write).
+    StoreAm { row: u8 },
+    /// Block until the next preprocessed sample frame.
+    NextFrame,
+    /// Repeat the next `len` instructions `count` times.
+    Repeat { count: u16, len: u8 },
+    /// Associative lookup of RES; wake-up when the best row == `target`
+    /// and Hamming distance ≤ `threshold`.
+    Search { threshold: u16, target: u8 },
+}
+
+/// Microcode store capacity.
+pub const UCODE_DEPTH: usize = 64;
+
+/// Bit width of one instruction slot.
+pub const UCODE_BITS: usize = 26;
+
+impl MicroOp {
+    /// Pack into the 26-bit SCM encoding (5-bit opcode + operands).
+    /// Round-trips with [`MicroOp::decode`]; used to prove the ISA fits
+    /// the silicon's instruction width.
+    pub fn encode(self) -> u32 {
+        match self {
+            MicroOp::ImMap { chan } => (chan as u32) << 5,
+            MicroOp::CimMap { chan } => 1 | ((chan as u32) << 5),
+            MicroOp::MovTmp => 2,
+            MicroOp::BindTmp => 3,
+            MicroOp::Permute { n } => 4 | ((n as u32) << 5),
+            MicroOp::BundleAcc => 5,
+            MicroOp::BundleReset => 6,
+            MicroOp::BundleThr => 7,
+            MicroOp::BindAm { row } => 8 | ((row as u32) << 5),
+            MicroOp::LoadAm { row } => 9 | ((row as u32) << 5),
+            MicroOp::StoreAm { row } => 10 | ((row as u32) << 5),
+            MicroOp::NextFrame => 11,
+            MicroOp::Repeat { count, len } => {
+                12 | ((count as u32 & 0xFFF) << 5) | ((len as u32 & 0x3F) << 17)
+            }
+            MicroOp::Search { threshold, target } => {
+                13 | ((threshold as u32 & 0xFFF) << 5) | ((target as u32 & 0xF) << 17)
+            }
+            MicroOp::ImLabel { chan } => 14 | ((chan as u32) << 5),
+        }
+    }
+
+    pub fn decode(w: u32) -> Option<MicroOp> {
+        let operand = w >> 5;
+        Some(match w & 0x1F {
+            0 => MicroOp::ImMap { chan: operand as u8 },
+            1 => MicroOp::CimMap { chan: operand as u8 },
+            2 => MicroOp::MovTmp,
+            3 => MicroOp::BindTmp,
+            4 => MicroOp::Permute { n: operand as u8 },
+            5 => MicroOp::BundleAcc,
+            6 => MicroOp::BundleReset,
+            7 => MicroOp::BundleThr,
+            8 => MicroOp::BindAm { row: operand as u8 },
+            9 => MicroOp::LoadAm { row: operand as u8 },
+            10 => MicroOp::StoreAm { row: operand as u8 },
+            11 => MicroOp::NextFrame,
+            12 => MicroOp::Repeat {
+                count: (operand & 0xFFF) as u16,
+                len: ((w >> 17) & 0x3F) as u8,
+            },
+            13 => MicroOp::Search {
+                threshold: (operand & 0xFFF) as u16,
+                target: ((w >> 17) & 0xF) as u8,
+            },
+            14 => MicroOp::ImLabel { chan: operand as u8 },
+            _ => return None,
+        })
+    }
+}
+
+/// A validated microcode program (≤ 64 slots).
+#[derive(Debug, Clone, Default)]
+pub struct MicroProgram {
+    pub ops: Vec<MicroOp>,
+}
+
+impl MicroProgram {
+    pub fn new(ops: Vec<MicroOp>) -> Self {
+        assert!(ops.len() <= UCODE_DEPTH, "microcode exceeds 64 slots");
+        assert!(!ops.is_empty(), "empty microcode");
+        Self { ops }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn encoding_fits_26_bits_and_roundtrips() {
+        let ops = [
+            MicroOp::ImMap { chan: 7 },
+            MicroOp::ImLabel { chan: 7 },
+            MicroOp::CimMap { chan: 3 },
+            MicroOp::MovTmp,
+            MicroOp::BindTmp,
+            MicroOp::Permute { n: 31 },
+            MicroOp::BundleAcc,
+            MicroOp::BundleReset,
+            MicroOp::BundleThr,
+            MicroOp::BindAm { row: 15 },
+            MicroOp::LoadAm { row: 15 },
+            MicroOp::StoreAm { row: 15 },
+            MicroOp::NextFrame,
+            MicroOp::Repeat { count: 4095, len: 63 },
+            MicroOp::Search { threshold: 4095, target: 15 },
+        ];
+        for op in ops {
+            let w = op.encode();
+            assert!(w < (1 << UCODE_BITS), "{op:?} needs more than 26 bits");
+            assert_eq!(MicroOp::decode(w), Some(op), "{op:?} roundtrip");
+        }
+    }
+
+    #[test]
+    fn program_capacity_enforced() {
+        let p = MicroProgram::new(vec![MicroOp::NextFrame; 64]);
+        assert_eq!(p.len(), 64);
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_program_rejected() {
+        MicroProgram::new(vec![MicroOp::NextFrame; 65]);
+    }
+}

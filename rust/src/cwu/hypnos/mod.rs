@@ -1,0 +1,309 @@
+//! Hypnos: the programmable HDC accelerator at the heart of the CWU
+//! (§II-B, Fig. 2).
+//!
+//! Composition: the Vector Encoder (IM rematerialization through four
+//! hardwired permutations, CIM similarity manipulator, 512 Encoder Units
+//! with saturating 8-bit bundling counters), the 16-row associative
+//! memory, and the 64×26-bit microcode sequencer. The whole engine runs
+//! autonomously on preprocessed sensor frames and raises a wake-up
+//! interrupt when an associative lookup matches the configured class
+//! within the configured Hamming threshold.
+
+pub mod am;
+pub mod bitvec;
+pub mod encoder;
+pub mod microcode;
+pub mod perm;
+
+pub use am::{Am, LookupResult, AM_ROWS};
+pub use bitvec::{HdVec, DATAPATH_BITS, HD_DIMS};
+pub use encoder::EuArray;
+pub use microcode::{MicroOp, MicroProgram};
+
+/// A wake-up event raised by the Search op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WakeEvent {
+    pub class_index: usize,
+    pub distance: u32,
+}
+
+/// Activity counters feeding the CWU power model (Table I splits dynamic
+/// datapath power from pad power; datapath activity is what we count).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HypnosStats {
+    /// Active datapath cycles (the engine clock-gates when idle).
+    pub datapath_cycles: u64,
+    pub frames: u64,
+    pub searches: u64,
+    pub wakeups: u64,
+}
+
+/// The engine.
+pub struct Hypnos {
+    pub dim: usize,
+    /// Input sample width per channel (D bits → D-cycle IM mapping).
+    pub input_width: u32,
+    /// CIM full-scale value.
+    pub cim_max: u32,
+    program: MicroProgram,
+    pc: usize,
+    repeat: Option<(u16, usize, usize)>, // (remaining, body_start, body_len)
+    res: HdVec,
+    tmp: HdVec,
+    eu: EuArray,
+    pub am: Am,
+    pub stats: HypnosStats,
+}
+
+impl Hypnos {
+    pub fn new(dim: usize, input_width: u32, cim_max: u32) -> Self {
+        Self {
+            dim,
+            input_width,
+            cim_max,
+            program: MicroProgram::new(vec![MicroOp::NextFrame]),
+            pc: 0,
+            repeat: None,
+            res: HdVec::zero(dim),
+            tmp: HdVec::zero(dim),
+            eu: EuArray::new(dim),
+            am: Am::new(dim),
+            stats: HypnosStats::default(),
+        }
+    }
+
+    /// Load a microcode program and reset the sequencer.
+    pub fn load_program(&mut self, program: MicroProgram) {
+        self.program = program;
+        self.pc = 0;
+        self.repeat = None;
+        self.res = HdVec::zero(self.dim);
+        self.tmp = HdVec::zero(self.dim);
+        self.eu.reset();
+    }
+
+    pub fn result(&self) -> &HdVec {
+        &self.res
+    }
+
+    /// Software-visible encoder primitives (shared with the host-side
+    /// training stack so trained prototypes are bit-compatible).
+    pub fn encode_im(&self, value: u32) -> HdVec {
+        perm::im_map(self.dim, value, self.input_width)
+    }
+
+    pub fn encode_cim(&self, value: u32) -> HdVec {
+        encoder::cim_map(self.dim, value, self.cim_max)
+    }
+
+    fn chunk_cycles(&self) -> u64 {
+        (self.dim as u64).div_ceil(DATAPATH_BITS as u64)
+    }
+
+    /// Feed one preprocessed sample frame (one value per channel).
+    ///
+    /// `NextFrame` *acquires* a frame: the first one hit in this call
+    /// consumes `frame` and execution continues; hitting a second
+    /// `NextFrame` blocks (the sequencer parks on it until the next frame
+    /// arrives). Encode ops therefore follow their `NextFrame` in program
+    /// order, and window-final ops (threshold, search) run within the call
+    /// that delivered the window's last frame. The sequencer wraps to slot
+    /// 0 at the end of the store ("fetches these instructions in an
+    /// infinite loop"). Returns a wake event if a Search matched.
+    pub fn on_frame(&mut self, frame: &[u32]) -> Option<WakeEvent> {
+        self.stats.frames += 1;
+        let mut wake = None;
+        let mut consumed = false;
+        let mut guard = 0u32;
+        loop {
+            guard += 1;
+            assert!(guard < 100_000, "microcode made no frame progress");
+            let op = self.program.ops[self.pc];
+            if matches!(op, MicroOp::NextFrame) && consumed {
+                // Park on this NextFrame awaiting the next frame.
+                return wake;
+            }
+            let mut next_pc = self.pc + 1;
+            match op {
+                MicroOp::ImMap { chan } => {
+                    let v = frame.get(chan as usize).copied().unwrap_or(0);
+                    self.tmp = self.encode_im(v);
+                    self.stats.datapath_cycles += perm::im_cycles(self.input_width);
+                }
+                MicroOp::ImLabel { chan } => {
+                    self.tmp = self.encode_im(chan as u32);
+                    self.stats.datapath_cycles += perm::im_cycles(self.input_width);
+                }
+                MicroOp::CimMap { chan } => {
+                    let v = frame.get(chan as usize).copied().unwrap_or(0);
+                    self.tmp = self.encode_cim(v);
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::MovTmp => {
+                    self.res = self.tmp.clone();
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::BindTmp => {
+                    self.res = self.res.xor(&self.tmp);
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::Permute { n } => {
+                    self.res = self.res.rotate(n as usize);
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::BundleAcc => {
+                    self.eu.accumulate(&self.res);
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::BundleReset => {
+                    self.eu.reset();
+                    self.stats.datapath_cycles += 1;
+                }
+                MicroOp::BundleThr => {
+                    self.res = self.eu.threshold();
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::BindAm { row } => {
+                    if let Some(v) = self.am.read(row as usize) {
+                        self.res = self.res.xor(&v.clone());
+                    }
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::LoadAm { row } => {
+                    if let Some(v) = self.am.read(row as usize) {
+                        self.res = v.clone();
+                    }
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::StoreAm { row } => {
+                    self.am.write(row as usize, self.res.clone());
+                    self.stats.datapath_cycles += self.chunk_cycles();
+                }
+                MicroOp::NextFrame => {
+                    consumed = true;
+                    self.stats.datapath_cycles += 1;
+                }
+                MicroOp::Repeat { count, len } => {
+                    if count > 0 && len > 0 {
+                        self.repeat = Some((count, self.pc + 1, len as usize));
+                    } else {
+                        next_pc = self.pc + 1 + len as usize;
+                    }
+                    self.stats.datapath_cycles += 1;
+                }
+                MicroOp::Search { threshold, target } => {
+                    self.stats.searches += 1;
+                    self.stats.datapath_cycles += self.am.lookup_cycles();
+                    if let Some(r) = self.am.lookup(&self.res) {
+                        if r.index == target as usize && r.distance <= threshold as u32 {
+                            self.stats.wakeups += 1;
+                            wake = Some(WakeEvent {
+                                class_index: r.index,
+                                distance: r.distance,
+                            });
+                        }
+                    }
+                }
+            }
+
+            // Hardware repeat channel.
+            if let Some((remaining, start, len)) = self.repeat {
+                if next_pc == start + len {
+                    if remaining > 1 {
+                        self.repeat = Some((remaining - 1, start, len));
+                        next_pc = start;
+                    } else {
+                        self.repeat = None;
+                    }
+                }
+            }
+            self.pc = if next_pc >= self.program.len() { 0 } else { next_pc };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Per-frame: acquire, CIM-encode, bundle over a window, then search.
+    fn window_program(window: u16) -> MicroProgram {
+        MicroProgram::new(vec![
+            MicroOp::BundleReset,
+            MicroOp::Repeat { count: window, len: 4 },
+            MicroOp::NextFrame,
+            MicroOp::CimMap { chan: 0 },
+            MicroOp::MovTmp,
+            MicroOp::BundleAcc,
+            MicroOp::BundleThr,
+            MicroOp::Search { threshold: 200, target: 0 },
+        ])
+    }
+
+    #[test]
+    fn window_classify_and_wake() {
+        let mut h = Hypnos::new(512, 16, 4095);
+        // Prototype 0 = bundle of CIM(100); prototype 1 = CIM(4000).
+        let p0 = h.encode_cim(100);
+        let p1 = h.encode_cim(4000);
+        h.am.write(0, p0);
+        h.am.write(1, p1);
+        h.am.mark_prototype(0, true);
+        h.am.mark_prototype(1, true);
+        h.load_program(window_program(4));
+
+        // Stream 4 frames near value 100: expect a wake on the 4th.
+        let mut wake = None;
+        for v in [100u32, 105, 95, 102] {
+            wake = h.on_frame(&[v]);
+        }
+        let w = wake.expect("expected wake-up");
+        assert_eq!(w.class_index, 0);
+
+        // Stream 4 frames near 4000: no wake (class 1 wins the lookup).
+        let mut wake = None;
+        for v in [4000u32, 3990, 4010, 4005] {
+            wake = h.on_frame(&[v]);
+        }
+        assert!(wake.is_none());
+        assert_eq!(h.stats.searches, 2);
+        assert_eq!(h.stats.wakeups, 1);
+    }
+
+    #[test]
+    fn sequencer_wraps_infinitely() {
+        let mut h = Hypnos::new(512, 16, 4095);
+        h.load_program(MicroProgram::new(vec![MicroOp::NextFrame]));
+        for _ in 0..10 {
+            assert!(h.on_frame(&[0]).is_none());
+        }
+        assert_eq!(h.stats.frames, 10);
+    }
+
+    #[test]
+    fn datapath_cycles_fit_the_32khz_budget() {
+        // §II-B Table I: 3 channels × 150 SPS at 32 kHz. Budget per frame
+        // = 32000 / 150 ≈ 213 cycles for a 3-channel frame program.
+        let mut h = Hypnos::new(512, 16, 4095);
+        h.am.write(0, HdVec::zero(512));
+        h.am.mark_prototype(0, true);
+        h.load_program(MicroProgram::new(vec![
+            MicroOp::BundleReset,
+            MicroOp::Repeat { count: 16, len: 8 },
+            MicroOp::NextFrame,
+            MicroOp::CimMap { chan: 0 },
+            MicroOp::MovTmp,
+            MicroOp::CimMap { chan: 1 },
+            MicroOp::BindTmp,
+            MicroOp::CimMap { chan: 2 },
+            MicroOp::BindTmp,
+            MicroOp::BundleAcc,
+            MicroOp::BundleThr,
+            MicroOp::Search { threshold: 100, target: 0 },
+        ]));
+        let before = h.stats.datapath_cycles;
+        h.on_frame(&[1, 2, 3]);
+        let per_frame = h.stats.datapath_cycles - before;
+        assert!(per_frame < 213, "cycles/frame = {per_frame}");
+    }
+}

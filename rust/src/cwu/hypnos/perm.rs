@@ -1,0 +1,173 @@
+//! Item-memory rematerialization (§II-B).
+//!
+//! Instead of a ROM item memory, Hypnos *rematerialises* IM vectors: a
+//! hardwired pseudo-random seed vector is passed through a chain of four
+//! hardwired random permutations, selected per step by the serialized
+//! input bits, producing a quasi-orthogonal hypervector in D cycles for a
+//! D-bit input. Low-dimensional values that differ in even one bit diverge
+//! onto unrelated permutation paths — giving IM's quasi-orthogonality
+//! without storing any mapping.
+//!
+//! The silicon hardwires the permutations at tape-out; we hardwire them at
+//! build time from fixed seeds (deterministic across runs).
+
+use once_cell::sync::Lazy;
+
+use crate::common::Rng;
+
+use super::bitvec::HdVec;
+
+/// Maximum HD dimension: permutation tables cover it; smaller dimensions
+/// use the table modulo their size (still a bijection per dimension
+/// because tables are built per supported size).
+pub const N_PERMS: usize = 4;
+
+/// One permutation table per (perm index, HD dim).
+struct PermSet {
+    /// tables[p] maps source bit -> destination bit.
+    tables: [Vec<u32>; N_PERMS],
+}
+
+fn fisher_yates(n: usize, rng: &mut Rng) -> Vec<u32> {
+    let mut t: Vec<u32> = (0..n as u32).collect();
+    for i in (1..n).rev() {
+        let j = rng.below((i + 1) as u64) as usize;
+        t.swap(i, j);
+    }
+    t
+}
+
+static PERMS_BY_DIM: Lazy<Vec<(usize, PermSet)>> = Lazy::new(|| {
+    super::bitvec::HD_DIMS
+        .iter()
+        .map(|&dim| {
+            let tables = std::array::from_fn(|p| {
+                // Fixed seeds: "hardwired random permutations".
+                let mut rng = Rng::new(0x5EED_0000 + (p as u64) * 97 + dim as u64);
+                fisher_yates(dim, &mut rng)
+            });
+            (dim, PermSet { tables })
+        })
+        .collect()
+});
+
+fn perm_table(dim: usize, p: usize) -> &'static [u32] {
+    let set = &PERMS_BY_DIM
+        .iter()
+        .find(|(d, _)| *d == dim)
+        .expect("unsupported dim")
+        .1;
+    &set.tables[p]
+}
+
+/// Apply hardwired permutation `p` (0..4) to `v`.
+///
+/// Scatter only the set bits, walking source words with
+/// `trailing_zeros` and writing destination words directly (§Perf: the
+/// per-bit get/set version made IM rematerialization the simulator's
+/// hottest loop).
+pub fn apply(v: &HdVec, p: usize) -> HdVec {
+    let table = perm_table(v.bits, p);
+    let mut out = HdVec::zero(v.bits);
+    let dst_words = out.words_mut();
+    for (wi, &word) in v.words().iter().enumerate() {
+        let mut w = word;
+        while w != 0 {
+            let b = w.trailing_zeros() as usize;
+            let dst = table[wi * 64 + b] as usize;
+            dst_words[dst >> 6] |= 1u64 << (dst & 63);
+            w &= w - 1;
+        }
+    }
+    out
+}
+
+/// The hardwired pseudo-random seed vector for dimension `dim`.
+pub fn seed_vector(dim: usize) -> HdVec {
+    let mut rng = Rng::new(0xB007_5EED ^ dim as u64);
+    HdVec::from_words(dim, rng.bitvec(dim))
+}
+
+/// Rematerialise the IM hypervector for a `width`-bit input `value`:
+/// D iterations, each selecting one of the four permutations from the
+/// current input bit and the step parity (uses all four hardwired
+/// permutations; one bit consumed per cycle as in the serialized silicon
+/// datapath).
+pub fn im_map(dim: usize, value: u32, width: u32) -> HdVec {
+    let mut v = seed_vector(dim);
+    for step in 0..width {
+        let bit = (value >> step) & 1;
+        let sel = (bit * 2 + (step & 1)) as usize;
+        v = apply(&v, sel);
+    }
+    v
+}
+
+/// Datapath cycles for one IM mapping: D cycles for a D-bit input.
+pub fn im_cycles(width: u32) -> u64 {
+    width as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn permutations_are_bijections() {
+        for p in 0..N_PERMS {
+            let t = perm_table(512, p);
+            let mut seen = vec![false; 512];
+            for &d in t {
+                assert!(!seen[d as usize]);
+                seen[d as usize] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn permutation_preserves_popcount() {
+        let s = seed_vector(1024);
+        for p in 0..N_PERMS {
+            assert_eq!(apply(&s, p).count_ones(), s.count_ones());
+        }
+    }
+
+    #[test]
+    fn seed_vector_is_dense_and_deterministic() {
+        let s1 = seed_vector(2048);
+        let s2 = seed_vector(2048);
+        assert_eq!(s1, s2);
+        let ones = s1.count_ones();
+        assert!((900..1150).contains(&(ones * 2048 / 2048 / 2 * 2 / 2)) || ones > 900);
+        assert!(ones > 900 && ones < 1150, "ones = {ones}");
+    }
+
+    #[test]
+    fn im_vectors_are_quasi_orthogonal() {
+        // Distinct values map to ~dim/2 Hamming distance.
+        let dim = 2048;
+        let vals = [0u32, 1, 2, 255, 256, 65535];
+        for (i, &a) in vals.iter().enumerate() {
+            for &b in &vals[i + 1..] {
+                let d = im_map(dim, a, 16).hamming(&im_map(dim, b, 16));
+                let frac = d as f64 / dim as f64;
+                assert!(
+                    (0.40..0.60).contains(&frac),
+                    "im({a}) vs im({b}): {frac}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn im_is_deterministic_rematerialization() {
+        assert_eq!(im_map(512, 42, 16), im_map(512, 42, 16));
+        assert_ne!(im_map(512, 42, 16), im_map(512, 43, 16));
+    }
+
+    #[test]
+    fn im_cycle_cost_is_input_width() {
+        assert_eq!(im_cycles(16), 16);
+        assert_eq!(im_cycles(8), 8);
+    }
+}

@@ -1,0 +1,254 @@
+//! The CWU's low-power preprocessor (§II-B, Fig. 2).
+//!
+//! Up to eight independent channels of lightweight conditioning between
+//! the SPI master and Hypnos: data-width conversion, offset removal and
+//! low-pass filtering (both exponential-moving-average based "to save
+//! area and power"), subsampling, and local-binary-pattern filtering.
+
+/// Configuration of one preprocessor channel (stages apply in the order
+/// they appear in the struct, mirroring the hardware chain).
+#[derive(Debug, Clone, Copy)]
+pub struct ChannelConfig {
+    /// Input width in bits (sensor word); output is `out_width` bits.
+    pub in_width: u32,
+    pub out_width: u32,
+    /// Offset removal: subtract an EMA baseline with decay 2^-k (None =
+    /// bypass).
+    pub offset_k: Option<u32>,
+    /// Low-pass: EMA with decay 2^-k (None = bypass).
+    pub lowpass_k: Option<u32>,
+    /// Keep one sample in `n` (1 = bypass).
+    pub subsample: u32,
+    /// Local-binary-pattern output: emit the 8-bit LBP code of the last 8
+    /// samples instead of the amplitude.
+    pub lbp: bool,
+}
+
+impl Default for ChannelConfig {
+    fn default() -> Self {
+        Self {
+            in_width: 16,
+            out_width: 16,
+            offset_k: None,
+            lowpass_k: None,
+            subsample: 1,
+            lbp: false,
+        }
+    }
+}
+
+/// Runtime state of one channel.
+#[derive(Debug, Clone)]
+pub struct ChannelState {
+    cfg: ChannelConfig,
+    /// EMA baseline accumulator (fixed point, <<16).
+    offset_acc: i64,
+    /// EMA low-pass accumulator (fixed point, <<16).
+    lp_acc: i64,
+    lp_init: bool,
+    /// Subsample phase.
+    phase: u32,
+    /// Last 8 samples for LBP.
+    history: [i32; 8],
+    hist_len: usize,
+    pub samples_in: u64,
+    pub samples_out: u64,
+}
+
+impl ChannelState {
+    pub fn new(cfg: ChannelConfig) -> Self {
+        assert!(cfg.subsample >= 1);
+        assert!(cfg.in_width <= 32 && cfg.out_width <= 32);
+        Self {
+            cfg,
+            offset_acc: 0,
+            lp_acc: 0,
+            lp_init: false,
+            phase: 0,
+            history: [0; 8],
+            hist_len: 0,
+            samples_in: 0,
+            samples_out: 0,
+        }
+    }
+
+    /// Process one raw sensor word; returns the conditioned sample when
+    /// one is emitted (subsampling swallows the rest).
+    pub fn push(&mut self, raw: u32) -> Option<u32> {
+        self.samples_in += 1;
+        // Width conversion: sign-extend from in_width.
+        let shift = 32 - self.cfg.in_width;
+        let mut x = ((raw << shift) as i32) >> shift;
+
+        // Offset removal: x - EMA(x).
+        if let Some(k) = self.cfg.offset_k {
+            let base = (self.offset_acc >> 16) as i32;
+            self.offset_acc += ((x - base) as i64) << (16 - k.min(15) as i64);
+            x -= (self.offset_acc >> 16) as i32;
+        }
+
+        // Low-pass: EMA(x).
+        if let Some(k) = self.cfg.lowpass_k {
+            if !self.lp_init {
+                self.lp_acc = (x as i64) << 16;
+                self.lp_init = true;
+            }
+            let y = (self.lp_acc >> 16) as i32;
+            self.lp_acc += ((x - y) as i64) << (16 - k.min(15) as i64);
+            x = (self.lp_acc >> 16) as i32;
+        }
+
+        // History for LBP (pre-subsample, like the hardware chain).
+        self.history.rotate_left(1);
+        self.history[7] = x;
+        self.hist_len = (self.hist_len + 1).min(8);
+
+        // Subsample.
+        self.phase += 1;
+        if self.phase < self.cfg.subsample {
+            return None;
+        }
+        self.phase = 0;
+
+        let out = if self.cfg.lbp {
+            // LBP code: compare the 8 history samples to their mean.
+            let n = self.hist_len.max(1);
+            let mean: i64 =
+                self.history[8 - n..].iter().map(|&v| v as i64).sum::<i64>() / n as i64;
+            let mut code = 0u32;
+            for (i, &v) in self.history.iter().enumerate() {
+                if (v as i64) >= mean {
+                    code |= 1 << i;
+                }
+            }
+            code
+        } else {
+            // Width-convert to out_width (arithmetic truncate).
+            let ow = self.cfg.out_width;
+            let mask = if ow >= 32 { u32::MAX } else { (1u32 << ow) - 1 };
+            (x as u32) & mask
+        };
+        self.samples_out += 1;
+        Some(out)
+    }
+}
+
+/// The 8-channel preprocessor.
+pub struct Preprocessor {
+    pub channels: Vec<ChannelState>,
+}
+
+impl Preprocessor {
+    pub fn new(configs: &[ChannelConfig]) -> Self {
+        assert!(configs.len() <= 8, "preprocessor supports up to 8 channels");
+        Self {
+            channels: configs.iter().map(|&c| ChannelState::new(c)).collect(),
+        }
+    }
+
+    /// Push one raw word per channel; returns a full conditioned frame
+    /// when *all* channels emitted (channels are configured to the same
+    /// output rate in practice).
+    pub fn push_frame(&mut self, raw: &[u32]) -> Option<Vec<u32>> {
+        assert_eq!(raw.len(), self.channels.len());
+        let outs: Vec<Option<u32>> =
+            self.channels.iter_mut().zip(raw).map(|(ch, &r)| ch.push(r)).collect();
+        if outs.iter().all(|o| o.is_some()) {
+            Some(outs.into_iter().map(|o| o.unwrap()).collect())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn width_conversion_sign_extends() {
+        let mut ch = ChannelState::new(ChannelConfig {
+            in_width: 12,
+            out_width: 16,
+            ..Default::default()
+        });
+        // 0xFFF as 12-bit = -1 -> 16-bit 0xFFFF
+        assert_eq!(ch.push(0xFFF), Some(0xFFFF));
+    }
+
+    #[test]
+    fn offset_removal_converges_to_zero_mean() {
+        let mut ch = ChannelState::new(ChannelConfig {
+            offset_k: Some(4),
+            ..Default::default()
+        });
+        let mut last = 0i32;
+        for _ in 0..500 {
+            let out = ch.push(1000).unwrap();
+            last = ((out << 16) as i32) >> 16;
+        }
+        assert!(last.abs() < 5, "residual offset = {last}");
+    }
+
+    #[test]
+    fn lowpass_smooths_alternating_signal() {
+        let mut ch = ChannelState::new(ChannelConfig {
+            lowpass_k: Some(3),
+            ..Default::default()
+        });
+        let mut outs = Vec::new();
+        for i in 0..200 {
+            let x = if i % 2 == 0 { 100u32 } else { 0 };
+            outs.push(((ch.push(x).unwrap() << 16) as i32) >> 16);
+        }
+        // Settled output should hover near the mean (50), never the rails.
+        let tail = &outs[100..];
+        assert!(tail.iter().all(|&v| (30..=70).contains(&v)), "{tail:?}");
+    }
+
+    #[test]
+    fn subsample_keeps_one_in_n() {
+        let mut ch = ChannelState::new(ChannelConfig { subsample: 4, ..Default::default() });
+        let mut emitted = 0;
+        for i in 0..40 {
+            if ch.push(i).is_some() {
+                emitted += 1;
+            }
+        }
+        assert_eq!(emitted, 10);
+        assert_eq!(ch.samples_in, 40);
+        assert_eq!(ch.samples_out, 10);
+    }
+
+    #[test]
+    fn lbp_distinguishes_rising_from_constant() {
+        let mk = || ChannelState::new(ChannelConfig { lbp: true, ..Default::default() });
+        let mut rising = mk();
+        let mut flat = mk();
+        let mut r_code = 0;
+        let mut f_code = 0;
+        for i in 0..16 {
+            if let Some(c) = rising.push(i * 100) {
+                r_code = c;
+            }
+            if let Some(c) = flat.push(500) {
+                f_code = c;
+            }
+        }
+        assert_ne!(r_code, 0);
+        assert_ne!(r_code, f_code);
+        // Rising ramp: newest samples above mean -> high bits set.
+        assert!(r_code & 0x80 != 0);
+    }
+
+    #[test]
+    fn frame_assembly_waits_for_all_channels() {
+        let cfgs = [
+            ChannelConfig { subsample: 2, ..Default::default() },
+            ChannelConfig { subsample: 2, ..Default::default() },
+        ];
+        let mut pp = Preprocessor::new(&cfgs);
+        assert!(pp.push_frame(&[1, 2]).is_none());
+        assert!(pp.push_frame(&[3, 4]).is_some());
+    }
+}

@@ -1,0 +1,172 @@
+//! Layer-graph IR for int8 inference networks (§IV-B data flow).
+
+/// Layer operator kinds (int8 tensors, int32 accumulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Standard convolution `kxk`, `stride`, `cin → cout`.
+    Conv { k: usize, stride: usize, cin: usize, cout: usize },
+    /// Depthwise 3×3 convolution over `c` channels.
+    DwConv { stride: usize, c: usize },
+    /// Fully connected `cin → cout` (spatial 1×1 at this point).
+    Linear { cin: usize, cout: usize },
+    /// Residual addition with the saved input of the block.
+    Add { c: usize },
+    /// Global average pool over `c` channels.
+    GlobalPool { c: usize },
+}
+
+/// One layer instance with its input geometry.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
+impl Layer {
+    pub fn out_hw(&self) -> (usize, usize) {
+        match self.kind {
+            LayerKind::Conv { stride, .. } | LayerKind::DwConv { stride, .. } => {
+                (self.in_h.div_ceil(stride), self.in_w.div_ceil(stride))
+            }
+            LayerKind::Linear { .. } | LayerKind::Add { .. } => (self.in_h, self.in_w),
+            LayerKind::GlobalPool { .. } => (1, 1),
+        }
+    }
+
+    pub fn out_c(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { cout, .. } => cout,
+            LayerKind::DwConv { c, .. } => c,
+            LayerKind::Linear { cout, .. } => cout,
+            LayerKind::Add { c } => c,
+            LayerKind::GlobalPool { c } => c,
+        }
+    }
+
+    pub fn in_c(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv { cin, .. } => cin,
+            LayerKind::DwConv { c, .. } => c,
+            LayerKind::Linear { cin, .. } => cin,
+            LayerKind::Add { c } => c,
+            LayerKind::GlobalPool { c } => c,
+        }
+    }
+
+    /// Multiply-accumulates.
+    pub fn macs(&self) -> u64 {
+        let (oh, ow) = self.out_hw();
+        match self.kind {
+            LayerKind::Conv { k, cin, cout, .. } => (oh * ow * k * k * cin * cout) as u64,
+            LayerKind::DwConv { c, .. } => (oh * ow * 9 * c) as u64,
+            LayerKind::Linear { cin, cout } => (oh * ow * cin * cout) as u64,
+            LayerKind::Add { c } => (oh * ow * c) as u64 / 2, // adds, not MACs
+            LayerKind::GlobalPool { c } => (self.in_h * self.in_w * c) as u64 / 2,
+        }
+    }
+
+    /// Weight bytes (int8).
+    pub fn weight_bytes(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv { k, cin, cout, .. } => (k * k * cin * cout) as u64,
+            LayerKind::DwConv { c, .. } => (9 * c) as u64,
+            LayerKind::Linear { cin, cout } => (cin * cout) as u64,
+            LayerKind::Add { .. } | LayerKind::GlobalPool { .. } => 0,
+        }
+    }
+
+    /// Input/output activation bytes (int8).
+    pub fn in_bytes(&self) -> u64 {
+        (self.in_h * self.in_w * self.in_c()) as u64
+    }
+
+    pub fn out_bytes(&self) -> u64 {
+        let (oh, ow) = self.out_hw();
+        (oh * ow * self.out_c()) as u64
+    }
+
+    /// Is this a 3×3 standard conv (HWCE-eligible)?
+    pub fn hwce_eligible(&self) -> bool {
+        matches!(self.kind, LayerKind::Conv { k: 3, .. })
+    }
+}
+
+/// A whole network.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    pub fn total_weight_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Peak simultaneous activation footprint in L2 (input + output of
+    /// the widest layer — §IV-B "intermediate activation tensors are
+    /// allocated in the L2 shared memory and immediately deallocated").
+    pub fn peak_activation_bytes(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.in_bytes() + l.out_bytes())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Consistency: each layer's input channels match the previous
+    /// layer's output channels (skipping residual Add bookkeeping).
+    pub fn validate(&self) {
+        for pair in self.layers.windows(2) {
+            let (a, b) = (&pair[0], &pair[1]);
+            let (oh, ow) = a.out_hw();
+            assert_eq!(oh, b.in_h, "{} -> {}: H mismatch", a.name, b.name);
+            assert_eq!(ow, b.in_w, "{} -> {}: W mismatch", a.name, b.name);
+            assert_eq!(a.out_c(), b.in_c(), "{} -> {}: C mismatch", a.name, b.name);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_geometry() {
+        let l = Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { k: 3, stride: 2, cin: 3, cout: 32 },
+            in_h: 224,
+            in_w: 224,
+        };
+        assert_eq!(l.out_hw(), (112, 112));
+        assert_eq!(l.macs(), 112 * 112 * 9 * 3 * 32);
+        assert_eq!(l.weight_bytes(), 9 * 3 * 32);
+        assert!(l.hwce_eligible());
+    }
+
+    #[test]
+    fn dw_and_linear() {
+        let dw = Layer {
+            name: "dw".into(),
+            kind: LayerKind::DwConv { stride: 1, c: 96 },
+            in_h: 14,
+            in_w: 14,
+        };
+        assert_eq!(dw.macs(), 14 * 14 * 9 * 96);
+        assert!(!dw.hwce_eligible());
+        let fc = Layer {
+            name: "fc".into(),
+            kind: LayerKind::Linear { cin: 1280, cout: 1000 },
+            in_h: 1,
+            in_w: 1,
+        };
+        assert_eq!(fc.weight_bytes(), 1_280_000);
+    }
+}

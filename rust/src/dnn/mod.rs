@@ -1,0 +1,17 @@
+//! The DNN deployment stack (§IV-B): layer-graph IR, the MobileNetV2 and
+//! RepVGG-A topologies of the evaluation, the DORY-style tiling solver,
+//! and the four-stage double-buffered pipeline latency/energy model.
+
+pub mod graph;
+pub mod mobilenetv2;
+pub mod pipeline;
+pub mod repvgg;
+pub mod tiler;
+
+pub use graph::{Layer, LayerKind, Network};
+pub use mobilenetv2::mobilenet_v2;
+pub use pipeline::{
+    run_network, Bound, Engine, NetworkReport, PipelineConfig, StorePolicy, WeightStore,
+};
+pub use repvgg::{repvgg, Variant};
+pub use tiler::{tile_layer, Tiling, L1_BUDGET};

@@ -1,0 +1,146 @@
+//! RepVGG-A0/A1/A2 in deploy form (§IV-B, Table VII; [30]).
+//!
+//! "Divided into 5 stages composed of 1, 2, 4, 14, and 1 layers,
+//! respectively — all implemented as 3×3 convolutions, plus a final fully
+//! connected layer." Deploy mode re-parameterises each block to a single
+//! 3×3 conv (the identity the HWCE datapath tests prove), so every
+//! compute layer is HWCE-eligible.
+
+use super::graph::{Layer, LayerKind, Network};
+
+/// RepVGG-A variant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    A0,
+    A1,
+    A2,
+}
+
+impl Variant {
+    /// Stage widths (a-scaled 64,128,256 + b-scaled 512 head).
+    fn widths(self) -> [usize; 5] {
+        match self {
+            Variant::A0 => [48, 48, 96, 192, 1280],
+            Variant::A1 => [64, 64, 128, 256, 1280],
+            Variant::A2 => [96, 96, 192, 384, 1408],
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::A0 => "RepVGG-A0",
+            Variant::A1 => "RepVGG-A1",
+            Variant::A2 => "RepVGG-A2",
+        }
+    }
+
+    /// Published ImageNet top-1 (Table VII; quoted, not re-measured —
+    /// DESIGN.md §5).
+    pub fn top1(self) -> f64 {
+        match self {
+            Variant::A0 => 72.41,
+            Variant::A1 => 74.46,
+            Variant::A2 => 76.48,
+        }
+    }
+}
+
+/// Stage depths: 1, 2, 4, 14, 1 (all variants).
+pub const DEPTHS: [usize; 5] = [1, 2, 4, 14, 1];
+
+pub fn repvgg(v: Variant) -> Network {
+    let widths = v.widths();
+    let mut layers = Vec::new();
+    let (mut h, mut w, mut c) = (224usize, 224usize, 3usize);
+    for (s, (&width, &depth)) in widths.iter().zip(DEPTHS.iter()).enumerate() {
+        for i in 0..depth {
+            let stride = if i == 0 { 2 } else { 1 };
+            let l = Layer {
+                name: format!("stage{s}.conv{i}"),
+                kind: LayerKind::Conv { k: 3, stride, cin: c, cout: width },
+                in_h: h,
+                in_w: w,
+            };
+            let (oh, ow) = l.out_hw();
+            h = oh;
+            w = ow;
+            c = width;
+            layers.push(l);
+        }
+    }
+    layers.push(Layer {
+        name: "pool".into(),
+        kind: LayerKind::GlobalPool { c },
+        in_h: h,
+        in_w: w,
+    });
+    layers.push(Layer {
+        name: "fc".into(),
+        kind: LayerKind::Linear { cin: c, cout: 1000 },
+        in_h: 1,
+        in_w: 1,
+    });
+    let net = Network { name: v.name().into(), layers };
+    net.validate();
+    net
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a0_matches_table7_row() {
+        let net = repvgg(Variant::A0);
+        // Table VII: 1389 MMAC, 8116 KB int8 parameters.
+        let mmacs = net.total_macs() as f64 / 1e6;
+        assert!((1250.0..1530.0).contains(&mmacs), "MMACs = {mmacs}");
+        let kb = net.total_weight_bytes() as f64 / 1024.0;
+        assert!((7500.0..8700.0).contains(&kb), "params = {kb} KB");
+    }
+
+    #[test]
+    fn a1_and_a2_match_table7() {
+        let a1 = repvgg(Variant::A1);
+        let m1 = a1.total_macs() as f64 / 1e6; // 2364 MMAC
+        assert!((2100.0..2600.0).contains(&m1), "A1 MMACs = {m1}");
+        let k1 = a1.total_weight_bytes() as f64 / 1024.0; // 12484 KB
+        assert!((11500.0..13500.0).contains(&k1), "A1 KB = {k1}");
+
+        let a2 = repvgg(Variant::A2);
+        let m2 = a2.total_macs() as f64 / 1e6; // 5117 MMAC
+        assert!((4600.0..5600.0).contains(&m2), "A2 MMACs = {m2}");
+        let k2 = a2.total_weight_bytes() as f64 / 1024.0; // 24769 KB
+        assert!((23000.0..26500.0).contains(&k2), "A2 KB = {k2}");
+    }
+
+    #[test]
+    fn all_compute_layers_are_hwce_eligible() {
+        let net = repvgg(Variant::A0);
+        for l in &net.layers {
+            if matches!(l.kind, LayerKind::Conv { .. }) {
+                assert!(l.hwce_eligible(), "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn too_big_for_mram_alone() {
+        // The Table VII premise: all three exceed the 4 MB MRAM, forcing
+        // the greedy MRAM/HyperRAM split.
+        for v in [Variant::A0, Variant::A1, Variant::A2] {
+            assert!(repvgg(v).total_weight_bytes() > 4 * 1024 * 1024, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn depths_sum_to_22_convs() {
+        let net = repvgg(Variant::A0);
+        let convs = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l.kind, LayerKind::Conv { .. }))
+            .count();
+        assert_eq!(convs, DEPTHS.iter().sum::<usize>());
+    }
+}

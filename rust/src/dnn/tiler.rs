@@ -1,0 +1,212 @@
+//! DORY-style tiling solver (§IV-B, [32]).
+//!
+//! "Both weights and input activation have to be divided into tiles that
+//! fit within the 128 KB of cluster L1 shared memory." The solver keeps
+//! the full input-channel depth per tile (partial sums never spill to
+//! L2), halves the output-row count, then the output-channel count, until
+//! the double-buffered working set fits. DORY's actual solver is an ILP;
+//! this greedy variant reproduces its constraint set and, for every layer
+//! of the evaluated networks, a feasible near-maximal tile.
+
+use super::graph::{Layer, LayerKind};
+
+/// Usable L1 for kernel buffers (128 kB minus stack/runtime margin).
+pub const L1_BUDGET: usize = 120 * 1024;
+
+/// A tiling solution for one layer.
+#[derive(Debug, Clone)]
+pub struct Tiling {
+    /// Output rows per tile.
+    pub h_tile: usize,
+    /// Output columns per tile (wide deep layers must split W too).
+    pub w_tile: usize,
+    /// Output channels per tile.
+    pub cout_tile: usize,
+    /// Total tiles.
+    pub n_tiles: usize,
+    /// Per-tile buffer bytes (single buffer; ×2 when double-buffered).
+    pub in_tile_bytes: u64,
+    pub w_tile_bytes: u64,
+    pub out_tile_bytes: u64,
+    /// Total L2↔L1 traffic for the layer (input re-fetched once per
+    /// output-channel tile pass, weights once, outputs once).
+    pub l2l1_bytes: u64,
+}
+
+impl Tiling {
+    pub fn tile_bytes(&self) -> u64 {
+        self.in_tile_bytes + self.w_tile_bytes + self.out_tile_bytes
+    }
+}
+
+/// Geometry helpers for one candidate tile of `layer`.
+fn tile_bytes(
+    layer: &Layer,
+    h_tile: usize,
+    w_tile: usize,
+    cout_tile: usize,
+) -> (u64, u64, u64) {
+    let cin = layer.in_c();
+    match layer.kind {
+        LayerKind::Conv { k, stride, .. } => {
+            let in_rows = h_tile * stride + k.saturating_sub(stride);
+            let in_cols = w_tile * stride + k.saturating_sub(stride);
+            let in_b = (in_rows * in_cols * cin) as u64;
+            let w_b = (k * k * cin * cout_tile) as u64;
+            let out_b = (h_tile * w_tile * cout_tile) as u64;
+            (in_b, w_b, out_b)
+        }
+        LayerKind::DwConv { stride, .. } => {
+            let in_rows = h_tile * stride + 3usize.saturating_sub(stride);
+            let in_cols = w_tile * stride + 3usize.saturating_sub(stride);
+            // depthwise: channel tile == cout tile
+            let in_b = (in_rows * in_cols * cout_tile) as u64;
+            let w_b = (9 * cout_tile) as u64;
+            let out_b = (h_tile * w_tile * cout_tile) as u64;
+            (in_b, w_b, out_b)
+        }
+        LayerKind::Linear { cin, .. } => {
+            let in_b = cin as u64;
+            let w_b = (cin * cout_tile) as u64;
+            let out_b = cout_tile as u64;
+            (in_b, w_b, out_b)
+        }
+        LayerKind::Add { c } | LayerKind::GlobalPool { c } => {
+            let in_b = (h_tile * w_tile * c.min(cout_tile) * 2) as u64;
+            (in_b, 0, (h_tile * w_tile * cout_tile) as u64)
+        }
+    }
+}
+
+/// Solve the tiling for `layer` under `l1_budget` bytes (double-buffered).
+pub fn tile_layer(layer: &Layer, l1_budget: usize) -> Tiling {
+    let (oh, ow) = layer.out_hw();
+    let cout = layer.out_c();
+    let mut h_tile = oh;
+    let mut w_tile = ow;
+    let mut cout_tile = cout;
+    loop {
+        let (in_b, w_b, out_b) = tile_bytes(layer, h_tile, w_tile, cout_tile);
+        // Double buffering: two live copies of every stream (Fig. 9).
+        if 2 * (in_b + w_b + out_b) <= l1_budget as u64 {
+            break;
+        }
+        // Shrink whichever stream dominates the working set: weight-
+        // dominated layers (1x1 projections) split output channels so the
+        // weight buffer shrinks; activation-dominated layers split rows
+        // first (weight reuse + linear DMA), then columns.
+        if w_b >= in_b.max(out_b) && cout_tile > 1 {
+            cout_tile = cout_tile.div_ceil(2);
+        } else if h_tile > 1 {
+            h_tile = h_tile.div_ceil(2);
+        } else if w_tile > 1 {
+            w_tile = w_tile.div_ceil(2);
+        } else if cout_tile > 1 {
+            cout_tile = cout_tile.div_ceil(2);
+        } else {
+            panic!(
+                "{}: single-pixel tile exceeds L1 ({} B)",
+                layer.name,
+                in_b + w_b + out_b
+            );
+        }
+    }
+    let n_h = oh.div_ceil(h_tile);
+    let n_w = ow.div_ceil(w_tile);
+    let n_c = cout.div_ceil(cout_tile);
+    let (in_b, w_b, out_b) = tile_bytes(layer, h_tile, w_tile, cout_tile);
+    // Inputs stream once per cout-tile pass (with halo re-fetch when W is
+    // split); weights and outputs once.
+    let halo = if n_w > 1 { (w_tile + 2) as u64 } else { w_tile as u64 };
+    let l2l1 = layer.in_bytes() * n_c as u64 * halo / w_tile as u64
+        + layer.weight_bytes()
+        + layer.out_bytes();
+    Tiling {
+        h_tile,
+        w_tile,
+        cout_tile,
+        n_tiles: n_h * n_w * n_c,
+        in_tile_bytes: in_b,
+        w_tile_bytes: w_b,
+        out_tile_bytes: out_b,
+        l2l1_bytes: l2l1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::mobilenetv2::mobilenet_v2;
+    use crate::dnn::repvgg::{repvgg, Variant};
+
+    #[test]
+    fn every_mobilenet_layer_tiles_within_l1() {
+        for l in &mobilenet_v2().layers {
+            let t = tile_layer(l, L1_BUDGET);
+            assert!(
+                2 * t.tile_bytes() <= L1_BUDGET as u64,
+                "{}: {} B double-buffered",
+                l.name,
+                2 * t.tile_bytes()
+            );
+            assert!(t.n_tiles >= 1);
+        }
+    }
+
+    #[test]
+    fn every_repvgg_layer_tiles_within_l1() {
+        for v in [Variant::A0, Variant::A1, Variant::A2] {
+            for l in &repvgg(v).layers {
+                let t = tile_layer(l, L1_BUDGET);
+                assert!(2 * t.tile_bytes() <= L1_BUDGET as u64, "{}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_untiled_and_projections_tile_by_channel() {
+        let net = mobilenet_v2();
+        let pool = net.layers.iter().find(|l| l.name == "pool").unwrap();
+        assert_eq!(tile_layer(pool, L1_BUDGET).n_tiles, 1);
+        // Weight-dominated 1x1 projections split along output channels.
+        let proj = net.layers.iter().find(|l| l.name == "bneck16.project").unwrap();
+        let t = tile_layer(proj, L1_BUDGET);
+        assert!(t.cout_tile < proj.out_c(), "{t:?}");
+    }
+
+    #[test]
+    fn random_layer_geometries_always_tile() {
+        use crate::common::{property, Rng};
+        use crate::dnn::graph::Layer;
+        property("tiler-feasible", 60, |rng: &mut Rng| {
+            let k = [1usize, 3][rng.below(2) as usize];
+            let stride = 1 + rng.below(2) as usize;
+            let l = Layer {
+                name: "rand".into(),
+                kind: LayerKind::Conv {
+                    k,
+                    stride,
+                    cin: 1 + rng.below(512) as usize,
+                    cout: 1 + rng.below(512) as usize,
+                },
+                in_h: (1 + rng.below(224)) as usize,
+                in_w: (1 + rng.below(224)) as usize,
+            };
+            let t = tile_layer(&l, L1_BUDGET);
+            // Feasible, double-buffered, and covers the full output.
+            assert!(2 * t.tile_bytes() <= L1_BUDGET as u64, "{l:?} -> {t:?}");
+            let (oh, _) = l.out_hw();
+            assert!(t.h_tile * oh.div_ceil(t.h_tile) >= oh);
+            assert!(t.cout_tile * l.out_c().div_ceil(t.cout_tile) >= l.out_c());
+            assert!(t.l2l1_bytes >= l.in_bytes() + l.weight_bytes() + l.out_bytes());
+        });
+    }
+
+    #[test]
+    fn l2l1_traffic_at_least_tensor_sizes() {
+        for l in &mobilenet_v2().layers {
+            let t = tile_layer(l, L1_BUDGET);
+            assert!(t.l2l1_bytes >= l.in_bytes() + l.weight_bytes() + l.out_bytes());
+        }
+    }
+}

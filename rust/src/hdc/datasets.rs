@@ -1,0 +1,186 @@
+//! Synthetic datasets for the CWU evaluation (DESIGN.md §5 substitution
+//! for the paper's real sensor data).
+//!
+//! * **EMG gestures** — the "typical always-on classification algorithm
+//!   for EMG data" of Table I: 3 electrode channels; each gesture is a
+//!   characteristic per-channel activation envelope + tremor + noise.
+//! * **Language identification** — the "compute-intensive language
+//!   classification algorithm" of Table I (the classic HDC benchmark
+//!   [19]): character streams drawn from per-language digraph statistics.
+
+use crate::common::Rng;
+
+/// One multi-channel window: `window[t][channel]`.
+pub type Window = Vec<Vec<u32>>;
+
+/// EMG gesture generator: 3 channels, 12-bit samples around mid-scale.
+pub struct EmgGenerator {
+    rng: Rng,
+    /// Per-gesture, per-channel activation amplitude (the muscle map).
+    profiles: Vec<[f64; 3]>,
+    pub noise: f64,
+}
+
+impl EmgGenerator {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Rng::new(seed),
+            // rest, fist, wrist-flex, wrist-extend: distinct channel maps.
+            profiles: vec![
+                [0.05, 0.05, 0.05],
+                [0.9, 0.7, 0.2],
+                [0.2, 0.8, 0.7],
+                [0.7, 0.15, 0.85],
+            ],
+            noise: 0.06,
+        }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// Generate one `len`-sample window of gesture `class`.
+    pub fn window(&mut self, class: usize, len: usize) -> Window {
+        let prof = self.profiles[class];
+        (0..len)
+            .map(|t| {
+                (0..3)
+                    .map(|c| {
+                        // Envelope ramps in, tremor at ~40-70 "Hz"
+                        // (arbitrary units of the sample clock).
+                        let env = prof[c] * (1.0 - (-(t as f64) / 6.0).exp());
+                        let tremor =
+                            0.25 * prof[c] * ((t as f64) * (0.9 + 0.2 * c as f64)).sin();
+                        let noise = self.noise * (self.rng.f64() * 2.0 - 1.0);
+                        let v = 2048.0 + 1800.0 * (env + tremor) * 0.5 + 1800.0 * noise;
+                        v.clamp(0.0, 4095.0) as u32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// A labelled dataset: `out[class]` = `n` windows.
+    pub fn dataset(&mut self, n: usize, len: usize) -> Vec<Vec<Window>> {
+        (0..self.n_classes())
+            .map(|c| (0..n).map(|_| self.window(c, len)).collect())
+            .collect()
+    }
+}
+
+/// Language-identification generator: character streams (1 channel,
+/// values 0..26) from per-language digraph chains.
+pub struct LangGenerator {
+    rng: Rng,
+    /// Per-language digraph transition tables (27×27, row-stochastic in
+    /// fixed point).
+    tables: Vec<Vec<u16>>,
+}
+
+pub const LANG_ALPHABET: u32 = 27; // a..z + space
+
+impl LangGenerator {
+    pub fn new(seed: u64, n_langs: usize) -> Self {
+        let mut rng = Rng::new(seed);
+        let tables = (0..n_langs)
+            .map(|_| {
+                // A sparse, peaky digraph structure per language: each row
+                // concentrates mass on a few language-specific successors.
+                let mut t = vec![1u16; (LANG_ALPHABET * LANG_ALPHABET) as usize];
+                for row in 0..LANG_ALPHABET {
+                    for _ in 0..4 {
+                        let col = rng.below(LANG_ALPHABET as u64) as u32;
+                        t[(row * LANG_ALPHABET + col) as usize] += 40;
+                    }
+                }
+                t
+            })
+            .collect();
+        Self { rng, tables }
+    }
+
+    pub fn n_classes(&self) -> usize {
+        self.tables.len()
+    }
+
+    /// Sample a character stream of `len` from language `class` as a
+    /// 1-channel window.
+    pub fn window(&mut self, class: usize, len: usize) -> Window {
+        let table = &self.tables[class];
+        let mut c = self.rng.below(LANG_ALPHABET as u64) as u32;
+        (0..len)
+            .map(|_| {
+                let row = &table[(c * LANG_ALPHABET) as usize..((c + 1) * LANG_ALPHABET) as usize];
+                let total: u64 = row.iter().map(|&w| w as u64).sum();
+                let mut pick = self.rng.below(total);
+                let mut next = 0u32;
+                for (i, &w) in row.iter().enumerate() {
+                    if pick < w as u64 {
+                        next = i as u32;
+                        break;
+                    }
+                    pick -= w as u64;
+                }
+                c = next;
+                vec![c]
+            })
+            .collect()
+    }
+
+    pub fn dataset(&mut self, n: usize, len: usize) -> Vec<Vec<Window>> {
+        (0..self.n_classes())
+            .map(|c| (0..n).map(|_| self.window(c, len)).collect())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn emg_windows_have_expected_shape_and_range() {
+        let mut g = EmgGenerator::new(1);
+        let w = g.window(1, 32);
+        assert_eq!(w.len(), 32);
+        assert!(w.iter().all(|f| f.len() == 3));
+        assert!(w.iter().flatten().all(|&v| v < 4096));
+    }
+
+    #[test]
+    fn emg_classes_differ_in_channel_energy() {
+        let mut g = EmgGenerator::new(2);
+        let energy = |w: &Window, c: usize| -> f64 {
+            w.iter().map(|f| ((f[c] as f64) - 2048.0).abs()).sum::<f64>() / w.len() as f64
+        };
+        let rest = g.window(0, 64);
+        let fist = g.window(1, 64);
+        assert!(energy(&fist, 0) > 3.0 * energy(&rest, 0));
+    }
+
+    #[test]
+    fn lang_streams_are_in_alphabet() {
+        let mut g = LangGenerator::new(3, 4);
+        let w = g.window(2, 100);
+        assert!(w.iter().all(|f| f[0] < LANG_ALPHABET));
+    }
+
+    #[test]
+    fn lang_digraph_statistics_differ() {
+        let mut g = LangGenerator::new(4, 2);
+        // Count digraphs of each language; distributions should diverge.
+        let digraphs = |w: &Window| -> Vec<u32> {
+            let mut h = vec![0u32; (LANG_ALPHABET * LANG_ALPHABET) as usize];
+            for pair in w.windows(2) {
+                h[(pair[0][0] * LANG_ALPHABET + pair[1][0]) as usize] += 1;
+            }
+            h
+        };
+        let a = digraphs(&g.window(0, 2000));
+        let b = digraphs(&g.window(1, 2000));
+        let overlap: u64 = a.iter().zip(&b).map(|(&x, &y)| x.min(y) as u64).sum();
+        let total: u64 = a.iter().map(|&x| x as u64).sum();
+        assert!((overlap as f64) < 0.8 * total as f64, "overlap {overlap}/{total}");
+    }
+}

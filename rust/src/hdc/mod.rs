@@ -1,0 +1,368 @@
+//! Host-side HDC software stack: the part of the paper's flow that runs
+//! on the FC (or offline) to *train* Hypnos.
+//!
+//! HDC training is one-shot/few-shot (§II-B [21]): encode training
+//! windows with exactly the hardware's encoding primitives (we call into
+//! `cwu::hypnos` directly, so prototypes are bit-compatible with what the
+//! engine computes online), bundle per class, threshold, and write the
+//! prototype hypervectors into the AM. [`gen_microcode`] then emits the
+//! 64-slot microcode program that replays the same encoding autonomously.
+//!
+//! Encoding scheme (the network templates of [23] for ExG and [19] for
+//! language, §II-B):
+//! * **spatial**: channels combine by permuted binding —
+//!   `sv = ρ^(C-1)(m(v₀)) ⊕ ρ^(C-2)(m(v₁)) ⊕ … ⊕ m(v_{C-1})` where `m` is
+//!   CIM for analog channels or IM for discrete symbols. Rotation makes
+//!   the binding channel-asymmetric (plain XOR binding would collapse
+//!   mirrored channel patterns).
+//! * **temporal**: `ngram = 1` bundles samples (bag, the ExG template);
+//!   `ngram = n > 1` bundles n-grams
+//!   `g_t = sv_t ⊕ ρ(sv_{t-1}) ⊕ … ⊕ ρ^{n-1}(sv_{t-n+1})` (the language
+//!   template), with missing history as zero vectors. The n-gram shift
+//!   registers live in AM scratchpad rows — exactly the "scratchpad
+//!   memory to store intermediate HD-vectors" usage of §II-B.
+
+pub mod datasets;
+
+use crate::cwu::hypnos::{
+    bitvec::HdVec, encoder, encoder::EuArray, microcode::MicroOp, microcode::MicroProgram,
+    perm, Hypnos,
+};
+
+/// AM scratchpad rows used by the n-gram shift chain (prototypes occupy
+/// the low rows; 16 rows total).
+pub const SCRATCH_SV: u8 = 12;
+pub const SCRATCH_S1: u8 = 13;
+pub const SCRATCH_S2: u8 = 14;
+
+/// Encoding configuration shared between training and the engine.
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderConfig {
+    pub dim: usize,
+    pub input_width: u32,
+    pub cim_max: u32,
+    pub channels: usize,
+    /// Samples bundled per classification window.
+    pub window: usize,
+    /// Temporal n-gram order (1 = bag of samples).
+    pub ngram: usize,
+    /// Discrete symbols (IM mapping) vs analog values (CIM mapping).
+    pub discrete: bool,
+}
+
+impl EncoderConfig {
+    fn map_value(&self, v: u32) -> HdVec {
+        if self.discrete {
+            perm::im_map(self.dim, v, self.input_width)
+        } else {
+            encoder::cim_map(self.dim, v, self.cim_max)
+        }
+    }
+
+    /// Spatial encoding of one frame: permuted channel binding.
+    pub fn encode_frame(&self, frame: &[u32]) -> HdVec {
+        assert_eq!(frame.len(), self.channels);
+        let mut sv: Option<HdVec> = None;
+        for &v in frame {
+            let m = self.map_value(v);
+            sv = Some(match sv {
+                None => m,
+                // RES = ρ(RES) ⊕ m(v_c), exactly the microcode's
+                // Permute-then-BindTmp order.
+                Some(s) => s.rotate(1).xor(&m),
+            });
+        }
+        sv.unwrap()
+    }
+
+    /// Encode one window exactly as the generated microcode does.
+    pub fn encode_window(&self, window: &[Vec<u32>]) -> HdVec {
+        assert!(!window.is_empty());
+        assert!(self.ngram >= 1 && self.ngram <= 3, "ngram in 1..=3");
+        let mut eu = EuArray::new(self.dim);
+        let mut s1 = HdVec::zero(self.dim); // ρ(sv_{t-1})
+        let mut s2 = HdVec::zero(self.dim); // ρ²(sv_{t-2})
+        for frame in window {
+            let sv = self.encode_frame(frame);
+            let gram = match self.ngram {
+                1 => sv.clone(),
+                2 => sv.xor(&s1),
+                _ => sv.xor(&s1).xor(&s2),
+            };
+            eu.accumulate(&gram);
+            if self.ngram == 3 {
+                s2 = s1.rotate(1);
+            }
+            if self.ngram >= 2 {
+                s1 = sv.rotate(1);
+            }
+        }
+        eu.threshold()
+    }
+}
+
+/// A trained HDC classifier: per-class prototypes.
+#[derive(Debug, Clone)]
+pub struct HdcModel {
+    pub config: EncoderConfig,
+    pub prototypes: Vec<HdVec>,
+}
+
+/// Train prototypes by bundling the encoded training windows per class.
+///
+/// `data[class]` = list of windows; each window = frames of `channels`
+/// values. Few-shot: a handful of windows per class suffices.
+pub fn train(config: EncoderConfig, data: &[Vec<Vec<Vec<u32>>>]) -> HdcModel {
+    assert!(data.len() <= SCRATCH_SV as usize, "prototype rows collide with scratch");
+    let prototypes = data
+        .iter()
+        .map(|windows| {
+            let mut eu = EuArray::new(config.dim);
+            for w in windows {
+                eu.accumulate(&config.encode_window(w));
+            }
+            eu.threshold()
+        })
+        .collect();
+    HdcModel { config, prototypes }
+}
+
+impl HdcModel {
+    /// Classify one window (software path, for accuracy evaluation).
+    pub fn classify(&self, window: &[Vec<u32>]) -> usize {
+        self.margin(window).0
+    }
+
+    /// (best class, Hamming distance) for one window.
+    pub fn margin(&self, window: &[Vec<u32>]) -> (usize, u32) {
+        let q = self.config.encode_window(window);
+        self.prototypes
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, p.hamming(&q)))
+            .min_by_key(|&(_, d)| d)
+            .unwrap()
+    }
+
+    /// Program a Hypnos engine: prototypes into the AM, zeroed n-gram
+    /// scratch rows, and the generated microcode watching `target_class`.
+    pub fn program_hypnos(&self, target_class: usize, threshold: u16) -> Hypnos {
+        let cfg = self.config;
+        let mut h = Hypnos::new(cfg.dim, cfg.input_width, cfg.cim_max);
+        for (i, p) in self.prototypes.iter().enumerate() {
+            h.am.write(i, p.clone());
+            h.am.mark_prototype(i, true);
+        }
+        for row in [SCRATCH_SV, SCRATCH_S1, SCRATCH_S2] {
+            h.am.write(row as usize, HdVec::zero(cfg.dim));
+        }
+        h.load_program(gen_microcode(&cfg, target_class, threshold));
+        h
+    }
+}
+
+/// Emit the autonomous microcode replaying [`EncoderConfig::encode_window`].
+pub fn gen_microcode(cfg: &EncoderConfig, target: usize, threshold: u16) -> MicroProgram {
+    assert!(cfg.ngram >= 1 && cfg.ngram <= 3);
+    let mut ops = vec![MicroOp::BundleReset];
+    // Per-frame body: acquire the frame, spatial-encode it, n-gram, bundle.
+    let mut body = vec![MicroOp::NextFrame];
+    for c in 0..cfg.channels {
+        let map = if cfg.discrete {
+            MicroOp::ImMap { chan: c as u8 }
+        } else {
+            MicroOp::CimMap { chan: c as u8 }
+        };
+        map_into(&mut body, map, c == 0);
+    }
+    if cfg.ngram > 1 {
+        body.push(MicroOp::StoreAm { row: SCRATCH_SV }); // sv_t
+        body.push(MicroOp::BindAm { row: SCRATCH_S1 }); // ⊕ ρ(sv_{t-1})
+        if cfg.ngram == 3 {
+            body.push(MicroOp::BindAm { row: SCRATCH_S2 }); // ⊕ ρ²(sv_{t-2})
+        }
+        body.push(MicroOp::BundleAcc);
+        if cfg.ngram == 3 {
+            // s2 = ρ(s1)
+            body.push(MicroOp::LoadAm { row: SCRATCH_S1 });
+            body.push(MicroOp::Permute { n: 1 });
+            body.push(MicroOp::StoreAm { row: SCRATCH_S2 });
+        }
+        // s1 = ρ(sv)
+        body.push(MicroOp::LoadAm { row: SCRATCH_SV });
+        body.push(MicroOp::Permute { n: 1 });
+        body.push(MicroOp::StoreAm { row: SCRATCH_S1 });
+    } else {
+        body.push(MicroOp::BundleAcc);
+    }
+    ops.push(MicroOp::Repeat { count: cfg.window as u16, len: body.len() as u8 });
+    ops.extend(body);
+    ops.push(MicroOp::BundleThr);
+    ops.push(MicroOp::Search { threshold, target: target as u8 });
+    MicroProgram::new(ops)
+}
+
+/// Emit "map channel c into the running spatial vector": first channel
+/// moves, later channels permute-then-bind (ρ(RES) ⊕ m(v_c)).
+fn map_into(body: &mut Vec<MicroOp>, map: MicroOp, first: bool) {
+    body.push(map);
+    if first {
+        body.push(MicroOp::MovTmp);
+    } else {
+        body.push(MicroOp::Permute { n: 1 });
+        body.push(MicroOp::BindTmp);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    fn emg_cfg() -> EncoderConfig {
+        EncoderConfig {
+            dim: 2048,
+            input_width: 12,
+            cim_max: 4095,
+            channels: 2,
+            window: 8,
+            ngram: 1,
+            discrete: false,
+        }
+    }
+
+    fn noisy_window(rng: &mut Rng, base: [u32; 2], noise: u32, len: usize) -> Vec<Vec<u32>> {
+        (0..len)
+            .map(|_| {
+                base.iter()
+                    .map(|&b| {
+                        (b as i64 + rng.range_i64(-(noise as i64), noise as i64))
+                            .clamp(0, 4095) as u32
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn few_shot_training_separates_classes() {
+        let cfg = emg_cfg();
+        let mut rng = Rng::new(11);
+        // Includes the mirrored pair ([500,3000] vs [3000,500]) that plain
+        // XOR role-binding cannot distinguish.
+        let classes = [[500u32, 3000u32], [3000, 500], [1800, 1800]];
+        let train_data: Vec<Vec<Vec<Vec<u32>>>> = classes
+            .iter()
+            .map(|&b| (0..5).map(|_| noisy_window(&mut rng, b, 150, 8)).collect())
+            .collect();
+        let model = train(cfg, &train_data);
+
+        let mut correct = 0;
+        let mut total = 0;
+        for (ci, &b) in classes.iter().enumerate() {
+            for _ in 0..20 {
+                let w = noisy_window(&mut rng, b, 150, 8);
+                if model.classify(&w) == ci {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        let acc = correct as f64 / total as f64;
+        assert!(acc > 0.9, "accuracy = {acc}");
+    }
+
+    #[test]
+    fn microcode_replays_software_encoding_bit_exactly() {
+        let cfg = emg_cfg();
+        let mut rng = Rng::new(5);
+        let train_data: Vec<Vec<Vec<Vec<u32>>>> = vec![
+            (0..3).map(|_| noisy_window(&mut rng, [400, 2800], 100, 8)).collect(),
+            (0..3).map(|_| noisy_window(&mut rng, [2800, 400], 100, 8)).collect(),
+        ];
+        let model = train(cfg, &train_data);
+        let mut h = model.program_hypnos(0, (cfg.dim / 3) as u16);
+
+        // Feed a class-0 window through the engine and compare its RES
+        // against the software encoder.
+        let w = noisy_window(&mut rng, [400, 2800], 100, 8);
+        let mut wake = None;
+        for frame in &w {
+            wake = h.on_frame(frame);
+        }
+        assert_eq!(h.result(), &cfg.encode_window(&w), "engine/software divergence");
+        assert!(wake.is_some(), "class-0 window should wake");
+
+        // A class-1 window must not wake (watching class 0).
+        let w1 = noisy_window(&mut rng, [2800, 400], 100, 8);
+        let mut wake = None;
+        for frame in &w1 {
+            wake = h.on_frame(frame);
+        }
+        assert!(wake.is_none());
+    }
+
+    #[test]
+    fn ngram_microcode_matches_software() {
+        // Language-style config: discrete symbols, trigrams.
+        let cfg = EncoderConfig {
+            dim: 1024,
+            input_width: 5,
+            cim_max: 26,
+            channels: 1,
+            window: 16,
+            ngram: 3,
+            discrete: true,
+        };
+        let mut rng = Rng::new(9);
+        let w: Vec<Vec<u32>> = (0..16).map(|_| vec![rng.below(27) as u32]).collect();
+        let model = HdcModel {
+            config: cfg,
+            prototypes: vec![cfg.encode_window(&w)],
+        };
+        let mut h = model.program_hypnos(0, 0);
+        let mut wake = None;
+        for frame in &w {
+            wake = h.on_frame(frame);
+        }
+        assert_eq!(h.result(), &cfg.encode_window(&w), "ngram divergence");
+        assert!(wake.is_some(), "identical window has distance 0");
+    }
+
+    #[test]
+    fn temporal_ngrams_distinguish_order() {
+        let mk = |ngram| EncoderConfig {
+            dim: 2048,
+            input_width: 4,
+            cim_max: 15,
+            channels: 1,
+            window: 8,
+            ngram,
+            discrete: true,
+        };
+        let rising: Vec<Vec<u32>> = (0..8).map(|t| vec![t]).collect();
+        let falling: Vec<Vec<u32>> = (0..8).map(|t| vec![7 - t]).collect();
+        let tri = mk(3);
+        let bag = mk(1);
+        let d_tri = tri.encode_window(&rising).hamming(&tri.encode_window(&falling));
+        let d_bag = bag.encode_window(&rising).hamming(&bag.encode_window(&falling));
+        // Same multiset of symbols: the bag collapses; trigrams don't.
+        assert_eq!(d_bag, 0, "bag should be order-blind");
+        assert!(d_tri > 500, "d_tri = {d_tri}");
+    }
+
+    #[test]
+    fn microcode_fits_64_slots_for_8_channels() {
+        let cfg = EncoderConfig {
+            dim: 2048,
+            input_width: 16,
+            cim_max: 65535,
+            channels: 8,
+            window: 32,
+            ngram: 3,
+            discrete: false,
+        };
+        let p = gen_microcode(&cfg, 0, 300);
+        assert!(p.len() <= 64, "len = {}", p.len());
+    }
+}

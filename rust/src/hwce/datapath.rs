@@ -1,0 +1,260 @@
+//! Functional HWCE datapath: bit-exact multi-precision 3×3/5×5 convolution.
+//!
+//! Tensors are NHWC-flattened slices: input `(h+2, w+2, cin)` pre-padded
+//! (DORY pads tiles in L2, §IV-B), weights `(3, 3, cin, cout)`, output
+//! `(h, w, cout)` i32 accumulators (or requantised i8 via the
+//! normalisation + right-shift output stage).
+
+/// Operand precision (§II-C: "multi-precision (4b/8b/16b) 3×3 convolution").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    Int4,
+    Int8,
+    Int16,
+}
+
+impl Precision {
+    /// Storage bytes per operand element in L1 streams.
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::Int4 => 1, // packed pairs in hardware; byte-aligned here
+            Precision::Int8 => 1,
+            Precision::Int16 => 2,
+        }
+    }
+
+    /// Value range check (operands are upscaled to 16-bit internally, so
+    /// ranges are enforced at the input boundary).
+    pub fn in_range(self, v: i32) -> bool {
+        match self {
+            Precision::Int4 => (-8..=7).contains(&v),
+            Precision::Int8 => (-128..=127).contains(&v),
+            Precision::Int16 => (i16::MIN as i32..=i16::MAX as i32).contains(&v),
+        }
+    }
+}
+
+/// 3×3 valid convolution, int32 accumulation (the CSA-tree result before
+/// the output stage). Panics on shape mismatch or out-of-range operands.
+pub fn conv3x3(
+    x: &[i32],
+    w: &[i32],
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+    prec: Precision,
+) -> Vec<i32> {
+    let (hp, wp) = (h + 2, wd + 2);
+    assert_eq!(x.len(), hp * wp * cin, "input shape");
+    assert_eq!(w.len(), 9 * cin * cout, "weight shape");
+    debug_assert!(x.iter().all(|&v| prec.in_range(v)), "input range");
+    debug_assert!(w.iter().all(|&v| prec.in_range(v)), "weight range");
+
+    let xat = |r: usize, c: usize, ch: usize| x[(r * wp + c) * cin + ch];
+    let wat = |dy: usize, dx: usize, ci: usize, co: usize| w[((dy * 3 + dx) * cin + ci) * cout + co];
+
+    let mut out = vec![0i32; h * wd * cout];
+    // The engine iterates sliding-window positions; three filters (cout
+    // lanes) share each window. Loop order mirrors the partial-sum FIFO:
+    // input channels accumulate into the same output position.
+    for r in 0..h {
+        for c in 0..wd {
+            for co in 0..cout {
+                let mut acc = 0i32;
+                for dy in 0..3 {
+                    for dx in 0..3 {
+                        for ci in 0..cin {
+                            // Operands upscale to 16-bit; products fit i32.
+                            acc = acc.wrapping_add(xat(r + dy, c + dx, ci) * wat(dy, dx, ci, co));
+                        }
+                    }
+                }
+                out[(r * wd + c) * cout + co] = acc;
+            }
+        }
+    }
+    out
+}
+
+/// The output stage: normalisation (arithmetic right shift) + saturation
+/// to the stream precision ("possibly, after undergoing normalization and
+/// right-shift", §II-C).
+pub fn requant(acc: &[i32], shift: u32, prec: Precision) -> Vec<i32> {
+    let (lo, hi) = match prec {
+        Precision::Int4 => (-8, 7),
+        Precision::Int8 => (-128, 127),
+        Precision::Int16 => (i16::MIN as i32, i16::MAX as i32),
+    };
+    acc.iter().map(|&a| (a >> shift).clamp(lo, hi)).collect()
+}
+
+/// Fused conv + output stage.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_requant(
+    x: &[i32],
+    w: &[i32],
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+    prec: Precision,
+    shift: u32,
+) -> Vec<i32> {
+    requant(&conv3x3(x, w, h, wd, cin, cout, prec), shift, prec)
+}
+
+/// 5×5 mode: the three sum-of-products units combine into one 5×5 unit
+/// (§II-C). Functionally a direct 5×5 valid convolution; input is
+/// `(h+4, w+4, cin)` pre-padded, weights `(5, 5, cin, cout)`.
+pub fn conv5x5(
+    x: &[i32],
+    w: &[i32],
+    h: usize,
+    wd: usize,
+    cin: usize,
+    cout: usize,
+    prec: Precision,
+) -> Vec<i32> {
+    let (hp, wp) = (h + 4, wd + 4);
+    assert_eq!(x.len(), hp * wp * cin, "input shape");
+    assert_eq!(w.len(), 25 * cin * cout, "weight shape");
+    debug_assert!(x.iter().all(|&v| prec.in_range(v)));
+    debug_assert!(w.iter().all(|&v| prec.in_range(v)));
+
+    let xat = |r: usize, c: usize, ch: usize| x[(r * wp + c) * cin + ch];
+    let wat =
+        |dy: usize, dx: usize, ci: usize, co: usize| w[((dy * 5 + dx) * cin + ci) * cout + co];
+    let mut out = vec![0i32; h * wd * cout];
+    for r in 0..h {
+        for c in 0..wd {
+            for co in 0..cout {
+                let mut acc = 0i32;
+                for dy in 0..5 {
+                    for dx in 0..5 {
+                        for ci in 0..cin {
+                            acc = acc.wrapping_add(xat(r + dy, c + dx, ci) * wat(dy, dx, ci, co));
+                        }
+                    }
+                }
+                out[(r * wd + c) * cout + co] = acc;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::{property, Rng};
+
+    fn rand_tensor(rng: &mut Rng, n: usize, prec: Precision) -> Vec<i32> {
+        let (lo, hi) = match prec {
+            Precision::Int4 => (-8, 7),
+            Precision::Int8 => (-128, 127),
+            Precision::Int16 => (-2048, 2047),
+        };
+        (0..n).map(|_| rng.range_i64(lo, hi) as i32).collect()
+    }
+
+    #[test]
+    fn identity_filter_passes_input_through() {
+        let mut rng = Rng::new(1);
+        let (h, w, c) = (4, 5, 3);
+        let x = rand_tensor(&mut rng, (h + 2) * (w + 2) * c, Precision::Int8);
+        // centre tap = 1 on the diagonal
+        let mut k = vec![0i32; 9 * c * c];
+        for ch in 0..c {
+            k[((1 * 3 + 1) * c + ch) * c + ch] = 1;
+        }
+        let out = conv3x3(&x, &k, h, w, c, c, Precision::Int8);
+        for r in 0..h {
+            for cc in 0..w {
+                for ch in 0..c {
+                    assert_eq!(
+                        out[(r * w + cc) * c + ch],
+                        x[((r + 1) * (w + 2) + (cc + 1)) * c + ch]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Cross-check against an independent formulation (dot product over
+    /// flattened patches), property-swept over shapes and precisions.
+    #[test]
+    fn conv_matches_patch_dot_reference() {
+        property("hwce-conv-ref", 30, |rng: &mut Rng| {
+            let h = 1 + rng.below(5) as usize;
+            let w = 1 + rng.below(5) as usize;
+            let cin = 1 + rng.below(4) as usize;
+            let cout = 1 + rng.below(4) as usize;
+            let prec = match rng.below(3) {
+                0 => Precision::Int4,
+                1 => Precision::Int8,
+                _ => Precision::Int16,
+            };
+            let x = rand_tensor(rng, (h + 2) * (w + 2) * cin, prec);
+            let k = rand_tensor(rng, 9 * cin * cout, prec);
+            let got = conv3x3(&x, &k, h, w, cin, cout, prec);
+            for r in 0..h {
+                for c in 0..w {
+                    for co in 0..cout {
+                        let mut want = 0i64;
+                        for dy in 0..3 {
+                            for dx in 0..3 {
+                                for ci in 0..cin {
+                                    let xv = x[((r + dy) * (w + 2) + c + dx) * cin + ci] as i64;
+                                    let wv = k[((dy * 3 + dx) * cin + ci) * cout + co] as i64;
+                                    want += xv * wv;
+                                }
+                            }
+                        }
+                        assert_eq!(got[(r * w + c) * cout + co] as i64, want);
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn requant_saturates_per_precision() {
+        let acc = vec![1 << 20, -(1 << 20), 256, -256];
+        let q8 = requant(&acc, 4, Precision::Int8);
+        assert_eq!(q8, vec![127, -128, 16, -16]);
+        let q4 = requant(&acc, 4, Precision::Int4);
+        assert_eq!(q4, vec![7, -8, 7, -8]);
+    }
+
+    #[test]
+    fn conv5x5_identity() {
+        let mut rng = Rng::new(2);
+        let (h, w) = (3, 3);
+        let x = rand_tensor(&mut rng, (h + 4) * (w + 4), Precision::Int8);
+        let mut k = vec![0i32; 25];
+        k[2 * 5 + 2] = 1; // centre tap
+        let out = conv5x5(&x, &k, h, w, 1, 1, Precision::Int8);
+        for r in 0..h {
+            for c in 0..w {
+                assert_eq!(out[r * w + c], x[(r + 2) * (w + 4) + c + 2]);
+            }
+        }
+    }
+
+    #[test]
+    fn linearity_over_weights() {
+        // The RepVGG re-parameterisation identity on the HWCE datapath.
+        let mut rng = Rng::new(3);
+        let (h, w, ci, co) = (3, 4, 2, 2);
+        let x = rand_tensor(&mut rng, (h + 2) * (w + 2) * ci, Precision::Int8);
+        let k1 = rand_tensor(&mut rng, 9 * ci * co, Precision::Int4);
+        let k2 = rand_tensor(&mut rng, 9 * ci * co, Precision::Int4);
+        let ksum: Vec<i32> = k1.iter().zip(&k2).map(|(a, b)| a + b).collect();
+        let lhs = conv3x3(&x, &ksum, h, w, ci, co, Precision::Int8);
+        let a = conv3x3(&x, &k1, h, w, ci, co, Precision::Int8);
+        let b = conv3x3(&x, &k2, h, w, ci, co, Precision::Int8);
+        let rhs: Vec<i32> = a.iter().zip(&b).map(|(x, y)| x + y).collect();
+        assert_eq!(lhs, rhs);
+    }
+}

@@ -1,0 +1,58 @@
+//! The Hardware Convolution Engine (§II-C, Fig. 4).
+//!
+//! A cluster-coupled, multi-precision (4/8/16-bit) 3×3 convolution engine
+//! with 27 MACs: three sum-of-products units (one per concurrently-computed
+//! output filter), a line buffer building the sliding window from a
+//! continuous input-pixel stream, a 3-filter weight buffer, and partial-sum
+//! FIFOs accumulating across input channels. Operands are upscaled to
+//! 16-bit before the carry-save reduction trees; accumulation is 32-bit
+//! with an optional normalisation + right-shift output stage. The engine
+//! reads/writes L1 through four 32-bit TCDM ports; stream bubbles from
+//! bank contention add latency but never corrupt results (ready/valid).
+//!
+//! [`conv3x3`] is the *functional* datapath (bit-exact against the
+//! JAX/Pallas golden artifact, see `runtime_integration`); [`ConvJob`] +
+//! [`cycles`](ConvJob::cycles) is the *timing* model (anchored to the
+//! paper's 27 MAC/cycle peak and ~19 MAC/cycle streaming numbers).
+
+pub mod datapath;
+pub mod timing;
+
+pub use datapath::{conv3x3, conv3x3_requant, conv5x5, Precision};
+pub use timing::{ConvJob, HwceStats};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_mac_per_cycle_is_27() {
+        // Large layer with internal partial-sum reuse: approaches 27.
+        let job = ConvJob {
+            h: 64,
+            w: 64,
+            cin: 32,
+            cout: 33,
+            precision: Precision::Int8,
+            partials_in_l1: false,
+        };
+        let mpc = job.mac_per_cycle();
+        assert!(mpc > 23.0 && mpc <= 27.0, "mac/cycle = {mpc}");
+    }
+
+    #[test]
+    fn streaming_partials_lands_near_19() {
+        // Partial sums streamed through L1 (the common multi-Cin case):
+        // "achieving up to 19 MAC/cycle on a 3x3 convolutional layer".
+        let job = ConvJob {
+            h: 56,
+            w: 56,
+            cin: 64,
+            cout: 64,
+            precision: Precision::Int8,
+            partials_in_l1: true,
+        };
+        let mpc = job.mac_per_cycle();
+        assert!(mpc > 17.0 && mpc < 21.0, "mac/cycle = {mpc}");
+    }
+}

@@ -1,0 +1,524 @@
+//! The in-Rust macro-assembler.
+//!
+//! Kernels are authored as Rust functions building a [`Program`] through
+//! one method per mnemonic, with forward-referencable [`Label`]s and the
+//! two Xpulp hardware-loop channels. Replaces the GCC+Xpulp toolchain the
+//! paper used (DESIGN.md §5): the instruction mix the paper measures at
+//! ISA level is reproduced exactly because we emit it explicitly.
+
+use crate::common::{Result, VegaError};
+
+use super::inst::{AluOp, Cond, FpFmt, FpOp, Inst, LoopCount, MemSize, SimdFmt, SimdOp};
+use super::Reg;
+
+/// A forward-referencable code label.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// A finished, label-resolved instruction stream. PCs are indices.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub insts: Vec<Inst>,
+    pub name: String,
+}
+
+impl Program {
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Static instruction-mix summary (Table V's "FP intensity" is
+    /// computed on kernel assembly code, i.e. statically).
+    pub fn static_fp_intensity(&self) -> f64 {
+        let total = self
+            .insts
+            .iter()
+            .filter(|i| !matches!(i, Inst::Halt | Inst::Nop | Inst::Barrier))
+            .count();
+        if total == 0 {
+            return 0.0;
+        }
+        let fp = self.insts.iter().filter(|i| i.is_fp()).count();
+        fp as f64 / total as f64
+    }
+}
+
+/// The assembler/builder.
+pub struct Asm {
+    insts: Vec<Inst>,
+    labels: Vec<Option<usize>>,
+    name: String,
+}
+
+impl Asm {
+    pub fn new(name: &str) -> Self {
+        Self { insts: Vec::new(), labels: Vec::new(), name: name.to_string() }
+    }
+
+    /// Create an unbound label.
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    /// Bind `l` to the current position.
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.insts.len());
+    }
+
+    /// Create a label bound at the current position.
+    pub fn here(&mut self) -> Label {
+        let l = self.label();
+        self.bind(l);
+        l
+    }
+
+    pub fn pc(&self) -> usize {
+        self.insts.len()
+    }
+
+    fn push(&mut self, i: Inst) {
+        self.insts.push(i);
+    }
+
+    // ---- RV32I ---------------------------------------------------------
+
+    pub fn li(&mut self, rd: Reg, imm: i32) {
+        self.push(Inst::Li { rd, imm });
+    }
+
+    pub fn mv(&mut self, rd: Reg, rs: Reg) {
+        self.push(Inst::AluImm { op: AluOp::Add, rd, rs1: rs, imm: 0 });
+    }
+
+    pub fn addi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::Add, rd, rs1, imm });
+    }
+
+    pub fn slli(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::Sll, rd, rs1, imm });
+    }
+
+    pub fn srli(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::Srl, rd, rs1, imm });
+    }
+
+    pub fn srai(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::Sra, rd, rs1, imm });
+    }
+
+    pub fn andi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::And, rd, rs1, imm });
+    }
+
+    pub fn ori(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::AluImm { op: AluOp::Or, rd, rs1, imm });
+    }
+
+    pub fn add(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Add, rd, rs1, rs2 });
+    }
+
+    pub fn sub(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Sub, rd, rs1, rs2 });
+    }
+
+    pub fn sll(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Sll, rd, rs1, rs2 });
+    }
+
+    pub fn and(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::And, rd, rs1, rs2 });
+    }
+
+    pub fn or(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Or, rd, rs1, rs2 });
+    }
+
+    pub fn xor(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Xor, rd, rs1, rs2 });
+    }
+
+    pub fn slt(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Slt, rd, rs1, rs2 });
+    }
+
+    pub fn mul(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Mul, rd, rs1, rs2 });
+    }
+
+    pub fn div(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Div, rd, rs1, rs2 });
+    }
+
+    pub fn rem(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Rem, rd, rs1, rs2 });
+    }
+
+    // ---- loads/stores (plus Xpulp post-increment forms) -----------------
+
+    pub fn lw(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::W, rd, rs1, imm, post_inc: false });
+    }
+
+    pub fn lh(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::H, rd, rs1, imm, post_inc: false });
+    }
+
+    pub fn lb(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::B, rd, rs1, imm, post_inc: false });
+    }
+
+    pub fn lbu(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::Bu, rd, rs1, imm, post_inc: false });
+    }
+
+    pub fn sw(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::W, rs2, rs1, imm, post_inc: false });
+    }
+
+    pub fn sh(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::H, rs2, rs1, imm, post_inc: false });
+    }
+
+    pub fn sb(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::B, rs2, rs1, imm, post_inc: false });
+    }
+
+    /// p.lw rd, imm(rs1!) — load word, then rs1 += imm.
+    pub fn lw_pi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::W, rd, rs1, imm, post_inc: true });
+    }
+
+    pub fn lh_pi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::H, rd, rs1, imm, post_inc: true });
+    }
+
+    pub fn lb_pi(&mut self, rd: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Load { size: MemSize::B, rd, rs1, imm, post_inc: true });
+    }
+
+    pub fn sw_pi(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::W, rs2, rs1, imm, post_inc: true });
+    }
+
+    pub fn sh_pi(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::H, rs2, rs1, imm, post_inc: true });
+    }
+
+    pub fn sb_pi(&mut self, rs2: Reg, rs1: Reg, imm: i32) {
+        self.push(Inst::Store { size: MemSize::B, rs2, rs1, imm, post_inc: true });
+    }
+
+    // ---- control flow ----------------------------------------------------
+
+    pub fn beq(&mut self, rs1: Reg, rs2: Reg, l: Label) {
+        self.push(Inst::Branch { cond: Cond::Eq, rs1, rs2, target: l.0 });
+    }
+
+    pub fn bne(&mut self, rs1: Reg, rs2: Reg, l: Label) {
+        self.push(Inst::Branch { cond: Cond::Ne, rs1, rs2, target: l.0 });
+    }
+
+    pub fn blt(&mut self, rs1: Reg, rs2: Reg, l: Label) {
+        self.push(Inst::Branch { cond: Cond::Lt, rs1, rs2, target: l.0 });
+    }
+
+    pub fn bge(&mut self, rs1: Reg, rs2: Reg, l: Label) {
+        self.push(Inst::Branch { cond: Cond::Ge, rs1, rs2, target: l.0 });
+    }
+
+    pub fn bltu(&mut self, rs1: Reg, rs2: Reg, l: Label) {
+        self.push(Inst::Branch { cond: Cond::Ltu, rs1, rs2, target: l.0 });
+    }
+
+    pub fn j(&mut self, l: Label) {
+        self.push(Inst::Jal { rd: 0, target: l.0 });
+    }
+
+    // ---- Xpulp ----------------------------------------------------------
+
+    pub fn mac(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Mac { rd, rs1, rs2 });
+    }
+
+    pub fn msu(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Msu { rd, rs1, rs2 });
+    }
+
+    pub fn p_min(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Min, rd, rs1, rs2 });
+    }
+
+    pub fn p_max(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Alu { op: AluOp::Max, rd, rs1, rs2 });
+    }
+
+    pub fn p_clip(&mut self, rd: Reg, rs1: Reg, bits: i32) {
+        self.push(Inst::AluImm { op: AluOp::Clip, rd, rs1, imm: bits });
+    }
+
+    /// lp.setup: iterate the body (instructions up to, excluding, `end`)
+    /// `count` times with zero overhead. `lp` ∈ {0, 1}; loop 0 must be the
+    /// inner loop when nested.
+    pub fn lp_setup_imm(&mut self, lp: u8, count: u32, end: Label) {
+        self.push(Inst::LpSetup { lp, count: LoopCount::Imm(count), body_end: end.0 });
+    }
+
+    pub fn lp_setup(&mut self, lp: u8, count_reg: Reg, end: Label) {
+        self.push(Inst::LpSetup { lp, count: LoopCount::Reg(count_reg), body_end: end.0 });
+    }
+
+    /// pv.sdotsp.b rd, rs1, rs2 — 4×i8 dot product accumulated into rd.
+    pub fn sdotsp_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::SDotSp, fmt: SimdFmt::B4, rd, rs1, rs2 });
+    }
+
+    /// pv.sdotsp.h rd, rs1, rs2 — 2×i16 dot product accumulated into rd.
+    pub fn sdotsp_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::SDotSp, fmt: SimdFmt::H2, rd, rs1, rs2 });
+    }
+
+    pub fn pv_add_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::Add, fmt: SimdFmt::B4, rd, rs1, rs2 });
+    }
+
+    pub fn pv_add_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::Add, fmt: SimdFmt::H2, rd, rs1, rs2 });
+    }
+
+    pub fn pv_max_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::Max, fmt: SimdFmt::B4, rd, rs1, rs2 });
+    }
+
+    /// pv.pack.h rd = (rs1.lo, rs2.lo) — half-word lane recombination.
+    pub fn pv_pack(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Simd { op: SimdOp::Pack, fmt: SimdFmt::H2, rd, rs1, rs2 });
+    }
+
+    // ---- floating point ---------------------------------------------------
+
+    fn fp(&mut self, op: FpOp, fmt: FpFmt, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.push(Inst::Fp { op, fmt, rd, rs1, rs2 });
+    }
+
+    pub fn fadd_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Add, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fsub_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Sub, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fmul_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Mul, FpFmt::S, rd, rs1, rs2);
+    }
+
+    /// fmadd.s rd, rs1, rs2 with rd as accumulator: rd = rs1*rs2 + rd.
+    pub fn fmac_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Madd, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fmsu_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Msub, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fdiv_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Div, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fsqrt_s(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::Sqrt, FpFmt::S, rd, rs1, 0);
+    }
+
+    pub fn fmin_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Min, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fmax_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Max, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fabs_s(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::Abs, FpFmt::S, rd, rs1, 0);
+    }
+
+    pub fn flt_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::CmpLt, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fle_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::CmpLe, FpFmt::S, rd, rs1, rs2);
+    }
+
+    pub fn fcvt_s_w(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::CvtIF, FpFmt::S, rd, rs1, 0);
+    }
+
+    pub fn fcvt_w_s(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::CvtFI, FpFmt::S, rd, rs1, 0);
+    }
+
+    // smallFloat / packed-SIMD FP16
+
+    pub fn vfadd_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Add, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    pub fn vfsub_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Sub, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    pub fn vfmul_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Mul, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    /// vfmac.h rd, rs1, rs2 — per-lane FMA into rd (2 lanes).
+    pub fn vfmac_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Madd, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    pub fn vfmin_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Min, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    pub fn vfmax_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::Max, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    /// vfdotpex.s.h rd, rs1, rs2 — multi-format: rd(f32) += dot of two
+    /// packed f16 pairs (the accumulate-wider NSAA instruction of §II-C).
+    pub fn vfdotpex_s_h(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::DotpEx, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    /// vfcpka.h.s rd, rs1, rs2 — cast-and-pack two f32 into packed f16.
+    pub fn vfcpka_h_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::CvtSH2, FpFmt::VH, rd, rs1, rs2);
+    }
+
+    /// Widen packed-f16 lane 0/1 to f32.
+    pub fn fcvt_s_h0(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::CvtH2S0, FpFmt::VH, rd, rs1, 0);
+    }
+
+    pub fn fcvt_s_h1(&mut self, rd: Reg, rs1: Reg) {
+        self.fp(FpOp::CvtH2S1, FpFmt::VH, rd, rs1, 0);
+    }
+
+    // ---- system ----------------------------------------------------------
+
+    pub fn barrier(&mut self) {
+        self.push(Inst::Barrier);
+    }
+
+    pub fn halt(&mut self) {
+        self.push(Inst::Halt);
+    }
+
+    pub fn nop(&mut self) {
+        self.push(Inst::Nop);
+    }
+
+    /// Resolve labels and produce the final program.
+    pub fn finish(self) -> Result<Program> {
+        let resolve = |idx: usize| -> Result<usize> {
+            self.labels
+                .get(idx)
+                .copied()
+                .flatten()
+                .ok_or_else(|| VegaError::Asm(format!("unbound label {idx} in {}", self.name)))
+        };
+        let mut insts = Vec::with_capacity(self.insts.len());
+        for inst in &self.insts {
+            insts.push(match *inst {
+                Inst::Branch { cond, rs1, rs2, target } => {
+                    Inst::Branch { cond, rs1, rs2, target: resolve(target)? }
+                }
+                Inst::Jal { rd, target } => Inst::Jal { rd, target: resolve(target)? },
+                Inst::LpSetup { lp, count, body_end } => {
+                    let end = resolve(body_end)?;
+                    if end <= insts.len() {
+                        return Err(VegaError::Asm(format!(
+                            "hw loop {lp} in {} has empty/backward body",
+                            self.name
+                        )));
+                    }
+                    Inst::LpSetup { lp, count, body_end: end }
+                }
+                other => other,
+            });
+        }
+        Ok(Program { insts, name: self.name })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{A0, A1, A2};
+
+    #[test]
+    fn forward_labels_resolve() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(A0, 1);
+        a.beq(A0, A0, end);
+        a.li(A0, 2);
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        assert_eq!(p.insts.len(), 4);
+        match p.insts[1] {
+            Inst::Branch { target, .. } => assert_eq!(target, 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn unbound_label_errors() {
+        let mut a = Asm::new("t");
+        let l = a.label();
+        a.j(l);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn hw_loop_end_resolution() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.lp_setup_imm(0, 10, end);
+        a.addi(A1, A1, 1);
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        match p.insts[0] {
+            Inst::LpSetup { body_end, .. } => assert_eq!(body_end, 2),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn empty_hw_loop_rejected() {
+        let mut a = Asm::new("t");
+        let end = a.here();
+        a.lp_setup_imm(0, 10, end);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn fp_intensity_static() {
+        let mut a = Asm::new("t");
+        a.fmac_s(A0, A1, A2);
+        a.fadd_s(A0, A1, A2);
+        a.addi(A1, A1, 4);
+        a.lw(A2, A1, 0);
+        let p = a.finish().unwrap();
+        assert!((p.static_fp_intensity() - 0.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,397 @@
+//! Symbolic instruction definitions and static classification.
+//!
+//! Each variant carries exactly the operands the ISS needs; classification
+//! ([`Inst::class`]) and operation counting ([`Inst::ops`]) feed the
+//! performance counters behind Table V (FP intensity) and Figs. 6/8
+//! (GOPS / GFLOPS: 1 MAC = 2 ops, per the paper's footnotes).
+
+use super::Reg;
+
+/// Branch conditions (RV32I B-type).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Ltu,
+    Geu,
+}
+
+/// Integer ALU operations (RV32IM + Xpulp scalar extras).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AluOp {
+    Add,
+    Sub,
+    Sll,
+    Srl,
+    Sra,
+    And,
+    Or,
+    Xor,
+    Slt,
+    Sltu,
+    Mul,
+    Mulh,
+    Div,
+    Divu,
+    Rem,
+    Remu,
+    /// Xpulp: p.min / p.max / p.abs (abs ignores rs2).
+    Min,
+    Max,
+    Abs,
+    /// Xpulp: p.clip rd = clamp(rs1, -2^imm, 2^imm - 1) (imm form only).
+    Clip,
+}
+
+impl AluOp {
+    /// RI5CY latency: MUL is single-cycle; DIV/REM use the 35-cycle serial
+    /// divider.
+    pub fn cycles(self) -> u64 {
+        match self {
+            AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => 35,
+            _ => 1,
+        }
+    }
+}
+
+/// Memory access widths. Sub-word loads sign- or zero-extend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemSize {
+    B,
+    Bu,
+    H,
+    Hu,
+    W,
+}
+
+impl MemSize {
+    pub fn bytes(self) -> u32 {
+        match self {
+            MemSize::B | MemSize::Bu => 1,
+            MemSize::H | MemSize::Hu => 2,
+            MemSize::W => 4,
+        }
+    }
+}
+
+/// Packed-SIMD element format (Xpulp v2: one 32-bit register holds 4×i8 or
+/// 2×i16).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdFmt {
+    B4,
+    H2,
+}
+
+/// Packed-SIMD integer operations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdOp {
+    Add,
+    Sub,
+    Min,
+    Max,
+    Avg,
+    /// pv.sdotsp: signed dot product accumulated into rd (rd += Σ a_i·b_i).
+    /// This is the PULP-NN workhorse: 4 MACs per instruction in B4.
+    SDotSp,
+    /// pv.sdotup: unsigned-by-signed variant (activations × weights).
+    SDotUp,
+    /// pv.shuffle2-style byte pack (used by the FP16 cast-and-pack path).
+    Pack,
+}
+
+/// Floating-point formats of the shared FPnew-style FPU (Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpFmt {
+    /// Scalar IEEE binary32.
+    S,
+    /// Scalar IEEE binary16.
+    H,
+    /// Scalar bfloat16.
+    B,
+    /// Packed 2×binary16 SIMD.
+    VH,
+    /// Packed 2×bfloat16 SIMD.
+    VB,
+}
+
+impl FpFmt {
+    pub fn lanes(self) -> u32 {
+        match self {
+            FpFmt::S | FpFmt::H | FpFmt::B => 1,
+            FpFmt::VH | FpFmt::VB => 2,
+        }
+    }
+}
+
+/// Floating-point operations (subset of FPnew used by the NSAA kernels).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    /// Fused multiply-add: rd = rs1·rs2 + rs3 (single-cycle on Vega's
+    /// shared FPU; the key NSAA operation per §II-C).
+    Madd,
+    /// rd = rs3 - rs1·rs2.
+    Msub,
+    Min,
+    Max,
+    /// Stand-alone shared DIV-SQRT unit (multi-cycle).
+    Div,
+    Sqrt,
+    Abs,
+    Neg,
+    /// Comparisons write 0/1 to the integer view of rd.
+    CmpLt,
+    CmpLe,
+    CmpEq,
+    /// Conversions: int32 → fmt and fmt → int32 (truncating).
+    CvtIF,
+    CvtFI,
+    /// Format conversion fmt→fmt2 uses `Cvt { to }`-style pairs; the
+    /// cast-and-pack instruction converting 2×f32 into a packed 2×f16
+    /// register (§II-C "cast-and-pack").
+    CvtSH2,
+    /// Widening from packed half to f32 lane 0 / lane 1.
+    CvtH2S0,
+    CvtH2S1,
+    /// Multi-format dot product: rd(f32) += rs1.h0·rs2.h0 + rs1.h1·rs2.h1
+    /// ("taking the product of two 16-bit operands and returning a 32-bit
+    /// single-precision result", §II-C). 2 FMAs = 4 FLOPs.
+    DotpEx,
+}
+
+impl FpOp {
+    /// Issue-to-result latency. All pipelined FPU ops are single-cycle on
+    /// Vega (the static FPU mapping keeps them off the critical path,
+    /// §II-C); DIV/SQRT occupy the shared iterative unit.
+    pub fn cycles(self) -> u64 {
+        match self {
+            FpOp::Div => 11,
+            FpOp::Sqrt => 15,
+            _ => 1,
+        }
+    }
+
+    /// Does this op use the shared DIV-SQRT unit instead of an FPU slice?
+    pub fn is_divsqrt(self) -> bool {
+        matches!(self, FpOp::Div | FpOp::Sqrt)
+    }
+
+    /// FLOPs retired by one instruction in format `fmt`.
+    pub fn flops(self, fmt: FpFmt) -> u64 {
+        let lanes = fmt.lanes() as u64;
+        match self {
+            FpOp::Madd | FpOp::Msub => 2 * lanes,
+            FpOp::DotpEx => 4,
+            FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Min | FpOp::Max => lanes,
+            FpOp::Div | FpOp::Sqrt => lanes,
+            _ => 0,
+        }
+    }
+}
+
+/// Hardware-loop trip count: immediate or register.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopCount {
+    Imm(u32),
+    Reg(Reg),
+}
+
+/// Branch/jump target: resolved instruction index (PC).
+pub type Target = usize;
+
+/// One symbolic instruction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Inst {
+    /// ALU register-register.
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },
+    /// ALU register-immediate (Sub not available; use Add with -imm).
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32 },
+    /// Load immediate (li pseudo; 1 cycle, as RI5CY fuses lui+addi rarely
+    /// matters for kernels where li sits outside loops).
+    Li { rd: Reg, imm: i32 },
+    /// Load: rd = mem[rs1 + imm]; post_inc (Xpulp p.lw) adds imm to rs1
+    /// *after* the access and ignores it in address formation is offset
+    /// form rs1! semantics: addr = rs1, rs1 += imm.
+    Load { size: MemSize, rd: Reg, rs1: Reg, imm: i32, post_inc: bool },
+    /// Store: mem[rs1 + imm] = rs2 (post_inc as for Load).
+    Store { size: MemSize, rs2: Reg, rs1: Reg, imm: i32, post_inc: bool },
+    Branch { cond: Cond, rs1: Reg, rs2: Reg, target: Target },
+    Jal { rd: Reg, target: Target },
+    /// Indirect jump (used for returns; rare in kernels).
+    Jalr { rd: Reg, rs1: Reg },
+    /// Xpulp p.mac: rd += rs1·rs2 (32-bit).
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Xpulp p.msu: rd -= rs1·rs2.
+    Msu { rd: Reg, rs1: Reg, rs2: Reg },
+    /// Packed-SIMD integer op.
+    Simd { op: SimdOp, fmt: SimdFmt, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Hardware loop: body is `[pc+1, body_end)`, iterated `count` times
+    /// with zero branch overhead (lp.setup).
+    LpSetup { lp: u8, count: LoopCount, body_end: Target },
+    /// Floating-point op (single register file; rs3 only for Madd/Msub).
+    Fp { op: FpOp, fmt: FpFmt, rd: Reg, rs1: Reg, rs2: Reg },
+    /// Event-unit barrier: block until all cores in the team arrive
+    /// (2-cycle wake-up, §II-C).
+    Barrier,
+    /// Stop this core.
+    Halt,
+    Nop,
+}
+
+/// Coarse classification for the instruction-mix statistics (Table V
+/// computes "FP intensity" = FP instructions / total instructions at ISA
+/// level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum InstClass {
+    Alu,
+    Mul,
+    Div,
+    Load,
+    Store,
+    Branch,
+    Fp,
+    Simd,
+    Control,
+}
+
+impl Inst {
+    pub fn class(&self) -> InstClass {
+        match self {
+            Inst::Alu { op, .. } | Inst::AluImm { op, .. } => match op {
+                AluOp::Mul | AluOp::Mulh => InstClass::Mul,
+                AluOp::Div | AluOp::Divu | AluOp::Rem | AluOp::Remu => InstClass::Div,
+                _ => InstClass::Alu,
+            },
+            Inst::Li { .. } => InstClass::Alu,
+            Inst::Load { .. } => InstClass::Load,
+            Inst::Store { .. } => InstClass::Store,
+            Inst::Branch { .. } => InstClass::Branch,
+            Inst::Jal { .. } | Inst::Jalr { .. } => InstClass::Branch,
+            Inst::Mac { .. } | Inst::Msu { .. } => InstClass::Mul,
+            Inst::Simd { .. } => InstClass::Simd,
+            Inst::Fp { .. } => InstClass::Fp,
+            Inst::LpSetup { .. } | Inst::Barrier | Inst::Halt | Inst::Nop => InstClass::Control,
+        }
+    }
+
+    /// Integer "operations" retired (the paper's OPS metric: 1 MAC = 2 ops,
+    /// one SIMD lane op = 1 op).
+    pub fn int_ops(&self) -> u64 {
+        match self {
+            Inst::Alu { .. } | Inst::AluImm { .. } | Inst::Li { .. } => 1,
+            Inst::Mac { .. } | Inst::Msu { .. } => 2,
+            Inst::Simd { op, fmt, .. } => {
+                let lanes = match fmt {
+                    SimdFmt::B4 => 4,
+                    SimdFmt::H2 => 2,
+                };
+                match op {
+                    SimdOp::SDotSp | SimdOp::SDotUp => 2 * lanes, // lanes MACs
+                    _ => lanes,
+                }
+            }
+            _ => 0,
+        }
+    }
+
+    /// FLOPs retired.
+    pub fn flops(&self) -> u64 {
+        match self {
+            Inst::Fp { op, fmt, .. } => op.flops(*fmt),
+            _ => 0,
+        }
+    }
+
+    pub fn is_fp(&self) -> bool {
+        matches!(self, Inst::Fp { .. })
+    }
+
+    /// Registers read by this instruction (for hazard tracking).
+    pub fn srcs(&self) -> [Option<Reg>; 3] {
+        match *self {
+            Inst::Alu { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::AluImm { rs1, .. } => [Some(rs1), None, None],
+            Inst::Li { .. } => [None, None, None],
+            Inst::Load { rs1, .. } => [Some(rs1), None, None],
+            Inst::Store { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::Branch { rs1, rs2, .. } => [Some(rs1), Some(rs2), None],
+            Inst::Jal { .. } => [None, None, None],
+            Inst::Jalr { rs1, .. } => [Some(rs1), None, None],
+            Inst::Mac { rd, rs1, rs2 } | Inst::Msu { rd, rs1, rs2 } => {
+                [Some(rs1), Some(rs2), Some(rd)]
+            }
+            Inst::Simd { op, rd, rs1, rs2, .. } => match op {
+                SimdOp::SDotSp | SimdOp::SDotUp => [Some(rs1), Some(rs2), Some(rd)],
+                _ => [Some(rs1), Some(rs2), None],
+            },
+            Inst::LpSetup { count: LoopCount::Reg(r), .. } => [Some(r), None, None],
+            Inst::LpSetup { .. } => [None, None, None],
+            Inst::Fp { op, rd, rs1, rs2, .. } => match op {
+                // Madd/Msub/DotpEx read the accumulator.
+                FpOp::Madd | FpOp::Msub | FpOp::DotpEx => [Some(rs1), Some(rs2), Some(rd)],
+                FpOp::Sqrt | FpOp::Abs | FpOp::Neg | FpOp::CvtIF | FpOp::CvtFI
+                | FpOp::CvtH2S0 | FpOp::CvtH2S1 => [Some(rs1), None, None],
+                _ => [Some(rs1), Some(rs2), None],
+            },
+            Inst::Barrier | Inst::Halt | Inst::Nop => [None, None, None],
+        }
+    }
+
+    /// Destination register, if any.
+    pub fn dst(&self) -> Option<Reg> {
+        match *self {
+            Inst::Alu { rd, .. }
+            | Inst::AluImm { rd, .. }
+            | Inst::Li { rd, .. }
+            | Inst::Load { rd, .. }
+            | Inst::Mac { rd, .. }
+            | Inst::Msu { rd, .. }
+            | Inst::Simd { rd, .. }
+            | Inst::Fp { rd, .. } => Some(rd),
+            Inst::Jal { rd, .. } | Inst::Jalr { rd, .. } => Some(rd),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sdotsp_b4_counts_8_ops() {
+        let i = Inst::Simd { op: SimdOp::SDotSp, fmt: SimdFmt::B4, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(i.int_ops(), 8);
+        assert_eq!(i.class(), InstClass::Simd);
+    }
+
+    #[test]
+    fn fp_flop_counts() {
+        let madd = Inst::Fp { op: FpOp::Madd, fmt: FpFmt::S, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(madd.flops(), 2);
+        let vadd = Inst::Fp { op: FpOp::Add, fmt: FpFmt::VH, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(vadd.flops(), 2);
+        let dotp = Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VH, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(dotp.flops(), 4);
+    }
+
+    #[test]
+    fn hazard_sources_include_accumulators() {
+        let mac = Inst::Mac { rd: 5, rs1: 6, rs2: 7 };
+        assert!(mac.srcs().contains(&Some(5)));
+        assert_eq!(mac.dst(), Some(5));
+    }
+
+    #[test]
+    fn div_latency() {
+        assert_eq!(AluOp::Div.cycles(), 35);
+        assert_eq!(AluOp::Mul.cycles(), 1);
+        assert_eq!(FpOp::Sqrt.cycles(), 15);
+        assert!(FpOp::Sqrt.is_divsqrt());
+        assert!(!FpOp::Madd.is_divsqrt());
+    }
+}

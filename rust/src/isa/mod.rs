@@ -1,0 +1,65 @@
+//! The RV32IMF + Xpulp + smallFloat instruction set of Vega's RI5CY cores.
+//!
+//! Vega's ten cores implement `RVC32IMF-Xpulp + SF` (Table VIII): the RV32
+//! base ISA with the M extension, single-precision F, the Xpulp DSP
+//! extensions (hardware loops, post-incremented load/store, SIMD dot
+//! products on packed 8/16-bit data, MAC), and the smallFloat extensions
+//! (FP16/bfloat16 scalar and packed-SIMD, multi-format FMA accumulating
+//! 16-bit products into 32-bit — see Fig. 3 and [FPnew]).
+//!
+//! There is no RISC-V cross-compiler in this environment, so kernels are
+//! authored through the in-Rust macro-assembler in [`asm`] (DESIGN.md §5).
+//! Instructions are kept symbolic (no binary encoding): the ISS interprets
+//! the [`inst::Inst`] enum directly, which is also what makes the
+//! instruction-mix statistics of Table V trivially exact.
+//!
+//! Floating-point state lives in the integer register file, matching the
+//! paper: "the architecture design maps integer and FP registers on a
+//! single register file" (§IV-A).
+
+pub mod asm;
+pub mod inst;
+
+pub use asm::{Asm, Label, Program};
+pub use inst::{
+    AluOp, Cond, FpFmt, FpOp, Inst, InstClass, LoopCount, MemSize, SimdFmt, SimdOp,
+};
+
+/// A register index (x0..x31). x0 is hardwired to zero.
+pub type Reg = u8;
+
+// ABI register names (subset used by the kernel builders).
+pub const ZERO: Reg = 0;
+pub const RA: Reg = 1;
+pub const SP: Reg = 2;
+// gp/tp are repurposed as kernel scratch: leaf SPMD kernels make no calls
+// and keep no stack, so x1..x4 are free real estate (a PULP-NN idiom).
+pub const GP: Reg = 3;
+pub const TP: Reg = 4;
+pub const T0: Reg = 5;
+pub const T1: Reg = 6;
+pub const T2: Reg = 7;
+pub const S0: Reg = 8;
+pub const S1: Reg = 9;
+pub const A0: Reg = 10;
+pub const A1: Reg = 11;
+pub const A2: Reg = 12;
+pub const A3: Reg = 13;
+pub const A4: Reg = 14;
+pub const A5: Reg = 15;
+pub const A6: Reg = 16;
+pub const A7: Reg = 17;
+pub const S2: Reg = 18;
+pub const S3: Reg = 19;
+pub const S4: Reg = 20;
+pub const S5: Reg = 21;
+pub const S6: Reg = 22;
+pub const S7: Reg = 23;
+pub const S8: Reg = 24;
+pub const S9: Reg = 25;
+pub const S10: Reg = 26;
+pub const S11: Reg = 27;
+pub const T3: Reg = 28;
+pub const T4: Reg = 29;
+pub const T5: Reg = 30;
+pub const T6: Reg = 31;

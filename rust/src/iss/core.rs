@@ -1,0 +1,668 @@
+//! The per-core model: state, two-phase cycle protocol, timing rules.
+//!
+//! Timing model (RI5CY 4-stage in-order):
+//! * 1 instruction/cycle steady state;
+//! * load-use interlock: +1 cycle when the instruction immediately after a
+//!   load reads its destination;
+//! * taken branch +2 cycles, jump +1 cycle;
+//! * DIV/REM 35 cycles (serial divider), FDIV 11 / FSQRT 15 on the shared
+//!   DIV-SQRT unit;
+//! * zero-overhead hardware loops (two channels, lp0 innermost);
+//! * instruction-cache model: +2 cycles the first time any core touches a
+//!   PC (L1.5 miss, refill from L2), +1 the first time *this* core touches
+//!   a PC already warm in the shared L1.5 (§II-C hierarchical I$);
+//! * TCDM bank conflicts and FPU contention are decided by the fabric
+//!   through the [`Intent`] protocol and charged via [`Core::deny_mem`] /
+//!   [`Core::deny_fpu`].
+
+use crate::isa::inst::{Inst, LoopCount, MemSize};
+use crate::isa::{Program, Reg};
+
+use super::exec;
+use super::stats::CoreStats;
+use super::Memory;
+
+/// Lifecycle state of a core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    Ready,
+    AtBarrier,
+    Halted,
+}
+
+/// A memory access the core wants to perform this cycle.
+#[derive(Debug, Clone, Copy)]
+pub struct MemReq {
+    pub addr: u32,
+    pub size: MemSize,
+    pub write: bool,
+}
+
+/// What the core wants to do this cycle (returned by [`Core::begin_cycle`]).
+#[derive(Debug, Clone, Copy)]
+pub enum Intent {
+    /// Needs a memory grant (TCDM/L2 arbitration).
+    Mem(MemReq),
+    /// Needs an FPU issue slot (`divsqrt` ops go to the shared unit).
+    Fp { divsqrt: bool },
+    /// Instruction retired internally this cycle; nothing to arbitrate.
+    Retired,
+    /// Waiting at the event-unit barrier.
+    Barrier,
+    /// Stalled (busy counter, hazard, icache refill).
+    Stalled,
+    Halted,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct HwLoop {
+    start: usize,
+    end: usize,
+    remaining: u32,
+}
+
+/// One RI5CY-class core.
+pub struct Core {
+    pub id: usize,
+    pub regs: [u32; 32],
+    pub pc: usize,
+    pub state: CoreState,
+    pub stats: CoreStats,
+    loops: [HwLoop; 2],
+    /// Extra cycles the current instruction still occupies.
+    busy: u64,
+    /// Destination of a load retired in the previous cycle (interlock).
+    pending_load: Option<Reg>,
+    /// Per-core I$ footprint (PCs executed at least once).
+    seen: Vec<bool>,
+}
+
+impl Core {
+    pub fn new(id: usize) -> Self {
+        Self {
+            id,
+            regs: [0; 32],
+            pc: 0,
+            state: CoreState::Ready,
+            stats: CoreStats::default(),
+            loops: [HwLoop::default(); 2],
+            busy: 0,
+            pending_load: None,
+            seen: Vec::new(),
+        }
+    }
+
+    /// Reset for a new program, keeping the id.
+    pub fn reset(&mut self, prog_len: usize) {
+        self.regs = [0; 32];
+        self.pc = 0;
+        self.state = CoreState::Ready;
+        self.stats = CoreStats::default();
+        self.loops = [HwLoop::default(); 2];
+        self.busy = 0;
+        self.pending_load = None;
+        self.seen = vec![false; prog_len];
+    }
+
+    pub fn set_reg(&mut self, r: Reg, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    pub fn reg(&self, r: Reg) -> u32 {
+        self.regs[r as usize]
+    }
+
+    fn write_reg(&mut self, r: Reg, v: u32) {
+        if r != 0 {
+            self.regs[r as usize] = v;
+        }
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == CoreState::Halted
+    }
+
+    /// Phase 1: advance one cycle and report what this core needs.
+    ///
+    /// `shared_warm` is the shared-L1.5 footprint bitmap (sized to the
+    /// program; shared across the cluster's cores).
+    pub fn begin_cycle(&mut self, prog: &Program, shared_warm: &mut [bool]) -> Intent {
+        if self.state == CoreState::Halted {
+            return Intent::Halted;
+        }
+        self.stats.cycles += 1;
+        if self.busy > 0 {
+            self.busy -= 1;
+            return Intent::Stalled;
+        }
+        if self.state == CoreState::AtBarrier {
+            self.stats.stall_barrier += 1;
+            return Intent::Barrier;
+        }
+        debug_assert!(self.pc < prog.insts.len(), "pc fell off program end");
+
+        // Instruction-cache model (cold/compulsory misses only: kernel
+        // loops fit the 512 B private caches, so steady state always hits).
+        if !self.seen[self.pc] {
+            self.seen[self.pc] = true;
+            let warm = shared_warm[self.pc];
+            shared_warm[self.pc] = true;
+            let penalty = if warm { 1 } else { 2 };
+            self.stats.stall_icache += penalty;
+            self.busy = penalty; // spend the refill cycles, then re-issue
+            return Intent::Stalled;
+        }
+
+        let inst = prog.insts[self.pc];
+
+        // Load-use interlock.
+        if let Some(ld) = self.pending_load.take() {
+            if inst.srcs().contains(&Some(ld)) {
+                self.stats.stall_loaduse += 1;
+                return Intent::Stalled;
+            }
+        }
+
+        match inst {
+            Inst::Load { rs1, imm, post_inc, size, .. } => {
+                let addr = if post_inc {
+                    self.reg(rs1)
+                } else {
+                    self.reg(rs1).wrapping_add(imm as u32)
+                };
+                Intent::Mem(MemReq { addr, size, write: false })
+            }
+            Inst::Store { rs1, imm, post_inc, size, .. } => {
+                let addr = if post_inc {
+                    self.reg(rs1)
+                } else {
+                    self.reg(rs1).wrapping_add(imm as u32)
+                };
+                Intent::Mem(MemReq { addr, size, write: true })
+            }
+            Inst::Fp { op, .. } => Intent::Fp { divsqrt: op.is_divsqrt() },
+            Inst::Barrier => {
+                self.state = CoreState::AtBarrier;
+                self.stats.retired += 1;
+                self.stats.by_class.bump(inst.class());
+                Intent::Barrier
+            }
+            Inst::Halt => {
+                self.state = CoreState::Halted;
+                self.stats.retired += 1;
+                self.stats.by_class.bump(inst.class());
+                Intent::Halted
+            }
+            _ => {
+                self.exec_local(prog, inst);
+                Intent::Retired
+            }
+        }
+    }
+
+    /// Phase 2a: the fabric granted the memory request.
+    pub fn retire_mem(&mut self, prog: &Program, mem: &mut dyn Memory) {
+        let inst = prog.insts[self.pc];
+        match inst {
+            Inst::Load { size, rd, rs1, imm, post_inc } => {
+                let addr = if post_inc {
+                    self.reg(rs1)
+                } else {
+                    self.reg(rs1).wrapping_add(imm as u32)
+                };
+                let v = mem.load(addr, size);
+                self.write_reg(rd, v);
+                if post_inc {
+                    let nv = self.reg(rs1).wrapping_add(imm as u32);
+                    self.write_reg(rs1, nv);
+                }
+                self.pending_load = Some(rd);
+                self.stats.bytes_loaded += size.bytes() as u64;
+            }
+            Inst::Store { size, rs2, rs1, imm, post_inc } => {
+                let addr = if post_inc {
+                    self.reg(rs1)
+                } else {
+                    self.reg(rs1).wrapping_add(imm as u32)
+                };
+                mem.store(addr, size, self.reg(rs2));
+                if post_inc {
+                    let nv = self.reg(rs1).wrapping_add(imm as u32);
+                    self.write_reg(rs1, nv);
+                }
+                self.stats.bytes_stored += size.bytes() as u64;
+            }
+            other => unreachable!("retire_mem on non-memory inst {other:?}"),
+        }
+        self.finish_retire(prog, inst, None);
+    }
+
+    /// Phase 2b: the memory request was not granted (bank conflict).
+    pub fn deny_mem(&mut self) {
+        self.stats.stall_tcdm += 1;
+    }
+
+    /// Phase 2c: the FPU issue slot was granted.
+    pub fn retire_fp(&mut self, prog: &Program) {
+        let inst = prog.insts[self.pc];
+        let Inst::Fp { op, fmt, rd, rs1, rs2 } = inst else {
+            unreachable!("retire_fp on non-fp inst");
+        };
+        let acc = self.reg(rd);
+        let v = exec::fp(op, fmt, self.reg(rs1), self.reg(rs2), acc);
+        self.write_reg(rd, v);
+        let lat = op.cycles();
+        if lat > 1 {
+            // Core blocks on the iterative DIV-SQRT unit.
+            self.busy = lat - 1;
+            self.stats.multicycle_busy += lat - 1;
+        }
+        self.finish_retire(prog, inst, None);
+    }
+
+    /// Phase 2d: FPU slot contended away (another core issued to the same
+    /// shared FPU this cycle).
+    pub fn deny_fpu(&mut self, divsqrt: bool) {
+        if divsqrt {
+            self.stats.stall_divsqrt += 1;
+        } else {
+            self.stats.stall_fpu += 1;
+        }
+    }
+
+    /// Charge extra latency cycles from the fabric (e.g. a cluster-side
+    /// access to L2 across the AXI bridge).
+    pub fn add_busy(&mut self, cycles: u64) {
+        self.busy += cycles;
+        self.stats.multicycle_busy += cycles;
+    }
+
+    /// Release from the event-unit barrier (2-cycle wake-up, §II-C).
+    pub fn release_barrier(&mut self) {
+        debug_assert_eq!(self.state, CoreState::AtBarrier);
+        self.state = CoreState::Ready;
+        self.busy = 2;
+        self.pc += 1;
+    }
+
+    /// Execute an instruction that needs no external arbitration.
+    fn exec_local(&mut self, prog: &Program, inst: Inst) {
+        let mut taken: Option<usize> = None;
+        match inst {
+            Inst::Alu { op, rd, rs1, rs2 } => {
+                let v = exec::alu(op, self.reg(rs1), self.reg(rs2));
+                self.write_reg(rd, v);
+                let lat = op.cycles();
+                if lat > 1 {
+                    self.busy = lat - 1;
+                    self.stats.multicycle_busy += lat - 1;
+                }
+            }
+            Inst::AluImm { op, rd, rs1, imm } => {
+                let v = exec::alu(op, self.reg(rs1), imm as u32);
+                self.write_reg(rd, v);
+                let lat = op.cycles();
+                if lat > 1 {
+                    self.busy = lat - 1;
+                    self.stats.multicycle_busy += lat - 1;
+                }
+            }
+            Inst::Li { rd, imm } => self.write_reg(rd, imm as u32),
+            Inst::Branch { cond, rs1, rs2, target } => {
+                if exec::branch_taken(cond, self.reg(rs1), self.reg(rs2)) {
+                    taken = Some(target);
+                    self.busy = 2;
+                    self.stats.branch_penalty += 2;
+                }
+            }
+            Inst::Jal { rd, target } => {
+                self.write_reg(rd, (self.pc + 1) as u32);
+                taken = Some(target);
+                self.busy = 1;
+                self.stats.branch_penalty += 1;
+            }
+            Inst::Jalr { rd, rs1 } => {
+                let t = self.reg(rs1) as usize;
+                self.write_reg(rd, (self.pc + 1) as u32);
+                taken = Some(t);
+                self.busy = 1;
+                self.stats.branch_penalty += 1;
+            }
+            Inst::Mac { rd, rs1, rs2 } => {
+                let v = (self.reg(rd) as i32)
+                    .wrapping_add((self.reg(rs1) as i32).wrapping_mul(self.reg(rs2) as i32));
+                self.write_reg(rd, v as u32);
+            }
+            Inst::Msu { rd, rs1, rs2 } => {
+                let v = (self.reg(rd) as i32)
+                    .wrapping_sub((self.reg(rs1) as i32).wrapping_mul(self.reg(rs2) as i32));
+                self.write_reg(rd, v as u32);
+            }
+            Inst::Simd { op, fmt, rd, rs1, rs2 } => {
+                let v = exec::simd(op, fmt, self.reg(rs1), self.reg(rs2), self.reg(rd));
+                self.write_reg(rd, v);
+            }
+            Inst::LpSetup { lp, count, body_end } => {
+                let n = match count {
+                    LoopCount::Imm(n) => n,
+                    LoopCount::Reg(r) => self.reg(r),
+                };
+                if n == 0 {
+                    // Skip the body entirely.
+                    self.loops[lp as usize].remaining = 0;
+                    self.stats.retired += 1;
+                    self.stats.by_class.bump(inst.class());
+                    self.pc = body_end;
+                    return;
+                }
+                self.loops[lp as usize] =
+                    HwLoop { start: self.pc + 1, end: body_end, remaining: n };
+            }
+            Inst::Nop => {}
+            Inst::Fp { .. }
+            | Inst::Load { .. }
+            | Inst::Store { .. }
+            | Inst::Barrier
+            | Inst::Halt => unreachable!("arbitrated insts handled elsewhere"),
+        }
+        self.finish_retire(prog, inst, taken);
+    }
+
+    /// Book-keeping common to every retirement + next-PC computation with
+    /// zero-overhead hardware loops.
+    fn finish_retire(&mut self, _prog: &Program, inst: Inst, taken: Option<usize>) {
+        self.stats.retired += 1;
+        self.stats.by_class.bump(inst.class());
+        self.stats.int_ops += inst.int_ops();
+        self.stats.flops += inst.flops();
+
+        if let Some(t) = taken {
+            self.pc = t;
+            return;
+        }
+        let cur = self.pc;
+        // Hardware loops: innermost (lp0) first; falling out of an inner
+        // loop must still honour an outer loop ending at the same PC.
+        for lp in 0..2 {
+            let l = &mut self.loops[lp];
+            if l.remaining > 0 && cur + 1 == l.end {
+                if l.remaining > 1 {
+                    l.remaining -= 1;
+                    self.pc = l.start;
+                    return;
+                }
+                l.remaining = 0; // exhausted; check outer channel
+            }
+        }
+        self.pc = cur + 1;
+    }
+}
+
+/// Run a program on a single core with ideal memory (no contention): the
+/// FC-core configuration, also the harness for ISS unit tests.
+///
+/// `init` sets registers before the run. Panics if `max_cycles` elapses
+/// without `Halt` (runaway program).
+pub fn run_single(
+    prog: &Program,
+    mem: &mut dyn Memory,
+    init: &[(Reg, u32)],
+    max_cycles: u64,
+) -> CoreStats {
+    let mut core = Core::new(0);
+    core.reset(prog.insts.len());
+    for &(r, v) in init {
+        core.set_reg(r, v);
+    }
+    let mut warm = vec![false; prog.insts.len()];
+    while !core.halted() {
+        assert!(
+            core.stats.cycles < max_cycles,
+            "program {} exceeded {max_cycles} cycles",
+            prog.name
+        );
+        match core.begin_cycle(prog, &mut warm) {
+            Intent::Mem(_) => core.retire_mem(prog, mem),
+            Intent::Fp { .. } => core.retire_fp(prog),
+            Intent::Barrier => core.release_barrier(),
+            Intent::Retired | Intent::Stalled | Intent::Halted => {}
+        }
+    }
+    core.stats.clone()
+}
+
+/// As [`run_single`] but returns the final register file too.
+pub fn run_single_regs(
+    prog: &Program,
+    mem: &mut dyn Memory,
+    init: &[(Reg, u32)],
+    max_cycles: u64,
+) -> (CoreStats, [u32; 32]) {
+    let mut core = Core::new(0);
+    core.reset(prog.insts.len());
+    for &(r, v) in init {
+        core.set_reg(r, v);
+    }
+    let mut warm = vec![false; prog.insts.len()];
+    while !core.halted() {
+        assert!(core.stats.cycles < max_cycles, "runaway program {}", prog.name);
+        match core.begin_cycle(prog, &mut warm) {
+            Intent::Mem(_) => core.retire_mem(prog, mem),
+            Intent::Fp { .. } => core.retire_fp(prog),
+            Intent::Barrier => core.release_barrier(),
+            Intent::Retired | Intent::Stalled | Intent::Halted => {}
+        }
+    }
+    (core.stats.clone(), core.regs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, A2, A3, T0};
+    use crate::iss::FlatMem;
+
+    fn run(prog: &Program, init: &[(Reg, u32)]) -> (CoreStats, [u32; 32]) {
+        let mut mem = FlatMem::new(0, 4096);
+        run_single_regs(prog, &mut mem, init, 1_000_000)
+    }
+
+    #[test]
+    fn arithmetic_and_li() {
+        let mut a = Asm::new("t");
+        a.li(A0, 21);
+        a.slli(A1, A0, 1);
+        a.addi(A1, A1, -2);
+        a.halt();
+        let (_, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A1 as usize], 40);
+    }
+
+    #[test]
+    fn hw_loop_executes_exact_count() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(A0, 0);
+        a.lp_setup_imm(0, 10, end);
+        a.addi(A0, A0, 1);
+        a.bind(end);
+        a.halt();
+        let (stats, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A0 as usize], 10);
+        // body retired 10 times + li + setup + halt
+        assert_eq!(stats.retired, 13);
+    }
+
+    #[test]
+    fn nested_hw_loops() {
+        let mut a = Asm::new("t");
+        let end1 = a.label();
+        let end0 = a.label();
+        a.li(A0, 0);
+        a.lp_setup_imm(1, 5, end1);
+        a.lp_setup_imm(0, 3, end0);
+        a.addi(A0, A0, 1);
+        a.bind(end0);
+        a.addi(A1, A1, 1); // outer-only tail
+        a.bind(end1);
+        a.halt();
+        let (_, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A0 as usize], 15);
+        assert_eq!(regs[A1 as usize], 5);
+    }
+
+    #[test]
+    fn hw_loop_reg_count_zero_skips_body() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(A0, 99);
+        a.lp_setup(0, A1, end); // A1 = 0
+        a.li(A0, 1);
+        a.bind(end);
+        a.halt();
+        let (_, regs) = run(&a.finish().unwrap(), &[(A1, 0)]);
+        assert_eq!(regs[A0 as usize], 99);
+    }
+
+    #[test]
+    fn post_increment_load_store() {
+        let mut a = Asm::new("t");
+        // copy 4 words from A0 to A1
+        let end = a.label();
+        a.lp_setup_imm(0, 4, end);
+        a.lw_pi(T0, A0, 4);
+        a.sw_pi(T0, A1, 4);
+        a.bind(end);
+        a.halt();
+        let prog = a.finish().unwrap();
+        let mut mem = FlatMem::new(0, 256);
+        mem.write_i32s(0, &[10, 20, 30, 40]);
+        let stats = run_single(&prog, &mut mem, &[(A0, 0), (A1, 64)], 10_000);
+        assert_eq!(mem.read_i32s(64, 4), vec![10, 20, 30, 40]);
+        assert_eq!(stats.bytes_loaded, 16);
+        assert_eq!(stats.bytes_stored, 16);
+    }
+
+    #[test]
+    fn load_use_stall_charged() {
+        // lw then immediately use -> 1 stall
+        let mut a = Asm::new("t");
+        a.lw(A0, A1, 0);
+        a.addi(A2, A0, 1); // hazard
+        a.halt();
+        let p = a.finish().unwrap();
+        let (s1, _) = run(&p, &[(A1, 0)]);
+        assert_eq!(s1.stall_loaduse, 1);
+
+        // with an independent instruction in between -> 0 stalls
+        let mut b = Asm::new("t2");
+        b.lw(A0, A1, 0);
+        b.addi(A3, A1, 1); // independent
+        b.addi(A2, A0, 1);
+        b.halt();
+        let (s2, _) = run(&b.finish().unwrap(), &[(A1, 0)]);
+        assert_eq!(s2.stall_loaduse, 0);
+    }
+
+    #[test]
+    fn branch_penalty_taken_only() {
+        let mut a = Asm::new("t");
+        let l = a.label();
+        a.li(A0, 0);
+        a.beq(A0, A0, l); // taken
+        a.li(A0, 1); // skipped
+        a.bind(l);
+        a.bne(A0, A0, l); // not taken
+        a.halt();
+        let (s, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A0 as usize], 0);
+        assert_eq!(s.branch_penalty, 2);
+    }
+
+    #[test]
+    fn mac_and_sdotsp() {
+        let mut a = Asm::new("t");
+        a.li(A0, 3);
+        a.li(A1, 4);
+        a.li(A2, 100);
+        a.mac(A2, A0, A1); // 112
+        a.li(T0, 0x0102_0304u32 as i32);
+        a.li(A3, 0);
+        a.sdotsp_b(A3, T0, T0); // 1+4+9+16 = 30
+        a.halt();
+        let (s, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A2 as usize], 112);
+        assert_eq!(regs[A3 as usize], 30);
+        assert_eq!(s.int_ops, 2 + 8 + 5 /* 5 li/alu */);
+    }
+
+    #[test]
+    fn fp_ops_retire_with_flops() {
+        let mut a = Asm::new("t");
+        a.li(A0, 2.0f32.to_bits() as i32);
+        a.li(A1, 3.0f32.to_bits() as i32);
+        a.li(A2, 1.0f32.to_bits() as i32);
+        a.fmac_s(A2, A0, A1); // 7.0
+        a.fdiv_s(A3, A2, A0); // 3.5, 11 cycles
+        a.halt();
+        let (s, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(f32::from_bits(regs[A2 as usize]), 7.0);
+        assert_eq!(f32::from_bits(regs[A3 as usize]), 3.5);
+        assert_eq!(s.flops, 2 + 1);
+        assert_eq!(s.multicycle_busy, 10);
+    }
+
+    #[test]
+    fn div_takes_35_cycles() {
+        let mut a = Asm::new("t");
+        a.li(A0, 100);
+        a.li(A1, 7);
+        a.div(A2, A0, A1);
+        a.halt();
+        let (s, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[A2 as usize], 14);
+        assert!(s.cycles >= 35);
+    }
+
+    #[test]
+    fn icache_cold_misses_charged_once() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.lp_setup_imm(0, 100, end);
+        a.addi(A0, A0, 1);
+        a.bind(end);
+        a.halt();
+        let (s, _) = run(&a.finish().unwrap(), &[]);
+        // 3 unique PCs x 2 cycles cold = 6 icache stall cycles, not 100.
+        assert_eq!(s.stall_icache, 6);
+    }
+
+    #[test]
+    fn x0_is_hardwired_zero() {
+        let mut a = Asm::new("t");
+        a.li(0, 42);
+        a.addi(A0, 0, 5);
+        a.halt();
+        let (_, regs) = run(&a.finish().unwrap(), &[]);
+        assert_eq!(regs[0], 0);
+        assert_eq!(regs[A0 as usize], 5);
+    }
+
+    #[test]
+    fn steady_state_ipc_near_one() {
+        // A long hw loop of independent ALU ops should retire ~1 IPC.
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.lp_setup_imm(0, 1000, end);
+        a.addi(A0, A0, 1);
+        a.addi(A1, A1, 1);
+        a.addi(A2, A2, 1);
+        a.addi(A3, A3, 1);
+        a.bind(end);
+        a.halt();
+        let (s, _) = run(&a.finish().unwrap(), &[]);
+        assert!(s.ipc() > 0.99, "ipc = {}", s.ipc());
+    }
+}

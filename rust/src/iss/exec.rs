@@ -1,0 +1,367 @@
+//! Pure functional semantics of every instruction (no timing here).
+
+use crate::isa::inst::{AluOp, Cond, FpFmt, FpOp, SimdFmt, SimdOp};
+
+use super::softfloat as sf;
+
+/// Evaluate a register-register ALU op.
+pub fn alu(op: AluOp, a: u32, b: u32) -> u32 {
+    let (ia, ib) = (a as i32, b as i32);
+    match op {
+        AluOp::Add => a.wrapping_add(b),
+        AluOp::Sub => a.wrapping_sub(b),
+        AluOp::Sll => a.wrapping_shl(b & 31),
+        AluOp::Srl => a.wrapping_shr(b & 31),
+        AluOp::Sra => (ia.wrapping_shr(b & 31)) as u32,
+        AluOp::And => a & b,
+        AluOp::Or => a | b,
+        AluOp::Xor => a ^ b,
+        AluOp::Slt => (ia < ib) as u32,
+        AluOp::Sltu => (a < b) as u32,
+        AluOp::Mul => a.wrapping_mul(b),
+        AluOp::Mulh => (((ia as i64) * (ib as i64)) >> 32) as u32,
+        AluOp::Div => {
+            if ib == 0 {
+                u32::MAX
+            } else if ia == i32::MIN && ib == -1 {
+                ia as u32
+            } else {
+                (ia / ib) as u32
+            }
+        }
+        AluOp::Divu => {
+            if b == 0 {
+                u32::MAX
+            } else {
+                a / b
+            }
+        }
+        AluOp::Rem => {
+            if ib == 0 {
+                a
+            } else if ia == i32::MIN && ib == -1 {
+                0
+            } else {
+                (ia % ib) as u32
+            }
+        }
+        AluOp::Remu => {
+            if b == 0 {
+                a
+            } else {
+                a % b
+            }
+        }
+        AluOp::Min => ia.min(ib) as u32,
+        AluOp::Max => ia.max(ib) as u32,
+        AluOp::Abs => ia.unsigned_abs(),
+        // p.clip: b is the bit count; clamp to [-2^b, 2^b - 1].
+        AluOp::Clip => {
+            let bits = b.min(31);
+            let lo = -(1i32 << bits);
+            let hi = (1i32 << bits) - 1;
+            ia.clamp(lo, hi) as u32
+        }
+    }
+}
+
+/// Evaluate a branch condition.
+pub fn branch_taken(cond: Cond, a: u32, b: u32) -> bool {
+    let (ia, ib) = (a as i32, b as i32);
+    match cond {
+        Cond::Eq => a == b,
+        Cond::Ne => a != b,
+        Cond::Lt => ia < ib,
+        Cond::Ge => ia >= ib,
+        Cond::Ltu => a < b,
+        Cond::Geu => a >= b,
+    }
+}
+
+fn lanes_b(x: u32) -> [i32; 4] {
+    [
+        x as u8 as i8 as i32,
+        (x >> 8) as u8 as i8 as i32,
+        (x >> 16) as u8 as i8 as i32,
+        (x >> 24) as u8 as i8 as i32,
+    ]
+}
+
+fn pack_b(l: [i32; 4]) -> u32 {
+    (l[0] as u8 as u32)
+        | ((l[1] as u8 as u32) << 8)
+        | ((l[2] as u8 as u32) << 16)
+        | ((l[3] as u8 as u32) << 24)
+}
+
+fn lanes_h(x: u32) -> [i32; 2] {
+    [x as u16 as i16 as i32, (x >> 16) as u16 as i16 as i32]
+}
+
+fn pack_h(l: [i32; 2]) -> u32 {
+    (l[0] as u16 as u32) | ((l[1] as u16 as u32) << 16)
+}
+
+/// Evaluate a packed-SIMD integer op. `acc` is the previous value of rd
+/// (used by the accumulating dot products).
+pub fn simd(op: SimdOp, fmt: SimdFmt, a: u32, b: u32, acc: u32) -> u32 {
+    match (op, fmt) {
+        (SimdOp::SDotSp, SimdFmt::B4) => {
+            let (la, lb) = (lanes_b(a), lanes_b(b));
+            let dot: i32 = la.iter().zip(&lb).map(|(x, y)| x * y).sum();
+            (acc as i32).wrapping_add(dot) as u32
+        }
+        (SimdOp::SDotSp, SimdFmt::H2) => {
+            let (la, lb) = (lanes_h(a), lanes_h(b));
+            let dot: i32 = la.iter().zip(&lb).map(|(x, y)| x * y).sum();
+            (acc as i32).wrapping_add(dot) as u32
+        }
+        (SimdOp::SDotUp, SimdFmt::B4) => {
+            // unsigned a lanes × signed b lanes
+            let la = [a & 0xFF, (a >> 8) & 0xFF, (a >> 16) & 0xFF, (a >> 24) & 0xFF];
+            let lb = lanes_b(b);
+            let dot: i32 = la.iter().zip(&lb).map(|(&x, &y)| x as i32 * y).sum();
+            (acc as i32).wrapping_add(dot) as u32
+        }
+        (SimdOp::SDotUp, SimdFmt::H2) => {
+            let la = [a & 0xFFFF, (a >> 16) & 0xFFFF];
+            let lb = lanes_h(b);
+            let dot: i32 = la.iter().zip(&lb).map(|(&x, &y)| x as i32 * y).sum();
+            (acc as i32).wrapping_add(dot) as u32
+        }
+        (op, SimdFmt::B4) => {
+            let (la, lb) = (lanes_b(a), lanes_b(b));
+            let mut out = [0i32; 4];
+            for i in 0..4 {
+                out[i] = lane_scalar(op, la[i], lb[i]);
+            }
+            pack_b(out)
+        }
+        (op, SimdFmt::H2) => {
+            let (la, lb) = (lanes_h(a), lanes_h(b));
+            let mut out = [0i32; 2];
+            for i in 0..2 {
+                out[i] = lane_scalar(op, la[i], lb[i]);
+            }
+            pack_h(out)
+        }
+    }
+}
+
+fn lane_scalar(op: SimdOp, a: i32, b: i32) -> i32 {
+    match op {
+        SimdOp::Add => a.wrapping_add(b),
+        SimdOp::Sub => a.wrapping_sub(b),
+        SimdOp::Min => a.min(b),
+        SimdOp::Max => a.max(b),
+        SimdOp::Avg => (a + b) >> 1,
+        SimdOp::Pack => (a & 0xFFFF) | (b << 16),
+        SimdOp::SDotSp | SimdOp::SDotUp => unreachable!("handled above"),
+    }
+}
+
+/// Evaluate an FP op. `acc` is the previous rd value (accumulator for
+/// Madd/Msub/DotpEx; pack partner for CvtSH2).
+pub fn fp(op: FpOp, fmt: FpFmt, a: u32, b: u32, acc: u32) -> u32 {
+    match fmt {
+        FpFmt::S => fp_scalar_f32(op, a, b, acc),
+        FpFmt::H => fp_scalar_h(op, a, b, acc),
+        FpFmt::B => fp_scalar_bf(op, a, b, acc),
+        FpFmt::VH => fp_vec_h(op, a, b, acc),
+        FpFmt::VB => fp_vec_bf(op, a, b, acc),
+    }
+}
+
+fn scalar_op(op: FpOp, x: f32, y: f32, acc: f32) -> f32 {
+    match op {
+        FpOp::Add => x + y,
+        FpOp::Sub => x - y,
+        FpOp::Mul => x * y,
+        FpOp::Madd => x.mul_add(y, acc),
+        FpOp::Msub => acc - x * y,
+        FpOp::Min => x.min(y),
+        FpOp::Max => x.max(y),
+        FpOp::Div => x / y,
+        FpOp::Sqrt => x.sqrt(),
+        FpOp::Abs => x.abs(),
+        FpOp::Neg => -x,
+        _ => unreachable!("non-arithmetic op in scalar_op"),
+    }
+}
+
+fn fp_scalar_f32(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    let (x, y, z) = (f32::from_bits(a), f32::from_bits(b), f32::from_bits(acc));
+    match op {
+        FpOp::CmpLt => return (x < y) as u32,
+        FpOp::CmpLe => return (x <= y) as u32,
+        FpOp::CmpEq => return (x == y) as u32,
+        FpOp::CvtIF => return ((a as i32) as f32).to_bits(),
+        FpOp::CvtFI => {
+            let v = f32::from_bits(a);
+            return if v.is_nan() { 0 } else { (v as i64).clamp(i32::MIN as i64, i32::MAX as i64) as i32 as u32 };
+        }
+        _ => {}
+    }
+    scalar_op(op, x, y, z).to_bits()
+}
+
+fn fp_scalar_h(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    let x = sf::f16_to_f32(a as u16);
+    let y = sf::f16_to_f32(b as u16);
+    let z = sf::f16_to_f32(acc as u16);
+    match op {
+        FpOp::CmpLt => return (x < y) as u32,
+        FpOp::CmpLe => return (x <= y) as u32,
+        FpOp::CmpEq => return (x == y) as u32,
+        FpOp::CvtIF => return sf::f32_to_f16((a as i32) as f32) as u32,
+        FpOp::CvtFI => return (x as i32) as u32,
+        _ => {}
+    }
+    sf::f32_to_f16(scalar_op(op, x, y, z)) as u32
+}
+
+fn fp_scalar_bf(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    let x = sf::bf16_to_f32(a as u16);
+    let y = sf::bf16_to_f32(b as u16);
+    let z = sf::bf16_to_f32(acc as u16);
+    match op {
+        FpOp::CmpLt => return (x < y) as u32,
+        FpOp::CmpLe => return (x <= y) as u32,
+        FpOp::CmpEq => return (x == y) as u32,
+        _ => {}
+    }
+    sf::f32_to_bf16(scalar_op(op, x, y, z)) as u32
+}
+
+fn fp_vec_h(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    match op {
+        FpOp::Madd => sf::f16_lanes_fma(a, b, acc),
+        FpOp::DotpEx => sf::f16_dotpex_s(a, b, acc),
+        // cast-and-pack: rd = pack(f16(rs1_f32), f16(rs2_f32))
+        FpOp::CvtSH2 => {
+            let lo = sf::f32_to_f16(f32::from_bits(a)) as u32;
+            let hi = sf::f32_to_f16(f32::from_bits(b)) as u32;
+            (hi << 16) | lo
+        }
+        FpOp::CvtH2S0 => sf::f16_to_f32(a as u16).to_bits(),
+        FpOp::CvtH2S1 => sf::f16_to_f32((a >> 16) as u16).to_bits(),
+        FpOp::Add => sf::f16_lanes_op(a, b, |x, y| x + y),
+        FpOp::Sub => sf::f16_lanes_op(a, b, |x, y| x - y),
+        FpOp::Mul => sf::f16_lanes_op(a, b, |x, y| x * y),
+        FpOp::Min => sf::f16_lanes_op(a, b, f32::min),
+        FpOp::Max => sf::f16_lanes_op(a, b, f32::max),
+        other => unreachable!("unsupported packed-f16 op {other:?}"),
+    }
+}
+
+fn fp_vec_bf(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    let lane = |h: u16| sf::bf16_to_f32(h);
+    let lo_a = lane(a as u16);
+    let hi_a = lane((a >> 16) as u16);
+    let lo_b = lane(b as u16);
+    let hi_b = lane((b >> 16) as u16);
+    match op {
+        FpOp::DotpEx => {
+            (lo_a * lo_b + hi_a * hi_b + f32::from_bits(acc)).to_bits()
+        }
+        FpOp::Madd => {
+            let lo = sf::f32_to_bf16(lo_a * lo_b + lane(acc as u16)) as u32;
+            let hi = sf::f32_to_bf16(hi_a * hi_b + lane((acc >> 16) as u16)) as u32;
+            (hi << 16) | lo
+        }
+        FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Min | FpOp::Max => {
+            let f = |x: f32, y: f32| match op {
+                FpOp::Add => x + y,
+                FpOp::Sub => x - y,
+                FpOp::Mul => x * y,
+                FpOp::Min => x.min(y),
+                _ => x.max(y),
+            };
+            let lo = sf::f32_to_bf16(f(lo_a, lo_b)) as u32;
+            let hi = sf::f32_to_bf16(f(hi_a, hi_b)) as u32;
+            (hi << 16) | lo
+        }
+        other => unreachable!("unsupported packed-bf16 op {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_signed_ops() {
+        assert_eq!(alu(AluOp::Add, 1, u32::MAX), 0);
+        assert_eq!(alu(AluOp::Sra, (-8i32) as u32, 1) as i32, -4);
+        assert_eq!(alu(AluOp::Min, (-3i32) as u32, 2), (-3i32) as u32);
+        assert_eq!(alu(AluOp::Abs, (-7i32) as u32, 0), 7);
+        assert_eq!(alu(AluOp::Clip, 300u32, 7) as i32, 127);
+        assert_eq!(alu(AluOp::Clip, (-300i32) as u32, 7) as i32, -128);
+    }
+
+    #[test]
+    fn div_edge_cases() {
+        assert_eq!(alu(AluOp::Div, 7, 0), u32::MAX);
+        assert_eq!(alu(AluOp::Div, i32::MIN as u32, (-1i32) as u32), i32::MIN as u32);
+        assert_eq!(alu(AluOp::Rem, 7, 0), 7);
+        assert_eq!(alu(AluOp::Rem, i32::MIN as u32, (-1i32) as u32), 0);
+    }
+
+    #[test]
+    fn sdotsp_b4() {
+        // lanes a = [1, -2, 3, -4], b = [5, 6, 7, 8]
+        let a = pack_b([1, -2, 3, -4]);
+        let b = pack_b([5, 6, 7, 8]);
+        let acc = 100u32;
+        let want = 100 + (5 - 12 + 21 - 32);
+        assert_eq!(simd(SimdOp::SDotSp, SimdFmt::B4, a, b, acc) as i32, want);
+    }
+
+    #[test]
+    fn sdotsp_h2() {
+        let a = pack_h([-1000, 2000]);
+        let b = pack_h([3, -4]);
+        assert_eq!(simd(SimdOp::SDotSp, SimdFmt::H2, a, b, 0) as i32, -3000 - 8000);
+    }
+
+    #[test]
+    fn simd_lane_add_wraps_per_lane() {
+        let a = pack_b([127, 0, 0, 0]);
+        let b = pack_b([1, 0, 0, 0]);
+        let r = simd(SimdOp::Add, SimdFmt::B4, a, b, 0);
+        assert_eq!(lanes_b(r)[0], -128); // i8 wraparound contained in lane
+        assert_eq!(lanes_b(r)[1], 0);
+    }
+
+    #[test]
+    fn fp32_fma() {
+        let r = fp(FpOp::Madd, FpFmt::S, 2.0f32.to_bits(), 3.0f32.to_bits(), 10.0f32.to_bits());
+        assert_eq!(f32::from_bits(r), 16.0);
+        let r = fp(FpOp::Msub, FpFmt::S, 2.0f32.to_bits(), 3.0f32.to_bits(), 10.0f32.to_bits());
+        assert_eq!(f32::from_bits(r), 4.0);
+    }
+
+    #[test]
+    fn fp_compare_and_convert() {
+        assert_eq!(fp(FpOp::CmpLt, FpFmt::S, 1.0f32.to_bits(), 2.0f32.to_bits(), 0), 1);
+        assert_eq!(fp(FpOp::CvtIF, FpFmt::S, (-5i32) as u32, 0, 0), (-5.0f32).to_bits());
+        assert_eq!(fp(FpOp::CvtFI, FpFmt::S, (-5.7f32).to_bits(), 0, 0) as i32, -5);
+    }
+
+    #[test]
+    fn packed_f16_dotpex_accumulates_in_f32() {
+        use crate::iss::softfloat::f32_to_f16;
+        let a = ((f32_to_f16(2.0) as u32) << 16) | f32_to_f16(1.0) as u32;
+        let b = ((f32_to_f16(4.0) as u32) << 16) | f32_to_f16(3.0) as u32;
+        let acc = 0.25f32.to_bits();
+        let r = fp(FpOp::DotpEx, FpFmt::VH, a, b, acc);
+        assert_eq!(f32::from_bits(r), 3.0 + 8.0 + 0.25);
+    }
+
+    #[test]
+    fn cast_and_pack_roundtrip() {
+        let r = fp(FpOp::CvtSH2, FpFmt::VH, 1.5f32.to_bits(), (-2.0f32).to_bits(), 0);
+        assert_eq!(fp(FpOp::CvtH2S0, FpFmt::VH, r, 0, 0), 1.5f32.to_bits());
+        assert_eq!(fp(FpOp::CvtH2S1, FpFmt::VH, r, 0, 0), (-2.0f32).to_bits());
+    }
+}

@@ -1,0 +1,174 @@
+//! Instruction-set simulator for the RI5CY-class cores.
+//!
+//! [`Core`] models one 4-pipeline-stage in-order core: single-cycle ALU and
+//! FP issue, load-use interlock, taken-branch penalty, 35-cycle serial
+//! divider, zero-overhead hardware loops, and packed-SIMD / smallFloat
+//! datapaths. Memory and FPU *timing* (bank conflicts, shared-FPU
+//! contention) are arbitrated by the owning fabric ([`crate::cluster`]) via
+//! the [`Core::intent`] / [`Core::retire`] two-phase protocol; the core
+//! itself is cycle-accurate for everything private to it.
+
+pub mod core;
+pub mod exec;
+pub mod softfloat;
+pub mod stats;
+
+pub use self::core::{Core, CoreState, Intent, MemReq};
+pub use stats::CoreStats;
+
+use crate::isa::MemSize;
+
+/// Functional memory interface presented to a core (timing lives in the
+/// fabric; this is data only).
+pub trait Memory {
+    fn load(&mut self, addr: u32, size: MemSize) -> u32;
+    fn store(&mut self, addr: u32, size: MemSize, value: u32);
+}
+
+/// A flat little-endian memory region starting at `base`.
+pub struct FlatMem {
+    pub base: u32,
+    pub data: Vec<u8>,
+}
+
+impl FlatMem {
+    pub fn new(base: u32, size: usize) -> Self {
+        Self { base, data: vec![0; size] }
+    }
+
+    fn off(&self, addr: u32) -> usize {
+        debug_assert!(
+            addr >= self.base && ((addr - self.base) as usize) < self.data.len(),
+            "address {addr:#x} outside [{:#x}, {:#x})",
+            self.base,
+            self.base as usize + self.data.len()
+        );
+        (addr - self.base) as usize
+    }
+
+    pub fn write_bytes(&mut self, addr: u32, bytes: &[u8]) {
+        let o = self.off(addr);
+        self.data[o..o + bytes.len()].copy_from_slice(bytes);
+    }
+
+    pub fn read_bytes(&self, addr: u32, len: usize) -> &[u8] {
+        let o = self.off(addr);
+        &self.data[o..o + len]
+    }
+
+    pub fn write_i8s(&mut self, addr: u32, vals: &[i8]) {
+        let bytes: Vec<u8> = vals.iter().map(|&v| v as u8).collect();
+        self.write_bytes(addr, &bytes);
+    }
+
+    pub fn write_i32s(&mut self, addr: u32, vals: &[i32]) {
+        for (i, &v) in vals.iter().enumerate() {
+            self.write_bytes(addr + (i * 4) as u32, &v.to_le_bytes());
+        }
+    }
+
+    pub fn write_f32s(&mut self, addr: u32, vals: &[f32]) {
+        for (i, &v) in vals.iter().enumerate() {
+            self.write_bytes(addr + (i * 4) as u32, &v.to_le_bytes());
+        }
+    }
+
+    pub fn write_f16s(&mut self, addr: u32, vals: &[f32]) {
+        for (i, &v) in vals.iter().enumerate() {
+            let h = softfloat::f32_to_f16(v);
+            self.write_bytes(addr + (i * 2) as u32, &h.to_le_bytes());
+        }
+    }
+
+    pub fn read_i32s(&self, addr: u32, n: usize) -> Vec<i32> {
+        (0..n)
+            .map(|i| {
+                let b = self.read_bytes(addr + (i * 4) as u32, 4);
+                i32::from_le_bytes([b[0], b[1], b[2], b[3]])
+            })
+            .collect()
+    }
+
+    pub fn read_i8s(&self, addr: u32, n: usize) -> Vec<i8> {
+        self.read_bytes(addr, n).iter().map(|&b| b as i8).collect()
+    }
+
+    pub fn read_f32s(&self, addr: u32, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let b = self.read_bytes(addr + (i * 4) as u32, 4);
+                f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+            })
+            .collect()
+    }
+
+    pub fn read_f16s(&self, addr: u32, n: usize) -> Vec<f32> {
+        (0..n)
+            .map(|i| {
+                let b = self.read_bytes(addr + (i * 2) as u32, 2);
+                softfloat::f16_to_f32(u16::from_le_bytes([b[0], b[1]]))
+            })
+            .collect()
+    }
+}
+
+impl Memory for FlatMem {
+    fn load(&mut self, addr: u32, size: MemSize) -> u32 {
+        let o = self.off(addr);
+        match size {
+            MemSize::B => self.data[o] as i8 as i32 as u32,
+            MemSize::Bu => self.data[o] as u32,
+            MemSize::H => {
+                i16::from_le_bytes([self.data[o], self.data[o + 1]]) as i32 as u32
+            }
+            MemSize::Hu => u16::from_le_bytes([self.data[o], self.data[o + 1]]) as u32,
+            MemSize::W => u32::from_le_bytes([
+                self.data[o],
+                self.data[o + 1],
+                self.data[o + 2],
+                self.data[o + 3],
+            ]),
+        }
+    }
+
+    fn store(&mut self, addr: u32, size: MemSize, value: u32) {
+        let o = self.off(addr);
+        match size {
+            MemSize::B | MemSize::Bu => self.data[o] = value as u8,
+            MemSize::H | MemSize::Hu => {
+                self.data[o..o + 2].copy_from_slice(&(value as u16).to_le_bytes())
+            }
+            MemSize::W => self.data[o..o + 4].copy_from_slice(&value.to_le_bytes()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flatmem_rw_roundtrip() {
+        let mut m = FlatMem::new(0x1000_0000, 64);
+        m.store(0x1000_0000, MemSize::W, 0xDEAD_BEEF);
+        assert_eq!(m.load(0x1000_0000, MemSize::W), 0xDEAD_BEEF);
+        assert_eq!(m.load(0x1000_0000, MemSize::Bu), 0xEF);
+        assert_eq!(m.load(0x1000_0003, MemSize::B), 0xDEu8 as i8 as i32 as u32);
+        m.store(0x1000_0004, MemSize::H, 0xFFFF_8001);
+        assert_eq!(m.load(0x1000_0004, MemSize::H), 0xFFFF_8001);
+        assert_eq!(m.load(0x1000_0004, MemSize::Hu), 0x8001);
+    }
+
+    #[test]
+    fn flatmem_typed_helpers() {
+        let mut m = FlatMem::new(0, 64);
+        m.write_i32s(0, &[-1, 2, 3]);
+        assert_eq!(m.read_i32s(0, 3), vec![-1, 2, 3]);
+        m.write_i8s(16, &[-128, 127]);
+        assert_eq!(m.read_i8s(16, 2), vec![-128, 127]);
+        m.write_f32s(24, &[1.5, -2.5]);
+        assert_eq!(m.read_f32s(24, 2), vec![1.5, -2.5]);
+        m.write_f16s(32, &[0.5, -0.25]);
+        assert_eq!(m.read_f16s(32, 2), vec![0.5, -0.25]);
+    }
+}

@@ -1,0 +1,202 @@
+//! Software FP16 (IEEE binary16) and bfloat16 conversion/arithmetic.
+//!
+//! Vega's shared FPnew FPUs operate natively on FP32, FP16 and bfloat16
+//! (§II-C). Rust has no stable `f16`, so the packed-SIMD smallFloat lanes
+//! are evaluated by converting to f32, operating, and rounding back —
+//! which is also exactly FPnew's internal behaviour for FP16 (it computes
+//! in a wider datapath and rounds to the target format, RNE).
+
+/// binary16 -> binary32 (exact).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) & 1) as u32;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal: normalise
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        (sign << 31) | (0xFF << 23) | (frac << 13) // inf / NaN
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// binary32 -> binary16, round to nearest even.
+pub fn f32_to_f16(f: f32) -> u16 {
+    let bits = f.to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / NaN
+        let payload = if frac != 0 { 0x200 } else { 0 };
+        return (sign << 15) | (0x1F << 10) | payload;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return (sign << 15) | (0x1F << 10); // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal range
+        let mut e16 = (unbiased + 15) as u32;
+        let mut f16 = frac >> 13;
+        // RNE on the 13 dropped bits
+        let rem = frac & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (f16 & 1) == 1) {
+            f16 += 1;
+            if f16 == 0x400 {
+                f16 = 0;
+                e16 += 1;
+                if e16 >= 0x1F {
+                    return (sign << 15) | (0x1F << 10);
+                }
+            }
+        }
+        (sign << 15) | ((e16 as u16) << 10) | (f16 as u16)
+    } else if unbiased >= -24 {
+        // subnormal
+        let shift = (-14 - unbiased) as u32; // 1..=10
+        let mant = 0x80_0000 | frac; // implicit bit
+        let total_shift = 13 + shift;
+        let mut f16 = mant >> total_shift;
+        let rem_mask = (1u32 << total_shift) - 1;
+        let rem = mant & rem_mask;
+        let half = 1u32 << (total_shift - 1);
+        if rem > half || (rem == half && (f16 & 1) == 1) {
+            f16 += 1;
+        }
+        (sign << 15) | (f16 as u16)
+    } else {
+        sign << 15 // underflow -> signed zero
+    }
+}
+
+/// bfloat16 -> f32 (exact: bf16 is truncated f32).
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> bfloat16, round to nearest even.
+pub fn f32_to_bf16(f: f32) -> u16 {
+    let bits = f.to_bits();
+    if f.is_nan() {
+        return ((bits >> 16) as u16) | 0x40; // quiet
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    (rounded >> 16) as u16
+}
+
+/// Apply `op` on two packed-f16 registers, lane-wise, rounding each lane.
+pub fn f16_lanes_op(a: u32, b: u32, op: impl Fn(f32, f32) -> f32) -> u32 {
+    let lo = f32_to_f16(op(f16_to_f32(a as u16), f16_to_f32(b as u16)));
+    let hi = f32_to_f16(op(f16_to_f32((a >> 16) as u16), f16_to_f32((b >> 16) as u16)));
+    (hi as u32) << 16 | lo as u32
+}
+
+/// Lane-wise FMA into packed accumulator: acc_i = a_i*b_i + acc_i.
+pub fn f16_lanes_fma(a: u32, b: u32, acc: u32) -> u32 {
+    let lo = f32_to_f16(
+        f16_to_f32(a as u16) * f16_to_f32(b as u16) + f16_to_f32(acc as u16),
+    );
+    let hi = f32_to_f16(
+        f16_to_f32((a >> 16) as u16) * f16_to_f32((b >> 16) as u16)
+            + f16_to_f32((acc >> 16) as u16),
+    );
+    (hi as u32) << 16 | lo as u32
+}
+
+/// Multi-format dot: f32 acc += a.h0*b.h0 + a.h1*b.h1 (vfdotpex.s.h).
+pub fn f16_dotpex_s(a: u32, b: u32, acc: u32) -> u32 {
+    let s = f16_to_f32(a as u16) * f16_to_f32(b as u16)
+        + f16_to_f32((a >> 16) as u16) * f16_to_f32((b >> 16) as u16)
+        + f32::from_bits(acc);
+    s.to_bits()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 6.1035156e-5] {
+            assert_eq!(f16_to_f32(f32_to_f16(v)), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let tiny = 5.9604645e-8; // smallest positive f16 subnormal
+        assert_eq!(f16_to_f32(f32_to_f16(tiny)), tiny);
+        assert_eq!(f32_to_f16(1e-12), 0); // underflow to zero
+    }
+
+    #[test]
+    fn f16_overflow_to_inf() {
+        assert_eq!(f32_to_f16(1e6), 0x7C00);
+        assert_eq!(f32_to_f16(-1e6), 0xFC00);
+        assert!(f16_to_f32(0x7C00).is_infinite());
+    }
+
+    #[test]
+    fn f16_nan_propagates() {
+        let h = f32_to_f16(f32::NAN);
+        assert!(f16_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn f16_rne_ties() {
+        // 2049 lies exactly between representable 2048 and 2050 -> even (2048)
+        assert_eq!(f16_to_f32(f32_to_f16(2049.0)), 2048.0);
+        // 2051 between 2050 and 2052 -> even (2052)
+        assert_eq!(f16_to_f32(f32_to_f16(2051.0)), 2052.0);
+    }
+
+    #[test]
+    fn bf16_roundtrip() {
+        for v in [0.0f32, 1.0, -2.5, 3.0e38, 1.0e-38] {
+            let b = f32_to_bf16(v);
+            let back = bf16_to_f32(b);
+            let rel = if v == 0.0 { back.abs() } else { ((back - v) / v).abs() };
+            assert!(rel < 0.01, "{v} -> {back}");
+        }
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn lane_ops() {
+        let a = (f32_to_f16(2.0) as u32) << 16 | f32_to_f16(1.0) as u32;
+        let b = (f32_to_f16(3.0) as u32) << 16 | f32_to_f16(4.0) as u32;
+        let s = f16_lanes_op(a, b, |x, y| x + y);
+        assert_eq!(f16_to_f32(s as u16), 5.0);
+        assert_eq!(f16_to_f32((s >> 16) as u16), 5.0);
+        // dotpex: 1*4 + 2*3 + 0.5 = 10.5
+        let acc = 0.5f32.to_bits();
+        assert_eq!(f32::from_bits(f16_dotpex_s(a, b, acc)), 10.5);
+    }
+
+    #[test]
+    fn exhaustive_f16_f32_f16_identity() {
+        // every finite f16 must round-trip bit-exactly through f32
+        for h in 0u16..=0xFFFF {
+            let exp = (h >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/NaN
+            }
+            assert_eq!(f32_to_f16(f16_to_f32(h)), h, "h={h:#x}");
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! FP CONV (Table V row 2): single-channel 3×3 convolution, FP32 scalar
+//! and FP16 packed-SIMD variants.
+//!
+//! FP32 keeps the nine taps resident in registers and software-pipelines
+//! the window loads against the FMAs (no load-use stalls). FP16 computes
+//! two adjacent outputs from aligned packed pairs using shifted tap packs
+//! and `vfdotpex.s.h` — the "data packing and shuffling of vector
+//! elements" optimisation of §IV-A. SPMD over output rows.
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, A0, A1, A2, A3, A4, A5, A6, A7, GP, RA, S0, S1, S10, S11,
+    S3, S4, S5, S6, S7, S8, S9, SP, T0, T1, T2, T3, T4, T5, T6, TP};
+use crate::iss::softfloat::f32_to_f16;
+use crate::iss::FlatMem;
+
+use super::{check_program, require, KernelRun, TcdmAlloc};
+use super::fp_matmul::FpWidth;
+
+/// In-TCDM row stride for the padded input, in bytes (+pad word).
+fn in_stride(w_padded: usize, esz: usize) -> i32 {
+    (w_padded * esz + 4) as i32
+}
+
+/// Build the 3×3 FP conv for an `(h, w)` output on an `(h+2, w+2)` input.
+pub fn build(h: usize, w: usize, fw: FpWidth) -> Program {
+    match fw {
+        FpWidth::F32 => build_f32(h, w),
+        FpWidth::F16x2 => build_f16(h, w),
+    }
+}
+
+/// Register plan (f32): taps k0..k8 = S8,S9,S10,S11,RA,SP,GP,TP,S1;
+/// row ptrs S5,S6,S7; out ptr S4; acc T5; window temps T0..T2.
+/// Params: a0=core_id a1=n_cores a2=&in a3=&out a5=H a6=W.
+fn build_f32(_h: usize, w: usize) -> Program {
+    let name = "fp_conv_f32";
+    let istride = in_stride(w + 2, 4);
+    let taps = [S8, S9, S10, S11, RA, SP, GP, TP, S1];
+
+    let mut a = Asm::new(name);
+    let done = a.label();
+    let row_loop = a.label();
+    let end_c = a.label();
+
+    // Load the 9 taps from &taps (a4) once.
+    for (i, &t) in taps.iter().enumerate() {
+        a.lw(t, A4, (i * 4) as i32);
+    }
+    // S0 = row step per core = n_cores (rows), S3 = row = core_id.
+    a.mv(S0, A1);
+    a.mv(S3, A0);
+
+    a.bind(row_loop);
+    a.bge(S3, A5, done);
+    // Row pointers: in + row*istride (+1,+2 rows); out + row*W*4.
+    a.li(T6, istride);
+    a.mul(S5, S3, T6);
+    a.add(S5, S5, A2);
+    a.addi(S6, S5, istride);
+    a.addi(S7, S6, istride);
+    a.slli(S4, S3, 2);
+    a.mul(S4, S4, A6);
+    a.add(S4, S4, A3);
+
+    a.lp_setup(0, A6, end_c); // W output columns
+    // Row 0 of the window: start the accumulator with a multiply.
+    a.lw_pi(T0, S5, 4);
+    a.lw(T1, S5, 0);
+    a.fmul_s(T5, T0, taps[0]);
+    a.lw(T2, S5, 4);
+    a.fmac_s(T5, T1, taps[1]);
+    // Row 1.
+    a.lw_pi(T0, S6, 4);
+    a.fmac_s(T5, T2, taps[2]);
+    a.lw(T1, S6, 0);
+    a.fmac_s(T5, T0, taps[3]);
+    a.lw(T2, S6, 4);
+    a.fmac_s(T5, T1, taps[4]);
+    // Row 2.
+    a.lw_pi(T0, S7, 4);
+    a.fmac_s(T5, T2, taps[5]);
+    a.lw(T1, S7, 0);
+    a.fmac_s(T5, T0, taps[6]);
+    a.lw(T2, S7, 4);
+    a.fmac_s(T5, T1, taps[7]);
+    a.fmac_s(T5, T2, taps[8]);
+    a.sw_pi(T5, S4, 4);
+    a.bind(end_c);
+
+    a.add(S3, S3, S0);
+    a.j(row_loop);
+    a.bind(done);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// f16 variant: two outputs per iteration from aligned pairs.
+///
+/// For even output c (pairs P0=(x_c,x_{c+1}), P1=(x_{c+2},x_{c+3})):
+///   out_even += P0·(k0,k1) + P1·(k2,0)
+///   out_odd  += P0·(0,k0)  + P1·(k1,k2)
+/// per row — 12 packed tap registers, 4 dotpex per row.
+fn build_f16(_h: usize, w: usize) -> Program {
+    let name = "fp_conv_f16";
+    require(w % 2 == 0, name, "W % 2 == 0 (pairs)");
+    let istride = in_stride(w + 2, 2);
+    // Packed taps per row r: [ (k0,k1), (k2,0), (0,k0), (k1,k2) ].
+    let taps: [[crate::isa::Reg; 4]; 3] = [
+        [S8, S9, S10, S11],
+        [RA, SP, GP, TP],
+        [S1, T6, A0, A1],
+    ];
+
+    let mut a = Asm::new(name);
+    let done2 = a.label();
+    let row_loop2 = a.label();
+    let end_c2 = a.label();
+    // A0/A1 are consumed as tap registers: bank core_id/n_cores first.
+    a.mv(S0, A1); // step (rows)
+    a.mv(S3, A0); // row = core_id
+    for (r, row) in taps.iter().enumerate() {
+        for (i, &t) in row.iter().enumerate() {
+            a.lw(t, A4, ((r * 4 + i) * 4) as i32);
+        }
+    }
+
+    a.bind(row_loop2);
+    a.bge(S3, A5, done2);
+    a.li(T5, istride);
+    a.mul(S5, S3, T5);
+    a.add(S5, S5, A2);
+    a.addi(S6, S5, istride);
+    a.addi(S7, S6, istride);
+    a.slli(S4, S3, 1); // out f16: row*W*2 bytes
+    a.mul(S4, S4, A6);
+    a.add(S4, S4, A3);
+
+    a.srli(T5, A6, 1);
+    a.lp_setup(0, T5, end_c2); // W/2 iterations
+    // acc_even = T3 (f32), acc_odd = T4 (f32); +0.0 has all-zero bits, so
+    // `li 0` initialises the dotpex accumulators.
+    a.lw_pi(T0, S5, 4); // P0 row0 (advance one pair)
+    a.lw(T1, S5, 0); // P1 row0
+    a.li(T3, 0);
+    a.li(T4, 0);
+    a.vfdotpex_s_h(T3, T0, taps[0][0]);
+    a.vfdotpex_s_h(T3, T1, taps[0][1]);
+    a.vfdotpex_s_h(T4, T0, taps[0][2]);
+    a.vfdotpex_s_h(T4, T1, taps[0][3]);
+    a.lw_pi(T0, S6, 4);
+    a.lw(T1, S6, 0);
+    a.vfdotpex_s_h(T3, T0, taps[1][0]);
+    a.vfdotpex_s_h(T3, T1, taps[1][1]);
+    a.vfdotpex_s_h(T4, T0, taps[1][2]);
+    a.vfdotpex_s_h(T4, T1, taps[1][3]);
+    a.lw_pi(T0, S7, 4);
+    a.lw(T1, S7, 0);
+    a.vfdotpex_s_h(T3, T0, taps[2][0]);
+    a.vfdotpex_s_h(T3, T1, taps[2][1]);
+    a.vfdotpex_s_h(T4, T0, taps[2][2]);
+    a.vfdotpex_s_h(T4, T1, taps[2][3]);
+    // Pack the two f32 results to f16 pair and store.
+    a.vfcpka_h_s(T3, T3, T4);
+    a.sw_pi(T3, S4, 4);
+    a.bind(end_c2);
+
+    a.add(S3, S3, S0);
+    a.j(row_loop2);
+    a.bind(done2);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// Host reference: valid 3×3 conv, f32.
+pub fn host_ref(x: &[f32], k: &[f32], h: usize, w: usize) -> Vec<f32> {
+    let wp = w + 2;
+    let mut out = vec![0f32; h * w];
+    for r in 0..h {
+        for c in 0..w {
+            let mut acc = 0f32;
+            for dy in 0..3 {
+                for dx in 0..3 {
+                    acc += x[(r + dy) * wp + c + dx] * k[dy * 3 + dx];
+                }
+            }
+            out[r * w + c] = acc;
+        }
+    }
+    out
+}
+
+/// Run the conv; input `x` is `(h+2, w+2)` pre-padded, `k` is 9 taps.
+pub fn run(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    x: &[f32],
+    k: &[f32],
+    h: usize,
+    w: usize,
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<f32>, KernelRun) {
+    assert_eq!(x.len(), (h + 2) * (w + 2));
+    assert_eq!(k.len(), 9);
+    let prog = build(h, w, fw);
+    let esz = match fw {
+        FpWidth::F32 => 4,
+        FpWidth::F16x2 => 2,
+    };
+    let istride = in_stride(w + 2, esz) as usize;
+    let mut alloc = TcdmAlloc::new();
+    let in_base = alloc.alloc((h + 2) * istride);
+    let out_base = alloc.alloc(h * w * 4);
+    let tap_base = alloc.alloc(16 * 4);
+
+    for r in 0..h + 2 {
+        let row = &x[r * (w + 2)..(r + 1) * (w + 2)];
+        let addr = in_base + (r * istride) as u32;
+        match fw {
+            FpWidth::F32 => cluster.tcdm.mem.write_f32s(addr, row),
+            FpWidth::F16x2 => cluster.tcdm.mem.write_f16s(addr, row),
+        }
+    }
+    match fw {
+        FpWidth::F32 => cluster.tcdm.mem.write_f32s(tap_base, k),
+        FpWidth::F16x2 => {
+            // Pack the shifted tap pairs per row (see build_f16 docs).
+            let pack = |a: f32, b: f32| -> i32 {
+                ((f32_to_f16(b) as u32) << 16 | f32_to_f16(a) as u32) as i32
+            };
+            let mut words = Vec::new();
+            for r in 0..3 {
+                let (k0, k1, k2) = (k[r * 3], k[r * 3 + 1], k[r * 3 + 2]);
+                words.push(pack(k0, k1));
+                words.push(pack(k2, 0.0));
+                words.push(pack(0.0, k0));
+                words.push(pack(k1, k2));
+            }
+            cluster.tcdm.mem.write_i32s(tap_base, &words);
+        }
+    }
+
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            vec![
+                (A0, id as u32),
+                (A1, n_cores as u32),
+                (A2, in_base),
+                (A3, out_base),
+                (A4, tap_base),
+                (A5, h as u32),
+                (A6, w as u32),
+                (A7, 0),
+            ]
+        },
+        500_000_000,
+    );
+    let out = match fw {
+        FpWidth::F32 => cluster.tcdm.mem.read_f32s(out_base, h * w),
+        FpWidth::F16x2 => cluster.tcdm.mem.read_f16s(out_base, h * w),
+    };
+    let flops = 2 * 9 * (h * w) as u64;
+    (out, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn check(h: usize, w: usize, fw: FpWidth, cores: usize, tol: f32) -> KernelRun {
+        let mut rng = Rng::new(17);
+        let x: Vec<f32> = (0..(h + 2) * (w + 2)).map(|_| rng.f32_pm1()).collect();
+        let k: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        let (out, kr) = run(&mut cl, &mut l2, &x, &k, h, w, fw, cores);
+        let want = host_ref(&x, &k, h, w);
+        for (i, (&g, &r)) in out.iter().zip(&want).enumerate() {
+            assert!((g - r).abs() <= tol * r.abs().max(1.0), "{fw:?} {i}: {g} vs {r}");
+        }
+        kr
+    }
+
+    #[test]
+    fn f32_matches_host() {
+        check(4, 6, FpWidth::F32, 1, 1e-5);
+        check(8, 16, FpWidth::F32, 8, 1e-5);
+        check(5, 10, FpWidth::F32, 3, 1e-5);
+    }
+
+    #[test]
+    fn f16_matches_host_to_half_precision() {
+        check(8, 16, FpWidth::F16x2, 8, 4e-2);
+        check(4, 8, FpWidth::F16x2, 2, 4e-2);
+    }
+
+    #[test]
+    fn f16_is_faster_than_f32() {
+        let f32r = check(16, 32, FpWidth::F32, 8, 1e-4);
+        let f16r = check(16, 32, FpWidth::F16x2, 8, 5e-2);
+        let speedup = f32r.stats.cycles as f64 / f16r.stats.cycles as f64;
+        assert!(speedup > 1.2, "speedup = {speedup}");
+    }
+
+    #[test]
+    fn fp_intensity_near_table5() {
+        // Table V: CONV 55%.
+        let kr = check(16, 32, FpWidth::F32, 8, 1e-4);
+        let fi = kr.fp_intensity();
+        assert!((0.40..0.62).contains(&fi), "intensity = {fi}");
+    }
+}

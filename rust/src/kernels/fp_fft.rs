@@ -1,0 +1,350 @@
+//! FP FFT (Table V row 4): iterative radix-2 DIT complex FFT.
+//!
+//! The stage structure is unrolled at build time (N is a compile-time
+//! parameter of the program builder), so no divisions appear on the hot
+//! path. Early stages parallelise across butterfly *groups*; once groups
+//! run out (late stages), cores split the butterflies *within* each group
+//! with stride `n_cores` — the event-unit barrier separates stages.
+//!
+//! Input arrives bit-reversed (the driver permutes; on silicon this is
+//! the standard int-only reorder pass). FP32 stores complex as two f32
+//! words; FP16 packs one complex value per 32-bit word (re,im) and runs
+//! the twiddle rotation as two `vfdotpex` against the pre-packed
+//! `(wr,−wi)` / `(wi,wr)` twiddle table — cast-and-pack re-packs the
+//! results (§IV-A's "intrinsics for data packing").
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, A0, A1, A2, A3, S0, S3, S5, S6, S7, S8, S9, T0, T1, T2, T3,
+    T4, T5, T6};
+use crate::iss::softfloat::f32_to_f16;
+use crate::iss::FlatMem;
+
+use super::fp_matmul::FpWidth;
+use super::{check_program, require, KernelRun, TcdmAlloc};
+
+/// Build the FFT program for size `n` (power of two) on `n_cores`
+/// (power of two) cores. Params: a0=core_id a1=n_cores a2=&x a3=&twiddles.
+pub fn build(n: usize, n_cores: usize, fw: FpWidth) -> Program {
+    let name = match fw {
+        FpWidth::F32 => "fp_fft_f32",
+        FpWidth::F16x2 => "fp_fft_f16",
+    };
+    require(n.is_power_of_two() && n >= 4, name, "N power of two >= 4");
+    require(n_cores.is_power_of_two(), name, "n_cores power of two");
+    let csz: i32 = match fw {
+        FpWidth::F32 => 8, // complex = 2 × f32
+        FpWidth::F16x2 => 4, // complex = packed (re,im) f16
+    };
+    // Twiddle record: f32 = (wr, wi) 8 B; f16 = (w1, w2) packed pair 8 B.
+    let tsz: i32 = 8;
+
+    let mut a = Asm::new(name);
+    a.mv(S0, A1); // n_cores
+
+    let stages = n.trailing_zeros() as usize;
+    for s in 0..stages {
+        let h = 1usize << s; // half-size
+        let n_groups = n / (2 * h);
+        let step = n / (2 * h); // twiddle index stride
+
+        if n_groups >= n_cores {
+            // Group-parallel: my groups are core_id, core_id+P, ...
+            let next_group = a.label();
+            let stage_done = a.label();
+            let end_bf = a.label();
+            a.mv(S3, A0); // group = core_id
+            a.bind(next_group);
+            a.li(T6, n_groups as i32);
+            a.bge(S3, T6, stage_done);
+            // pa = x + group*2h*csz ; pb = pa + h*csz ; tw = twbase.
+            a.li(T6, 2 * h as i32 * csz);
+            a.mul(S5, S3, T6);
+            a.add(S5, S5, A2);
+            a.addi(S6, S5, h as i32 * csz);
+            a.mv(S7, A3);
+            a.lp_setup_imm(0, h as u32, end_bf);
+            emit_butterfly(&mut a, fw, csz, step as i32 * tsz);
+            a.bind(end_bf);
+            a.add(S3, S3, S0);
+            a.j(next_group);
+            a.bind(stage_done);
+        } else {
+            // Butterfly-parallel inside each group: k = core_id,
+            // core_id+P, ... When h < n_cores (small N on many cores)
+            // only cores with id < h participate, one butterfly each.
+            let kiter = (h / n_cores).max(1) as u32;
+            for g in 0..n_groups {
+                let end_bf = a.label();
+                let skip = a.label();
+                if h < n_cores {
+                    a.li(T6, h as i32);
+                    a.bge(A0, T6, skip);
+                }
+                let base = (g * 2 * h) as i32 * csz;
+                // pa = x + base + core_id*csz.
+                a.li(T6, csz);
+                a.mul(S5, A0, T6);
+                a.add(S5, S5, A2);
+                a.addi(S5, S5, base);
+                a.addi(S6, S5, h as i32 * csz);
+                // tw = twbase + core_id*step*tsz.
+                a.li(T6, step as i32 * tsz);
+                a.mul(S7, A0, T6);
+                a.add(S7, S7, A3);
+                a.lp_setup_imm(0, kiter, end_bf);
+                emit_butterfly_strided(
+                    &mut a,
+                    fw,
+                    csz * n_cores as i32,
+                    step as i32 * tsz * n_cores as i32,
+                );
+                a.bind(end_bf);
+                a.bind(skip);
+            }
+        }
+        a.barrier();
+    }
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// One butterfly with unit stride (post-inc by element size).
+fn emit_butterfly(a: &mut Asm, fw: FpWidth, csz: i32, twstride: i32) {
+    emit_butterfly_strided(a, fw, csz, twstride)
+}
+
+/// Butterfly with configurable pointer strides.
+fn emit_butterfly_strided(a: &mut Asm, fw: FpWidth, cstride: i32, twstride: i32) {
+    match fw {
+        FpWidth::F32 => {
+            a.lw(T0, S5, 0); // ar
+            a.lw(T1, S5, 4); // ai
+            a.lw(T2, S6, 0); // br
+            a.lw(T3, S6, 4); // bi
+            a.lw_pi(T4, S7, twstride); // wr (advance twiddle ptr)
+            a.lw(T5, S7, 4 - twstride); // wi
+            // t = w·b (complex).
+            a.fmul_s(S8, T4, T2);
+            a.fmsu_s(S8, T5, T3); // tr = wr·br − wi·bi
+            a.fmul_s(S9, T4, T3);
+            a.fmac_s(S9, T5, T2); // ti = wr·bi + wi·br
+            // a' = a + t ; b' = a − t.
+            a.fadd_s(T4, T0, S8);
+            a.sw(T4, S5, 0); // a'r
+            a.fsub_s(T5, T0, S8);
+            a.sw(T5, S6, 0); // b'r
+            a.fadd_s(T4, T1, S9);
+            a.sw(T4, S5, 4); // a'i
+            a.fsub_s(T5, T1, S9);
+            a.sw(T5, S6, 4); // b'i
+            a.addi(S5, S5, cstride);
+            a.addi(S6, S6, cstride);
+        }
+        FpWidth::F16x2 => {
+            a.lw(T0, S5, 0); // a packed
+            a.lw(T1, S6, 0); // b packed
+            a.lw_pi(T2, S7, twstride); // w1 = (wr, −wi)
+            a.lw(T3, S7, 4 - twstride); // w2 = (wi, wr)
+            a.li(S8, 0);
+            a.li(S9, 0);
+            a.vfdotpex_s_h(S8, T2, T1); // tr = wr·br − wi·bi (f32)
+            a.vfdotpex_s_h(S9, T3, T1); // ti = wi·br + wr·bi (f32)
+            a.vfcpka_h_s(T4, S8, S9); // t packed
+            a.vfadd_h(T5, T0, T4);
+            a.vfsub_h(T6, T0, T4);
+            a.sw_pi(T5, S5, cstride);
+            a.sw_pi(T6, S6, cstride);
+        }
+    }
+}
+
+/// Host reference FFT (f64 precision, same radix-2 DIT schedule).
+pub fn host_ref(x: &[(f32, f32)]) -> Vec<(f32, f32)> {
+    let n = x.len();
+    let mut re: Vec<f64> = x.iter().map(|&(r, _)| r as f64).collect();
+    let mut im: Vec<f64> = x.iter().map(|&(_, i)| i as f64).collect();
+    // Bit-reverse.
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if j > i {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut h = 1;
+    while h < n {
+        let step = n / (2 * h);
+        for g in 0..(n / (2 * h)) {
+            for k in 0..h {
+                let (wr, wi) = {
+                    let ang = -2.0 * std::f64::consts::PI * (k * step) as f64 / n as f64;
+                    (ang.cos(), ang.sin())
+                };
+                let ia = g * 2 * h + k;
+                let ib = ia + h;
+                let tr = wr * re[ib] - wi * im[ib];
+                let ti = wr * im[ib] + wi * re[ib];
+                let (ar, ai) = (re[ia], im[ia]);
+                re[ia] = ar + tr;
+                im[ia] = ai + ti;
+                re[ib] = ar - tr;
+                im[ib] = ai - ti;
+            }
+        }
+        h *= 2;
+    }
+    re.into_iter().zip(im).map(|(r, i)| (r as f32, i as f32)).collect()
+}
+
+/// Run the FFT; input in natural order (driver bit-reverses), output in
+/// frequency order.
+pub fn run(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    x: &[(f32, f32)],
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<(f32, f32)>, KernelRun) {
+    let n = x.len();
+    let prog = build(n, n_cores, fw);
+    let csz = if fw == FpWidth::F32 { 8 } else { 4 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(n * csz + 16);
+    let tw_base = alloc.alloc(n / 2 * 8 + 16);
+
+    // Bit-reversed input.
+    let bits = n.trailing_zeros();
+    let mut xr = vec![(0f32, 0f32); n];
+    for i in 0..n {
+        let j = ((i as u32).reverse_bits() >> (32 - bits)) as usize;
+        xr[j] = x[i];
+    }
+    match fw {
+        FpWidth::F32 => {
+            let flat: Vec<f32> = xr.iter().flat_map(|&(r, i)| [r, i]).collect();
+            cluster.tcdm.mem.write_f32s(x_base, &flat);
+            let tw: Vec<f32> = (0..n / 2)
+                .flat_map(|j| {
+                    let ang = -2.0 * std::f32::consts::PI * j as f32 / n as f32;
+                    [ang.cos(), ang.sin()]
+                })
+                .collect();
+            cluster.tcdm.mem.write_f32s(tw_base, &tw);
+        }
+        FpWidth::F16x2 => {
+            let flat: Vec<f32> = xr.iter().flat_map(|&(r, i)| [r, i]).collect();
+            cluster.tcdm.mem.write_f16s(x_base, &flat);
+            let pack = |a: f32, b: f32| -> i32 {
+                ((f32_to_f16(b) as u32) << 16 | f32_to_f16(a) as u32) as i32
+            };
+            let tw: Vec<i32> = (0..n / 2)
+                .flat_map(|j| {
+                    let ang = -2.0 * std::f32::consts::PI * j as f32 / n as f32;
+                    let (wr, wi) = (ang.cos(), ang.sin());
+                    [pack(wr, -wi), pack(wi, wr)]
+                })
+                .collect();
+            cluster.tcdm.mem.write_i32s(tw_base, &tw);
+        }
+    }
+
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            vec![(A0, id as u32), (A1, n_cores as u32), (A2, x_base), (A3, tw_base)]
+        },
+        500_000_000,
+    );
+    let out = match fw {
+        FpWidth::F32 => {
+            let flat = cluster.tcdm.mem.read_f32s(x_base, 2 * n);
+            flat.chunks(2).map(|c| (c[0], c[1])).collect()
+        }
+        FpWidth::F16x2 => {
+            let flat = cluster.tcdm.mem.read_f16s(x_base, 2 * n);
+            flat.chunks(2).map(|c| (c[0], c[1])).collect()
+        }
+    };
+    // 10 real FLOPs per butterfly, N/2·log2(N) butterflies.
+    let flops = 10 * (n as u64 / 2) * n.trailing_zeros() as u64;
+    (out, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn signal(n: usize, seed: u64) -> Vec<(f32, f32)> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect()
+    }
+
+    fn l2m() -> FlatMem {
+        FlatMem::new(L2_BASE, 4096)
+    }
+
+    fn check(n: usize, cores: usize, fw: FpWidth, tol: f32) -> KernelRun {
+        let x = signal(n, 50 + n as u64);
+        let mut cl = Cluster::new();
+        let (got, kr) = run(&mut cl, &mut l2m(), &x, fw, cores);
+        let want = host_ref(&x);
+        let scale = (n as f32).sqrt();
+        for (i, (&(gr, gi), &(wr, wi))) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (gr - wr).abs() < tol * scale && (gi - wi).abs() < tol * scale,
+                "{fw:?} N={n} c{cores} bin {i}: ({gr},{gi}) vs ({wr},{wi})"
+            );
+        }
+        kr
+    }
+
+    #[test]
+    fn f32_matches_host_across_sizes_and_cores() {
+        check(8, 1, FpWidth::F32, 1e-4);
+        check(64, 4, FpWidth::F32, 1e-4);
+        check(128, 8, FpWidth::F32, 1e-4);
+    }
+
+    #[test]
+    fn f16_matches_host_to_half_precision() {
+        check(64, 8, FpWidth::F16x2, 4e-2);
+    }
+
+    #[test]
+    fn impulse_gives_flat_spectrum() {
+        let mut x = vec![(0f32, 0f32); 32];
+        x[0] = (1.0, 0.0);
+        let mut cl = Cluster::new();
+        let (got, _) = run(&mut cl, &mut l2m(), &x, FpWidth::F32, 8);
+        for (i, &(r, im)) in got.iter().enumerate() {
+            assert!((r - 1.0).abs() < 1e-4 && im.abs() < 1e-4, "bin {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_fft_speeds_up() {
+        let x = signal(256, 60);
+        let mut cl = Cluster::new();
+        let (_, k1) = run(&mut cl, &mut l2m(), &x, FpWidth::F32, 1);
+        let mut cl = Cluster::new();
+        let (_, k8) = run(&mut cl, &mut l2m(), &x, FpWidth::F32, 8);
+        let s = k1.stats.cycles as f64 / k8.stats.cycles as f64;
+        assert!(s > 3.0, "speedup = {s}");
+    }
+
+    #[test]
+    fn fp_intensity_reasonable() {
+        // Table V: FFT 63%.
+        let kr = check(128, 8, FpWidth::F32, 1e-4);
+        let fi = kr.fp_intensity();
+        assert!((0.30..0.70).contains(&fi), "intensity = {fi}");
+    }
+}

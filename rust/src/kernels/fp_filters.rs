@@ -1,0 +1,648 @@
+//! FP FIR, IIR and DWT kernels (Table V rows 3, 5, 6).
+//!
+//! * **FIR**: 8 taps resident in registers, 4-output unrolling so each
+//!   loaded sample feeds up to four accumulators (the register-reuse that
+//!   gives FIR its high FP intensity in Table V). FP16 variant: packed
+//!   sample pairs with shifted packed-tap `vfdotpex`.
+//! * **IIR**: cascade of two direct-form-II-transposed biquads, states
+//!   and coefficients in registers, one sample per trip. SPMD over
+//!   independent channels.
+//! * **DWT**: Haar analysis (scaled lifting), multi-level; SPMD over
+//!   segments at each level.
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, Reg, A2, A3, A4, A5, A6, A7, GP, RA, S1, S10, S11,
+    S2, S4, S5, S6, S7, S8, S9, SP, T0, T1, T2, T3, T4, T5, T6, TP};
+use crate::iss::softfloat::f32_to_f16;
+use crate::iss::FlatMem;
+
+use super::fp_matmul::FpWidth;
+use super::{check_program, require, KernelRun, TcdmAlloc};
+
+pub const FIR_TAPS: usize = 8;
+
+// ------------------------------------------------------------------ FIR
+
+/// FP32 FIR: y[j] = Σ_i x[j+i]·t_i, 4 outputs per iteration.
+/// Params: a2=&x a3=&y a4=&taps a5=n_outputs (per core chunk handled by
+/// driver-set pointers; SPMD over contiguous chunks).
+fn build_fir_f32() -> Program {
+    let name = "fp_fir_f32";
+    let taps: [Reg; FIR_TAPS] = [S8, S9, S10, S11, RA, SP, GP, TP];
+    let accs = [S4, S5, S6, S7];
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (i, &t) in taps.iter().enumerate() {
+        a.lw(t, A4, (i * 4) as i32);
+    }
+    a.srli(T6, A5, 2); // n/4 iterations
+    a.lp_setup(0, T6, end);
+    for &acc in &accs {
+        a.li(acc, 0);
+    }
+    // 11 loads cover x[j .. j+10]; sample x[j+i] feeds acc_k with tap
+    // t_{i-k} when 0 <= i-k < 8. Rotate through T0..T2 as load targets,
+    // scheduling each load ≥2 before first use.
+    let xreg = |i: usize| [T0, T1, T2][i % 3];
+    for i in 0..(4 + FIR_TAPS - 1) {
+        if i < 4 {
+            a.lw_pi(xreg(i), A2, 4); // advance the stream by one sample
+        } else {
+            a.lw(xreg(i), A2, ((i - 4) * 4) as i32);
+        }
+        // Consume sample i-1 (loaded last iteration) to hide load-use.
+        if i >= 1 {
+            let s = i - 1;
+            for (k, &acc) in accs.iter().enumerate() {
+                if s >= k && s - k < FIR_TAPS {
+                    a.fmac_s(acc, xreg(s), taps[s - k]);
+                }
+            }
+        }
+    }
+    // Last sample.
+    let s = 4 + FIR_TAPS - 2;
+    for (k, &acc) in accs.iter().enumerate() {
+        if s >= k && s - k < FIR_TAPS {
+            a.fmac_s(acc, xreg(s), taps[s - k]);
+        }
+    }
+    for &acc in &accs {
+        a.sw_pi(acc, A3, 4);
+    }
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// FP16 FIR: even/odd output pair per iteration from 5 packed loads and
+/// 9 `vfdotpex` with shifted tap packs:
+///   even: P0·(t0,t1) P1·(t2,t3) P2·(t4,t5) P3·(t6,t7)
+///   odd:  P0·(0,t0)  P1·(t1,t2) P2·(t3,t4) P3·(t5,t6) P4·(t7,0)
+fn build_fir_f16() -> Program {
+    let name = "fp_fir_f16";
+    let even_t: [Reg; 4] = [S8, S9, S10, S11];
+    let odd_t: [Reg; 5] = [RA, SP, GP, TP, S1];
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (i, &t) in even_t.iter().enumerate() {
+        a.lw(t, A4, (i * 4) as i32);
+    }
+    for (i, &t) in odd_t.iter().enumerate() {
+        a.lw(t, A4, ((4 + i) * 4) as i32);
+    }
+    a.srli(T6, A5, 1); // n/2 iterations
+    a.lp_setup(0, T6, end);
+    a.li(S4, 0); // even acc (f32)
+    a.li(S5, 0); // odd acc
+    a.lw_pi(T0, A2, 4); // P0, advance one pair
+    a.lw(T1, A2, 0); // P1
+    a.lw(T2, A2, 4); // P2
+    a.lw(T3, A2, 8); // P3
+    a.lw(T4, A2, 12); // P4
+    a.vfdotpex_s_h(S4, T0, even_t[0]);
+    a.vfdotpex_s_h(S5, T0, odd_t[0]);
+    a.vfdotpex_s_h(S4, T1, even_t[1]);
+    a.vfdotpex_s_h(S5, T1, odd_t[1]);
+    a.vfdotpex_s_h(S4, T2, even_t[2]);
+    a.vfdotpex_s_h(S5, T2, odd_t[2]);
+    a.vfdotpex_s_h(S4, T3, even_t[3]);
+    a.vfdotpex_s_h(S5, T3, odd_t[3]);
+    a.vfdotpex_s_h(S5, T4, odd_t[4]);
+    a.vfcpka_h_s(S4, S4, S5);
+    a.sw_pi(S4, A3, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+pub fn fir_host_ref(x: &[f32], taps: &[f32], n_out: usize) -> Vec<f32> {
+    (0..n_out)
+        .map(|j| (0..FIR_TAPS).map(|i| x[j + i] * taps[i]).sum())
+        .collect()
+}
+
+/// Run the FIR over `n_out` outputs, SPMD chunks of `n_out / n_cores`.
+pub fn run_fir(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    x: &[f32],
+    taps: &[f32],
+    n_out: usize,
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<f32>, KernelRun) {
+    assert_eq!(taps.len(), FIR_TAPS);
+    assert!(x.len() >= n_out + FIR_TAPS - 1 + 3);
+    let chunk = n_out / n_cores;
+    require(chunk % 4 == 0, "fir", "chunk % 4 == 0");
+    let prog = match fw {
+        FpWidth::F32 => build_fir_f32(),
+        FpWidth::F16x2 => build_fir_f16(),
+    };
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(x.len() * esz + 16);
+    let y_base = alloc.alloc(n_out * esz + 16);
+    let tap_base = alloc.alloc(16 * 4);
+    match fw {
+        FpWidth::F32 => {
+            cluster.tcdm.mem.write_f32s(x_base, x);
+            cluster.tcdm.mem.write_f32s(tap_base, taps);
+        }
+        FpWidth::F16x2 => {
+            cluster.tcdm.mem.write_f16s(x_base, x);
+            let pack = |a: f32, b: f32| -> i32 {
+                ((f32_to_f16(b) as u32) << 16 | f32_to_f16(a) as u32) as i32
+            };
+            let t = taps;
+            let words = vec![
+                pack(t[0], t[1]),
+                pack(t[2], t[3]),
+                pack(t[4], t[5]),
+                pack(t[6], t[7]),
+                pack(0.0, t[0]),
+                pack(t[1], t[2]),
+                pack(t[3], t[4]),
+                pack(t[5], t[6]),
+                pack(t[7], 0.0),
+            ];
+            cluster.tcdm.mem.write_i32s(tap_base, &words);
+        }
+    }
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            let off = (id * chunk * esz) as u32;
+            vec![
+                (A2, x_base + off),
+                (A3, y_base + off),
+                (A4, tap_base),
+                (A5, chunk as u32),
+            ]
+        },
+        500_000_000,
+    );
+    let y = match fw {
+        FpWidth::F32 => cluster.tcdm.mem.read_f32s(y_base, n_out),
+        FpWidth::F16x2 => cluster.tcdm.mem.read_f16s(y_base, n_out),
+    };
+    let flops = 2 * (FIR_TAPS * n_out) as u64;
+    (y, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+// ------------------------------------------------------------------ IIR
+
+/// Biquad coefficients (direct form II transposed):
+/// y = b0·x + d1 ; d1' = b1·x − a1·y + d2 ; d2' = b2·x − a2·y.
+#[derive(Debug, Clone, Copy)]
+pub struct Biquad {
+    pub b0: f32,
+    pub b1: f32,
+    pub b2: f32,
+    pub a1: f32,
+    pub a2: f32,
+}
+
+impl Biquad {
+    /// A gentle low-pass used by tests/benches (stable, unity-ish gain).
+    pub fn lowpass() -> Self {
+        Biquad { b0: 0.2, b1: 0.4, b2: 0.2, a1: -0.3, a2: 0.1 }
+    }
+}
+
+/// FP32 IIR: 2-stage cascade, one sample per trip.
+/// a2=&x a3=&y a4=&coeffs(10 f32) a5=n.
+fn build_iir_f32() -> Program {
+    let name = "fp_iir_f32";
+    // Stage coeffs: (b0,b1,b2,a1,a2) ×2 → 10 registers.
+    let c: [Reg; 10] = [S8, S9, S10, S11, RA, SP, GP, TP, S1, S2];
+    let (d11, d12, d21, d22) = (S4, S5, S6, S7); // states
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (i, &r) in c.iter().enumerate() {
+        a.lw(r, A4, (i * 4) as i32);
+    }
+    for r in [d11, d12, d21, d22] {
+        a.li(r, 0);
+    }
+    a.lp_setup(0, A5, end);
+    a.lw_pi(T0, A2, 4); // x
+    // Stage 1: y1 = b0·x + d1.
+    a.mv(T1, d11);
+    a.fmac_s(T1, c[0], T0);
+    // d1 = d2 + b1·x − a1·y1.
+    a.mv(d11, d12);
+    a.fmac_s(d11, c[1], T0);
+    a.fmsu_s(d11, c[3], T1);
+    // d2 = b2·x − a2·y1.
+    a.fmul_s(d12, c[2], T0);
+    a.fmsu_s(d12, c[4], T1);
+    // Stage 2 on y1.
+    a.mv(T2, d21);
+    a.fmac_s(T2, c[5], T1);
+    a.mv(d21, d22);
+    a.fmac_s(d21, c[6], T1);
+    a.fmsu_s(d21, c[8], T2);
+    a.fmul_s(d22, c[7], T1);
+    a.fmsu_s(d22, c[9], T2);
+    a.sw_pi(T2, A3, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// FP16 IIR: identical structure on packed lanes — each core filters two
+/// interleaved channels at once (`vfmac`/packed states).
+fn build_iir_f16() -> Program {
+    let name = "fp_iir_f16";
+    let c: [Reg; 10] = [S8, S9, S10, S11, RA, SP, GP, TP, S1, S2];
+    let (d11, d12, d21, d22) = (S4, S5, S6, S7);
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (i, &r) in c.iter().enumerate() {
+        a.lw(r, A4, (i * 4) as i32); // packed (coef, coef) pairs
+    }
+    for r in [d11, d12, d21, d22] {
+        a.li(r, 0);
+    }
+    a.lp_setup(0, A5, end);
+    a.lw_pi(T0, A2, 4); // packed pair: (ch0[t], ch1[t])
+    a.mv(T1, d11);
+    a.vfmac_h(T1, c[0], T0);
+    a.mv(d11, d12);
+    a.vfmac_h(d11, c[1], T0);
+    // packed msub: d -= a1*y  ==  d = d + (-a1)*y with negated coeff pack.
+    a.vfmac_h(d11, c[3], T1);
+    a.vfmul_h(d12, c[2], T0);
+    a.vfmac_h(d12, c[4], T1);
+    a.mv(T2, d21);
+    a.vfmac_h(T2, c[5], T1);
+    a.mv(d21, d22);
+    a.vfmac_h(d21, c[6], T1);
+    a.vfmac_h(d21, c[8], T2);
+    a.vfmul_h(d22, c[7], T1);
+    a.vfmac_h(d22, c[9], T2);
+    a.sw_pi(T2, A3, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+pub fn iir_host_ref(x: &[f32], s1: Biquad, s2: Biquad) -> Vec<f32> {
+    let mut out = Vec::with_capacity(x.len());
+    let (mut d11, mut d12, mut d21, mut d22) = (0f32, 0f32, 0f32, 0f32);
+    for &xv in x {
+        let y1 = s1.b0.mul_add(xv, d11);
+        d11 = d12 + s1.b1 * xv - s1.a1 * y1;
+        d12 = s1.b2 * xv - s1.a2 * y1;
+        let y2 = s2.b0.mul_add(y1, d21);
+        d21 = d22 + s2.b1 * y1 - s2.a1 * y2;
+        d22 = s2.b2 * y1 - s2.a2 * y2;
+        out.push(y2);
+    }
+    out
+}
+
+/// Run the IIR cascade; each core filters its own channel (f32) or two
+/// packed channels (f16). `x` holds `channels = n_cores (×2 for f16)`
+/// equal-length signals, channel-major.
+pub fn run_iir(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    x: &[Vec<f32>],
+    s1: Biquad,
+    s2: Biquad,
+    fw: FpWidth,
+) -> (Vec<Vec<f32>>, KernelRun) {
+    let n = x[0].len();
+    assert!(x.iter().all(|c| c.len() == n));
+    let prog = match fw {
+        FpWidth::F32 => build_iir_f32(),
+        FpWidth::F16x2 => build_iir_f16(),
+    };
+    let lanes = if fw == FpWidth::F32 { 1 } else { 2 };
+    let n_cores = x.len() / lanes;
+    assert!(n_cores >= 1 && n_cores <= 8);
+    let mut alloc = TcdmAlloc::new();
+    let per = n * 4; // both layouts use one 32-bit word per sample slot
+    let x_base = alloc.alloc(x.len() * per);
+    let y_base = alloc.alloc(x.len() * per);
+    let c_base = alloc.alloc(10 * 4);
+    match fw {
+        FpWidth::F32 => {
+            for (c, sig) in x.iter().enumerate() {
+                cluster.tcdm.mem.write_f32s(x_base + (c * per) as u32, sig);
+            }
+            let coeffs = [s1.b0, s1.b1, s1.b2, s1.a1, s1.a2, s2.b0, s2.b1, s2.b2, s2.a1, s2.a2];
+            cluster.tcdm.mem.write_f32s(c_base, &coeffs);
+        }
+        FpWidth::F16x2 => {
+            // Interleave channel pairs: word t = (ch0[t], ch1[t]).
+            for pair in 0..n_cores {
+                let (c0, c1) = (&x[2 * pair], &x[2 * pair + 1]);
+                let mut inter = Vec::with_capacity(2 * n);
+                for t in 0..n {
+                    inter.push(c0[t]);
+                    inter.push(c1[t]);
+                }
+                cluster.tcdm.mem.write_f16s(x_base + (pair * per) as u32, &inter);
+            }
+            // Packed duplicated coefficients; a1/a2 negated (vfmac-only
+            // datapath, see build_iir_f16).
+            let pk = |v: f32| -> i32 {
+                let h = f32_to_f16(v) as u32;
+                ((h << 16) | h) as i32
+            };
+            let words = [
+                pk(s1.b0), pk(s1.b1), pk(s1.b2), pk(-s1.a1), pk(-s1.a2),
+                pk(s2.b0), pk(s2.b1), pk(s2.b2), pk(-s2.a1), pk(-s2.a2),
+            ];
+            cluster.tcdm.mem.write_i32s(c_base, &words);
+        }
+    }
+    let stats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            let off = (id * per) as u32;
+            vec![(A2, x_base + off), (A3, y_base + off), (A4, c_base), (A5, n as u32)]
+        },
+        500_000_000,
+    );
+    let mut out = Vec::new();
+    match fw {
+        FpWidth::F32 => {
+            for c in 0..x.len() {
+                out.push(cluster.tcdm.mem.read_f32s(y_base + (c * per) as u32, n));
+            }
+        }
+        FpWidth::F16x2 => {
+            for pair in 0..n_cores {
+                let inter = cluster.tcdm.mem.read_f16s(y_base + (pair * per) as u32, 2 * n);
+                out.push(inter.iter().step_by(2).copied().collect());
+                out.push(inter.iter().skip(1).step_by(2).copied().collect());
+            }
+        }
+    }
+    let flops = (10 * n * x.len()) as u64 * if lanes == 2 { 1 } else { 1 };
+    (out, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+// ------------------------------------------------------------------ DWT
+
+/// FP32 Haar DWT, one level: approx[i] = (x[2i]+x[2i+1])·c,
+/// detail[i] = (x[2i]−x[2i+1])·c with c = 1/√2.
+/// a2=&x a3=&approx a4=&detail a5=n_pairs a6=c (f32 bits).
+fn build_dwt_f32() -> Program {
+    let name = "fp_dwt_f32";
+    let mut a = Asm::new(name);
+    let end = a.label();
+    a.lp_setup(0, A5, end);
+    a.lw_pi(T0, A2, 4);
+    a.lw_pi(T1, A2, 4);
+    a.fadd_s(T2, T0, T1);
+    a.fsub_s(T3, T0, T1);
+    a.fmul_s(T2, T2, A6);
+    a.fmul_s(T3, T3, A6);
+    a.sw_pi(T2, A3, 4);
+    a.sw_pi(T3, A4, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// FP16 Haar DWT: one packed load per pair; sum/difference emerge as
+/// `vfdotpex` against constant packs (c, c) and (c, −c); two results are
+/// re-packed per two pairs.
+fn build_dwt_f16() -> Program {
+    let name = "fp_dwt_f16";
+    let mut a = Asm::new(name);
+    let end = a.label();
+    // A6 = pack(c, c), A7 = pack(c, -c).
+    a.srli(T6, A5, 1); // pairs/2 iterations (process 2 pairs)
+    a.lp_setup(0, T6, end);
+    a.lw_pi(T0, A2, 4); // pair 0
+    a.lw_pi(T1, A2, 4); // pair 1
+    a.li(T2, 0);
+    a.li(T3, 0);
+    a.li(T4, 0);
+    a.li(T5, 0);
+    a.vfdotpex_s_h(T2, T0, A6); // approx0
+    a.vfdotpex_s_h(T3, T0, A7); // detail0
+    a.vfdotpex_s_h(T4, T1, A6); // approx1
+    a.vfdotpex_s_h(T5, T1, A7); // detail1
+    a.vfcpka_h_s(T2, T2, T4);
+    a.vfcpka_h_s(T3, T3, T5);
+    a.sw_pi(T2, A3, 4);
+    a.sw_pi(T3, A4, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+pub fn dwt_host_ref(x: &[f32]) -> (Vec<f32>, Vec<f32>) {
+    let c = std::f32::consts::FRAC_1_SQRT_2;
+    let mut ap = Vec::new();
+    let mut de = Vec::new();
+    for p in x.chunks(2) {
+        ap.push((p[0] + p[1]) * c);
+        de.push((p[0] - p[1]) * c);
+    }
+    (ap, de)
+}
+
+/// Run one DWT level SPMD over `n_cores` contiguous chunks.
+pub fn run_dwt(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    x: &[f32],
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<f32>, Vec<f32>, KernelRun) {
+    let n_pairs = x.len() / 2;
+    let chunk = n_pairs / n_cores;
+    require(chunk >= 2 && chunk % 2 == 0, "dwt", "pairs/core even and >= 2");
+    let prog = match fw {
+        FpWidth::F32 => build_dwt_f32(),
+        FpWidth::F16x2 => build_dwt_f16(),
+    };
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(x.len() * esz + 16);
+    let a_base = alloc.alloc(n_pairs * esz + 16);
+    let d_base = alloc.alloc(n_pairs * esz + 16);
+    let c = std::f32::consts::FRAC_1_SQRT_2;
+    match fw {
+        FpWidth::F32 => cluster.tcdm.mem.write_f32s(x_base, x),
+        FpWidth::F16x2 => cluster.tcdm.mem.write_f16s(x_base, x),
+    }
+    let stats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            let xo = (id * chunk * 2 * esz) as u32;
+            let oo = (id * chunk * esz) as u32;
+            let mut regs = vec![
+                (A2, x_base + xo),
+                (A3, a_base + oo),
+                (A4, d_base + oo),
+                (A5, chunk as u32),
+            ];
+            match fw {
+                FpWidth::F32 => regs.push((A6, c.to_bits())),
+                FpWidth::F16x2 => {
+                    let h = f32_to_f16(c) as u32;
+                    let hn = f32_to_f16(-c) as u32;
+                    regs.push((A6, (h << 16) | h));
+                    regs.push((A7, (hn << 16) | h));
+                }
+            }
+            regs
+        },
+        500_000_000,
+    );
+    let (ap, de) = match fw {
+        FpWidth::F32 => (
+            cluster.tcdm.mem.read_f32s(a_base, n_pairs),
+            cluster.tcdm.mem.read_f32s(d_base, n_pairs),
+        ),
+        FpWidth::F16x2 => (
+            cluster.tcdm.mem.read_f16s(a_base, n_pairs),
+            cluster.tcdm.mem.read_f16s(d_base, n_pairs),
+        ),
+    };
+    let flops = 4 * n_pairs as u64;
+    (ap, de, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn signal(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.f32_pm1()).collect()
+    }
+
+    fn l2m() -> FlatMem {
+        FlatMem::new(L2_BASE, 4096)
+    }
+
+    #[test]
+    fn fir_f32_matches_host() {
+        let taps: Vec<f32> = signal(FIR_TAPS, 1);
+        let x = signal(256 + FIR_TAPS + 3, 2);
+        let mut cl = Cluster::new();
+        let (y, kr) = run_fir(&mut cl, &mut l2m(), &x, &taps, 256, FpWidth::F32, 8);
+        let want = fir_host_ref(&x, &taps, 256);
+        for (i, (&g, &r)) in y.iter().zip(&want).enumerate() {
+            assert!((g - r).abs() < 1e-4, "{i}: {g} vs {r}");
+        }
+        // Table V: FIR 64% FP intensity (register-resident taps).
+        let fi = kr.fp_intensity();
+        assert!((0.5..0.75).contains(&fi), "intensity = {fi}");
+    }
+
+    #[test]
+    fn fir_f16_matches_host() {
+        let taps: Vec<f32> = signal(FIR_TAPS, 3);
+        let x = signal(128 + FIR_TAPS + 5, 4);
+        let mut cl = Cluster::new();
+        let (y, _) = run_fir(&mut cl, &mut l2m(), &x, &taps, 128, FpWidth::F16x2, 8);
+        let want = fir_host_ref(&x, &taps, 128);
+        for (i, (&g, &r)) in y.iter().zip(&want).enumerate() {
+            assert!((g - r).abs() < 3e-2, "{i}: {g} vs {r}");
+        }
+    }
+
+    #[test]
+    fn fir_f16_faster() {
+        let taps: Vec<f32> = signal(FIR_TAPS, 5);
+        let x = signal(512 + 16, 6);
+        let mut cl = Cluster::new();
+        let (_, k32) = run_fir(&mut cl, &mut l2m(), &x, &taps, 512, FpWidth::F32, 8);
+        let mut cl = Cluster::new();
+        let (_, k16) = run_fir(&mut cl, &mut l2m(), &x, &taps, 512, FpWidth::F16x2, 8);
+        let s = k32.stats.cycles as f64 / k16.stats.cycles as f64;
+        assert!(s > 1.3, "speedup = {s}");
+    }
+
+    #[test]
+    fn iir_f32_matches_host() {
+        let (s1, s2) = (Biquad::lowpass(), Biquad::lowpass());
+        let chans: Vec<Vec<f32>> = (0..8).map(|i| signal(128, 10 + i)).collect();
+        let mut cl = Cluster::new();
+        let (ys, kr) = run_iir(&mut cl, &mut l2m(), &chans, s1, s2, FpWidth::F32);
+        for (c, y) in ys.iter().enumerate() {
+            let want = iir_host_ref(&chans[c], s1, s2);
+            for (i, (&g, &r)) in y.iter().zip(&want).enumerate() {
+                assert!((g - r).abs() < 1e-4, "ch{c}[{i}]: {g} vs {r}");
+            }
+        }
+        let fi = kr.fp_intensity();
+        assert!((0.35..0.70).contains(&fi), "intensity = {fi}"); // Table V: 46%
+    }
+
+    #[test]
+    fn iir_f16_matches_host_loosely() {
+        let (s1, s2) = (Biquad::lowpass(), Biquad::lowpass());
+        let chans: Vec<Vec<f32>> = (0..4).map(|i| signal(64, 20 + i)).collect();
+        let mut cl = Cluster::new();
+        let (ys, _) = run_iir(&mut cl, &mut l2m(), &chans, s1, s2, FpWidth::F16x2);
+        for (c, y) in ys.iter().enumerate() {
+            let want = iir_host_ref(&chans[c], s1, s2);
+            for (i, (&g, &r)) in y.iter().zip(&want).enumerate() {
+                // f16 state recursion accumulates rounding error.
+                assert!((g - r).abs() < 0.05, "ch{c}[{i}]: {g} vs {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn dwt_both_widths_match_host() {
+        let x = signal(256, 30);
+        let (wa, wd) = dwt_host_ref(&x);
+        for (fw, tol) in [(FpWidth::F32, 1e-5f32), (FpWidth::F16x2, 2e-2)] {
+            let mut cl = Cluster::new();
+            let (ap, de, _) = run_dwt(&mut cl, &mut l2m(), &x, fw, 8);
+            for i in 0..wa.len() {
+                assert!((ap[i] - wa[i]).abs() < tol, "{fw:?} a[{i}]");
+                assert!((de[i] - wd[i]).abs() < tol, "{fw:?} d[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn dwt_perfect_reconstruction_property() {
+        // approx/detail must reconstruct the input (orthonormal Haar).
+        let x = signal(64, 40);
+        let mut cl = Cluster::new();
+        let (ap, de, _) = run_dwt(&mut cl, &mut l2m(), &x, FpWidth::F32, 4);
+        let c = std::f32::consts::FRAC_1_SQRT_2;
+        for i in 0..32 {
+            let x0 = (ap[i] + de[i]) * c;
+            let x1 = (ap[i] - de[i]) * c;
+            assert!((x0 - x[2 * i]).abs() < 1e-4);
+            assert!((x1 - x[2 * i + 1]).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,245 @@
+//! FP KMEANS (Table V row 7): the assignment step — for each point, the
+//! squared-Euclidean-nearest of K centroids. Centroids live in registers
+//! (K=3 × D=4), which is what pushes KMEANS to the highest FP intensity
+//! of the suite (83% in Table V: almost nothing but subtract/FMA).
+//!
+//! FP16 packs two dimensions per word: distance accumulates via
+//! `vfsub.h` + `vfdotpex.s.h` of the difference with itself.
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, Reg, A2, A3, A4, A5, GP, RA, S1, S10, S11, S2, S4, S5,
+    S6, S7, S8, S9, SP, T0, T1, T2, T3, T4, T5, TP};
+use crate::iss::FlatMem;
+
+use super::fp_matmul::FpWidth;
+use super::{check_program, require, KernelRun, TcdmAlloc};
+
+pub const K: usize = 3;
+pub const D: usize = 4;
+
+/// Params: a2=&points a3=&labels(out i32) a4=&centroids a5=n_points.
+fn build_f32() -> Program {
+    let name = "fp_kmeans_f32";
+    // Centroid registers: 3 × 4.
+    let cent: [[Reg; D]; K] = [
+        [S8, S9, S10, S11],
+        [RA, SP, GP, TP],
+        [S1, S2, S4, S5],
+    ];
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (k, row) in cent.iter().enumerate() {
+        for (d, &r) in row.iter().enumerate() {
+            a.lw(r, A4, ((k * D + d) * 4) as i32);
+        }
+    }
+    a.lp_setup(0, A5, end);
+    a.lw(T3, A2, 12); // dim 3 first, then post-inc walk dims 0..2
+    a.lw_pi(T0, A2, 16); // dim 0, advance to next point
+    a.lw(T1, A2, 4 - 16);
+    a.lw(T2, A2, 8 - 16);
+    // Distances per centroid into T4; best in S6, best index in S7.
+    let mut first = true;
+    for (k, row) in cent.iter().enumerate() {
+        // d = Σ (x_d − c_d)².
+        a.fsub_s(T5, T0, row[0]);
+        a.fmul_s(T4, T5, T5);
+        for d in 1..D {
+            a.fsub_s(T5, [T0, T1, T2, T3][d], row[d]);
+            a.fmac_s(T4, T5, T5);
+        }
+        if first {
+            a.mv(S6, T4);
+            a.li(S7, 0);
+            first = false;
+        } else {
+            // if T4 < best { best = T4; idx = k }
+            let skip = a.label();
+            a.flt_s(T5, T4, S6);
+            a.beq(T5, 0, skip);
+            a.mv(S6, T4);
+            a.li(S7, k as i32);
+            a.bind(skip);
+        }
+    }
+    a.sw_pi(S7, A3, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// FP16: dims packed two per word (D=4 → 2 words/point).
+fn build_f16() -> Program {
+    let name = "fp_kmeans_f16";
+    let cent: [[Reg; 2]; K] = [[S8, S9], [S10, S11], [RA, SP]];
+    let mut a = Asm::new(name);
+    let end = a.label();
+    for (k, row) in cent.iter().enumerate() {
+        for (d, &r) in row.iter().enumerate() {
+            a.lw(r, A4, ((k * 2 + d) * 4) as i32);
+        }
+    }
+    a.lp_setup(0, A5, end);
+    a.lw(T1, A2, 4); // dims 2,3
+    a.lw_pi(T0, A2, 8); // dims 0,1; advance point
+    let mut first = true;
+    for (k, row) in cent.iter().enumerate() {
+        a.vfsub_h(T2, T0, row[0]);
+        a.vfsub_h(T3, T1, row[1]);
+        a.li(T4, 0);
+        a.vfdotpex_s_h(T4, T2, T2);
+        a.vfdotpex_s_h(T4, T3, T3);
+        if first {
+            a.mv(S6, T4);
+            a.li(S7, 0);
+            first = false;
+        } else {
+            let skip = a.label();
+            a.flt_s(T5, T4, S6);
+            a.beq(T5, 0, skip);
+            a.mv(S6, T4);
+            a.li(S7, k as i32);
+            a.bind(skip);
+        }
+    }
+    a.sw_pi(S7, A3, 4);
+    a.bind(end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+pub fn host_ref(points: &[f32], centroids: &[f32]) -> Vec<i32> {
+    points
+        .chunks(D)
+        .map(|p| {
+            let mut best = f32::INFINITY;
+            let mut idx = 0;
+            for k in 0..K {
+                let d: f32 = (0..D).map(|i| (p[i] - centroids[k * D + i]).powi(2)).sum();
+                if d < best {
+                    best = d;
+                    idx = k as i32;
+                }
+            }
+            idx
+        })
+        .collect()
+}
+
+/// Run the assignment step over `n_points` (SPMD contiguous chunks).
+pub fn run(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    points: &[f32],
+    centroids: &[f32],
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<i32>, KernelRun) {
+    let n_points = points.len() / D;
+    assert_eq!(centroids.len(), K * D);
+    let chunk = n_points / n_cores;
+    require(chunk >= 1, "kmeans", "points >= cores");
+    require(n_points % n_cores == 0, "kmeans", "points divisible by cores");
+    let prog = match fw {
+        FpWidth::F32 => build_f32(),
+        FpWidth::F16x2 => build_f16(),
+    };
+    let psz = match fw {
+        FpWidth::F32 => D * 4,
+        FpWidth::F16x2 => D * 2,
+    };
+    let mut alloc = TcdmAlloc::new();
+    let p_base = alloc.alloc(n_points * psz + 16);
+    let l_base = alloc.alloc(n_points * 4);
+    let c_base = alloc.alloc(K * D * 4);
+    match fw {
+        FpWidth::F32 => {
+            cluster.tcdm.mem.write_f32s(p_base, points);
+            cluster.tcdm.mem.write_f32s(c_base, centroids);
+        }
+        FpWidth::F16x2 => {
+            cluster.tcdm.mem.write_f16s(p_base, points);
+            cluster.tcdm.mem.write_f16s(c_base, centroids);
+        }
+    }
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            vec![
+                (A2, p_base + (id * chunk * psz) as u32),
+                (A3, l_base + (id * chunk * 4) as u32),
+                (A4, c_base),
+                (A5, chunk as u32),
+            ]
+        },
+        500_000_000,
+    );
+    let labels = cluster.tcdm.mem.read_i32s(l_base, n_points);
+    let flops = (K * (2 * D) * n_points) as u64 + (K as u64 - 1) * n_points as u64;
+    (labels, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn l2m() -> FlatMem {
+        FlatMem::new(L2_BASE, 4096)
+    }
+
+    fn setup(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        // Well-separated centroids so f16 rounding can't flip labels.
+        let centroids = vec![
+            -2.0, -2.0, -2.0, -2.0, //
+            0.0, 2.0, 0.0, 2.0, //
+            2.0, -1.0, 2.0, -1.0,
+        ];
+        let points: Vec<f32> = (0..n)
+            .flat_map(|_| {
+                let k = rng.below(K as u64) as usize;
+                (0..D)
+                    .map(|d| centroids[k * D + d] + 0.4 * rng.f32_pm1())
+                    .collect::<Vec<_>>()
+            })
+            .collect();
+        (points, centroids)
+    }
+
+    #[test]
+    fn f32_matches_host() {
+        let (p, c) = setup(64, 70);
+        let mut cl = Cluster::new();
+        let (labels, kr) = run(&mut cl, &mut l2m(), &p, &c, FpWidth::F32, 8);
+        assert_eq!(labels, host_ref(&p, &c));
+        // Table V: KMEANS 83% — the suite's highest FP intensity.
+        let fi = kr.fp_intensity();
+        assert!(fi > 0.55, "intensity = {fi}");
+    }
+
+    #[test]
+    fn f16_matches_host() {
+        let (p, c) = setup(64, 71);
+        let mut cl = Cluster::new();
+        let (labels, _) = run(&mut cl, &mut l2m(), &p, &c, FpWidth::F16x2, 8);
+        assert_eq!(labels, host_ref(&p, &c));
+    }
+
+    #[test]
+    fn single_core_matches_multi() {
+        let (p, c) = setup(32, 72);
+        let mut cl = Cluster::new();
+        let (l1, _) = run(&mut cl, &mut l2m(), &p, &c, FpWidth::F32, 1);
+        let mut cl = Cluster::new();
+        let (l8, _) = run(&mut cl, &mut l2m(), &p, &c, FpWidth::F32, 8);
+        assert_eq!(l1, l8);
+    }
+}

@@ -1,0 +1,255 @@
+//! FP MATMUL (Table V row 1): FP32 scalar FMA and FP16 packed-SIMD
+//! (`vfdotpex.s.h`) variants — the Fig. 8 leader thanks to fused
+//! multiply-accumulate ("2 FP operations per cycle").
+//!
+//! 2×2 register tiling (the shared-FPU fabric sustains one FP issue per
+//! two cores, so deeper unrolling only piles up contention stalls), same
+//! padded SPMD layout as the integer kernels.
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, A0, A1, A2, A3, A4, A5, A6, A7, S0, S1, S3, S4, S5, S6, S7,
+    S8, S9, T0, T1, T4, T5};
+use crate::iss::FlatMem;
+
+use super::{check_program, require, KernelRun, TcdmAlloc};
+
+/// FP operand width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FpWidth {
+    F32,
+    /// Packed 2×binary16 (smallFloat SIMD).
+    F16x2,
+}
+
+/// Build the SPMD FP matmul for `(m, n, k)`.
+pub fn build(m: usize, n: usize, k: usize, w: FpWidth) -> Program {
+    let name = match w {
+        FpWidth::F32 => "fp_matmul_f32",
+        FpWidth::F16x2 => "fp_matmul_f16",
+    };
+    require(m % 2 == 0, name, "M % 2 == 0");
+    require(n % 2 == 0, name, "N % 2 == 0");
+    let (esz, per_word) = match w {
+        FpWidth::F32 => (4usize, 1usize),
+        FpWidth::F16x2 => (2, 2),
+    };
+    require(k % per_word == 0, name, "K multiple of SIMD lanes");
+    let row = (k * esz) as i32 + 4; // +pad word against bank aliasing
+    let crow = (n * 4) as i32;
+    let kiter = (k / per_word) as u32;
+
+    let mut a = Asm::new(name);
+    let done = a.label();
+    let m_loop = a.label();
+    let n_loop = a.label();
+    let end_k = a.label();
+
+    a.slli(S0, A1, 1); // m stride = 2*n_cores
+    a.slli(S3, A0, 1); // m = 2*core_id
+
+    a.bind(m_loop);
+    a.bge(S3, A5, done);
+    a.li(S4, 0);
+
+    a.bind(n_loop);
+    a.li(S1, row);
+    a.mul(S5, S3, S1);
+    a.add(S5, S5, A2);
+    a.mul(S6, S4, S1);
+    a.add(S6, S6, A3);
+    a.mul(S7, S3, A6);
+    a.add(S7, S7, S4);
+    a.slli(S7, S7, 2);
+    a.add(S7, S7, A4);
+    for r in [A0, A1, S8, S9] {
+        a.li(r, 0); // f32 accumulators (0.0 bits == 0)
+    }
+
+    // Inner loop: 4 loads + 4 FMA-class ops per word of K.
+    a.lp_setup_imm(0, kiter, end_k);
+    a.lw_pi(T0, S5, 4); // a row 0
+    a.lw(T1, S5, row - 4); // a row 1
+    a.lw_pi(T4, S6, 4); // b col 0
+    a.lw(T5, S6, row - 4); // b col 1
+    match w {
+        FpWidth::F32 => {
+            a.fmac_s(A0, T0, T4);
+            a.fmac_s(A1, T0, T5);
+            a.fmac_s(S8, T1, T4);
+            a.fmac_s(S9, T1, T5);
+        }
+        FpWidth::F16x2 => {
+            a.vfdotpex_s_h(A0, T0, T4);
+            a.vfdotpex_s_h(A1, T0, T5);
+            a.vfdotpex_s_h(S8, T1, T4);
+            a.vfdotpex_s_h(S9, T1, T5);
+        }
+    }
+    a.bind(end_k);
+
+    a.sw(A0, S7, 0);
+    a.sw(A1, S7, 4);
+    a.sw(S8, S7, crow);
+    a.sw(S9, S7, crow + 4);
+
+    a.addi(S4, S4, 2);
+    a.blt(S4, A6, n_loop);
+    a.add(S3, S3, S0);
+    a.j(m_loop);
+    a.bind(done);
+    a.halt();
+
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+/// Host reference in f32 (A row-major, B column-major).
+pub fn host_ref(av: &[f32], bv: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc = av[i * k + kk].mul_add(bv[j * k + kk], acc);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+fn write_rows(mem: &mut FlatMem, base: u32, vals: &[f32], rows: usize, k: usize, w: FpWidth) {
+    let esz = match w {
+        FpWidth::F32 => 4,
+        FpWidth::F16x2 => 2,
+    };
+    let stride = (k * esz + 4) as u32;
+    for r in 0..rows {
+        let row = &vals[r * k..(r + 1) * k];
+        match w {
+            FpWidth::F32 => mem.write_f32s(base + r as u32 * stride, row),
+            FpWidth::F16x2 => mem.write_f16s(base + r as u32 * stride, row),
+        }
+    }
+}
+
+/// Run on the cluster; returns C (f32) and the run record.
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    av: &[f32],
+    bv: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    w: FpWidth,
+    n_cores: usize,
+) -> (Vec<f32>, KernelRun) {
+    assert_eq!(av.len(), m * k);
+    assert_eq!(bv.len(), n * k);
+    let prog = build(m, n, k, w);
+    let esz = match w {
+        FpWidth::F32 => 4,
+        FpWidth::F16x2 => 2,
+    };
+    let stride = k * esz + 4;
+    let mut alloc = TcdmAlloc::new();
+    let a_base = alloc.alloc(m * stride);
+    let b_base = alloc.alloc(n * stride);
+    let c_base = alloc.alloc(m * n * 4);
+    write_rows(&mut cluster.tcdm.mem, a_base, av, m, k, w);
+    write_rows(&mut cluster.tcdm.mem, b_base, bv, n, k, w);
+
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            vec![
+                (A0, id as u32),
+                (A1, n_cores as u32),
+                (A2, a_base),
+                (A3, b_base),
+                (A4, c_base),
+                (A5, m as u32),
+                (A6, n as u32),
+                (A7, k as u32),
+            ]
+        },
+        500_000_000,
+    );
+    let c = cluster.tcdm.mem.read_f32s(c_base, m * n);
+    let flops = 2 * (m * n * k) as u64;
+    (c, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn setup(m: usize, n: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+        let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+        (av, bv)
+    }
+
+    fn check(m: usize, n: usize, k: usize, w: FpWidth, cores: usize, tol: f32) -> KernelRun {
+        let (av, bv) = setup(m, n, k, 3);
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        let (c, kr) = run(&mut cl, &mut l2, &av, &bv, m, n, k, w, cores);
+        let want = host_ref(&av, &bv, m, n, k);
+        for (i, (&g, &r)) in c.iter().zip(&want).enumerate() {
+            assert!(
+                (g - r).abs() <= tol * r.abs().max(1.0),
+                "{w:?} elem {i}: {g} vs {r}"
+            );
+        }
+        kr
+    }
+
+    #[test]
+    fn f32_matches_host() {
+        check(8, 8, 16, FpWidth::F32, 8, 1e-5);
+        check(2, 2, 4, FpWidth::F32, 1, 1e-5);
+        check(16, 16, 32, FpWidth::F32, 4, 1e-5);
+    }
+
+    #[test]
+    fn f16_matches_host_to_half_precision() {
+        // inputs rounded to f16, accumulation exact in f32 (vfdotpex).
+        check(8, 8, 16, FpWidth::F16x2, 8, 2e-2);
+        check(16, 16, 32, FpWidth::F16x2, 8, 2e-2);
+    }
+
+    #[test]
+    fn fp32_throughput_near_2gflops_shape() {
+        // Table VIII: 2 GFLOPS at 450 MHz ⇒ ~4.4 FLOP/cycle on 8 cores.
+        let kr = check(32, 32, 32, FpWidth::F32, 8, 1e-4);
+        let fpc = kr.stats.flops_per_cycle();
+        assert!((3.0..6.5).contains(&fpc), "flops/cycle = {fpc}");
+    }
+
+    #[test]
+    fn f16_vectorization_speedup() {
+        // Packed f16 halves the K loop: expect >1.4x (paper's matmul gain
+        // is above the 1.46x suite average).
+        let f32r = check(32, 32, 32, FpWidth::F32, 8, 1e-4);
+        let f16r = check(32, 32, 32, FpWidth::F16x2, 8, 3e-2);
+        let speedup = f32r.stats.cycles as f64 / f16r.stats.cycles as f64;
+        assert!(speedup > 1.4, "speedup = {speedup}");
+    }
+
+    #[test]
+    fn fp_intensity_near_table5() {
+        // Table V: MATMUL 57% FP intensity.
+        let kr = check(32, 32, 32, FpWidth::F32, 8, 1e-4);
+        let fi = kr.fp_intensity();
+        assert!((0.40..0.62).contains(&fi), "fp intensity = {fi}");
+    }
+}

@@ -1,0 +1,219 @@
+//! FP SVM (Table V row 8): multi-class linear SVM inference —
+//! `argmax_c (w_c · x + b_c)` over C=3 one-vs-rest classifiers.
+//!
+//! Weights stream from TCDM (D is too large for registers), which keeps
+//! the FP intensity moderate (35% in Table V: loads + control around the
+//! FMA chain). FP16 packs two dimensions per word via `vfdotpex`.
+
+use crate::cluster::{Cluster, ClusterStats};
+use crate::isa::{Asm, Program, A2, A3, A4, A5, A6, S1, S2, S4, S5, S6, S7, S8, T0,
+    T1, T2, T3, T4, T5, T6};
+use crate::iss::FlatMem;
+
+use super::fp_matmul::FpWidth;
+use super::{check_program, require, KernelRun, TcdmAlloc};
+
+pub const CLASSES: usize = 3;
+
+/// Params: a2=&x(points) a3=&labels a4=&W (C rows of D, then C biases)
+/// a5=n_points a6=D.
+fn build(d: usize, fw: FpWidth) -> Program {
+    let name = match fw {
+        FpWidth::F32 => "fp_svm_f32",
+        FpWidth::F16x2 => "fp_svm_f16",
+    };
+    let esz = if fw == FpWidth::F32 { 4usize } else { 2 };
+    let per_word = 4 / esz;
+    require(d % per_word == 0, name, "D multiple of lanes");
+    let row = (d * esz) as i32; // W row stride (no pad: 3 streams differ)
+    let kiter = (d / per_word) as u32;
+
+    let mut a = Asm::new(name);
+    let point_end = a.label();
+    for (c, reg) in [S1, S2, S4].iter().enumerate() {
+        // biases preloaded: b_c at W + C*row + c*4 (always f32).
+        a.lw(*reg, A4, CLASSES as i32 * row + (c * 4) as i32);
+    }
+    a.lp_setup(0, A5, point_end);
+    // Scores start from biases.
+    a.mv(S5, S1);
+    a.mv(S6, S2);
+    a.mv(S7, S4);
+    // Weight row pointers.
+    a.mv(T4, A4);
+    a.addi(T5, A4, row);
+    a.addi(T6, A4, 2 * row);
+    {
+        let end_d = a.label();
+        a.lp_setup_imm(1, kiter, end_d);
+        a.lw_pi(T0, A2, 4); // x word (advance)
+        a.lw_pi(T1, T4, 4); // w0
+        a.lw_pi(T2, T5, 4); // w1
+        a.lw_pi(T3, T6, 4); // w2
+        match fw {
+            FpWidth::F32 => {
+                a.fmac_s(S5, T0, T1);
+                a.fmac_s(S6, T0, T2);
+                a.fmac_s(S7, T0, T3);
+            }
+            FpWidth::F16x2 => {
+                a.vfdotpex_s_h(S5, T0, T1);
+                a.vfdotpex_s_h(S6, T0, T2);
+                a.vfdotpex_s_h(S7, T0, T3);
+            }
+        }
+        a.bind(end_d);
+    }
+    // argmax over (S5, S6, S7) -> S8.
+    a.li(S8, 0);
+    let keep1 = a.label();
+    a.fle_s(T0, S6, S5);
+    a.bne(T0, 0, keep1);
+    a.mv(S5, S6);
+    a.li(S8, 1);
+    a.bind(keep1);
+    let keep2 = a.label();
+    a.fle_s(T0, S7, S5);
+    a.bne(T0, 0, keep2);
+    a.li(S8, 2);
+    a.bind(keep2);
+    a.sw_pi(S8, A3, 4);
+    a.bind(point_end);
+    a.halt();
+    let p = a.finish().expect("assembly");
+    check_program(&p);
+    p
+}
+
+pub fn host_ref(points: &[f32], w: &[f32], b: &[f32], d: usize) -> Vec<i32> {
+    points
+        .chunks(d)
+        .map(|x| {
+            let mut best = f32::NEG_INFINITY;
+            let mut idx = 0;
+            for c in 0..CLASSES {
+                let s: f32 = b[c]
+                    + (0..d).map(|i| x[i] * w[c * d + i]).sum::<f32>();
+                if s > best {
+                    best = s;
+                    idx = c as i32;
+                }
+            }
+            idx
+        })
+        .collect()
+}
+
+/// Run SVM inference over `points` (SPMD chunks).
+#[allow(clippy::too_many_arguments)]
+pub fn run(
+    cluster: &mut Cluster,
+    l2: &mut FlatMem,
+    points: &[f32],
+    w: &[f32],
+    b: &[f32],
+    d: usize,
+    fw: FpWidth,
+    n_cores: usize,
+) -> (Vec<i32>, KernelRun) {
+    let n_points = points.len() / d;
+    assert_eq!(w.len(), CLASSES * d);
+    assert_eq!(b.len(), CLASSES);
+    require(n_points % n_cores == 0, "svm", "points divisible by cores");
+    let chunk = n_points / n_cores;
+    let prog = build(d, fw);
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let p_base = alloc.alloc(points.len() * esz + 16);
+    let l_base = alloc.alloc(n_points * 4);
+    let w_base = alloc.alloc(CLASSES * d * esz + CLASSES * 4 + 16);
+    match fw {
+        FpWidth::F32 => {
+            cluster.tcdm.mem.write_f32s(p_base, points);
+            cluster.tcdm.mem.write_f32s(w_base, w);
+        }
+        FpWidth::F16x2 => {
+            cluster.tcdm.mem.write_f16s(p_base, points);
+            cluster.tcdm.mem.write_f16s(w_base, w);
+        }
+    }
+    // Biases always f32, appended after the weight rows.
+    cluster
+        .tcdm
+        .mem
+        .write_f32s(w_base + (CLASSES * d * esz) as u32, b);
+
+    let stats: ClusterStats = cluster.run_program(
+        &prog,
+        n_cores,
+        l2,
+        |id| {
+            vec![
+                (A2, p_base + (id * chunk * d * esz) as u32),
+                (A3, l_base + (id * chunk * 4) as u32),
+                (A4, w_base),
+                (A5, chunk as u32),
+                (A6, d as u32),
+            ]
+        },
+        500_000_000,
+    );
+    let labels = cluster.tcdm.mem.read_i32s(l_base, n_points);
+    let flops = (2 * CLASSES * d * n_points) as u64;
+    (labels, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::L2_BASE;
+    use crate::common::Rng;
+
+    fn l2m() -> FlatMem {
+        FlatMem::new(L2_BASE, 4096)
+    }
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let w: Vec<f32> = (0..CLASSES * d).map(|_| rng.f32_pm1()).collect();
+        let b: Vec<f32> = (0..CLASSES).map(|_| rng.f32_pm1()).collect();
+        let points: Vec<f32> = (0..n * d).map(|_| rng.f32_pm1()).collect();
+        (points, w, b)
+    }
+
+    #[test]
+    fn f32_matches_host() {
+        let d = 16;
+        let (p, w, b) = setup(64, d, 80);
+        let mut cl = Cluster::new();
+        let (labels, kr) = run(&mut cl, &mut l2m(), &p, &w, &b, d, FpWidth::F32, 8);
+        assert_eq!(labels, host_ref(&p, &w, &b, d));
+        // Table V: SVM 35% — the streaming-weights regime.
+        let fi = kr.fp_intensity();
+        assert!((0.25..0.55).contains(&fi), "intensity = {fi}");
+    }
+
+    #[test]
+    fn f16_mostly_matches_host() {
+        // f16 weight rounding can flip near-ties; check the margin cases.
+        let d = 16;
+        let (p, w, b) = setup(64, d, 81);
+        let mut cl = Cluster::new();
+        let (labels, _) = run(&mut cl, &mut l2m(), &p, &w, &b, d, FpWidth::F16x2, 8);
+        let want = host_ref(&p, &w, &b, d);
+        let agree = labels.iter().zip(&want).filter(|(a, b)| a == b).count();
+        assert!(agree as f64 / want.len() as f64 > 0.9, "agreement {agree}/{}", want.len());
+    }
+
+    #[test]
+    fn f16_is_faster() {
+        let d = 32;
+        let (p, w, b) = setup(64, d, 82);
+        let mut cl = Cluster::new();
+        let (_, k32) = run(&mut cl, &mut l2m(), &p, &w, &b, d, FpWidth::F32, 8);
+        let mut cl = Cluster::new();
+        let (_, k16) = run(&mut cl, &mut l2m(), &p, &w, &b, d, FpWidth::F16x2, 8);
+        let s = k32.stats.cycles as f64 / k16.stats.cycles as f64;
+        assert!(s > 1.3, "speedup = {s}");
+    }
+}

@@ -1,0 +1,146 @@
+//! The kernel library: PULP-NN-style integer kernels and the eight FP
+//! NSAA kernels of Table V, authored as ISS instruction streams through
+//! the in-Rust assembler (DESIGN.md §5) and executed on the simulated
+//! cluster.
+//!
+//! Every kernel follows the PULP SPMD model: all active cores run the
+//! same program, parameterised by `core_id` / `n_cores` in registers;
+//! data lives in L1 TCDM; results are read back by the host driver and
+//! checked against a host-side reference.
+
+pub mod fp_conv;
+pub mod fp_fft;
+pub mod fp_filters;
+pub mod fp_kmeans;
+pub mod fp_matmul;
+pub mod fp_svm;
+pub mod int_matmul;
+
+use crate::cluster::{ClusterStats, TCDM_BASE, TCDM_SIZE};
+use crate::isa::Program;
+
+/// Simple bump allocator over the 128 kB TCDM for kernel buffers.
+pub struct TcdmAlloc {
+    next: u32,
+}
+
+impl TcdmAlloc {
+    pub fn new() -> Self {
+        Self { next: TCDM_BASE }
+    }
+
+    /// Allocate `bytes`, 16-byte aligned (SIMD-word friendly).
+    pub fn alloc(&mut self, bytes: usize) -> u32 {
+        let addr = (self.next + 15) & !15;
+        let end = addr as usize + bytes;
+        assert!(
+            end <= TCDM_BASE as usize + TCDM_SIZE,
+            "TCDM overflow: need {bytes} at {addr:#x}"
+        );
+        self.next = end as u32;
+        addr
+    }
+
+    pub fn used(&self) -> usize {
+        (self.next - TCDM_BASE) as usize
+    }
+}
+
+impl Default for TcdmAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Uniform result of a kernel run (feeds the figure/table generators).
+#[derive(Debug, Clone)]
+pub struct KernelRun {
+    pub name: String,
+    pub stats: ClusterStats,
+    /// Work per run, in the paper's metric for the kernel family
+    /// (int ops for integer kernels, FLOPs for FP kernels).
+    pub ops: u64,
+}
+
+impl KernelRun {
+    pub fn new(name: impl Into<String>, stats: ClusterStats, ops: u64) -> Self {
+        Self { name: name.into(), stats, ops }
+    }
+
+    /// Ops (or FLOPs) per cluster cycle.
+    pub fn ops_per_cycle(&self) -> f64 {
+        if self.stats.cycles == 0 {
+            return 0.0;
+        }
+        self.ops as f64 / self.stats.cycles as f64
+    }
+
+    /// GOPS (or GFLOPS) at frequency `f` Hz.
+    pub fn gops_at(&self, f: f64) -> f64 {
+        self.ops_per_cycle() * f / 1e9
+    }
+
+    /// Dynamic FP intensity of the executed stream (Table V).
+    pub fn fp_intensity(&self) -> f64 {
+        if self.stats.total.retired == 0 {
+            return 0.0;
+        }
+        self.stats.total.by_class.fp as f64 / self.stats.total.retired as f64
+    }
+}
+
+/// Pack 4 i8 into the TCDM word layout used by the SIMD kernels.
+pub fn pack_i8x4(v: &[i8]) -> u32 {
+    debug_assert_eq!(v.len(), 4);
+    (v[0] as u8 as u32)
+        | ((v[1] as u8 as u32) << 8)
+        | ((v[2] as u8 as u32) << 16)
+        | ((v[3] as u8 as u32) << 24)
+}
+
+/// Guard for kernel shape preconditions, with a kernel-named message.
+pub fn require(cond: bool, kernel: &str, what: &str) {
+    assert!(cond, "{kernel}: shape constraint violated: {what}");
+}
+
+/// Shared sanity assertions on a finished program.
+pub fn check_program(p: &Program) {
+    assert!(!p.is_empty(), "{}: empty program", p.name);
+    assert!(
+        matches!(p.insts.last(), Some(crate::isa::Inst::Halt)),
+        "{}: program must end in Halt",
+        p.name
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcdm_alloc_aligns_and_bounds() {
+        let mut a = TcdmAlloc::new();
+        let p1 = a.alloc(3);
+        let p2 = a.alloc(64);
+        assert_eq!(p1 % 16, 0);
+        assert_eq!(p2 % 16, 0);
+        assert!(p2 >= p1 + 3);
+        assert_eq!(a.used() % 16, 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tcdm_alloc_overflow_panics() {
+        let mut a = TcdmAlloc::new();
+        a.alloc(TCDM_SIZE + 1);
+    }
+
+    #[test]
+    fn pack_roundtrip() {
+        let w = pack_i8x4(&[1, -1, 127, -128]);
+        assert_eq!(w & 0xFF, 1);
+        assert_eq!((w >> 8) & 0xFF, 0xFF);
+        assert_eq!((w >> 16) & 0xFF, 0x7F);
+        assert_eq!(w >> 24, 0x80);
+    }
+}

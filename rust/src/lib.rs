@@ -1,0 +1,52 @@
+//! # Vega SoC reproduction library
+//!
+//! A cycle-approximate, energy-annotated full-system simulator of the Vega
+//! IoT end-node SoC (Rossi et al., IEEE JSSC 2021), plus the PJRT runtime
+//! bridge that executes the JAX/Pallas-authored DNN golden models from
+//! `artifacts/`.
+//!
+//! The crate is organised bottom-up (see `DESIGN.md` for the full system
+//! inventory):
+//!
+//! * [`isa`] / [`iss`] — RV32IMF+Xpulp instruction set, in-Rust assembler,
+//!   and the per-core instruction-set simulator with the 4-stage timing
+//!   model (load-use stalls, branch penalty, hardware loops).
+//! * [`cluster`] — the 9-core compute cluster: 16-bank word-interleaved L1
+//!   TCDM behind a logarithmic interconnect, 4 shared FPUs with static
+//!   core→FPU mapping, hierarchical instruction cache, event unit and
+//!   cluster DMA.
+//! * [`soc`] — the always-on/SoC domain: fabric controller, interleaved L2,
+//!   I/O DMA (µDMA) channels.
+//! * [`mem`] — non-volatile MRAM and external HyperRAM channel models.
+//! * [`hwce`] — the Hardware Convolution Engine (multi-precision 3×3).
+//! * [`cwu`] — the Cognitive Wake-Up unit: SPI sequencer, preprocessor and
+//!   the Hypnos HDC engine.
+//! * [`hdc`] — host-side hyperdimensional-computing training stack that
+//!   programs Hypnos (prototype training, microcode generation, datasets).
+//! * [`power`] — power domains, PMU state machine, activity-based energy
+//!   ledger calibrated against the paper's measurements.
+//! * [`kernels`] — the PULP-NN-style integer kernels and the eight FP NSAA
+//!   kernels of Table V, authored as ISS instruction streams.
+//! * [`dnn`] — layer graph IR, MobileNetV2 / RepVGG topologies, the
+//!   DORY-style tiler and the four-stage double-buffered pipeline model.
+//! * [`runtime`] — PJRT bridge loading `artifacts/*.hlo.txt`.
+//! * [`coordinator`] / [`bench`] — experiment drivers regenerating every
+//!   table and figure of the paper's evaluation.
+
+pub mod bench;
+pub mod cluster;
+pub mod common;
+pub mod coordinator;
+pub mod cwu;
+pub mod dnn;
+pub mod hdc;
+pub mod hwce;
+pub mod isa;
+pub mod iss;
+pub mod kernels;
+pub mod mem;
+pub mod power;
+pub mod runtime;
+pub mod soc;
+
+pub use common::{Cycles, PicoJoules, VegaError};

@@ -1,0 +1,223 @@
+//! `vega` — the coordinator CLI.
+//!
+//! ```text
+//! vega list                 list reproduction ids
+//! vega repro <id>|all       regenerate a paper table/figure
+//! vega runtime              show the PJRT artifact registry
+//! vega golden <name>        run one artifact and cross-check the
+//!                           simulator's functional model against it
+//! vega sim <kernel> [--cores N] [--size S]
+//!                           run a kernel on the simulated cluster and
+//!                           report cycles / rates / contention
+//! ```
+//! (hand-rolled argument parsing: clap is unavailable offline,
+//! DESIGN.md §5.)
+
+use vega::bench;
+use vega::runtime::{Runtime, Tensor};
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: vega <command>\n\
+         commands:\n\
+           list                 list reproduction ids\n\
+           repro <id>|all       regenerate a paper table/figure\n\
+           runtime              show the PJRT artifact registry\n\
+           golden <artifact>    cross-check simulator vs PJRT artifact\n\
+           sim <kernel> [--cores N] [--size S]\n\
+                                kernels: matmul-i8|matmul-i16|matmul-i32|\n\
+                                matmul-f32|matmul-f16|fft|MATMUL|CONV|DWT|\n\
+                                FFT|FIR|IIR|KMEANS|SVM"
+    );
+    std::process::exit(2);
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("list") => {
+            for id in bench::ALL_WITH_FIG11 {
+                println!("{id}");
+            }
+        }
+        Some("repro") => {
+            let id = args.get(1).map(String::as_str).unwrap_or_else(|| usage());
+            if id == "all" {
+                for id in bench::ALL_WITH_FIG11 {
+                    println!("{}", bench::run(id).expect("known id"));
+                }
+            } else {
+                match bench::run(id) {
+                    Some(report) => println!("{report}"),
+                    None => {
+                        eprintln!("unknown reproduction id '{id}' (try `vega list`)");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        Some("runtime") => {
+            let rt = Runtime::load(Runtime::default_dir()).unwrap_or_else(|e| {
+                eprintln!("failed to load artifacts (run `make artifacts`): {e}");
+                std::process::exit(1);
+            });
+            println!("platform: {}", rt.platform());
+            for sig in &rt.manifest().entries {
+                println!("  {sig:?}");
+            }
+        }
+        Some("golden") => {
+            let name = args.get(1).map(String::as_str).unwrap_or("matmul_int8_64");
+            match golden_check(name) {
+                Ok(msg) => println!("{msg}"),
+                Err(e) => {
+                    eprintln!("golden check failed: {e}");
+                    std::process::exit(1);
+                }
+            }
+        }
+        Some("sim") => {
+            let kernel = args.get(1).map(String::as_str).unwrap_or_else(|| usage());
+            let mut cores = 8usize;
+            let mut size = 64usize;
+            let mut it = args[2..].iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--cores" => {
+                        cores = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
+                    }
+                    "--size" => {
+                        size = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
+                    }
+                    _ => usage(),
+                }
+            }
+            run_sim(kernel, cores, size);
+        }
+        _ => usage(),
+    }
+}
+
+/// `vega sim`: run one kernel on the simulated cluster and report the
+/// microarchitectural outcome (the downstream-user profiling tool).
+fn run_sim(kernel: &str, cores: usize, size: usize) {
+    use vega::cluster::{Cluster, L2_BASE};
+    use vega::common::Rng;
+    use vega::iss::FlatMem;
+    use vega::kernels::fp_matmul::{self, FpWidth};
+    use vega::kernels::int_matmul::{self, IntWidth};
+
+    let mut rng = Rng::new(0x51A1);
+    let mut cl = Cluster::new();
+    let mut l2 = FlatMem::new(L2_BASE, 64 * 1024);
+    let kr = match kernel {
+        "matmul-i8" | "matmul-i16" | "matmul-i32" => {
+            let w = match kernel {
+                "matmul-i8" => IntWidth::I8,
+                "matmul-i16" => IntWidth::I16,
+                _ => IntWidth::I32,
+            };
+            let lim = if w == IntWidth::I8 { 127 } else { 1000 };
+            let av: Vec<i32> =
+                (0..size * size).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+            let bv: Vec<i32> =
+                (0..size * size).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+            int_matmul::run(&mut cl, &mut l2, &av, &bv, size, size, size, w, cores).1
+        }
+        "matmul-f32" | "matmul-f16" => {
+            let w = if kernel == "matmul-f32" { FpWidth::F32 } else { FpWidth::F16x2 };
+            let av: Vec<f32> = (0..size * size).map(|_| rng.f32_pm1()).collect();
+            let bv: Vec<f32> = (0..size * size).map(|_| rng.f32_pm1()).collect();
+            fp_matmul::run(&mut cl, &mut l2, &av, &bv, size, size, size, w, cores).1
+        }
+        "fft" => {
+            let x: Vec<(f32, f32)> =
+                (0..size).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
+            vega::kernels::fp_fft::run(&mut cl, &mut l2, &x, FpWidth::F32, cores).1
+        }
+        name => vega::coordinator::bench_nsaa_kernel(name, FpWidth::F32),
+    };
+    let s = &kr.stats;
+    println!("kernel          : {} ({cores} cores, size {size})", kr.name);
+    println!("cycles          : {}", s.cycles);
+    println!("instructions    : {}", s.total.retired);
+    println!("IPC (aggregate) : {:.2}", s.total.retired as f64 / s.cycles as f64);
+    println!("MAC/cycle       : {:.2}", s.mac_per_cycle());
+    println!("FLOP/cycle      : {:.2}", s.flops_per_cycle());
+    println!("TCDM conflicts  : {:.1}%", s.tcdm_conflict_rate * 100.0);
+    println!("FPU contention  : {:.1}%", s.fpu_contention_rate * 100.0);
+    println!("barrier-gated   : {} core-cycles", s.barrier_gated_cycles);
+    for op in [vega::power::LV, vega::power::HV] {
+        let (gops, eff) = vega::coordinator::efficiency(&kr, op, 0.0);
+        println!(
+            "@{:<3} {:>4.0} MHz   : {:.2} GOPS, {:.0} GOPS/W",
+            op.name,
+            op.f_cl / 1e6,
+            gops,
+            eff
+        );
+    }
+}
+
+/// Execute an artifact through PJRT and cross-check the simulator's
+/// functional datapath against it (the silicon-vs-RTL equivalence role).
+fn golden_check(name: &str) -> Result<String, String> {
+    let rt = Runtime::load(Runtime::default_dir()).map_err(|e| e.to_string())?;
+    let sig = rt.signature(name).ok_or_else(|| format!("unknown artifact {name}"))?.clone();
+    let mut rng = vega::common::Rng::new(0x601D);
+    let inputs: Vec<Tensor> = sig
+        .inputs
+        .iter()
+        .map(|ts| Tensor::I8((0..ts.elems()).map(|_| rng.range_i64(-8, 8) as i8).collect()))
+        .collect();
+    let outs = rt.execute(name, &inputs).map_err(|e| e.to_string())?;
+
+    match name {
+        "matmul_int8_64" => {
+            let a: Vec<i32> = inputs[0].as_i8().unwrap().iter().map(|&v| v as i32).collect();
+            let b: Vec<i32> = inputs[1].as_i8().unwrap().iter().map(|&v| v as i32).collect();
+            // PJRT matmul is (M,K)x(K,N); the simulator kernel wants B
+            // column-major (N,K) — transpose.
+            let mut bt = vec![0i32; 64 * 64];
+            for r in 0..64 {
+                for c in 0..64 {
+                    bt[c * 64 + r] = b[r * 64 + c];
+                }
+            }
+            let mut cl = vega::cluster::Cluster::new();
+            let mut l2 = vega::iss::FlatMem::new(vega::cluster::L2_BASE, 4096);
+            let (c_sim, kr) = vega::kernels::int_matmul::run(
+                &mut cl,
+                &mut l2,
+                &a,
+                &bt,
+                64,
+                64,
+                64,
+                vega::kernels::int_matmul::IntWidth::I8,
+                8,
+            );
+            if c_sim != *outs[0].as_i32().unwrap() {
+                return Err("simulator/PJRT divergence on int8 matmul".into());
+            }
+            Ok(format!(
+                "golden OK: {name}: ISS (8 cores, {} cycles, {:.1} MAC/cycle) == PJRT/Pallas",
+                kr.stats.cycles,
+                kr.stats.mac_per_cycle()
+            ))
+        }
+        "hwce_conv3x3_16" => {
+            let x: Vec<i32> = inputs[0].as_i8().unwrap().iter().map(|&v| v as i32).collect();
+            let w: Vec<i32> = inputs[1].as_i8().unwrap().iter().map(|&v| v as i32).collect();
+            let sim = vega::hwce::conv3x3(&x, &w, 16, 16, 16, 16, vega::hwce::Precision::Int8);
+            if sim != *outs[0].as_i32().unwrap() {
+                return Err("HWCE datapath/PJRT divergence".into());
+            }
+            Ok(format!("golden OK: {name}: HWCE datapath == PJRT/Pallas"))
+        }
+        other => Ok(format!(
+            "executed {other} through PJRT ({} outputs); no simulator cross-check wired",
+            outs.len()
+        )),
+    }
+}

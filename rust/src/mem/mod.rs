@@ -1,0 +1,67 @@
+//! External/non-volatile memory channel models (§II-A, Table VI).
+//!
+//! Both channels are *functional* (they hold real bytes — DNN weights live
+//! here during inference, exactly as on the silicon) and *timed*
+//! (bandwidth anchored to the paper's measured sustained rates). Energy is
+//! charged per byte by the power ledger using the Table VI coefficients
+//! (with the erratum correction documented in DESIGN.md §4: MRAM
+//! 20 pJ/B, HyperRAM 880 pJ/B — "MRAM provides over 40× better energy
+//! efficiency").
+
+pub mod ecc;
+pub mod hyperram;
+pub mod mram;
+
+pub use hyperram::HyperRam;
+pub use mram::Mram;
+
+use crate::common::Cycles;
+
+/// A bulk-transfer channel into L2 (driven by the I/O DMA).
+pub trait BulkChannel {
+    /// Sustained read bandwidth in bytes per second.
+    fn read_bandwidth(&self) -> f64;
+    /// Sustained write bandwidth in bytes per second.
+    fn write_bandwidth(&self) -> f64;
+    /// Fixed per-transfer setup latency in SoC cycles (DMA programming +
+    /// protocol command phase).
+    fn setup_cycles(&self) -> Cycles;
+    /// Access energy per byte moved (pJ/B, Table VI).
+    fn energy_pj_per_byte(&self) -> f64;
+
+    /// Cycles for a transfer of `bytes` at SoC frequency `f_soc` Hz.
+    fn transfer_cycles(&self, bytes: u64, f_soc: f64, write: bool) -> Cycles {
+        let bw = if write { self.write_bandwidth() } else { self.read_bandwidth() };
+        let seconds = bytes as f64 / bw;
+        self.setup_cycles() + (seconds * f_soc).ceil() as Cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mram_is_40x_more_efficient_than_hyperram() {
+        let m = Mram::new();
+        let h = HyperRam::new(8 * 1024 * 1024);
+        let ratio = h.energy_pj_per_byte() / m.energy_pj_per_byte();
+        assert!(ratio > 40.0, "ratio = {ratio}"); // "over 40x better"
+    }
+
+    #[test]
+    fn table6_bandwidth_anchors() {
+        // MRAM <-> L2: 300 MB/s; HyperRAM <-> L2: 200 MB/s (Table VI,
+        // erratum-corrected: the extracted rows are swapped — see DESIGN.md §4),
+        // measured on a large transfer at the 250 MHz nominal point.
+        let f = 250e6;
+        let bytes = 1 << 20;
+        let m = Mram::new();
+        let h = HyperRam::new(8 * 1024 * 1024);
+        let mbps = |cyc: Cycles| bytes as f64 / (cyc as f64 / f) / 1e6;
+        let m_bw = mbps(m.transfer_cycles(bytes, f, false));
+        let h_bw = mbps(h.transfer_cycles(bytes, f, false));
+        assert!((m_bw - 300.0).abs() < 15.0, "MRAM bw = {m_bw} MB/s");
+        assert!((h_bw - 200.0).abs() < 10.0, "HyperRAM bw = {h_bw} MB/s");
+    }
+}

@@ -1,0 +1,177 @@
+//! Power and energy model (§III, Fig. 7, Tables I/VI/VIII).
+//!
+//! Activity-based: each switchable domain contributes
+//! `P = P_leak(V) + Ceff·V²·f·activity`, with activities taken from the
+//! simulator's counters (busy cores, HWCE occupancy, CWU duty) and every
+//! coefficient anchored to a paper measurement ([`tables`]). Memory
+//! traffic is charged per byte (Table VI). The [`pmu`] module exposes the
+//! power-mode state machine of Fig. 7; [`EnergyLedger`] integrates energy
+//! over an experiment.
+
+pub mod pmu;
+pub mod tables;
+
+pub use pmu::{Pmu, PowerMode, WakeSource};
+pub use tables::{OperatingPoint, HV, LV, NOM};
+
+/// Cluster-domain power at operating point `op`.
+///
+/// * `core_util` — average fraction of the 9 cores actively clocking
+///   (clock-gated cores at barriers don't switch).
+/// * `hwce_active` — HWCE occupancy fraction.
+pub fn cluster_power_w(op: OperatingPoint, core_util: f64, hwce_active: f64) -> f64 {
+    let v2f = op.vdd * op.vdd * op.f_cl;
+    let logic = tables::CLUSTER_CEFF
+        * (tables::CLUSTER_IDLE_FRACTION
+            + (1.0 - tables::CLUSTER_IDLE_FRACTION) * core_util.clamp(0.0, 1.0));
+    let hwce = tables::CLUSTER_CEFF * tables::HWCE_CEFF_FRACTION * hwce_active.clamp(0.0, 1.0);
+    tables::cluster_leak_w(op.vdd) + (logic + hwce) * v2f
+}
+
+/// SoC-domain power (FC + L2 + peripherals).
+pub fn soc_power_w(op: OperatingPoint, fc_util: f64) -> f64 {
+    let v2f = op.vdd * op.vdd * op.f_soc;
+    let ceff = tables::SOC_CEFF
+        * (tables::SOC_IDLE_FRACTION
+            + (1.0 - tables::SOC_IDLE_FRACTION) * fc_util.clamp(0.0, 1.0));
+    tables::soc_leak_w(op.vdd) + ceff * v2f
+}
+
+/// CWU power at clock `f_clk` with measured datapath duty factor `duty`
+/// (Table I decomposition). `pads` folds in the SPI pad toggling — the
+/// cognitive-sleep headline (1.7 µW) excludes pads, Table I's 2.97 µW
+/// includes them.
+pub fn cwu_power_w(f_clk: f64, duty: f64, pads: bool) -> f64 {
+    let dp = tables::CWU_DATAPATH_W_PER_HZ * f_clk * (duty / tables::CWU_REF_DUTY).min(3.0);
+    let pad = if pads { tables::CWU_PADS_W_PER_HZ * f_clk } else { 0.0 };
+    tables::CWU_LEAK_W + dp + pad
+}
+
+/// L2 retention power for `bytes` of state-retentive SRAM (16 kB cuts).
+pub fn retention_power_w(bytes: usize) -> f64 {
+    if bytes == 0 {
+        return 0.0;
+    }
+    let cuts = bytes.div_ceil(crate::soc::l2::RETENTION_CUT_BYTES);
+    tables::RETENTION_FIRST_CUT_W + (cuts.saturating_sub(1)) as f64 * tables::RETENTION_PER_CUT_W
+}
+
+/// Energy integration over one experiment, split the way Fig. 11 reports
+/// it (compute vs L2↔L1 vs L3 memory traffic).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyLedger {
+    pub compute_pj: f64,
+    pub l2l1_pj: f64,
+    pub l1_pj: f64,
+    pub mram_pj: f64,
+    pub hyperram_pj: f64,
+}
+
+impl EnergyLedger {
+    /// Charge domain power over a time interval.
+    pub fn add_compute(&mut self, power_w: f64, seconds: f64) {
+        self.compute_pj += power_w * seconds * 1e12;
+    }
+
+    pub fn add_l2l1(&mut self, bytes: u64) {
+        self.l2l1_pj += bytes as f64 * tables::PJ_PER_BYTE_L2L1;
+    }
+
+    pub fn add_l1(&mut self, bytes: u64) {
+        self.l1_pj += bytes as f64 * tables::PJ_PER_BYTE_L1;
+    }
+
+    pub fn add_mram(&mut self, bytes: u64) {
+        self.mram_pj += bytes as f64 * tables::PJ_PER_BYTE_MRAM;
+    }
+
+    pub fn add_hyperram(&mut self, bytes: u64) {
+        self.hyperram_pj += bytes as f64 * tables::PJ_PER_BYTE_HYPERRAM;
+    }
+
+    pub fn total_pj(&self) -> f64 {
+        self.compute_pj + self.l2l1_pj + self.l1_pj + self.mram_pj + self.hyperram_pj
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.total_pj() / 1e9
+    }
+
+    pub fn merge(&mut self, o: &EnergyLedger) {
+        self.compute_pj += o.compute_pj;
+        self.l2l1_pj += o.l2l1_pj;
+        self.l1_pj += o.l1_pj;
+        self.mram_pj += o.mram_pj;
+        self.hyperram_pj += o.hyperram_pj;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::rel_err;
+
+    #[test]
+    fn cwu_matches_table1_totals() {
+        // 2.97 µW @ 32 kHz, 14.9 µW @ 200 kHz (with pads, reference duty).
+        let p32 = cwu_power_w(32e3, tables::CWU_REF_DUTY, true);
+        let p200 = cwu_power_w(200e3, tables::CWU_REF_DUTY, true);
+        assert!(rel_err(p32, 2.97e-6) < 0.02, "p32 = {p32}");
+        assert!(rel_err(p200, 14.9e-6) < 0.02, "p200 = {p200}");
+    }
+
+    #[test]
+    fn cognitive_sleep_is_1_7_uw() {
+        // §III: 1.7 µW cognitive sleep = CWU running at 32 kHz, no pads
+        // attributed (datapath + leakage).
+        let p = cwu_power_w(32e3, tables::CWU_REF_DUTY, false);
+        assert!(rel_err(p, 1.7e-6) < 0.03, "p = {p}");
+    }
+
+    #[test]
+    fn retention_range_matches_table8() {
+        // 16 kB → +1.1 µW; 1.6 MB → +(1.1 + 99×1.221) ≈ 122 µW.
+        let lo = retention_power_w(16 * 1024);
+        let hi = retention_power_w(1600 * 1024);
+        assert!(rel_err(lo, 1.1e-6) < 0.01);
+        assert!(rel_err(hi, 122e-6) < 0.02, "hi = {hi}");
+        assert_eq!(retention_power_w(0), 0.0);
+    }
+
+    #[test]
+    fn cluster_power_within_envelope() {
+        // Full blast (8 cores + HWCE) at HV must stay within the 49.4 mW
+        // power envelope of Table III/VIII.
+        let p = cluster_power_w(HV, 1.0, 1.0) + soc_power_w(HV, 0.3);
+        assert!(p < 49.4e-3 * 1.10, "p = {}", p * 1e3);
+        assert!(p > 30e-3, "p = {}", p * 1e3);
+    }
+
+    #[test]
+    fn lv_cluster_power_anchors_614_gops_per_w() {
+        // ~7 GOPS at LV on int8 matmul at ≈614 GOPS/W ⇒ ≈11.5 mW.
+        let p = cluster_power_w(LV, 1.0, 0.0) + soc_power_w(LV, 0.1);
+        assert!(p > 8e-3 && p < 14e-3, "p = {}", p * 1e3);
+    }
+
+    #[test]
+    fn idle_cluster_burns_much_less() {
+        let idle = cluster_power_w(HV, 0.0, 0.0);
+        let busy = cluster_power_w(HV, 1.0, 0.0);
+        assert!(idle < 0.35 * busy);
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut e = EnergyLedger::default();
+        e.add_mram(1000);
+        e.add_hyperram(1000);
+        assert!((e.mram_pj - 20e3).abs() < 1.0);
+        assert!((e.hyperram_pj - 880e3).abs() < 1.0);
+        e.add_compute(10e-3, 1e-3); // 10 µJ = 1e7 pJ
+        assert!((e.compute_pj - 1e7).abs() < 1.0);
+        let mut f = EnergyLedger::default();
+        f.merge(&e);
+        assert_eq!(f.total_pj(), e.total_pj());
+    }
+}

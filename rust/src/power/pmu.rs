@@ -1,0 +1,222 @@
+//! The embedded power management unit: Fig. 7's power modes and the
+//! wake-up machinery (§III).
+//!
+//! Modes, lowest to highest power: deep sleep → cognitive sleep (CWU on)
+//! → retentive sleep (+ L2 retention, optionally + CWU) → SoC active →
+//! cluster active. Wake-up sources: external pad, RTC, CWU interrupt.
+//! After wake-up, boot is *warm* from retentive L2 (fast) or from MRAM
+//! (zero retention power, but the image must be restored into L2 first —
+//! the duty-cycle trade-off of §II-A).
+
+use crate::common::Cycles;
+use crate::mem::BulkChannel;
+
+use super::tables::OperatingPoint;
+
+/// Wake-up sources of the PMU (Table VIII row "Wake-up Sources": GPIO,
+/// RTC, Cognitive).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WakeSource {
+    ExternalPad,
+    Rtc,
+    Cognitive,
+}
+
+/// Fig. 7 power modes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PowerMode {
+    /// Everything off except PMU/RTC/POR.
+    DeepSleep,
+    /// CWU classifying autonomously; everything else off.
+    CognitiveSleep { retentive_l2_bytes: usize },
+    /// L2 retention without the CWU (pad/RTC wake only).
+    RetentiveSleep { retentive_l2_bytes: usize },
+    /// FC + SoC domain on.
+    SocActive { op: OperatingPoint, fc_util: f64 },
+    /// SoC + cluster domains on.
+    ClusterActive {
+        op: OperatingPoint,
+        fc_util: f64,
+        core_util: f64,
+        hwce_active: f64,
+    },
+}
+
+impl PowerMode {
+    /// Total chip power in this mode.
+    pub fn power_w(&self) -> f64 {
+        use super::tables::DEEP_SLEEP_W;
+        match *self {
+            PowerMode::DeepSleep => DEEP_SLEEP_W,
+            PowerMode::CognitiveSleep { retentive_l2_bytes } => {
+                // 1.7 µW base (§III) + retention.
+                super::cwu_power_w(32e3, super::tables::CWU_REF_DUTY, false)
+                    + super::retention_power_w(retentive_l2_bytes)
+            }
+            PowerMode::RetentiveSleep { retentive_l2_bytes } => {
+                DEEP_SLEEP_W + super::retention_power_w(retentive_l2_bytes)
+            }
+            PowerMode::SocActive { op, fc_util } => super::soc_power_w(op, fc_util),
+            PowerMode::ClusterActive { op, fc_util, core_util, hwce_active } => {
+                super::soc_power_w(op, fc_util)
+                    + super::cluster_power_w(op, core_util, hwce_active)
+            }
+        }
+    }
+}
+
+/// Boot strategy after wake-up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BootPath {
+    /// Program/data retained in L2: resume immediately.
+    WarmFromL2,
+    /// Restore `image_bytes` from MRAM into L2 first.
+    WarmFromMram { image_bytes: u64 },
+}
+
+/// The PMU state machine.
+pub struct Pmu {
+    pub mode: PowerMode,
+    /// Wake events observed (source, at simulated time seconds).
+    pub wake_log: Vec<(WakeSource, f64)>,
+    /// Domain power-switch latency in SoC cycles (DC-DC settle + reset).
+    pub domain_switch_cycles: Cycles,
+}
+
+impl Pmu {
+    pub fn new() -> Self {
+        Self {
+            mode: PowerMode::DeepSleep,
+            wake_log: Vec::new(),
+            domain_switch_cycles: 2_000,
+        }
+    }
+
+    pub fn enter(&mut self, mode: PowerMode) {
+        self.mode = mode;
+    }
+
+    /// Handle a wake event: transition to SoC-active and return the
+    /// wake-up latency in seconds at `op`.
+    pub fn wake(
+        &mut self,
+        source: WakeSource,
+        at_seconds: f64,
+        op: OperatingPoint,
+        boot: BootPath,
+        mram: &dyn BulkChannel,
+    ) -> f64 {
+        assert!(
+            !matches!(self.mode, PowerMode::SocActive { .. } | PowerMode::ClusterActive { .. }),
+            "wake from an active mode"
+        );
+        self.wake_log.push((source, at_seconds));
+        let switch = self.domain_switch_cycles as f64 / op.f_soc;
+        let boot_t = match boot {
+            BootPath::WarmFromL2 => 0.0,
+            BootPath::WarmFromMram { image_bytes } => {
+                mram.transfer_cycles(image_bytes, op.f_soc, false) as f64 / op.f_soc
+            }
+        };
+        self.mode = PowerMode::SocActive { op, fc_util: 0.5 };
+        switch + boot_t
+    }
+
+    /// Average power of a duty-cycled deployment: `active_s` seconds in
+    /// `active` mode per `period_s` seconds spent otherwise in `sleep`
+    /// mode (the TinyML lifetime equation that motivates the CWU, §II-B).
+    pub fn duty_cycled_power_w(
+        active: PowerMode,
+        sleep: PowerMode,
+        active_s: f64,
+        period_s: f64,
+    ) -> f64 {
+        assert!(active_s <= period_s);
+        (active.power_w() * active_s + sleep.power_w() * (period_s - active_s)) / period_s
+    }
+}
+
+impl Default for Pmu {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mem::Mram;
+    use crate::power::tables::{HV, NOM};
+
+    #[test]
+    fn mode_power_ordering() {
+        let deep = PowerMode::DeepSleep.power_w();
+        let cog = PowerMode::CognitiveSleep { retentive_l2_bytes: 0 }.power_w();
+        let ret = PowerMode::CognitiveSleep { retentive_l2_bytes: 128 * 1024 }.power_w();
+        let soc = PowerMode::SocActive { op: NOM, fc_util: 0.5 }.power_w();
+        let cl = PowerMode::ClusterActive {
+            op: HV,
+            fc_util: 0.3,
+            core_util: 1.0,
+            hwce_active: 1.0,
+        }
+        .power_w();
+        assert!(deep < cog && cog < ret && ret < soc && soc < cl);
+        // Sanity: µW sleep, mW active.
+        assert!(ret < 50e-6);
+        assert!(soc > 1e-3);
+    }
+
+    #[test]
+    fn wake_from_mram_pays_restore_time() {
+        let mram = Mram::new();
+        let mut pmu = Pmu::new();
+        pmu.enter(PowerMode::CognitiveSleep { retentive_l2_bytes: 0 });
+        let t_mram = pmu.wake(
+            WakeSource::Cognitive,
+            1.0,
+            NOM,
+            BootPath::WarmFromMram { image_bytes: 256 * 1024 },
+            &mram,
+        );
+        let mut pmu2 = Pmu::new();
+        pmu2.enter(PowerMode::RetentiveSleep { retentive_l2_bytes: 256 * 1024 });
+        let t_l2 = pmu2.wake(WakeSource::Rtc, 1.0, NOM, BootPath::WarmFromL2, &mram);
+        assert!(t_mram > t_l2);
+        // 256 kB at 300 MB/s ≈ 0.9 ms.
+        assert!(t_mram > 0.6e-3 && t_mram < 2e-3, "t = {t_mram}");
+        assert_eq!(pmu.wake_log.len(), 1);
+        assert_eq!(pmu.wake_log[0].0, WakeSource::Cognitive);
+    }
+
+    #[test]
+    fn mram_boot_wins_at_low_duty_cycle() {
+        // The §II-A trade-off: zero retention power vs restore cost.
+        // At a very low duty cycle, MRAM boot (deep sleep) beats paying
+        // 1.6 MB retention continuously.
+        let active = PowerMode::SocActive { op: NOM, fc_util: 1.0 };
+        let sleep_ret = PowerMode::RetentiveSleep { retentive_l2_bytes: 1600 * 1024 };
+        let sleep_mram = PowerMode::DeepSleep;
+        // One 10 ms activation per 10 min.
+        let p_ret = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 600.0);
+        // MRAM path: add the restore time as extra active time.
+        let p_mram = Pmu::duty_cycled_power_w(active, sleep_mram, 10e-3 + 8e-3, 600.0);
+        assert!(p_mram < p_ret, "mram {p_mram} vs ret {p_ret}");
+
+        // At a high duty cycle (4 activations/s) the per-wake MRAM
+        // restore energy exceeds the standing retention power: retention
+        // wins. (Crossover ≈ 2.7 wakes/s for a 256 kB image at NOM.)
+        let p_ret_hi = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 0.25);
+        let p_mram_hi = Pmu::duty_cycled_power_w(active, sleep_mram, 18e-3, 0.25);
+        assert!(p_ret_hi < p_mram_hi, "ret {p_ret_hi} vs mram {p_mram_hi}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn cannot_wake_from_active() {
+        let mram = Mram::new();
+        let mut pmu = Pmu::new();
+        pmu.enter(PowerMode::SocActive { op: NOM, fc_util: 0.5 });
+        pmu.wake(WakeSource::Rtc, 0.0, NOM, BootPath::WarmFromL2, &mram);
+    }
+}

@@ -1,0 +1,154 @@
+//! Power-model calibration constants.
+//!
+//! Every constant is anchored to a measurement in the paper (cited per
+//! line) or documented as an assumption. The activity-based model is
+//! P = P_leak(V) + Ceff·V²·f·activity per switchable domain; DESIGN.md §8
+//! lists the anchor points, `rust/tests/paper_anchors.rs` asserts that the
+//! headline numbers *emerge* from simulation + this table within
+//! tolerance.
+
+/// An operating point of the SoC/cluster logic domains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub name: &'static str,
+    pub vdd: f64,
+    pub f_soc: f64,
+    pub f_cl: f64,
+}
+
+/// Low-voltage point (Fig. 8 "LV"): 0.6 V, 220 MHz.
+pub const LV: OperatingPoint =
+    OperatingPoint { name: "LV", vdd: 0.6, f_soc: 220e6, f_cl: 220e6 };
+
+/// Nominal DNN point (§IV-B): 0.8 V, 250 MHz.
+pub const NOM: OperatingPoint =
+    OperatingPoint { name: "NOM", vdd: 0.8, f_soc: 250e6, f_cl: 250e6 };
+
+/// High-voltage point (Fig. 8 "HV"): 0.8 V, 450 MHz.
+pub const HV: OperatingPoint =
+    OperatingPoint { name: "HV", vdd: 0.8, f_soc: 450e6, f_cl: 450e6 };
+
+/// DNN deployment point: 250 MHz with the cluster DVFS'd to 0.66 V.
+/// §IV-B quotes Vdd_SOC = 0.8 V / 250 MHz; the measured MobileNetV2
+/// energy (1.19 mJ over ~80 ms ⇒ ≈15 mW total) is only consistent with
+/// the *cluster* domain running below 0.8 V at that frequency — at the
+/// paper's own LV-calibrated Ceff, 0.8 V/250 MHz would burn ~23 mW. The
+/// measured 1.19 mJ / >10 fps / 15.5 MAC-per-cycle triple is jointly
+/// consistent with the cluster near 0.6 V at 250 MHz (220 MHz is the
+/// spec point at 0.6 V; 250 is marginal-but-plausible silicon); this
+/// calibration choice is documented in EXPERIMENTS.md.
+pub const DNN: OperatingPoint =
+    OperatingPoint { name: "DNN", vdd: 0.60, f_soc: 250e6, f_cl: 250e6 };
+
+// ---------------------------------------------------------------------
+// Cluster domain (9 cores + TCDM + interconnect + FPUs + HWCE).
+// ---------------------------------------------------------------------
+
+/// Effective switched capacitance of the full 8-core compute cluster at
+/// 100% utilisation. Calibrated so the LV int8-matmul point lands at the
+/// Table VIII anchor: ≈614 GOPS/W at ≈7 GOPS ⇒ ≈11.5 mW at 0.6 V/220 MHz.
+pub const CLUSTER_CEFF: f64 = 132e-12;
+
+/// Fraction of cluster Ceff that clocks even with idle (clock-gated)
+/// cores: interconnect, shared I$, clock tree.
+pub const CLUSTER_IDLE_FRACTION: f64 = 0.15;
+
+/// HWCE effective capacitance relative to the cluster (27 MACs + streams;
+/// far smaller than 8 cores — the accelerator-efficiency premise).
+pub const HWCE_CEFF_FRACTION: f64 = 0.18;
+
+/// Cluster-domain leakage (22 nm FD-SOI, poly-biased): measured-range
+/// assumption anchored to the power floor of Fig. 6.
+pub fn cluster_leak_w(vdd: f64) -> f64 {
+    // Exponential-ish with voltage; 0.8 mW @ 0.6 V, 1.6 mW @ 0.8 V.
+    0.8e-3 * (vdd / 0.6).powi(3)
+}
+
+// ---------------------------------------------------------------------
+// SoC domain (FC + L2 + peripherals).
+// ---------------------------------------------------------------------
+
+/// SoC-domain Ceff at full FC activity. Anchored to §III: FC active mode
+/// delivers 1.9 GOPS at 200 GOPS/W (≈9.5 mW) at HV.
+pub const SOC_CEFF: f64 = 28e-12;
+
+/// SoC domain share that clocks while the FC idles (L2 banks, I/O DMA,
+/// peripheral bridge). §III floor: 0.7 mW SoC-active minimum.
+pub const SOC_IDLE_FRACTION: f64 = 0.22;
+
+pub fn soc_leak_w(vdd: f64) -> f64 {
+    0.5e-3 * (vdd / 0.6).powi(3)
+}
+
+// ---------------------------------------------------------------------
+// Always-on domain + sleep/retention (Table VIII, Fig. 7).
+// ---------------------------------------------------------------------
+
+/// Deep sleep floor (PMU + RTC + POR from VBAT): the 1.2 µW bottom of the
+/// Table III power range.
+pub const DEEP_SLEEP_W: f64 = 1.2e-6;
+
+/// L2 retention: Table VIII "2.8–123.7 µW (16 kB–1.6 MB s.r.)" on top of
+/// the 1.7 µW cognitive-sleep base ⇒ first cut 1.1 µW, then 1.22 µW/cut.
+pub const RETENTION_FIRST_CUT_W: f64 = 1.1e-6;
+pub const RETENTION_PER_CUT_W: f64 = 1.221e-6;
+
+// ---------------------------------------------------------------------
+// CWU (Table I).
+// ---------------------------------------------------------------------
+
+/// CWU datapath dynamic power per Hz of its clock, at the reference
+/// workload (3×16-bit channels @ 150 SPS, language/EMG classification):
+/// 0.99 µW @ 32 kHz and 6.21 µW @ 200 kHz ⇒ ~31 pW/kHz (linear ✓).
+pub const CWU_DATAPATH_W_PER_HZ: f64 = 0.99e-6 / 32_000.0;
+
+/// CWU SPI pad dynamic power per Hz: 1.28 µW @ 32 kHz (Table I).
+pub const CWU_PADS_W_PER_HZ: f64 = 1.28e-6 / 32_000.0;
+
+/// CWU leakage (UHVT logic at 0.6 V): 0.70 µW at both clock rates.
+pub const CWU_LEAK_W: f64 = 0.70e-6;
+
+/// Datapath duty factor of the reference workload the Table I numbers
+/// were measured at (the dynamic term scales with measured duty). This is
+/// the duty the simulated reference workload (3ch x 16-bit EMG HDC at
+/// 150 SPS) actually produces — so the Table I datapath power is exact at
+/// the reference point and scales with microcode complexity elsewhere.
+pub const CWU_REF_DUTY: f64 = 0.178;
+
+// ---------------------------------------------------------------------
+// Memory access energies (Table VI; erratum-corrected, DESIGN.md §4).
+// ---------------------------------------------------------------------
+
+pub const PJ_PER_BYTE_HYPERRAM: f64 = 880.0;
+pub const PJ_PER_BYTE_MRAM: f64 = 20.0;
+pub const PJ_PER_BYTE_L2L1: f64 = 1.4;
+pub const PJ_PER_BYTE_L1: f64 = 0.9;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cwu_table1_scaling_is_linear() {
+        // The 200 kHz column must follow from the 32 kHz calibration.
+        let dp_200k = CWU_DATAPATH_W_PER_HZ * 200_000.0;
+        assert!((dp_200k - 6.21e-6).abs() / 6.21e-6 < 0.02, "dp = {dp_200k}");
+        let pads_200k = CWU_PADS_W_PER_HZ * 200_000.0;
+        assert!((pads_200k - 8.0e-6).abs() / 8.0e-6 < 0.02);
+    }
+
+    #[test]
+    fn leakage_grows_with_voltage() {
+        assert!(cluster_leak_w(0.8) > cluster_leak_w(0.6));
+        assert!(soc_leak_w(0.8) > soc_leak_w(0.6));
+    }
+
+    #[test]
+    fn operating_points_match_paper() {
+        assert_eq!(LV.f_cl, 220e6);
+        assert_eq!(HV.f_cl, 450e6);
+        assert_eq!(NOM.f_cl, 250e6);
+        assert_eq!(LV.vdd, 0.6);
+        assert_eq!(HV.vdd, 0.8);
+    }
+}

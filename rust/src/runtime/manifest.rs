@@ -1,0 +1,171 @@
+//! Parser for `artifacts/manifest.txt` (written by `aot.py`).
+//!
+//! Line format: `name;in=s8[64,64],s8[64,64];out=s32[64,64]`
+
+use std::path::Path;
+
+use crate::common::{Result, VegaError};
+
+use super::DType;
+
+/// One tensor in an artifact signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.elems() * self.dtype.size_bytes()
+    }
+
+    fn parse(s: &str) -> Result<Self> {
+        let (dt, rest) = s
+            .split_once('[')
+            .ok_or_else(|| VegaError::Runtime(format!("bad tensor sig {s}")))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| VegaError::Runtime(format!("bad tensor sig {s}")))?;
+        let shape = dims
+            .split(',')
+            .filter(|d| !d.is_empty())
+            .map(|d| {
+                d.parse::<usize>()
+                    .map_err(|e| VegaError::Runtime(format!("bad dim {d}: {e}")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(TensorSig { dtype: DType::parse(dt)?, shape })
+    }
+}
+
+/// Split `s8[1,2],f32[3]` on the commas *between* tensors.
+fn split_tensors(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '[' => depth += 1,
+            ']' => depth = depth.saturating_sub(1),
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+/// One artifact's full signature.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Signature {
+    pub name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+impl Signature {
+    pub fn parse(line: &str) -> Result<Self> {
+        let mut parts = line.trim().split(';');
+        let name = parts
+            .next()
+            .filter(|n| !n.is_empty())
+            .ok_or_else(|| VegaError::Runtime(format!("bad manifest line {line}")))?
+            .to_string();
+        let ins = parts
+            .next()
+            .and_then(|p| p.strip_prefix("in="))
+            .ok_or_else(|| VegaError::Runtime(format!("missing in= in {line}")))?;
+        let outs = parts
+            .next()
+            .and_then(|p| p.strip_prefix("out="))
+            .ok_or_else(|| VegaError::Runtime(format!("missing out= in {line}")))?;
+        Ok(Signature {
+            name,
+            inputs: split_tensors(ins)
+                .iter()
+                .map(|t| TensorSig::parse(t))
+                .collect::<Result<_>>()?,
+            outputs: split_tensors(outs)
+                .iter()
+                .map(|t| TensorSig::parse(t))
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<Signature>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let entries = text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(Signature::parse)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_matmul_line() {
+        let sig =
+            Signature::parse("matmul_int8_64;in=s8[64,64],s8[64,64];out=s32[64,64]").unwrap();
+        assert_eq!(sig.name, "matmul_int8_64");
+        assert_eq!(sig.inputs.len(), 2);
+        assert_eq!(sig.inputs[0].shape, vec![64, 64]);
+        assert_eq!(sig.inputs[0].dtype, DType::I8);
+        assert_eq!(sig.outputs[0].dtype, DType::I32);
+        assert_eq!(sig.inputs[0].elems(), 4096);
+        assert_eq!(sig.outputs[0].size_bytes(), 4096 * 4);
+    }
+
+    #[test]
+    fn parses_multirank_tensors() {
+        let sig = Signature::parse("x;in=s8[18,18,16],s8[3,3,16,16];out=s32[16,16,16]").unwrap();
+        assert_eq!(sig.inputs[1].shape, vec![3, 3, 16, 16]);
+        assert_eq!(sig.outputs[0].elems(), 16 * 16 * 16);
+    }
+
+    #[test]
+    fn split_tensors_respects_brackets() {
+        assert_eq!(split_tensors("s8[1,2],f32[3]"), vec!["s8[1,2]", "f32[3]"]);
+        assert_eq!(split_tensors("s8[1]"), vec!["s8[1]"]);
+    }
+
+    #[test]
+    fn manifest_parse_multiline() {
+        let m = Manifest::parse("a;in=s8[1];out=s8[1]\n\nb;in=f32[2];out=f32[2]\n").unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.entries[1].name, "b");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Signature::parse("nope").is_err());
+        assert!(Signature::parse("x;in=s8[a];out=s8[1]").is_err());
+        assert!(Signature::parse("x;in=u64[1];out=s8[1]").is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT runtime bridge (Layer-3 ← Layer-2/1).
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`,
+//! compiles them once on the PJRT CPU client, and executes them from the
+//! coordinator. In this reproduction the artifacts serve as *golden
+//! functional models*: the simulator's HWCE datapath and PULP-NN kernels
+//! are checked bit-for-bit against the JAX/Pallas numerics, playing the
+//! role silicon-vs-RTL equivalence plays for the real chip.
+//!
+//! Python never runs on this path: after `make artifacts` the `vega`
+//! binary is self-contained.
+
+mod manifest;
+
+pub use manifest::{Manifest, Signature, TensorSig};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::common::{Result, VegaError};
+
+/// Supported artifact element types (matching `aot.py`'s manifest names).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    I8,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "s8" => Ok(DType::I8),
+            "s32" => Ok(DType::I32),
+            "f32" => Ok(DType::F32),
+            other => Err(VegaError::Runtime(format!("unsupported dtype {other}"))),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::I8 => 1,
+            DType::I32 | DType::F32 => 4,
+        }
+    }
+}
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    F32(Vec<f32>),
+}
+
+impl Tensor {
+    pub fn dtype(&self) -> DType {
+        match self {
+            Tensor::I8(_) => DType::I8,
+            Tensor::I32(_) => DType::I32,
+            Tensor::F32(_) => DType::F32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::I8(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+            Tensor::F32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match self {
+            Tensor::I8(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self, shape: &[usize]) -> Result<xla::Literal> {
+        // i8 implements ArrayElement but not NativeType in xla 0.1.6, so
+        // literals are built from raw bytes (little-endian host == XLA
+        // layout for these scalar types).
+        let (ty, bytes): (xla::ElementType, Vec<u8>) = match self {
+            Tensor::I8(v) => (
+                xla::ElementType::S8,
+                v.iter().map(|&x| x as u8).collect(),
+            ),
+            Tensor::I32(v) => (
+                xla::ElementType::S32,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+            Tensor::F32(v) => (
+                xla::ElementType::F32,
+                v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            ),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, shape, &bytes)
+            .map_err(|e| VegaError::Runtime(format!("create literal: {e}")))
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let ty = lit
+            .ty()
+            .map_err(|e| VegaError::Runtime(format!("literal ty: {e}")))?;
+        let err = |e: xla::Error| VegaError::Runtime(format!("literal to_vec: {e}"));
+        match ty {
+            xla::ElementType::S8 => Ok(Tensor::I8(lit.to_vec().map_err(err)?)),
+            xla::ElementType::S32 => Ok(Tensor::I32(lit.to_vec().map_err(err)?)),
+            xla::ElementType::F32 => Ok(Tensor::F32(lit.to_vec().map_err(err)?)),
+            other => Err(VegaError::Runtime(format!("unsupported output {other:?}"))),
+        }
+    }
+}
+
+/// The compiled-artifact registry: one PJRT executable per HLO artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load `manifest.txt` and compile every artifact in `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| VegaError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        let mut execs = HashMap::new();
+        for sig in &manifest.entries {
+            let path = dir.join(format!("{}.hlo.txt", sig.name));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().expect("utf-8 path"),
+            )
+            .map_err(|e| VegaError::Runtime(format!("parse {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| VegaError::Runtime(format!("compile {}: {e}", sig.name)))?;
+            execs.insert(sig.name.clone(), exe);
+        }
+        Ok(Self { client, manifest, execs, dir })
+    }
+
+    /// The default artifact directory (`$VEGA_ARTIFACTS` or `./artifacts`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("VEGA_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn signature(&self, name: &str) -> Option<&Signature> {
+        self.manifest.entries.iter().find(|s| s.name == name)
+    }
+
+    /// Execute artifact `name` with `inputs`; returns the output tensors.
+    ///
+    /// Inputs are validated against the manifest signature (dtype, element
+    /// count) before crossing the FFI boundary.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let sig = self
+            .signature(name)
+            .ok_or_else(|| VegaError::Runtime(format!("unknown artifact {name}")))?
+            .clone();
+        if inputs.len() != sig.inputs.len() {
+            return Err(VegaError::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                sig.inputs.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, ts)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            if t.dtype() != ts.dtype || t.len() != ts.elems() {
+                return Err(VegaError::Runtime(format!(
+                    "{name}: input {i} mismatch: got {:?}x{}, want {:?}x{}",
+                    t.dtype(),
+                    t.len(),
+                    ts.dtype,
+                    ts.elems()
+                )));
+            }
+            literals.push(t.to_literal(&ts.shape)?);
+        }
+        let exe = &self.execs[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| VegaError::Runtime(format!("execute {name}: {e}")))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| VegaError::Runtime(format!("to_literal {name}: {e}")))?;
+        // aot.py lowers with return_tuple=True: unpack the root tuple.
+        let parts = root
+            .to_tuple()
+            .map_err(|e| VegaError::Runtime(format!("untuple {name}: {e}")))?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse_roundtrip() {
+        assert_eq!(DType::parse("s8").unwrap(), DType::I8);
+        assert_eq!(DType::parse("s32").unwrap(), DType::I32);
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert!(DType::parse("u8").is_err());
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::I8(vec![1, 2, 3]);
+        assert_eq!(t.dtype(), DType::I8);
+        assert_eq!(t.len(), 3);
+        assert!(t.as_i32().is_none());
+        assert_eq!(t.as_i8().unwrap(), &[1, 2, 3]);
+    }
+}

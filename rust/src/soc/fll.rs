@@ -1,0 +1,101 @@
+//! Frequency-locked loops (§III): three FLLs multiply the 32 kHz crystal
+//! up to the SoC, cluster and peripheral clocks.
+
+use crate::common::Hertz;
+
+/// Reference crystal (QOSC).
+pub const F_REF: Hertz = 32_768.0;
+
+/// One FLL channel.
+#[derive(Debug, Clone)]
+pub struct Fll {
+    pub name: &'static str,
+    mult: u32,
+    /// Reference cycles to re-lock after a multiplier change.
+    pub lock_ref_cycles: u32,
+}
+
+impl Fll {
+    pub fn new(name: &'static str) -> Self {
+        Self { name, mult: 1, lock_ref_cycles: 16 }
+    }
+
+    pub fn freq(&self) -> Hertz {
+        F_REF * self.mult as f64
+    }
+
+    /// Program the output frequency (rounded to an integer multiple of the
+    /// reference); returns the re-lock time in seconds.
+    pub fn set_freq(&mut self, target: Hertz) -> f64 {
+        let m = (target / F_REF).round().max(1.0) as u32;
+        let changed = m != self.mult;
+        self.mult = m;
+        if changed {
+            self.lock_ref_cycles as f64 / F_REF
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The three Vega FLLs.
+#[derive(Debug, Clone)]
+pub struct ClockTree {
+    pub soc: Fll,
+    pub cluster: Fll,
+    pub periph: Fll,
+}
+
+impl ClockTree {
+    /// Nominal operating point of the DNN experiments (§IV-B):
+    /// f_SoC = f_CL = 250 MHz.
+    pub fn nominal() -> Self {
+        let mut t = Self {
+            soc: Fll::new("soc"),
+            cluster: Fll::new("cluster"),
+            periph: Fll::new("periph"),
+        };
+        t.soc.set_freq(250e6);
+        t.cluster.set_freq(250e6);
+        t.periph.set_freq(100e6);
+        t
+    }
+
+    /// Low-voltage point: 0.6 V / 220 MHz (Fig. 8 "LV").
+    pub fn low_voltage() -> Self {
+        let mut t = Self::nominal();
+        t.soc.set_freq(220e6);
+        t.cluster.set_freq(220e6);
+        t
+    }
+
+    /// High-voltage point: 0.8 V / 450 MHz (Fig. 8 "HV").
+    pub fn high_voltage() -> Self {
+        let mut t = Self::nominal();
+        t.soc.set_freq(450e6);
+        t.cluster.set_freq(450e6);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fll_multiplies_reference() {
+        let mut f = Fll::new("t");
+        let lock = f.set_freq(250e6);
+        assert!(lock > 0.0);
+        let rel = (f.freq() - 250e6).abs() / 250e6;
+        assert!(rel < 1e-4, "freq = {}", f.freq());
+        // Same frequency again: no re-lock.
+        assert_eq!(f.set_freq(f.freq()), 0.0);
+    }
+
+    #[test]
+    fn operating_points() {
+        assert!((ClockTree::high_voltage().cluster.freq() - 450e6).abs() < 1e4);
+        assert!((ClockTree::low_voltage().cluster.freq() - 220e6).abs() < 1e4);
+    }
+}

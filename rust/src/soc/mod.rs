@@ -1,0 +1,111 @@
+//! The SoC domain (§II-A): fabric controller, L2, I/O DMA, clocks — and
+//! the top-level [`VegaSoc`] composing every subsystem of Fig. 1.
+
+pub mod fll;
+pub mod io_dma;
+pub mod l2;
+
+pub use fll::{ClockTree, Fll};
+pub use io_dma::{Channel, IoDma};
+pub use l2::{L2, L2_BASE, L2_SIZE};
+
+use crate::cluster::Cluster;
+use crate::cwu::Cwu;
+use crate::isa::{Program, Reg};
+use crate::iss::{self, CoreStats};
+use crate::mem::{HyperRam, Mram};
+
+/// The whole chip: one instance per simulation.
+///
+/// Subsystems are public: experiment drivers compose them directly (e.g.
+/// the DNN pipeline books I/O-DMA and cluster time itself), which mirrors
+/// how the real software stack programs the hardware.
+pub struct VegaSoc {
+    pub l2: L2,
+    pub cluster: Cluster,
+    pub mram: Mram,
+    pub hyperram: HyperRam,
+    pub io_dma: IoDma,
+    pub clocks: ClockTree,
+    pub cwu: Cwu,
+}
+
+impl VegaSoc {
+    pub fn new() -> Self {
+        Self {
+            l2: L2::new(),
+            cluster: Cluster::new(),
+            mram: Mram::new(),
+            hyperram: HyperRam::new(8 * 1024 * 1024),
+            io_dma: IoDma::new(),
+            clocks: ClockTree::nominal(),
+            cwu: Cwu::new(),
+        }
+    }
+
+    /// Run a program on the fabric controller (single core against L2,
+    /// no TCDM: the FC serves SoC management and light compute, §III).
+    pub fn run_fc(
+        &mut self,
+        prog: &Program,
+        init: &[(Reg, u32)],
+        max_cycles: u64,
+    ) -> CoreStats {
+        iss::core::run_single(prog, &mut self.l2.mem, init, max_cycles)
+    }
+
+    /// Run a data-parallel kernel on the cluster (cores 0..n_active).
+    pub fn run_cluster(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        init: impl Fn(usize) -> Vec<(Reg, u32)>,
+        max_cycles: u64,
+    ) -> crate::cluster::ClusterStats {
+        self.cluster.run_program(prog, n_active, &mut self.l2.mem, init, max_cycles)
+    }
+}
+
+impl Default for VegaSoc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, T0, T1};
+
+    #[test]
+    fn fc_runs_against_l2() {
+        let mut soc = VegaSoc::new();
+        soc.l2.mem.write_i32s(L2_BASE + 0x100, &[20, 22]);
+        let mut a = Asm::new("fc");
+        a.lw(T0, A0, 0);
+        a.lw(T1, A0, 4);
+        a.add(T0, T0, T1);
+        a.sw(T0, A0, 8);
+        a.halt();
+        let prog = a.finish().unwrap();
+        let stats = soc.run_fc(&prog, &[(A0, L2_BASE + 0x100)], 10_000);
+        assert_eq!(stats.by_class.load, 2);
+        assert_eq!(soc.l2.mem.read_i32s(L2_BASE + 0x108, 1)[0], 42);
+    }
+
+    #[test]
+    fn weight_flow_mram_to_l2_to_tcdm() {
+        // The Fig. 9 data flow, functionally: MRAM -> L2 -> L1.
+        let mut soc = VegaSoc::new();
+        let weights: Vec<u8> = (0..64u8).collect();
+        soc.mram.write(0, &weights);
+        let w = soc.mram.read(0, 64);
+        soc.l2.mem.write_bytes(L2_BASE + 0x2000, &w);
+        let w2 = soc.l2.mem.read_bytes(L2_BASE + 0x2000, 64).to_vec();
+        soc.cluster.tcdm.mem.write_bytes(crate::cluster::TCDM_BASE, &w2);
+        assert_eq!(
+            soc.cluster.tcdm.mem.read_bytes(crate::cluster::TCDM_BASE, 64),
+            &weights[..]
+        );
+    }
+}

@@ -1,0 +1,102 @@
+//! Cluster-level integration: emergent microarchitectural properties the
+//! paper claims (contention, sharing, scaling), checked across kernels.
+
+use vega::cluster::{Cluster, L2_BASE};
+use vega::common::Rng;
+use vega::iss::FlatMem;
+use vega::kernels::fp_matmul::{self, FpWidth};
+use vega::kernels::int_matmul::{self, IntWidth};
+
+fn l2() -> FlatMem {
+    FlatMem::new(L2_BASE, 64 * 1024)
+}
+
+/// "The cluster L1 memory can serve 16 parallel memory requests with less
+/// than 10% contention rate even on data-intensive kernels" (§II-C).
+#[test]
+fn tcdm_contention_below_10pct_on_matmul() {
+    let mut rng = Rng::new(1);
+    let av: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let bv: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let mut cl = Cluster::new();
+    let (_, kr) =
+        int_matmul::run(&mut cl, &mut l2(), &av, &bv, 64, 64, 64, IntWidth::I8, 8);
+    assert!(
+        kr.stats.tcdm_conflict_rate < 0.10,
+        "conflict rate = {}",
+        kr.stats.tcdm_conflict_rate
+    );
+}
+
+/// "The design choice of exploiting shared FPUs is not detrimental to the
+/// performance of FP workloads" (§IV-A): 8 cores on 4 FPUs must retain
+/// ≥70% of the ideal 2× scaling from 4 cores (which have private FPUs).
+#[test]
+fn fpu_sharing_not_detrimental() {
+    let mut rng = Rng::new(2);
+    let (m, n, k) = (32, 32, 32);
+    let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+    let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+    let mut cl = Cluster::new();
+    let (_, k4) = fp_matmul::run(&mut cl, &mut l2(), &av, &bv, m, n, k, FpWidth::F32, 4);
+    let mut cl = Cluster::new();
+    let (_, k8) = fp_matmul::run(&mut cl, &mut l2(), &av, &bv, m, n, k, FpWidth::F32, 8);
+    let scaling = k4.stats.cycles as f64 / k8.stats.cycles as f64;
+    assert!(scaling > 1.4, "4->8 core scaling = {scaling} (ideal 2.0)");
+}
+
+/// Near-linear parallel speedup for the integer path (private-ish FPU-free
+/// datapaths): 1→8 cores ≥ 6.5×.
+#[test]
+fn int_matmul_scales_nearly_linearly() {
+    let mut rng = Rng::new(3);
+    let av: Vec<i32> = (0..32 * 32).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let bv: Vec<i32> = (0..32 * 32).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let mut cycles = Vec::new();
+    for cores in [1usize, 2, 4, 8] {
+        let mut cl = Cluster::new();
+        let (_, kr) =
+            int_matmul::run(&mut cl, &mut l2(), &av, &bv, 32, 32, 32, IntWidth::I8, cores);
+        cycles.push(kr.stats.cycles as f64);
+    }
+    let s8 = cycles[0] / cycles[3];
+    assert!(s8 > 6.5, "1->8 speedup = {s8}");
+    // Monotone scaling.
+    assert!(cycles[0] > cycles[1] && cycles[1] > cycles[2] && cycles[2] > cycles[3]);
+}
+
+/// Results are identical no matter how many cores run the kernel (the
+/// SPMD decomposition is purely spatial).
+#[test]
+fn results_independent_of_core_count() {
+    let mut rng = Rng::new(4);
+    let av: Vec<i32> = (0..16 * 32).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let bv: Vec<i32> = (0..16 * 32).map(|_| rng.range_i64(-128, 127) as i32).collect();
+    let mut base = None;
+    for cores in [1usize, 3, 5, 8] {
+        let mut cl = Cluster::new();
+        let (c, _) =
+            int_matmul::run(&mut cl, &mut l2(), &av, &bv, 16, 16, 32, IntWidth::I8, cores);
+        match &base {
+            None => base = Some(c),
+            Some(b) => assert_eq!(&c, b, "{cores} cores"),
+        }
+    }
+}
+
+/// int8 : int16 : int32 throughput follows SIMD lane counts (Fig. 6's
+/// format scaling).
+#[test]
+fn simd_format_scaling() {
+    let mut rng = Rng::new(5);
+    let av: Vec<i32> = (0..32 * 32).map(|_| rng.range_i64(-100, 100) as i32).collect();
+    let bv: Vec<i32> = (0..32 * 32).map(|_| rng.range_i64(-100, 100) as i32).collect();
+    let rate = |w: IntWidth| {
+        let mut cl = Cluster::new();
+        let (_, kr) = int_matmul::run(&mut cl, &mut l2(), &av, &bv, 32, 32, 32, w, 8);
+        kr.stats.mac_per_cycle()
+    };
+    let (r8, r16, r32) = (rate(IntWidth::I8), rate(IntWidth::I16), rate(IntWidth::I32));
+    assert!(r8 > 1.6 * r16, "8 vs 16: {r8} / {r16}");
+    assert!(r16 > 1.7 * r32, "16 vs 32: {r16} / {r32}");
+}

@@ -1,0 +1,180 @@
+//! CWU end-to-end integration: sensors → SPI → preprocessor → Hypnos →
+//! PMU wake-up, on both paper workloads (EMG gestures, language id), plus
+//! the error-resilience property HDC's always-on role depends on.
+
+use vega::common::Rng;
+use vega::cwu::hypnos::HdVec;
+use vega::cwu::{ChannelConfig, Cwu};
+use vega::hdc::{self, datasets, EncoderConfig};
+use vega::mem::Mram;
+use vega::power::{self, pmu::BootPath, PowerMode, WakeSource};
+
+fn emg_cfg() -> EncoderConfig {
+    EncoderConfig {
+        dim: 2048,
+        input_width: 16,
+        cim_max: 4095,
+        channels: 3,
+        window: 16,
+        ngram: 1,
+        discrete: false,
+    }
+}
+
+#[test]
+fn emg_wakeup_accuracy_and_pmu_handoff() {
+    let cfg = emg_cfg();
+    let mut gen = datasets::EmgGenerator::new(42);
+    let model = hdc::train(cfg, &gen.dataset(5, cfg.window));
+    let hypnos = model.program_hypnos(1, (cfg.dim / 4) as u16);
+    let mut cwu = Cwu::with_config(
+        None,
+        &[ChannelConfig { in_width: 16, ..Default::default() }; 3],
+        hypnos,
+        32_000.0,
+    );
+
+    let mut pmu = power::Pmu::new();
+    pmu.enter(PowerMode::CognitiveSleep { retentive_l2_bytes: 128 * 1024 });
+    let mram = Mram::new();
+
+    let mut true_pos = 0;
+    let mut false_pos = 0;
+    for class in 0..gen.n_classes() {
+        for _ in 0..15 {
+            let w = gen.window(class, cfg.window);
+            let woke = w.iter().any(|f| cwu.step_with_raw(f).is_some());
+            if woke && class == 1 {
+                true_pos += 1;
+            }
+            if woke && class != 1 {
+                false_pos += 1;
+            }
+        }
+    }
+    assert!(true_pos >= 13, "true positives {true_pos}/15");
+    assert!(false_pos <= 2, "false positives {false_pos}/45");
+
+    // A wake event drives the PMU out of cognitive sleep.
+    let latency = pmu.wake(
+        WakeSource::Cognitive,
+        1.0,
+        power::NOM,
+        BootPath::WarmFromL2,
+        &mram,
+    );
+    assert!(latency < 1e-4, "warm-boot latency = {latency}");
+    assert!(matches!(pmu.mode, PowerMode::SocActive { .. }));
+}
+
+#[test]
+fn language_identification_with_trigrams() {
+    let cfg = EncoderConfig {
+        dim: 2048,
+        input_width: 5,
+        cim_max: 26,
+        channels: 1,
+        window: 64,
+        ngram: 3,
+        discrete: true,
+    };
+    let mut gen = datasets::LangGenerator::new(7, 3);
+    let model = hdc::train(cfg, &gen.dataset(6, cfg.window));
+    let mut correct = 0;
+    let mut total = 0;
+    for class in 0..gen.n_classes() {
+        for _ in 0..15 {
+            if model.classify(&gen.window(class, cfg.window)) == class {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(acc > 0.85, "language id accuracy = {acc}");
+}
+
+/// "Inherent error-resiliency in the presence of random bit flips"
+/// (§II-B [22]): classification survives corrupted prototypes.
+#[test]
+fn hdc_resilient_to_prototype_bit_flips() {
+    let cfg = emg_cfg();
+    let mut gen = datasets::EmgGenerator::new(11);
+    let mut model = hdc::train(cfg, &gen.dataset(5, cfg.window));
+
+    // Flip 5% of every prototype's bits (e.g. MRAM retention upsets that
+    // slipped past ECC, or low-voltage AM failures).
+    let mut rng = Rng::new(13);
+    let flips = cfg.dim / 20;
+    let protos: Vec<HdVec> = model
+        .prototypes
+        .iter()
+        .map(|p| {
+            let mut q = p.clone();
+            for _ in 0..flips {
+                q.flip(rng.below(cfg.dim as u64) as usize);
+            }
+            q
+        })
+        .collect();
+    model.prototypes = protos;
+
+    let mut correct = 0;
+    let mut total = 0;
+    for class in 0..gen.n_classes() {
+        for _ in 0..10 {
+            if model.classify(&gen.window(class, cfg.window)) == class {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    let acc = correct as f64 / total as f64;
+    assert!(acc > 0.8, "accuracy under 5% bit flips = {acc}");
+}
+
+/// The CWU's false-positive discipline is what makes duty-cycling pay
+/// (§II-B): average system power with cognitive wake-up must undercut a
+/// threshold wake-up that fires 20× more often.
+#[test]
+fn cognitive_wakeup_saves_system_power() {
+    let active = PowerMode::ClusterActive {
+        op: power::NOM,
+        fc_util: 0.5,
+        core_util: 1.0,
+        hwce_active: 0.0,
+    };
+    let sleep_hdc = PowerMode::CognitiveSleep { retentive_l2_bytes: 128 * 1024 };
+    let sleep_thr = PowerMode::RetentiveSleep { retentive_l2_bytes: 128 * 1024 };
+    // 1 true event/hour, 100 ms of active processing per wake.
+    // HDC: ~1 false positive per true event. Threshold: ~20.
+    let p_hdc = power::Pmu::duty_cycled_power_w(active, sleep_hdc, 2.0 * 0.1, 3600.0);
+    let p_thr = power::Pmu::duty_cycled_power_w(active, sleep_thr, 21.0 * 0.1, 3600.0);
+    assert!(p_hdc < p_thr, "hdc {p_hdc} vs threshold {p_thr}");
+    assert!(p_hdc < 50e-6, "average power = {p_hdc}");
+}
+
+/// Preprocessor + Hypnos sample-rate budget at 32 kHz (Table I).
+#[test]
+fn sample_rate_budget_at_32khz() {
+    let cfg = emg_cfg();
+    let mut gen = datasets::EmgGenerator::new(21);
+    let model = hdc::train(cfg, &gen.dataset(3, cfg.window));
+    let hypnos = model.program_hypnos(1, 400);
+    let mut cwu = Cwu::with_config(
+        None,
+        &[ChannelConfig { in_width: 16, ..Default::default() }; 3],
+        hypnos,
+        32_000.0,
+    );
+    for _ in 0..5 {
+        let w = gen.window(1, cfg.window);
+        for f in &w {
+            cwu.step_with_raw(f);
+        }
+    }
+    // At 150 SPS/channel the datapath must have headroom (duty < 1).
+    let duty = cwu.datapath_duty(150.0);
+    assert!(duty < 0.5, "duty = {duty}");
+    assert!(cwu.max_sample_rate() > 150.0);
+}

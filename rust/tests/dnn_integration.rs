@@ -1,0 +1,140 @@
+//! DNN stack integration: pipeline properties across networks, policies
+//! and engines (the Fig. 9–11 / Table VII machinery).
+
+use vega::dnn::{
+    mobilenet_v2, repvgg, run_network, tile_layer, Bound, PipelineConfig, StorePolicy, Variant,
+    WeightStore, L1_BUDGET,
+};
+use vega::power;
+
+#[test]
+fn greedy_policy_fills_mram_front_to_back() {
+    let net = repvgg(Variant::A1);
+    let rep = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::GreedyMram));
+    let split = rep.mram_up_to.expect("A1 exceeds MRAM");
+    // Weight-bearing layers before the split in MRAM; after, HyperRAM.
+    for (i, l) in rep.layers.iter().enumerate() {
+        if l.weight_bytes == 0 {
+            continue;
+        }
+        if i <= split {
+            assert_eq!(l.store, WeightStore::Mram, "{}", l.name);
+        }
+    }
+    let hyper_layers =
+        rep.layers.iter().filter(|l| l.store == WeightStore::HyperRam).count();
+    assert!(hyper_layers >= 1, "some layers must spill to HyperRAM");
+    // MRAM capacity respected.
+    let mram_bytes: u64 = rep
+        .layers
+        .iter()
+        .filter(|l| l.store == WeightStore::Mram)
+        .map(|l| l.weight_bytes)
+        .sum();
+    assert!(mram_bytes <= 4 * 1024 * 1024);
+}
+
+#[test]
+fn store_policy_changes_energy_not_compute() {
+    let net = mobilenet_v2();
+    let m = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let h = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
+    for (a, b) in m.layers.iter().zip(&h.layers) {
+        assert_eq!(a.compute_cycles, b.compute_cycles, "{}", a.name);
+        assert_eq!(a.l2l1_cycles, b.l2l1_cycles, "{}", a.name);
+    }
+    assert!(h.energy.hyperram_pj > 0.0 && h.energy.mram_pj == 0.0);
+    assert!(m.energy.mram_pj > 0.0 && m.energy.hyperram_pj == 0.0);
+}
+
+#[test]
+fn hwce_only_runs_conv_layers_entirely_on_engine() {
+    let net = repvgg(Variant::A0);
+    let rep = run_network(&net, PipelineConfig::table7_hwce(StorePolicy::GreedyMram));
+    for l in &rep.layers {
+        if l.name.contains("conv") {
+            assert!(l.hwce_fraction > 0.99, "{}: frac {}", l.name, l.hwce_fraction);
+        } else {
+            assert_eq!(l.hwce_fraction, 0.0, "{}", l.name);
+        }
+    }
+}
+
+#[test]
+fn hybrid_beats_both_pure_engines_on_repvgg() {
+    let net = repvgg(Variant::A0);
+    let mk = |engine| {
+        run_network(
+            &net,
+            vega::dnn::PipelineConfig { op: power::HV, engine, policy: StorePolicy::GreedyMram },
+        )
+        .total_cycles()
+    };
+    let sw = mk(vega::dnn::Engine::Software);
+    let only = mk(vega::dnn::Engine::HwceOnly);
+    let hybrid = mk(vega::dnn::Engine::HwceHybrid);
+    assert!(hybrid < only, "hybrid {hybrid} vs only {only}");
+    assert!(hybrid < sw, "hybrid {hybrid} vs sw {sw}");
+}
+
+#[test]
+fn tilings_respect_l1_for_every_evaluated_layer() {
+    for net in [mobilenet_v2(), repvgg(Variant::A2)] {
+        for l in &net.layers {
+            let t = tile_layer(l, L1_BUDGET);
+            assert!(2 * t.tile_bytes() <= L1_BUDGET as u64, "{}::{}", net.name, l.name);
+        }
+    }
+}
+
+#[test]
+fn energy_breakdown_sums_to_total() {
+    let net = mobilenet_v2();
+    let rep = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let e = &rep.energy;
+    let sum = e.compute_pj + e.l2l1_pj + e.l1_pj + e.mram_pj + e.hyperram_pj;
+    assert!((sum - e.total_pj()).abs() < 1.0);
+    // Compute dominates on the MRAM flow (Fig. 11's message).
+    assert!(e.compute_pj > 0.5 * e.total_pj());
+    assert!(e.mram_pj < 0.1 * e.total_pj());
+}
+
+#[test]
+fn faster_clock_reduces_latency_not_cycles() {
+    let net = repvgg(Variant::A0);
+    let slow = run_network(
+        &net,
+        vega::dnn::PipelineConfig {
+            op: power::tables::DNN,
+            engine: vega::dnn::Engine::Software,
+            policy: StorePolicy::AllHyperRam,
+        },
+    );
+    let fast = run_network(
+        &net,
+        vega::dnn::PipelineConfig {
+            op: power::HV,
+            engine: vega::dnn::Engine::Software,
+            policy: StorePolicy::AllHyperRam,
+        },
+    );
+    assert!(fast.latency_s() < slow.latency_s());
+    // Compute cycles identical; only L3 cycles shift (same wall-clock
+    // bandwidth at more cycles/second) — so totals differ somewhat, but
+    // compute-bound layers match exactly.
+    for (a, b) in slow.layers.iter().zip(&fast.layers) {
+        assert_eq!(a.compute_cycles, b.compute_cycles);
+    }
+}
+
+#[test]
+fn final_fc_layer_is_l3_bound_everywhere() {
+    for (net, policy) in [
+        (mobilenet_v2(), StorePolicy::AllMram),
+        (repvgg(Variant::A0), StorePolicy::GreedyMram),
+    ] {
+        let rep = run_network(&net, PipelineConfig::nominal_sw(policy));
+        let fc = rep.layers.last().unwrap();
+        assert_eq!(fc.bound, Bound::L3, "{}", net.name);
+    }
+}

@@ -1,0 +1,141 @@
+//! The headline-number anchors (DESIGN.md §4): every claim the abstract
+//! makes must *emerge* from the simulator + calibrated power model within
+//! tolerance. These are the reproduction's acceptance tests.
+
+use vega::common::rel_err;
+use vega::coordinator;
+use vega::dnn::{self, repvgg, run_network, PipelineConfig, StorePolicy, Variant};
+use vega::kernels::fp_matmul::FpWidth;
+use vega::kernels::int_matmul::IntWidth;
+use vega::power::{self, tables as pt};
+
+/// "614 GOPS/W on 8-bit INT computation" (abstract, Table VIII) and
+/// "15.6 GOPS" peak.
+#[test]
+fn int8_perf_and_efficiency() {
+    let kr = coordinator::bench_int_matmul(IntWidth::I8, 8);
+    let (gops_hv, _) = coordinator::efficiency(&kr, power::HV, 0.0);
+    assert!(rel_err(gops_hv, 15.6) < 0.15, "peak int8 = {gops_hv} GOPS");
+    let (gops_lv, eff_lv) = coordinator::efficiency(&kr, power::LV, 0.0);
+    assert!(rel_err(eff_lv, 614.0) < 0.15, "int8 eff = {eff_lv} GOPS/W");
+    assert!(rel_err(gops_lv, 7.6) < 0.15, "int8 LV = {gops_lv} GOPS");
+}
+
+/// "79 and 129 GFLOPS/W on 32- and 16-bit FP" (abstract); 2 / 3.3 GFLOPS
+/// peaks (Table VIII).
+#[test]
+fn fp_perf_and_efficiency() {
+    let f32_run = coordinator::bench_fp_matmul(FpWidth::F32, 8);
+    let (gflops, _) = coordinator::efficiency(&f32_run, power::HV, 0.0);
+    assert!(rel_err(gflops, 2.0) < 0.35, "fp32 = {gflops} GFLOPS");
+    let (_, eff32) = coordinator::efficiency(&f32_run, power::LV, 0.0);
+    assert!(rel_err(eff32, 79.0) < 0.35, "fp32 eff = {eff32} GFLOPS/W");
+
+    let f16_run = coordinator::bench_fp_matmul(FpWidth::F16x2, 8);
+    let (gflops16, _) = coordinator::efficiency(&f16_run, power::HV, 0.0);
+    // Our hand-scheduled vfdotpex kernel avoids overheads the measured
+    // library paid, so the simulated fp16 point *exceeds* the paper's
+    // 3.3 GFLOPS (documented in EXPERIMENTS.md); the anchor is a band.
+    assert!((3.0..6.5).contains(&gflops16), "fp16 = {gflops16} GFLOPS");
+    let (_, eff16) = coordinator::efficiency(&f16_run, power::LV, 0.0);
+    assert!(eff16 > 110.0 && eff16 < 280.0, "fp16 eff = {eff16} GFLOPS/W");
+    // FP16 must beat FP32 on both axes.
+    assert!(gflops16 > gflops && eff16 > eff32);
+}
+
+/// "32.2 GOPS (@ 49.4 mW) peak performance" with the HWCE active.
+#[test]
+fn peak_ml_with_hwce() {
+    let net = repvgg(Variant::A0);
+    let hy = run_network(
+        &net,
+        dnn::PipelineConfig {
+            op: power::HV,
+            engine: dnn::Engine::HwceHybrid,
+            policy: StorePolicy::GreedyMram,
+        },
+    );
+    let gops = hy.mac_per_cycle() * 2.0 * power::HV.f_cl / 1e9;
+    assert!(rel_err(gops, 32.2) < 0.20, "peak ML = {gops} GOPS");
+    let p = power::cluster_power_w(power::HV, 1.0, 1.0) + power::soc_power_w(power::HV, 0.3);
+    assert!(p < 49.4e-3 * 1.10, "power envelope = {} mW", p * 1e3);
+}
+
+/// "1.7 µW fully retentive cognitive sleep mode" + Table I totals.
+#[test]
+fn cwu_power_anchors() {
+    let run = coordinator::cwu_reference_run(32_000.0);
+    let duty = run.duty_at_150sps;
+    let p_sleep = power::cwu_power_w(32e3, duty, false);
+    assert!(rel_err(p_sleep, 1.7e-6) < 0.10, "cognitive sleep = {p_sleep} W");
+    let p_total = power::cwu_power_w(32e3, duty, true);
+    assert!(rel_err(p_total, 2.97e-6) < 0.10, "CWU total = {p_total} W");
+    assert!(run.accuracy > 0.85, "wake-up accuracy = {}", run.accuracy);
+}
+
+/// MobileNetV2: "1.19 mJ/inference" on MRAM, 3.5× over HyperRAM, >10 fps.
+#[test]
+fn mobilenet_anchors() {
+    let net = dnn::mobilenet_v2();
+    let m = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let h = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
+    assert!(rel_err(m.energy_mj(), 1.19) < 0.25, "MRAM = {} mJ", m.energy_mj());
+    assert!(rel_err(h.energy_mj(), 4.16) < 0.25, "Hyper = {} mJ", h.energy_mj());
+    assert!(m.fps() > 10.0, "fps = {}", m.fps());
+}
+
+/// RepVGG-A family, Table VII: ~3× HWCE speedup, 60–95% efficiency gain,
+/// latency ordering A0 < A1 < A2.
+#[test]
+fn repvgg_table7_anchors() {
+    let paper_sw_ms = [358.0, 610.0, 1320.0];
+    let mut last = 0.0;
+    for (v, sw_ms) in [Variant::A0, Variant::A1, Variant::A2].iter().zip(paper_sw_ms) {
+        let net = repvgg(*v);
+        let sw = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::GreedyMram));
+        let hw = run_network(&net, PipelineConfig::table7_hwce(StorePolicy::GreedyMram));
+        assert!(
+            rel_err(sw.latency_s() * 1e3, sw_ms) < 0.20,
+            "{v:?} SW = {} ms (paper {sw_ms})",
+            sw.latency_s() * 1e3
+        );
+        let speedup = sw.latency_s() / hw.latency_s();
+        assert!((2.2..3.6).contains(&speedup), "{v:?} speedup = {speedup}");
+        assert!(hw.energy_mj() < sw.energy_mj(), "{v:?} energy");
+        assert!(sw.latency_s() > last, "latency ordering");
+        last = sw.latency_s();
+    }
+}
+
+/// Retention power range: "2.8 – 123.7 µW (16 kB – 1.6 MB s.r.)".
+#[test]
+fn retention_anchors() {
+    let lo = power::PowerMode::CognitiveSleep { retentive_l2_bytes: 16 * 1024 }.power_w();
+    let hi = power::PowerMode::CognitiveSleep { retentive_l2_bytes: 1600 * 1024 }.power_w();
+    assert!(rel_err(lo, 2.8e-6) < 0.10, "lo = {lo}");
+    assert!(rel_err(hi, 123.7e-6) < 0.10, "hi = {hi}");
+}
+
+/// Fig. 8's suite-average FP16 vectorization speedup ≈ 1.46×.
+#[test]
+fn fp16_vectorization_average() {
+    let mut sum = 0.0;
+    for name in coordinator::NSAA_KERNELS {
+        let k32 = coordinator::bench_nsaa_kernel(name, FpWidth::F32);
+        let k16 = coordinator::bench_nsaa_kernel(name, FpWidth::F16x2);
+        // Normalise per unit of work (some drivers use different sizes).
+        let t32 = k32.stats.cycles as f64 / k32.ops as f64;
+        let t16 = k16.stats.cycles as f64 / k16.ops as f64;
+        sum += t32 / t16;
+    }
+    let avg = sum / coordinator::NSAA_KERNELS.len() as f64;
+    assert!((1.2..2.2).contains(&avg), "avg f16 speedup = {avg} (paper 1.46)");
+}
+
+/// FC active mode: ≈200 GOPS/W int8 at up to 1.9 GOPS (§III).
+#[test]
+fn fc_active_mode() {
+    let kr = coordinator::bench_int_matmul(IntWidth::I8, 1);
+    let gops = kr.gops_at(pt::HV.f_soc);
+    assert!((1.0..2.5).contains(&gops), "FC int8 = {gops} GOPS");
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime bridge ⇄ simulator golden checks: the JAX/Pallas
+//! artifacts are the functional reference for the Rust datapaths.
+//!
+//! Requires `make artifacts` (skips with a notice when absent, so plain
+//! `cargo test` works in a fresh checkout).
+
+use vega::common::Rng;
+use vega::hwce;
+use vega::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping runtime tests: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifact compilation"))
+}
+
+fn rand_i8(rng: &mut Rng, n: usize, lim: i64) -> Vec<i8> {
+    (0..n).map(|_| rng.range_i64(-lim, lim) as i8).collect()
+}
+
+#[test]
+fn manifest_has_all_entries() {
+    let Some(rt) = runtime() else { return };
+    for name in ["matmul_int8_64", "hwce_conv3x3_16", "repvgg_block_16", "mbv2_bottleneck_14"] {
+        assert!(rt.signature(name).is_some(), "missing {name}");
+    }
+}
+
+#[test]
+fn iss_matmul_matches_pallas_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let a = rand_i8(&mut rng, 64 * 64, 127);
+    let b = rand_i8(&mut rng, 64 * 64, 127);
+    let outs = rt
+        .execute("matmul_int8_64", &[Tensor::I8(a.clone()), Tensor::I8(b.clone())])
+        .expect("execute");
+    let want = outs[0].as_i32().unwrap();
+
+    // Simulator path: B transposed to the kernel's column-major layout.
+    let av: Vec<i32> = a.iter().map(|&v| v as i32).collect();
+    let mut bt = vec![0i32; 64 * 64];
+    for r in 0..64 {
+        for c in 0..64 {
+            bt[c * 64 + r] = b[r * 64 + c] as i32;
+        }
+    }
+    let mut cl = vega::cluster::Cluster::new();
+    let mut l2 = vega::iss::FlatMem::new(vega::cluster::L2_BASE, 4096);
+    let (got, kr) = vega::kernels::int_matmul::run(
+        &mut cl,
+        &mut l2,
+        &av,
+        &bt,
+        64,
+        64,
+        64,
+        vega::kernels::int_matmul::IntWidth::I8,
+        8,
+    );
+    assert_eq!(&got, want, "ISS vs Pallas divergence");
+    assert!(kr.stats.mac_per_cycle() > 13.0);
+}
+
+#[test]
+fn hwce_conv_matches_pallas_artifact() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(8);
+    let x = rand_i8(&mut rng, 18 * 18 * 16, 127);
+    let w = rand_i8(&mut rng, 9 * 16 * 16, 127);
+    let outs = rt
+        .execute("hwce_conv3x3_16", &[Tensor::I8(x.clone()), Tensor::I8(w.clone())])
+        .expect("execute");
+    let want = outs[0].as_i32().unwrap();
+    let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+    let wi: Vec<i32> = w.iter().map(|&v| v as i32).collect();
+    let got = hwce::conv3x3(&xi, &wi, 16, 16, 16, 16, hwce::Precision::Int8);
+    assert_eq!(&got, want, "HWCE datapath vs Pallas divergence");
+}
+
+#[test]
+fn repvgg_block_matches_hwce_plus_requant() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(9);
+    let x = rand_i8(&mut rng, 18 * 18 * 16, 127);
+    let w = rand_i8(&mut rng, 9 * 16 * 16, 127);
+    let outs = rt
+        .execute("repvgg_block_16", &[Tensor::I8(x.clone()), Tensor::I8(w.clone())])
+        .expect("execute");
+    let want = outs[0].as_i8().unwrap();
+    let xi: Vec<i32> = x.iter().map(|&v| v as i32).collect();
+    let wi: Vec<i32> = w.iter().map(|&v| v as i32).collect();
+    // repvgg_block = conv3x3 -> shift 7 -> ReLU-clip to int8.
+    let acc = hwce::conv3x3(&xi, &wi, 16, 16, 16, 16, hwce::Precision::Int8);
+    let got: Vec<i8> = acc.iter().map(|&a| (a >> 7).clamp(0, 127) as i8).collect();
+    assert_eq!(got, want, "requantised RepVGG block divergence");
+}
+
+#[test]
+fn mbv2_bottleneck_executes_with_expected_shape() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(10);
+    let inputs = vec![
+        Tensor::I8(rand_i8(&mut rng, 14 * 14 * 24, 8)),
+        Tensor::I8(rand_i8(&mut rng, 24 * 96, 8)),
+        Tensor::I8(rand_i8(&mut rng, 9 * 96, 8)),
+        Tensor::I8(rand_i8(&mut rng, 96 * 24, 8)),
+    ];
+    let outs = rt.execute("mbv2_bottleneck_14", &inputs).expect("execute");
+    assert_eq!(outs[0].len(), 14 * 14 * 24);
+}
+
+#[test]
+fn input_validation_rejects_bad_shapes() {
+    let Some(rt) = runtime() else { return };
+    let err = rt.execute("matmul_int8_64", &[Tensor::I8(vec![0; 3])]);
+    assert!(err.is_err());
+    let err = rt.execute(
+        "matmul_int8_64",
+        &[Tensor::I8(vec![0; 64 * 64]), Tensor::I32(vec![0; 64 * 64])],
+    );
+    assert!(err.is_err(), "dtype mismatch must be rejected");
+}
