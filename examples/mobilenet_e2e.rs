@@ -134,7 +134,7 @@ fn main() {
     println!(
         "  effective rate : {:.1} MAC/cycle (SW rate measured on ISS: {:.1})",
         m.mac_per_cycle(),
-        *dnn::pipeline::SW_MAC_PER_CYCLE
+        dnn::pipeline::sw_mac_per_cycle()
     );
 
     // ---- Phase 4: back to sleep. ----------------------------------------

@@ -1,20 +1,40 @@
 //! Minimal timing harness shared by the bench targets (criterion is
-//! unavailable offline — DESIGN.md §5). Reports min/mean over N runs.
+//! unavailable offline — DESIGN.md §5). Reports min/mean over N runs on
+//! stdout and, via [`Bench::finish`], as machine-readable
+//! `BENCH_<group>.json` so the perf trajectory is tracked across PRs
+//! instead of living only in bench logs.
+//!
+//! `VEGA_BENCH_ITERS` overrides every case's iteration count (the CI
+//! smoke run uses `VEGA_BENCH_ITERS=1`).
 
+use std::cell::RefCell;
 use std::time::Instant;
+
+struct CaseResult {
+    case: String,
+    iters: u32,
+    min_ms: f64,
+    mean_ms: f64,
+}
 
 pub struct Bench {
     pub name: &'static str,
+    results: RefCell<Vec<CaseResult>>,
 }
 
 impl Bench {
     pub fn new(name: &'static str) -> Self {
         println!("\n### bench group: {name}");
-        Self { name }
+        Self { name, results: RefCell::new(Vec::new()) }
     }
 
     /// Time `f` over `iters` runs (after one warm-up) and print stats.
     pub fn run<T>(&self, case: &str, iters: u32, mut f: impl FnMut() -> T) {
+        let iters = std::env::var("VEGA_BENCH_ITERS")
+            .ok()
+            .and_then(|s| s.parse::<u32>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(iters);
         std::hint::black_box(f()); // warm-up (also primes lazy calibrations)
         let mut times = Vec::with_capacity(iters as usize);
         for _ in 0..iters {
@@ -30,5 +50,38 @@ impl Bench {
             min * 1e3,
             mean * 1e3
         );
+        self.results.borrow_mut().push(CaseResult {
+            case: case.to_string(),
+            iters,
+            min_ms: min * 1e3,
+            mean_ms: mean * 1e3,
+        });
+    }
+
+    /// Write `BENCH_<group>.json` into the current directory (the crate
+    /// root under `cargo bench`). Hand-rolled JSON: serde is unavailable
+    /// offline, and the schema is four scalar fields per case.
+    pub fn finish(&self) {
+        let results = self.results.borrow();
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"group\": \"{}\",\n", self.name));
+        s.push_str("  \"cases\": [\n");
+        for (i, r) in results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"case\": \"{}\", \"iters\": {}, \"min_ms\": {:.6}, \"mean_ms\": {:.6}}}{}\n",
+                r.case,
+                r.iters,
+                r.min_ms,
+                r.mean_ms,
+                if i + 1 < results.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        let path = format!("BENCH_{}.json", self.name);
+        match std::fs::write(&path, s) {
+            Ok(()) => println!("\nwrote {path}"),
+            Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+        }
     }
 }

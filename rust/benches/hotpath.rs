@@ -1,11 +1,16 @@
 //! Hot-path micro-benchmarks for the §Perf optimisation pass: the
 //! simulator's own throughput (host wall-clock), per layer of the stack.
-//! Before/after numbers are recorded in EXPERIMENTS.md §Perf.
+//! Before/after numbers are recorded in EXPERIMENTS.md §Perf, and every
+//! run also lands in `BENCH_hotpath.json` for cross-PR tracking.
+//!
+//! The `*_refloop` cases run the same kernels on the retained
+//! one-cycle-per-iteration reference scheduler, so the cycle-skip
+//! speedup is measured inside a single bench run.
 
 mod harness;
 
 use harness::Bench;
-use vega::cluster::{Cluster, L2_BASE};
+use vega::cluster::{Cluster, SchedulerMode, L2_BASE};
 use vega::common::Rng;
 use vega::cwu::hypnos::perm;
 use vega::dnn::{self, PipelineConfig, StorePolicy};
@@ -18,26 +23,48 @@ use vega::mem::ecc;
 fn main() {
     let b = Bench::new("hotpath");
 
+    // One cluster + L2 reused across all ISS cases (reset() keeps the
+    // backing stores; building them per run was itself a hot path).
+    let mut cl = Cluster::new();
+    let mut l2 = FlatMem::new(L2_BASE, 4096);
+
     // L3 hot path #1: the cluster cycle loop (ISS) on the PULP-NN matmul.
     let mut rng = Rng::new(1);
     let av: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
     let bv: Vec<i32> = (0..64 * 64).map(|_| rng.range_i64(-128, 127) as i32).collect();
     b.run("iss_matmul_64x64x64_8cores", 10, || {
-        let mut cl = Cluster::new();
-        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        cl.reset();
+        l2.reset();
         int_matmul::run(&mut cl, &mut l2, &av, &bv, 64, 64, 64, IntWidth::I8, 8)
             .1
             .stats
             .cycles
     });
+    cl.scheduler = SchedulerMode::Reference;
+    b.run("iss_matmul_64x64x64_8cores_refloop", 10, || {
+        cl.reset();
+        l2.reset();
+        int_matmul::run(&mut cl, &mut l2, &av, &bv, 64, 64, 64, IntWidth::I8, 8)
+            .1
+            .stats
+            .cycles
+    });
+    cl.scheduler = SchedulerMode::CycleSkip;
 
     // L3 hot path #2: FFT (barrier-heavy, FP-heavy).
     let x: Vec<(f32, f32)> = (0..256).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
     b.run("iss_fft_256_8cores", 10, || {
-        let mut cl = Cluster::new();
-        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        cl.reset();
+        l2.reset();
         fp_fft::run(&mut cl, &mut l2, &x, FpWidth::F32, 8).1.stats.cycles
     });
+    cl.scheduler = SchedulerMode::Reference;
+    b.run("iss_fft_256_8cores_refloop", 10, || {
+        cl.reset();
+        l2.reset();
+        fp_fft::run(&mut cl, &mut l2, &x, FpWidth::F32, 8).1.stats.cycles
+    });
+    cl.scheduler = SchedulerMode::CycleSkip;
 
     // L3 hot path #3: HWCE functional datapath.
     let xs: Vec<i32> = (0..34 * 34 * 16).map(|_| rng.range_i64(-128, 127) as i32).collect();
@@ -69,4 +96,6 @@ fn main() {
     b.run("pipeline_mobilenetv2", 10, || {
         dnn::run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram)).total_cycles()
     });
+
+    b.finish();
 }

@@ -12,4 +12,5 @@ fn main() {
     for id in ["fig6", "fig7", "fig8", "fig10", "fig11"] {
         println!("\n{}", vega::bench::run(id).unwrap());
     }
+    b.finish();
 }

@@ -18,4 +18,5 @@ fn main() {
     for id in ["table1", "table5", "table6", "table7", "table8"] {
         println!("\n{}", vega::bench::run(id).unwrap());
     }
+    b.finish();
 }

@@ -37,6 +37,13 @@ impl EventUnit {
             false
         }
     }
+
+    /// Account `delta` cycles with a constant `waiting` count and no
+    /// release — what `delta` calls to [`EventUnit::tick`] do while the
+    /// barrier cannot open (the cluster's cycle-skip fast path).
+    pub fn skip(&mut self, waiting: usize, delta: u64) {
+        self.gated_cycles += waiting as u64 * delta;
+    }
 }
 
 #[cfg(test)]

@@ -47,6 +47,16 @@ impl FpuFabric {
         }
     }
 
+    /// Clear per-run arbitration state and counters, keeping the ablation
+    /// configuration (`private_per_core`).
+    pub fn reset(&mut self) {
+        self.rr = [0; N_FPUS];
+        self.divsqrt_free_at = 0;
+        self.issues = 0;
+        self.conflicts = 0;
+        self.divsqrt_conflicts = 0;
+    }
+
     /// Arbitrate pipelined (single-cycle) FP issues: `reqs` is a list of
     /// core ids wanting to issue this cycle. Returns granted core ids
     /// (one per FPU).
@@ -56,14 +66,29 @@ impl FpuFabric {
         granted
     }
 
-    /// As [`FpuFabric::arbitrate`] into a caller-owned buffer (§Perf).
+    /// As [`FpuFabric::arbitrate`] into a caller-owned buffer.
     pub fn arbitrate_into(&mut self, reqs: &[usize], granted: &mut Vec<usize>) {
         granted.clear();
+        let mut m = self.arbitrate_mask(reqs);
+        while m != 0 {
+            granted.push(m.trailing_zeros() as usize);
+            m &= m - 1;
+        }
+    }
+
+    /// As [`FpuFabric::arbitrate`], returning grants as a core-id bitmask
+    /// (§Perf: one bit test per requester in the cluster cycle loop).
+    pub fn arbitrate_mask(&mut self, reqs: &[usize]) -> u16 {
         if self.private_per_core {
             self.issues += reqs.len() as u64;
-            granted.extend_from_slice(reqs);
-            return;
+            let mut mask = 0u16;
+            for &c in reqs {
+                debug_assert!(c < 16, "core id exceeds grant mask");
+                mask |= 1u16 << c;
+            }
+            return mask;
         }
+        let mut mask = 0u16;
         for unit in 0..N_FPUS {
             let start = self.rr[unit];
             let mut count = 0usize;
@@ -86,8 +111,10 @@ impl FpuFabric {
             self.rr[unit] = winner + 1;
             self.issues += 1;
             self.conflicts += (count - 1) as u64;
-            granted.push(winner);
+            debug_assert!(winner < 16, "core id exceeds grant mask");
+            mask |= 1u16 << winner;
         }
+        mask
     }
 
     /// Try to claim the shared DIV-SQRT unit at cycle `now` for `latency`

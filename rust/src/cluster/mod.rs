@@ -17,7 +17,7 @@ pub use event_unit::EventUnit;
 pub use fpu::{fpu_of_core, FpuFabric, N_FPUS};
 pub use tcdm::{Tcdm, TCDM_BANKS, TCDM_BASE, TCDM_SIZE};
 
-use crate::isa::inst::{FpOp, Inst};
+use crate::isa::predecode::DecodedKind;
 use crate::isa::{Program, Reg};
 use crate::iss::{Core, CoreState, CoreStats, FlatMem, Intent, Memory};
 
@@ -57,7 +57,7 @@ impl Memory for ClusterMemView<'_> {
 }
 
 /// Aggregated result of one cluster run.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ClusterStats {
     /// Wall-clock cluster cycles (barrier-to-halt of the slowest core).
     pub cycles: u64,
@@ -86,6 +86,21 @@ impl ClusterStats {
     }
 }
 
+/// Scheduler used by [`Cluster::run_program`].
+///
+/// Both produce bit-identical [`ClusterStats`] and memory/register state
+/// (asserted by `tests/scheduler_equivalence.rs`); the reference loop is
+/// retained as the oracle for the fast path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedulerMode {
+    /// Cycle-skipping fast path (default): when every active core is
+    /// draining a busy counter or parked at a barrier that cannot release,
+    /// the cluster clock jumps to the next issue opportunity in one step.
+    CycleSkip,
+    /// The original one-cycle-per-loop-iteration driver.
+    Reference,
+}
+
 /// The cluster fabric.
 pub struct Cluster {
     pub cores: Vec<Core>,
@@ -93,7 +108,11 @@ pub struct Cluster {
     pub fpus: FpuFabric,
     pub dma: ClusterDma,
     pub event_unit: EventUnit,
+    /// Scheduler selection (equivalence tests and ablations flip this).
+    pub scheduler: SchedulerMode,
     cycle: u64,
+    /// Shared-L1.5 warm bitmap, reused across runs (no per-run alloc).
+    warm: Vec<bool>,
 }
 
 impl Cluster {
@@ -104,7 +123,64 @@ impl Cluster {
             fpus: FpuFabric::new(),
             dma: ClusterDma::new(),
             event_unit: EventUnit::new(N_CORES),
+            scheduler: SchedulerMode::CycleSkip,
             cycle: 0,
+            warm: Vec::new(),
+        }
+    }
+
+    /// Cheap between-runs reset: clears TCDM contents, arbitration
+    /// pointers and counters without re-allocating the 128 kB backing
+    /// store (§Perf: drivers that used to build a fresh `Cluster` per
+    /// kernel invocation reuse one instead).
+    pub fn reset(&mut self) {
+        self.tcdm.reset();
+        self.fpus.reset();
+        self.dma = ClusterDma::new();
+        self.event_unit = EventUnit::new(N_CORES);
+        self.cycle = 0;
+        for c in &mut self.cores {
+            c.reset(0);
+        }
+    }
+
+    /// Per-run state reset shared by both scheduler loops.
+    fn reset_for_run(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        init: &impl Fn(usize) -> Vec<(Reg, u32)>,
+    ) {
+        assert!(n_active >= 1 && n_active <= N_CORES);
+        self.tcdm.grants = 0;
+        self.tcdm.conflicts = 0;
+        self.fpus.reset();
+        self.event_unit = EventUnit::new(n_active);
+        self.cycle = 0;
+        for (i, core) in self.cores.iter_mut().enumerate().take(n_active) {
+            core.reset(prog.insts.len());
+            for (r, v) in init(i) {
+                core.set_reg(r, v);
+            }
+        }
+        self.warm.clear();
+        self.warm.resize(prog.insts.len(), false);
+    }
+
+    fn collect_stats(&self, n_active: usize) -> ClusterStats {
+        let per_core: Vec<CoreStats> =
+            self.cores[..n_active].iter().map(|c| c.stats.clone()).collect();
+        let mut total = CoreStats::default();
+        for s in &per_core {
+            total.merge(s);
+        }
+        ClusterStats {
+            cycles: self.cycle,
+            per_core,
+            total,
+            tcdm_conflict_rate: self.tcdm.conflict_rate(),
+            fpu_contention_rate: self.fpus.contention_rate(),
+            barrier_gated_cycles: self.event_unit.gated_cycles,
         }
     }
 
@@ -121,22 +197,204 @@ impl Cluster {
         init: impl Fn(usize) -> Vec<(Reg, u32)>,
         max_cycles: u64,
     ) -> ClusterStats {
-        assert!(n_active >= 1 && n_active <= N_CORES);
-        self.tcdm.grants = 0;
-        self.tcdm.conflicts = 0;
-        let private_fpus = self.fpus.private_per_core;
-        self.fpus = FpuFabric::new();
-        self.fpus.private_per_core = private_fpus;
-        self.event_unit = EventUnit::new(n_active);
-        self.cycle = 0;
-
-        for (i, core) in self.cores.iter_mut().enumerate().take(n_active) {
-            core.reset(prog.insts.len());
-            for (r, v) in init(i) {
-                core.set_reg(r, v);
+        match self.scheduler {
+            SchedulerMode::CycleSkip => self.run_fast(prog, n_active, l2, &init, max_cycles),
+            SchedulerMode::Reference => {
+                self.run_reference(prog, n_active, l2, &init, max_cycles)
             }
         }
-        let mut warm = vec![false; prog.insts.len()];
+    }
+
+    /// As [`Cluster::run_program`] but always on the retained reference
+    /// loop, regardless of [`Cluster::scheduler`].
+    pub fn run_program_reference(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        l2: &mut FlatMem,
+        init: impl Fn(usize) -> Vec<(Reg, u32)>,
+        max_cycles: u64,
+    ) -> ClusterStats {
+        self.run_reference(prog, n_active, l2, &init, max_cycles)
+    }
+
+    /// The cycle-skipping driver (§Perf).
+    ///
+    /// Invariants that make the skip exact:
+    /// * a skipped cycle performs no arbitration — every active core is
+    ///   `Ready` with `busy > 0` (pure stall) or `AtBarrier`;
+    /// * the barrier cannot release inside the window (some running core
+    ///   is not waiting), so `EventUnit::tick` would return false and only
+    ///   accumulate `waiting` gated cycles per skipped cycle;
+    /// * per skipped cycle a busy core does exactly `cycles += 1; busy -= 1`
+    ///   and a barrier core `cycles += 1; stall_barrier += 1`
+    ///   ([`Core::skip_stall_cycles`] applies `delta` of them at once);
+    /// * `delta = min(busy)` stops at the first cycle where some core can
+    ///   issue again, which the per-cycle path then handles normally.
+    fn run_fast(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        l2: &mut FlatMem,
+        init: &impl Fn(usize) -> Vec<(Reg, u32)>,
+        max_cycles: u64,
+    ) -> ClusterStats {
+        let pre = prog.predecode();
+        self.reset_for_run(prog, n_active, init);
+
+        let mut mem_reqs: Vec<(usize, crate::iss::MemReq)> = Vec::with_capacity(N_CORES);
+        let mut fp_reqs: Vec<usize> = Vec::with_capacity(N_CORES);
+        let mut ds_reqs: Vec<usize> = Vec::with_capacity(N_CORES);
+        let mut tcdm_banked: Vec<(usize, usize)> = Vec::with_capacity(N_CORES);
+
+        loop {
+            // One poll pass replaces the halted/running/waiting scans.
+            let mut n_halted = 0usize;
+            let mut parked = 0usize;
+            let mut min_busy = u64::MAX;
+            let mut can_issue = false;
+            for c in self.cores[..n_active].iter() {
+                match c.state {
+                    CoreState::Halted => n_halted += 1,
+                    CoreState::AtBarrier => parked += 1,
+                    CoreState::Ready => {
+                        let b = c.busy_cycles();
+                        if b == 0 {
+                            can_issue = true;
+                        } else if b < min_busy {
+                            min_busy = b;
+                        }
+                    }
+                }
+            }
+            if n_halted == n_active {
+                break;
+            }
+            assert!(
+                self.cycle < max_cycles,
+                "cluster run of {} exceeded {max_cycles} cycles",
+                prog.name
+            );
+
+            if !can_issue && parked < n_active - n_halted {
+                // Nothing can happen until the shortest busy counter
+                // drains (if no Ready core were busy, every running core
+                // would be parked and the barrier would release instead).
+                debug_assert!(min_busy != u64::MAX);
+                let delta = min_busy.min(max_cycles - self.cycle);
+                for c in self.cores[..n_active].iter_mut() {
+                    if c.state != CoreState::Halted {
+                        c.skip_stall_cycles(delta);
+                    }
+                }
+                self.event_unit.skip(parked, delta);
+                self.cycle += delta;
+                continue;
+            }
+
+            mem_reqs.clear();
+            fp_reqs.clear();
+            ds_reqs.clear();
+            let mut running = 0usize;
+            let mut waiting = 0usize;
+            for i in 0..n_active {
+                match self.cores[i].begin_cycle(prog, &pre, &mut self.warm) {
+                    Intent::Mem(r) => {
+                        running += 1;
+                        mem_reqs.push((i, r));
+                    }
+                    Intent::Fp { divsqrt: false } => {
+                        running += 1;
+                        fp_reqs.push(i);
+                    }
+                    Intent::Fp { divsqrt: true } => {
+                        running += 1;
+                        ds_reqs.push(i);
+                    }
+                    Intent::Barrier => {
+                        running += 1;
+                        waiting += 1;
+                    }
+                    Intent::Retired | Intent::Stalled => running += 1,
+                    Intent::Halted => {}
+                }
+            }
+
+            // Event unit: release the barrier when every running core waits.
+            if self.event_unit.tick(waiting, running) {
+                for c in self.cores[..n_active].iter_mut() {
+                    if c.state == CoreState::AtBarrier {
+                        c.release_barrier();
+                    }
+                }
+            }
+
+            // TCDM bank arbitration (word-interleaved; one grant per bank).
+            tcdm_banked.clear();
+            tcdm_banked.extend(
+                mem_reqs
+                    .iter()
+                    .filter(|(_, r)| Tcdm::contains(r.addr))
+                    .map(|&(i, r)| (i, Tcdm::bank_of(r.addr))),
+            );
+            let grants = self.tcdm.arbitrate_mask(&tcdm_banked);
+            for &(i, req) in &mem_reqs {
+                let mut view = ClusterMemView { tcdm: &mut self.tcdm.mem, l2: &mut *l2 };
+                if Tcdm::contains(req.addr) {
+                    if grants & (1u16 << i) != 0 {
+                        self.cores[i].retire_mem(&pre, &mut view);
+                    } else {
+                        self.cores[i].deny_mem();
+                    }
+                } else {
+                    // L2 access across the AXI bridge: always granted but
+                    // multi-cycle.
+                    self.cores[i].retire_mem(&pre, &mut view);
+                    self.cores[i].add_busy(CLUSTER_TO_L2_LATENCY);
+                }
+            }
+
+            // FPU issue arbitration (static mapping; 1 issue/FPU/cycle).
+            let fp_grants = self.fpus.arbitrate_mask(&fp_reqs);
+            for &i in &fp_reqs {
+                if fp_grants & (1u16 << i) != 0 {
+                    self.cores[i].retire_fp(&pre);
+                } else {
+                    self.cores[i].deny_fpu(false);
+                }
+            }
+            // Shared DIV-SQRT unit: one op in flight cluster-wide.
+            for &i in &ds_reqs {
+                let lat = match pre.recs[self.cores[i].pc].kind {
+                    DecodedKind::Fp { latency, .. } => latency,
+                    _ => 1,
+                };
+                if self.fpus.try_divsqrt(self.cycle, lat) {
+                    self.cores[i].retire_fp(&pre);
+                } else {
+                    self.cores[i].deny_fpu(true);
+                }
+            }
+
+            self.cycle += 1;
+        }
+
+        self.collect_stats(n_active)
+    }
+
+    /// The retained 1-cycle-per-iteration reference driver (the seed
+    /// implementation, modulo the shared predecode table): the oracle the
+    /// equivalence suite holds [`Cluster::run_fast`] against.
+    fn run_reference(
+        &mut self,
+        prog: &Program,
+        n_active: usize,
+        l2: &mut FlatMem,
+        init: &impl Fn(usize) -> Vec<(Reg, u32)>,
+        max_cycles: u64,
+    ) -> ClusterStats {
+        let pre = prog.predecode();
+        self.reset_for_run(prog, n_active, init);
 
         let mut mem_reqs: Vec<(usize, crate::iss::MemReq)> = Vec::with_capacity(N_CORES);
         let mut fp_reqs: Vec<usize> = Vec::with_capacity(N_CORES);
@@ -159,7 +417,7 @@ impl Cluster {
             ds_reqs.clear();
 
             for i in 0..n_active {
-                match self.cores[i].begin_cycle(prog, &mut warm) {
+                match self.cores[i].begin_cycle(prog, &pre, &mut self.warm) {
                     Intent::Mem(r) => mem_reqs.push((i, r)),
                     Intent::Fp { divsqrt: false } => fp_reqs.push(i),
                     Intent::Fp { divsqrt: true } => ds_reqs.push(i),
@@ -191,17 +449,17 @@ impl Cluster {
             );
             self.tcdm.arbitrate_into(&tcdm_banked, &mut granted);
             for &(i, req) in &mem_reqs {
-                let mut view = ClusterMemView { tcdm: &mut self.tcdm.mem, l2 };
+                let mut view = ClusterMemView { tcdm: &mut self.tcdm.mem, l2: &mut *l2 };
                 if Tcdm::contains(req.addr) {
                     if granted.contains(&i) {
-                        self.cores[i].retire_mem(prog, &mut view);
+                        self.cores[i].retire_mem(&pre, &mut view);
                     } else {
                         self.cores[i].deny_mem();
                     }
                 } else {
                     // L2 access across the AXI bridge: always granted but
                     // multi-cycle.
-                    self.cores[i].retire_mem(prog, &mut view);
+                    self.cores[i].retire_mem(&pre, &mut view);
                     self.cores[i].add_busy(CLUSTER_TO_L2_LATENCY);
                 }
             }
@@ -210,20 +468,19 @@ impl Cluster {
             self.fpus.arbitrate_into(&fp_reqs, &mut fp_granted);
             for &i in &fp_reqs {
                 if fp_granted.contains(&i) {
-                    self.cores[i].retire_fp(prog);
+                    self.cores[i].retire_fp(&pre);
                 } else {
                     self.cores[i].deny_fpu(false);
                 }
             }
             // Shared DIV-SQRT unit: one op in flight cluster-wide.
             for &i in &ds_reqs {
-                let lat = match prog.insts[self.cores[i].pc] {
-                    Inst::Fp { op: FpOp::Div, .. } => FpOp::Div.cycles(),
-                    Inst::Fp { op: FpOp::Sqrt, .. } => FpOp::Sqrt.cycles(),
+                let lat = match pre.recs[self.cores[i].pc].kind {
+                    DecodedKind::Fp { latency, .. } => latency,
                     _ => 1,
                 };
                 if self.fpus.try_divsqrt(self.cycle, lat) {
-                    self.cores[i].retire_fp(prog);
+                    self.cores[i].retire_fp(&pre);
                 } else {
                     self.cores[i].deny_fpu(true);
                 }
@@ -232,20 +489,7 @@ impl Cluster {
             self.cycle += 1;
         }
 
-        let per_core: Vec<CoreStats> =
-            self.cores[..n_active].iter().map(|c| c.stats.clone()).collect();
-        let mut total = CoreStats::default();
-        for s in &per_core {
-            total.merge(s);
-        }
-        ClusterStats {
-            cycles: self.cycle,
-            per_core,
-            total,
-            tcdm_conflict_rate: self.tcdm.conflict_rate(),
-            fpu_contention_rate: self.fpus.contention_rate(),
-            barrier_gated_cycles: self.event_unit.gated_cycles,
-        }
+        self.collect_stats(n_active)
     }
 }
 

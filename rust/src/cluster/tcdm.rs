@@ -46,28 +46,48 @@ impl Tcdm {
         (TCDM_BASE..TCDM_BASE + TCDM_SIZE as u32).contains(&addr)
     }
 
+    /// Zero contents and arbitration state in place, keeping the backing
+    /// allocation (between-runs reuse, §Perf).
+    pub fn reset(&mut self) {
+        self.mem.reset();
+        self.rr = [0; TCDM_BANKS];
+        self.grants = 0;
+        self.conflicts = 0;
+    }
+
     /// Arbitrate one cycle of requests: `reqs` maps requester-id → bank.
     /// Returns the granted requester per bank; losers are conflicts.
     ///
     /// Round-robin: the pointer advances past the granted requester so a
-    /// hot bank is shared fairly. Allocation-free per bank (§Perf: this
-    /// runs every simulated cycle).
+    /// hot bank is shared fairly.
     pub fn arbitrate(&mut self, reqs: &[(usize, usize)]) -> Vec<usize> {
         let mut granted = Vec::with_capacity(reqs.len().min(TCDM_BANKS));
         self.arbitrate_into(reqs, &mut granted);
         granted
     }
 
-    /// As [`Tcdm::arbitrate`], writing grants into a caller-owned buffer
-    /// (the cluster cycle loop reuses it; single pass over the requests).
+    /// As [`Tcdm::arbitrate`], writing grants into a caller-owned buffer.
     pub fn arbitrate_into(&mut self, reqs: &[(usize, usize)], granted: &mut Vec<usize>) {
         granted.clear();
+        let mut m = self.arbitrate_mask(reqs);
+        while m != 0 {
+            granted.push(m.trailing_zeros() as usize);
+            m &= m - 1;
+        }
+    }
+
+    /// As [`Tcdm::arbitrate`], returning the grants as a requester-id
+    /// bitmask — fully allocation-free, one bit test per requester on the
+    /// consumer side instead of a linear `contains` scan (§Perf: this
+    /// runs every simulated cycle).
+    pub fn arbitrate_mask(&mut self, reqs: &[(usize, usize)]) -> u16 {
         // Per-bank aggregation in one pass: count, lowest id, lowest id
         // at/after the RR pointer. u8 is enough for <=16 requesters.
         let mut count = [0u8; TCDM_BANKS];
         let mut first = [u8::MAX; TCDM_BANKS];
         let mut at_or_after = [u8::MAX; TCDM_BANKS];
         for &(id, b) in reqs {
+            debug_assert!(id < 16, "requester id exceeds grant mask");
             let id8 = id as u8;
             count[b] += 1;
             if id8 < first[b] {
@@ -77,6 +97,7 @@ impl Tcdm {
                 at_or_after[b] = id8;
             }
         }
+        let mut mask = 0u16;
         for bank in 0..TCDM_BANKS {
             if count[bank] == 0 {
                 continue;
@@ -87,8 +108,9 @@ impl Tcdm {
             self.rr[bank] = winner + 1;
             self.grants += 1;
             self.conflicts += (count[bank] - 1) as u64;
-            granted.push(winner);
+            mask |= 1u16 << winner;
         }
+        mask
     }
 
     /// Fraction of requests that lost arbitration.

@@ -3,8 +3,6 @@
 //! property-testing helper (proptest is unavailable offline; see
 //! DESIGN.md §5 substitutions).
 
-use thiserror::Error;
-
 /// Clock cycles of whichever domain is being discussed.
 pub type Cycles = u64;
 
@@ -15,18 +13,42 @@ pub type PicoJoules = f64;
 /// Frequency in Hz.
 pub type Hertz = f64;
 
-#[derive(Error, Debug)]
+/// Crate-wide error type (hand-rolled Display/Error impls: thiserror is
+/// unavailable offline, DESIGN.md §5 substitutions).
+#[derive(Debug)]
 pub enum VegaError {
-    #[error("assembler error: {0}")]
     Asm(String),
-    #[error("simulation error: {0}")]
     Sim(String),
-    #[error("configuration error: {0}")]
     Config(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for VegaError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VegaError::Asm(s) => write!(f, "assembler error: {s}"),
+            VegaError::Sim(s) => write!(f, "simulation error: {s}"),
+            VegaError::Config(s) => write!(f, "configuration error: {s}"),
+            VegaError::Runtime(s) => write!(f, "runtime error: {s}"),
+            VegaError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for VegaError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            VegaError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for VegaError {
+    fn from(e: std::io::Error) -> Self {
+        VegaError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, VegaError>;

@@ -11,7 +11,7 @@
 //! The silicon hardwires the permutations at tape-out; we hardwire them at
 //! build time from fixed seeds (deterministic across runs).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 use crate::common::Rng;
 
@@ -37,22 +37,26 @@ fn fisher_yates(n: usize, rng: &mut Rng) -> Vec<u32> {
     t
 }
 
-static PERMS_BY_DIM: Lazy<Vec<(usize, PermSet)>> = Lazy::new(|| {
-    super::bitvec::HD_DIMS
-        .iter()
-        .map(|&dim| {
-            let tables = std::array::from_fn(|p| {
-                // Fixed seeds: "hardwired random permutations".
-                let mut rng = Rng::new(0x5EED_0000 + (p as u64) * 97 + dim as u64);
-                fisher_yates(dim, &mut rng)
-            });
-            (dim, PermSet { tables })
-        })
-        .collect()
-});
+static PERMS_BY_DIM: OnceLock<Vec<(usize, PermSet)>> = OnceLock::new();
+
+fn perms_by_dim() -> &'static [(usize, PermSet)] {
+    PERMS_BY_DIM.get_or_init(|| {
+        super::bitvec::HD_DIMS
+            .iter()
+            .map(|&dim| {
+                let tables = std::array::from_fn(|p| {
+                    // Fixed seeds: "hardwired random permutations".
+                    let mut rng = Rng::new(0x5EED_0000 + (p as u64) * 97 + dim as u64);
+                    fisher_yates(dim, &mut rng)
+                });
+                (dim, PermSet { tables })
+            })
+            .collect()
+    })
+}
 
 fn perm_table(dim: usize, p: usize) -> &'static [u32] {
-    let set = &PERMS_BY_DIM
+    let set = &perms_by_dim()
         .iter()
         .find(|(d, _)| *d == dim)
         .expect("unsupported dim")

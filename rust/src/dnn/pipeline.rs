@@ -9,7 +9,7 @@
 //! over layers — exactly the model the paper uses to explain Fig. 10
 //! ("all layers except for the final one are compute-bound").
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 use crate::cluster::{dma, Cluster, DmaJob};
 use crate::common::Cycles;
@@ -55,19 +55,33 @@ pub enum Engine {
     HwceHybrid,
 }
 
+static SW_MAC_PER_CYCLE: OnceLock<f64> = OnceLock::new();
+
 /// The measured PULP-NN software rate: run the int8 matmul kernel once on
 /// the simulated cluster and cache MAC/cycle. This is the link that makes
 /// the DNN model *emergent* from the ISS rather than assumed.
-pub static SW_MAC_PER_CYCLE: Lazy<f64> = Lazy::new(|| {
-    let mut cl = Cluster::new();
-    let mut l2 = FlatMem::new(crate::cluster::L2_BASE, 4096);
-    let mut rng = crate::common::Rng::new(0xD0DE);
-    let (m, n, k) = (64, 64, 64);
-    let av: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
-    let bv: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
-    let (_, kr) = int_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, IntWidth::I8, 8);
-    kr.stats.mac_per_cycle()
-});
+pub fn sw_mac_per_cycle() -> f64 {
+    *SW_MAC_PER_CYCLE.get_or_init(|| {
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(crate::cluster::L2_BASE, 4096);
+        let mut rng = crate::common::Rng::new(0xD0DE);
+        let (m, n, k) = (64, 64, 64);
+        let av: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let bv: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+        let (_, kr) = int_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, IntWidth::I8, 8);
+        kr.stats.mac_per_cycle()
+    })
+}
+
+/// Shared channel models for the timing pipeline. `run_network` only
+/// reads their timing parameters (`capacity`, `transfer_cycles`), so one
+/// instance serves every run — it used to allocate the 8 MB MRAM + 32 MB
+/// HyperRAM backing stores per invocation (§Perf).
+static CHANNELS: OnceLock<(Mram, HyperRam)> = OnceLock::new();
+
+fn channels() -> &'static (Mram, HyperRam) {
+    CHANNELS.get_or_init(|| (Mram::new(), HyperRam::new(32 * 1024 * 1024)))
+}
 
 /// Depthwise convolutions have no filter reuse and byte-granular streams:
 /// PULP-NN reaches roughly a third of the matmul rate (documented
@@ -168,7 +182,7 @@ impl PipelineConfig {
 fn compute_cycles_sw(layer: &Layer) -> Cycles {
     let macs = layer.macs() as f64;
     let cycles = match layer.kind {
-        LayerKind::Conv { .. } | LayerKind::Linear { .. } => macs / *SW_MAC_PER_CYCLE,
+        LayerKind::Conv { .. } | LayerKind::Linear { .. } => macs / sw_mac_per_cycle(),
         LayerKind::DwConv { .. } => macs / DW_MAC_PER_CYCLE,
         LayerKind::Add { .. } | LayerKind::GlobalPool { .. } => {
             2.0 * macs / ELTWISE_OPS_PER_CYCLE
@@ -218,15 +232,14 @@ fn compute_cycles_hwce(layer: &Layer, hybrid: bool) -> (Cycles, f64) {
         partials_in_l1: false,
     };
     let hwce_rate = job.mac_per_cycle();
-    let combined = if hybrid { hwce_rate + *SW_MAC_PER_CYCLE } else { hwce_rate };
+    let combined = if hybrid { hwce_rate + sw_mac_per_cycle() } else { hwce_rate };
     let cycles = (layer.macs() as f64 / combined).ceil() as Cycles;
     (cycles, hwce_rate / combined)
 }
 
 /// Run the pipeline model over `net`.
 pub fn run_network(net: &Network, cfg: PipelineConfig) -> NetworkReport {
-    let mram = Mram::new();
-    let hyper = HyperRam::new(32 * 1024 * 1024);
+    let (mram, hyper) = channels();
     let mut mram_left: u64 = mram.capacity() as u64;
     let mut mram_open = true; // strictly-prefix greedy ("MRAM up to layer")
     let mut mram_up_to = None;
@@ -340,7 +353,7 @@ mod tests {
 
     #[test]
     fn sw_rate_is_measured_not_assumed() {
-        let r = *SW_MAC_PER_CYCLE;
+        let r = sw_mac_per_cycle();
         assert!((13.0..17.5).contains(&r), "SW rate = {r}");
     }
 

@@ -51,26 +51,31 @@ pub fn conv3x3(
     debug_assert!(x.iter().all(|&v| prec.in_range(v)), "input range");
     debug_assert!(w.iter().all(|&v| prec.in_range(v)), "weight range");
 
-    let xat = |r: usize, c: usize, ch: usize| x[(r * wp + c) * cin + ch];
-    let wat = |dy: usize, dx: usize, ci: usize, co: usize| w[((dy * 3 + dx) * cin + ci) * cout + co];
-
     let mut out = vec![0i32; h * wd * cout];
     // The engine iterates sliding-window positions; three filters (cout
-    // lanes) share each window. Loop order mirrors the partial-sum FIFO:
-    // input channels accumulate into the same output position.
+    // lanes) share each window. The NHWC layout makes each window row a
+    // contiguous `3*cin` run of the input, and the matching weight block a
+    // contiguous `3*cin*cout` run — so per window position we stream both
+    // unit-stride and accumulate straight into the `cout` output lane.
+    // Wrapping i32 addition is associative, so this retires bit-identical
+    // sums to the per-(co,dy,dx,ci) probe order it replaces (§Perf).
+    let run = 3 * cin;
     for r in 0..h {
         for c in 0..wd {
-            for co in 0..cout {
-                let mut acc = 0i32;
-                for dy in 0..3 {
-                    for dx in 0..3 {
-                        for ci in 0..cin {
-                            // Operands upscale to 16-bit; products fit i32.
-                            acc = acc.wrapping_add(xat(r + dy, c + dx, ci) * wat(dy, dx, ci, co));
-                        }
+            let o = &mut out[(r * wd + c) * cout..][..cout];
+            for dy in 0..3 {
+                let xrow = &x[((r + dy) * wp + c) * cin..][..run];
+                let wrow = &w[dy * run * cout..][..run * cout];
+                for (i, &xv) in xrow.iter().enumerate() {
+                    if xv == 0 {
+                        continue;
+                    }
+                    // Operands upscale to 16-bit; products fit i32.
+                    let ws = &wrow[i * cout..][..cout];
+                    for (acc, &wv) in o.iter_mut().zip(ws) {
+                        *acc = acc.wrapping_add(xv * wv);
                     }
                 }
-                out[(r * wd + c) * cout + co] = acc;
             }
         }
     }

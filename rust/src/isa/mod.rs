@@ -19,11 +19,13 @@
 
 pub mod asm;
 pub mod inst;
+pub mod predecode;
 
 pub use asm::{Asm, Label, Program};
 pub use inst::{
     AluOp, Cond, FpFmt, FpOp, Inst, InstClass, LoopCount, MemSize, SimdFmt, SimdOp,
 };
+pub use predecode::{Decoded, DecodedKind, PreDecoded};
 
 /// A register index (x0..x31). x0 is hardwired to zero.
 pub type Reg = u8;

@@ -1,0 +1,156 @@
+//! Predecoded instruction stream (§Perf, hot-path layer 2).
+//!
+//! The ISS interprets the symbolic [`Inst`] enum, and the per-cycle path
+//! used to re-match the full enum and re-build `inst.srcs()` on every
+//! cycle of every core. [`Program::predecode`] flattens each instruction
+//! once per run into a dense [`Decoded`] record — dispatch kind, operand
+//! fields, source-register bitmask for the load-use interlock, FP latency
+//! and the retire-time counters (class, int ops, FLOPs) — so
+//! `Core::begin_cycle` / `retire_mem` / `retire_fp` reduce to field reads
+//! and single-bit tests. Purely a representation change: every decoded
+//! field is derived from the same `Inst` accessors the slow path used, so
+//! cycle counts and results are identical by construction.
+
+use super::inst::{FpFmt, FpOp, Inst, InstClass, MemSize};
+use super::{Program, Reg};
+
+/// Per-cycle dispatch kind plus the operand fields each kind needs.
+#[derive(Debug, Clone, Copy)]
+pub enum DecodedKind {
+    /// Memory access needing a TCDM/L2 grant. `reg` is the destination
+    /// for loads and the store-data source for stores.
+    Mem { write: bool, size: MemSize, reg: Reg, rs1: Reg, imm: i32, post_inc: bool },
+    /// FP op needing an FPU issue slot (or the shared DIV-SQRT unit).
+    Fp { op: FpOp, fmt: FpFmt, rd: Reg, rs1: Reg, rs2: Reg, latency: u64, divsqrt: bool },
+    Barrier,
+    Halt,
+    /// Retires internally; `Core::exec_local` matches the original inst.
+    Local,
+}
+
+/// One instruction, flattened for the per-cycle hot path.
+#[derive(Debug, Clone, Copy)]
+pub struct Decoded {
+    pub kind: DecodedKind,
+    /// Bitmask over x0..x31 of the registers this instruction reads
+    /// (load-use interlock test is one AND instead of a 3-slot scan).
+    pub src_mask: u32,
+    pub class: InstClass,
+    pub int_ops: u64,
+    pub flops: u64,
+}
+
+impl Decoded {
+    fn of(inst: &Inst) -> Self {
+        let kind = match *inst {
+            Inst::Load { size, rd, rs1, imm, post_inc } => {
+                DecodedKind::Mem { write: false, size, reg: rd, rs1, imm, post_inc }
+            }
+            Inst::Store { size, rs2, rs1, imm, post_inc } => {
+                DecodedKind::Mem { write: true, size, reg: rs2, rs1, imm, post_inc }
+            }
+            Inst::Fp { op, fmt, rd, rs1, rs2 } => DecodedKind::Fp {
+                op,
+                fmt,
+                rd,
+                rs1,
+                rs2,
+                latency: op.cycles(),
+                divsqrt: op.is_divsqrt(),
+            },
+            Inst::Barrier => DecodedKind::Barrier,
+            Inst::Halt => DecodedKind::Halt,
+            _ => DecodedKind::Local,
+        };
+        let mut src_mask = 0u32;
+        for s in inst.srcs().into_iter().flatten() {
+            src_mask |= 1u32 << s;
+        }
+        Self {
+            kind,
+            src_mask,
+            class: inst.class(),
+            int_ops: inst.int_ops(),
+            flops: inst.flops(),
+        }
+    }
+}
+
+/// The predecoded side-table of a program, built once per run.
+pub struct PreDecoded {
+    pub recs: Vec<Decoded>,
+}
+
+impl PreDecoded {
+    pub fn len(&self) -> usize {
+        self.recs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.recs.is_empty()
+    }
+}
+
+impl Program {
+    /// Flatten every instruction into its dense hot-path record.
+    pub fn predecode(&self) -> PreDecoded {
+        PreDecoded { recs: self.insts.iter().map(Decoded::of).collect() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, A2, T0};
+
+    #[test]
+    fn src_mask_matches_srcs() {
+        let mut a = Asm::new("t");
+        a.mac(A2, A0, A1); // reads rs1, rs2 and the accumulator rd
+        a.lw(T0, A0, 4);
+        a.sw(T0, A1, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let pre = p.predecode();
+        assert_eq!(pre.len(), p.len());
+        for (inst, dec) in p.insts.iter().zip(&pre.recs) {
+            let mut want = 0u32;
+            for s in inst.srcs().into_iter().flatten() {
+                want |= 1 << s;
+            }
+            assert_eq!(dec.src_mask, want, "{inst:?}");
+            assert_eq!(dec.class, inst.class());
+            assert_eq!(dec.int_ops, inst.int_ops());
+            assert_eq!(dec.flops, inst.flops());
+        }
+    }
+
+    #[test]
+    fn kinds_cover_arbitrated_insts() {
+        let mut a = Asm::new("t");
+        a.lw(T0, A0, 0);
+        a.sw(T0, A0, 0);
+        a.fdiv_s(A2, A0, A1);
+        a.fmac_s(A2, A0, A1);
+        a.barrier();
+        a.addi(A0, A0, 1);
+        a.halt();
+        let pre = a.finish().unwrap().predecode();
+        assert!(matches!(
+            pre.recs[0].kind,
+            DecodedKind::Mem { write: false, .. }
+        ));
+        assert!(matches!(pre.recs[1].kind, DecodedKind::Mem { write: true, .. }));
+        assert!(matches!(
+            pre.recs[2].kind,
+            DecodedKind::Fp { divsqrt: true, latency: 11, .. }
+        ));
+        assert!(matches!(
+            pre.recs[3].kind,
+            DecodedKind::Fp { divsqrt: false, latency: 1, .. }
+        ));
+        assert!(matches!(pre.recs[4].kind, DecodedKind::Barrier));
+        assert!(matches!(pre.recs[5].kind, DecodedKind::Local));
+        assert!(matches!(pre.recs[6].kind, DecodedKind::Halt));
+    }
+}

@@ -16,6 +16,7 @@
 //!   [`Core::deny_fpu`].
 
 use crate::isa::inst::{Inst, LoopCount, MemSize};
+use crate::isa::predecode::{Decoded, DecodedKind, PreDecoded};
 use crate::isa::{Program, Reg};
 
 use super::exec;
@@ -92,7 +93,8 @@ impl Core {
         }
     }
 
-    /// Reset for a new program, keeping the id.
+    /// Reset for a new program, keeping the id (and the `seen` bitmap's
+    /// capacity — resetting must not re-allocate between runs, §Perf).
     pub fn reset(&mut self, prog_len: usize) {
         self.regs = [0; 32];
         self.pc = 0;
@@ -101,7 +103,8 @@ impl Core {
         self.loops = [HwLoop::default(); 2];
         self.busy = 0;
         self.pending_load = None;
-        self.seen = vec![false; prog_len];
+        self.seen.clear();
+        self.seen.resize(prog_len, false);
     }
 
     pub fn set_reg(&mut self, r: Reg, v: u32) {
@@ -126,9 +129,15 @@ impl Core {
 
     /// Phase 1: advance one cycle and report what this core needs.
     ///
-    /// `shared_warm` is the shared-L1.5 footprint bitmap (sized to the
-    /// program; shared across the cluster's cores).
-    pub fn begin_cycle(&mut self, prog: &Program, shared_warm: &mut [bool]) -> Intent {
+    /// `pre` is the program's predecoded side-table ([`Program::predecode`],
+    /// built once per run); `shared_warm` is the shared-L1.5 footprint
+    /// bitmap (sized to the program; shared across the cluster's cores).
+    pub fn begin_cycle(
+        &mut self,
+        prog: &Program,
+        pre: &PreDecoded,
+        shared_warm: &mut [bool],
+    ) -> Intent {
         if self.state == CoreState::Halted {
             return Intent::Halted;
         }
@@ -155,88 +164,70 @@ impl Core {
             return Intent::Stalled;
         }
 
-        let inst = prog.insts[self.pc];
+        let dec = pre.recs[self.pc];
 
         // Load-use interlock.
         if let Some(ld) = self.pending_load.take() {
-            if inst.srcs().contains(&Some(ld)) {
+            if dec.src_mask & (1u32 << ld) != 0 {
                 self.stats.stall_loaduse += 1;
                 return Intent::Stalled;
             }
         }
 
-        match inst {
-            Inst::Load { rs1, imm, post_inc, size, .. } => {
+        match dec.kind {
+            DecodedKind::Mem { write, size, rs1, imm, post_inc, .. } => {
                 let addr = if post_inc {
                     self.reg(rs1)
                 } else {
                     self.reg(rs1).wrapping_add(imm as u32)
                 };
-                Intent::Mem(MemReq { addr, size, write: false })
+                Intent::Mem(MemReq { addr, size, write })
             }
-            Inst::Store { rs1, imm, post_inc, size, .. } => {
-                let addr = if post_inc {
-                    self.reg(rs1)
-                } else {
-                    self.reg(rs1).wrapping_add(imm as u32)
-                };
-                Intent::Mem(MemReq { addr, size, write: true })
-            }
-            Inst::Fp { op, .. } => Intent::Fp { divsqrt: op.is_divsqrt() },
-            Inst::Barrier => {
+            DecodedKind::Fp { divsqrt, .. } => Intent::Fp { divsqrt },
+            DecodedKind::Barrier => {
                 self.state = CoreState::AtBarrier;
                 self.stats.retired += 1;
-                self.stats.by_class.bump(inst.class());
+                self.stats.by_class.bump(dec.class);
                 Intent::Barrier
             }
-            Inst::Halt => {
+            DecodedKind::Halt => {
                 self.state = CoreState::Halted;
                 self.stats.retired += 1;
-                self.stats.by_class.bump(inst.class());
+                self.stats.by_class.bump(dec.class);
                 Intent::Halted
             }
-            _ => {
-                self.exec_local(prog, inst);
+            DecodedKind::Local => {
+                self.exec_local(prog, &dec);
                 Intent::Retired
             }
         }
     }
 
     /// Phase 2a: the fabric granted the memory request.
-    pub fn retire_mem(&mut self, prog: &Program, mem: &mut dyn Memory) {
-        let inst = prog.insts[self.pc];
-        match inst {
-            Inst::Load { size, rd, rs1, imm, post_inc } => {
-                let addr = if post_inc {
-                    self.reg(rs1)
-                } else {
-                    self.reg(rs1).wrapping_add(imm as u32)
-                };
-                let v = mem.load(addr, size);
-                self.write_reg(rd, v);
-                if post_inc {
-                    let nv = self.reg(rs1).wrapping_add(imm as u32);
-                    self.write_reg(rs1, nv);
-                }
-                self.pending_load = Some(rd);
-                self.stats.bytes_loaded += size.bytes() as u64;
-            }
-            Inst::Store { size, rs2, rs1, imm, post_inc } => {
-                let addr = if post_inc {
-                    self.reg(rs1)
-                } else {
-                    self.reg(rs1).wrapping_add(imm as u32)
-                };
-                mem.store(addr, size, self.reg(rs2));
-                if post_inc {
-                    let nv = self.reg(rs1).wrapping_add(imm as u32);
-                    self.write_reg(rs1, nv);
-                }
-                self.stats.bytes_stored += size.bytes() as u64;
-            }
-            other => unreachable!("retire_mem on non-memory inst {other:?}"),
+    pub fn retire_mem(&mut self, pre: &PreDecoded, mem: &mut dyn Memory) {
+        let dec = pre.recs[self.pc];
+        let DecodedKind::Mem { write, size, reg, rs1, imm, post_inc } = dec.kind else {
+            unreachable!("retire_mem on non-memory inst");
+        };
+        let addr = if post_inc {
+            self.reg(rs1)
+        } else {
+            self.reg(rs1).wrapping_add(imm as u32)
+        };
+        if write {
+            mem.store(addr, size, self.reg(reg));
+            self.stats.bytes_stored += size.bytes() as u64;
+        } else {
+            let v = mem.load(addr, size);
+            self.write_reg(reg, v);
+            self.pending_load = Some(reg);
+            self.stats.bytes_loaded += size.bytes() as u64;
         }
-        self.finish_retire(prog, inst, None);
+        if post_inc {
+            let nv = self.reg(rs1).wrapping_add(imm as u32);
+            self.write_reg(rs1, nv);
+        }
+        self.finish_retire(&dec, None);
     }
 
     /// Phase 2b: the memory request was not granted (bank conflict).
@@ -245,21 +236,20 @@ impl Core {
     }
 
     /// Phase 2c: the FPU issue slot was granted.
-    pub fn retire_fp(&mut self, prog: &Program) {
-        let inst = prog.insts[self.pc];
-        let Inst::Fp { op, fmt, rd, rs1, rs2 } = inst else {
+    pub fn retire_fp(&mut self, pre: &PreDecoded) {
+        let dec = pre.recs[self.pc];
+        let DecodedKind::Fp { op, fmt, rd, rs1, rs2, latency, .. } = dec.kind else {
             unreachable!("retire_fp on non-fp inst");
         };
         let acc = self.reg(rd);
         let v = exec::fp(op, fmt, self.reg(rs1), self.reg(rs2), acc);
         self.write_reg(rd, v);
-        let lat = op.cycles();
-        if lat > 1 {
+        if latency > 1 {
             // Core blocks on the iterative DIV-SQRT unit.
-            self.busy = lat - 1;
-            self.stats.multicycle_busy += lat - 1;
+            self.busy = latency - 1;
+            self.stats.multicycle_busy += latency - 1;
         }
-        self.finish_retire(prog, inst, None);
+        self.finish_retire(&dec, None);
     }
 
     /// Phase 2d: FPU slot contended away (another core issued to the same
@@ -287,8 +277,32 @@ impl Core {
         self.pc += 1;
     }
 
+    /// Remaining multi-cycle busy count (read by the cluster scheduler's
+    /// cycle-skip fast path).
+    pub(crate) fn busy_cycles(&self) -> u64 {
+        self.busy
+    }
+
+    /// Advance this core through `delta` pure-stall cycles in one step:
+    /// exactly what `delta` consecutive [`Core::begin_cycle`] calls do
+    /// when the core is draining a busy counter or parked at a barrier.
+    /// The caller guarantees `delta <= busy` for busy cores and that the
+    /// barrier cannot release during the skipped window.
+    pub(crate) fn skip_stall_cycles(&mut self, delta: u64) {
+        self.stats.cycles += delta;
+        match self.state {
+            CoreState::Ready => {
+                debug_assert!(self.busy >= delta, "skip past next issue");
+                self.busy -= delta;
+            }
+            CoreState::AtBarrier => self.stats.stall_barrier += delta,
+            CoreState::Halted => debug_assert!(false, "skip on a halted core"),
+        }
+    }
+
     /// Execute an instruction that needs no external arbitration.
-    fn exec_local(&mut self, prog: &Program, inst: Inst) {
+    fn exec_local(&mut self, prog: &Program, dec: &Decoded) {
+        let inst = prog.insts[self.pc];
         let mut taken: Option<usize> = None;
         match inst {
             Inst::Alu { op, rd, rs1, rs2 } => {
@@ -353,7 +367,7 @@ impl Core {
                     // Skip the body entirely.
                     self.loops[lp as usize].remaining = 0;
                     self.stats.retired += 1;
-                    self.stats.by_class.bump(inst.class());
+                    self.stats.by_class.bump(dec.class);
                     self.pc = body_end;
                     return;
                 }
@@ -367,16 +381,16 @@ impl Core {
             | Inst::Barrier
             | Inst::Halt => unreachable!("arbitrated insts handled elsewhere"),
         }
-        self.finish_retire(prog, inst, taken);
+        self.finish_retire(dec, taken);
     }
 
     /// Book-keeping common to every retirement + next-PC computation with
     /// zero-overhead hardware loops.
-    fn finish_retire(&mut self, _prog: &Program, inst: Inst, taken: Option<usize>) {
+    fn finish_retire(&mut self, dec: &Decoded, taken: Option<usize>) {
         self.stats.retired += 1;
-        self.stats.by_class.bump(inst.class());
-        self.stats.int_ops += inst.int_ops();
-        self.stats.flops += inst.flops();
+        self.stats.by_class.bump(dec.class);
+        self.stats.int_ops += dec.int_ops;
+        self.stats.flops += dec.flops;
 
         if let Some(t) = taken {
             self.pc = t;
@@ -411,26 +425,7 @@ pub fn run_single(
     init: &[(Reg, u32)],
     max_cycles: u64,
 ) -> CoreStats {
-    let mut core = Core::new(0);
-    core.reset(prog.insts.len());
-    for &(r, v) in init {
-        core.set_reg(r, v);
-    }
-    let mut warm = vec![false; prog.insts.len()];
-    while !core.halted() {
-        assert!(
-            core.stats.cycles < max_cycles,
-            "program {} exceeded {max_cycles} cycles",
-            prog.name
-        );
-        match core.begin_cycle(prog, &mut warm) {
-            Intent::Mem(_) => core.retire_mem(prog, mem),
-            Intent::Fp { .. } => core.retire_fp(prog),
-            Intent::Barrier => core.release_barrier(),
-            Intent::Retired | Intent::Stalled | Intent::Halted => {}
-        }
-    }
-    core.stats.clone()
+    run_single_regs(prog, mem, init, max_cycles).0
 }
 
 /// As [`run_single`] but returns the final register file too.
@@ -445,14 +440,32 @@ pub fn run_single_regs(
     for &(r, v) in init {
         core.set_reg(r, v);
     }
+    let pre = prog.predecode();
     let mut warm = vec![false; prog.insts.len()];
     while !core.halted() {
-        assert!(core.stats.cycles < max_cycles, "runaway program {}", prog.name);
-        match core.begin_cycle(prog, &mut warm) {
-            Intent::Mem(_) => core.retire_mem(prog, mem),
-            Intent::Fp { .. } => core.retire_fp(prog),
+        assert!(
+            core.stats.cycles < max_cycles,
+            "program {} exceeded {max_cycles} cycles",
+            prog.name
+        );
+        match core.begin_cycle(prog, &pre, &mut warm) {
+            Intent::Mem(_) => core.retire_mem(&pre, mem),
+            Intent::Fp { .. } => core.retire_fp(&pre),
             Intent::Barrier => core.release_barrier(),
-            Intent::Retired | Intent::Stalled | Intent::Halted => {}
+            Intent::Stalled => {
+                // A single core has nothing to arbitrate against: drain
+                // the remaining busy cycles (DIV, icache refill, branch
+                // penalty) in one step instead of one call per cycle.
+                // Clamped so the runaway guard still fires where the
+                // per-cycle loop would have panicked.
+                let b = core
+                    .busy_cycles()
+                    .min(max_cycles.saturating_sub(core.stats.cycles));
+                if b > 0 {
+                    core.skip_stall_cycles(b);
+                }
+            }
+            Intent::Retired | Intent::Halted => {}
         }
     }
     (core.stats.clone(), core.regs)

@@ -36,6 +36,13 @@ impl FlatMem {
         Self { base, data: vec![0; size] }
     }
 
+    /// Zero the contents in place, keeping the allocation (§Perf: drivers
+    /// reuse one region across kernel invocations instead of re-allocating
+    /// megabytes per run).
+    pub fn reset(&mut self) {
+        self.data.fill(0);
+    }
+
     fn off(&self, addr: u32) -> usize {
         debug_assert!(
             addr >= self.base && ((addr - self.base) as usize) < self.data.len(),

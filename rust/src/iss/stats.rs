@@ -8,7 +8,7 @@
 
 use crate::isa::InstClass;
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct CoreStats {
     /// Cycles this core was powered in the measured region.
     pub cycles: u64,
@@ -36,7 +36,7 @@ pub struct CoreStats {
     pub multicycle_busy: u64,
 }
 
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct ClassCounts {
     pub alu: u64,
     pub mul: u64,

@@ -32,8 +32,10 @@ const CHECK_BITS: usize = 7;
 /// Precomputed parity masks: `MASKS[c]` covers every codeword position
 /// whose index has bit `c` set, so syndrome bit c = popcount(cw & MASKS[c])
 /// & 1 — turns per-word ECC from ~500 bit probes into 7 popcounts (§Perf).
-static MASKS: once_cell::sync::Lazy<[u128; CHECK_BITS]> =
-    once_cell::sync::Lazy::new(|| {
+static MASKS: std::sync::OnceLock<[u128; CHECK_BITS]> = std::sync::OnceLock::new();
+
+fn masks() -> &'static [u128; CHECK_BITS] {
+    MASKS.get_or_init(|| {
         std::array::from_fn(|c| {
             let mut m = 0u128;
             for pos in 1..=71u32 {
@@ -43,32 +45,37 @@ static MASKS: once_cell::sync::Lazy<[u128; CHECK_BITS]> =
             }
             m
         })
-    });
+    })
+}
 
 /// Data-bit codeword positions (the non-power-of-two slots in 1..=71).
-static DATA_POS: once_cell::sync::Lazy<[u32; 64]> = once_cell::sync::Lazy::new(|| {
-    let mut out = [0u32; 64];
-    let mut d = 0;
-    for pos in 1..=71u32 {
-        if !pos.is_power_of_two() {
-            out[d] = pos;
-            d += 1;
+static DATA_POS: std::sync::OnceLock<[u32; 64]> = std::sync::OnceLock::new();
+
+fn data_pos() -> &'static [u32; 64] {
+    DATA_POS.get_or_init(|| {
+        let mut out = [0u32; 64];
+        let mut d = 0;
+        for pos in 1..=71u32 {
+            if !pos.is_power_of_two() {
+                out[d] = pos;
+                d += 1;
+            }
         }
-    }
-    debug_assert_eq!(d, 64);
-    out
-});
+        debug_assert_eq!(d, 64);
+        out
+    })
+}
 
 /// Expand 64 data bits into a 72-bit codeword layout: positions 1..=71,
 /// with powers-of-two positions reserved for check bits and position 0 for
 /// the overall parity.
 fn encode_codeword(data: u64) -> u128 {
     let mut cw: u128 = 0;
-    for (d, &pos) in DATA_POS.iter().enumerate() {
+    for (d, &pos) in data_pos().iter().enumerate() {
         cw |= (((data >> d) & 1) as u128) << pos;
     }
     // Hamming check bits via the precomputed masks.
-    for (c, &mask) in MASKS.iter().enumerate() {
+    for (c, &mask) in masks().iter().enumerate() {
         if (cw & mask).count_ones() & 1 == 1 {
             cw |= 1u128 << (1u32 << c);
         }
@@ -81,7 +88,7 @@ fn encode_codeword(data: u64) -> u128 {
 /// Extract the 64 data bits from a codeword.
 fn extract_data(cw: u128) -> u64 {
     let mut data = 0u64;
-    for (d, &pos) in DATA_POS.iter().enumerate() {
+    for (d, &pos) in data_pos().iter().enumerate() {
         data |= (((cw >> pos) & 1) as u64) << d;
     }
     data
@@ -96,7 +103,7 @@ pub fn encode(data: u64) -> u128 {
 /// errors.
 pub fn decode(cw: u128) -> EccResult {
     let mut syndrome = 0u32;
-    for (c, &mask) in MASKS.iter().enumerate() {
+    for (c, &mask) in masks().iter().enumerate() {
         syndrome |= ((cw & mask).count_ones() & 1) << c;
     }
     let overall = cw.count_ones() % 2;

@@ -1,0 +1,225 @@
+//! Scheduler-equivalence suite (§Perf): the cycle-skipping fast path in
+//! `Cluster::run_program` must be *behaviour-preserving* — bit-identical
+//! `ClusterStats` (cycles, every stall counter, conflict rates) and
+//! bit-identical functional state (TCDM, L2, register files) versus the
+//! retained one-cycle-per-iteration reference loop, across kernels that
+//! stress each skip trigger: SIMD matmul (steady-state issue), FFT
+//! (barrier parking), a DIV/REM-heavy microkernel (35-cycle busy drains),
+//! an FDIV/FSQRT kernel (shared DIV-SQRT unit) and L2-crossing loads
+//! (AXI-bridge latency), each at 1, 4 and 8 active cores.
+
+use vega::cluster::{Cluster, SchedulerMode, L2_BASE, TCDM_BASE};
+use vega::common::Rng;
+use vega::isa::{Asm, Program, Reg, A0, A1, A2, A3, T0, T1, T2};
+use vega::iss::FlatMem;
+use vega::kernels::int_matmul::{self, IntWidth};
+use vega::kernels::{fp_fft, fp_matmul::FpWidth};
+
+const CORE_COUNTS: [usize; 3] = [1, 4, 8];
+const MAX_CYCLES: u64 = 50_000_000;
+
+/// Run `prog` on a fresh cluster per scheduler and assert both end in
+/// bit-identical state. `setup` seeds TCDM/L2 identically on both sides.
+fn assert_prog_equivalent(
+    prog: &Program,
+    cores: usize,
+    setup: impl Fn(&mut Cluster, &mut FlatMem),
+    init: impl Fn(usize) -> Vec<(Reg, u32)> + Copy,
+    label: &str,
+) {
+    let mut fast = Cluster::new();
+    let mut l2_fast = FlatMem::new(L2_BASE, 64 * 1024);
+    setup(&mut fast, &mut l2_fast);
+    let stats_fast = fast.run_program(prog, cores, &mut l2_fast, init, MAX_CYCLES);
+
+    let mut refr = Cluster::new();
+    refr.scheduler = SchedulerMode::Reference;
+    let mut l2_ref = FlatMem::new(L2_BASE, 64 * 1024);
+    setup(&mut refr, &mut l2_ref);
+    let stats_ref = refr.run_program(prog, cores, &mut l2_ref, init, MAX_CYCLES);
+
+    assert!(stats_fast.cycles > 0, "{label}/c{cores}: empty run");
+    assert_eq!(stats_fast, stats_ref, "{label}/c{cores}: stats diverge");
+    assert_eq!(
+        fast.tcdm.mem.data, refr.tcdm.mem.data,
+        "{label}/c{cores}: TCDM contents diverge"
+    );
+    assert_eq!(l2_fast.data, l2_ref.data, "{label}/c{cores}: L2 contents diverge");
+    for (a, b) in fast.cores[..cores].iter().zip(&refr.cores[..cores]) {
+        assert_eq!(a.regs, b.regs, "{label}/c{cores}: core {} regfile diverges", a.id);
+    }
+}
+
+#[test]
+fn int_matmul_equivalent_all_widths_and_cores() {
+    for w in [IntWidth::I8, IntWidth::I16, IntWidth::I32] {
+        for cores in CORE_COUNTS {
+            let (m, n, k) = (16, 16, 32);
+            let mut rng = Rng::new(0xE9 + cores as u64);
+            let lim = if w == IntWidth::I8 { 127 } else { 1000 };
+            let av: Vec<i32> =
+                (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+            let bv: Vec<i32> =
+                (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+
+            let mut fast = Cluster::new();
+            let mut l2_fast = FlatMem::new(L2_BASE, 4096);
+            let (c_fast, run_fast) =
+                int_matmul::run(&mut fast, &mut l2_fast, &av, &bv, m, n, k, w, cores);
+
+            let mut refr = Cluster::new();
+            refr.scheduler = SchedulerMode::Reference;
+            let mut l2_ref = FlatMem::new(L2_BASE, 4096);
+            let (c_ref, run_ref) =
+                int_matmul::run(&mut refr, &mut l2_ref, &av, &bv, m, n, k, w, cores);
+
+            assert_eq!(c_fast, c_ref, "matmul {w:?}/c{cores}: outputs diverge");
+            assert_eq!(
+                run_fast.stats, run_ref.stats,
+                "matmul {w:?}/c{cores}: stats diverge"
+            );
+            // And both match the host reference (not just each other).
+            assert_eq!(c_fast, int_matmul::host_ref(&av, &bv, m, n, k));
+        }
+    }
+}
+
+#[test]
+fn fp_fft_equivalent_across_cores() {
+    for cores in CORE_COUNTS {
+        let mut rng = Rng::new(77 + cores as u64);
+        let x: Vec<(f32, f32)> = (0..128).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
+
+        let mut fast = Cluster::new();
+        let (out_fast, run_fast) =
+            fp_fft::run(&mut fast, &mut FlatMem::new(L2_BASE, 4096), &x, FpWidth::F32, cores);
+
+        let mut refr = Cluster::new();
+        refr.scheduler = SchedulerMode::Reference;
+        let (out_ref, run_ref) =
+            fp_fft::run(&mut refr, &mut FlatMem::new(L2_BASE, 4096), &x, FpWidth::F32, cores);
+
+        // Bit-exact: both paths executed the same FP ops in the same order.
+        let bits = |v: &[(f32, f32)]| -> Vec<(u32, u32)> {
+            v.iter().map(|&(r, i)| (r.to_bits(), i.to_bits())).collect()
+        };
+        assert_eq!(bits(&out_fast), bits(&out_ref), "fft/c{cores}: outputs diverge");
+        assert_eq!(run_fast.stats, run_ref.stats, "fft/c{cores}: stats diverge");
+        assert!(
+            run_fast.stats.barrier_gated_cycles > 0 || cores == 1,
+            "fft/c{cores}: expected barrier traffic"
+        );
+    }
+}
+
+#[test]
+fn div_heavy_microkernel_equivalent() {
+    // 35-cycle serial-divider drains are the biggest single skip window.
+    let mut a = Asm::new("div-heavy");
+    let end = a.label();
+    a.lp_setup_imm(0, 64, end);
+    a.div(T0, A0, A1);
+    a.rem(T1, A0, A1);
+    a.add(A2, A2, T0);
+    a.bind(end);
+    a.add(A2, A2, T1);
+    a.barrier();
+    a.div(A3, A2, A1);
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    for cores in CORE_COUNTS {
+        assert_prog_equivalent(
+            &prog,
+            cores,
+            |_, _| {},
+            |i| vec![(A0, 10_000 + 37 * i as u32), (A1, 3 + i as u32)],
+            "div-heavy",
+        );
+    }
+}
+
+#[test]
+fn fdiv_fsqrt_microkernel_equivalent() {
+    // The shared DIV-SQRT unit: one op in flight cluster-wide, so cores
+    // serialise on it and the busy windows interleave with denials.
+    let mut a = Asm::new("fdiv-heavy");
+    let end = a.label();
+    a.lp_setup_imm(0, 16, end);
+    a.fdiv_s(T0, T0, T1);
+    a.bind(end);
+    a.fsqrt_s(T2, T0);
+    a.barrier();
+    a.fdiv_s(A2, T2, T1);
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    for cores in CORE_COUNTS {
+        assert_prog_equivalent(
+            &prog,
+            cores,
+            |_, _| {},
+            |i| {
+                vec![
+                    (T0, (1.5f32 + i as f32).to_bits()),
+                    (T1, 1.1f32.to_bits()),
+                ]
+            },
+            "fdiv-heavy",
+        );
+    }
+}
+
+#[test]
+fn l2_crossing_loads_equivalent() {
+    // Cluster-side L2 accesses charge the 8-cycle AXI-bridge latency via
+    // add_busy: another skippable stall pattern, plus TCDM copy-back.
+    let mut a = Asm::new("l2-stream");
+    let end = a.label();
+    a.lp_setup_imm(0, 32, end);
+    a.lw_pi(T0, A0, 4); // stream from L2
+    a.sw_pi(T0, A1, 4); // store to TCDM
+    a.bind(end);
+    a.barrier();
+    a.lw(A2, A0, -4);
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    for cores in CORE_COUNTS {
+        assert_prog_equivalent(
+            &prog,
+            cores,
+            |_, l2| {
+                let vals: Vec<i32> = (0..512).map(|v| v * 3 - 700).collect();
+                l2.write_i32s(L2_BASE + 0x100, &vals);
+            },
+            |i| {
+                vec![
+                    (A0, L2_BASE + 0x100 + 32 * 4 * i as u32),
+                    (A1, TCDM_BASE + 32 * 4 * i as u32),
+                ]
+            },
+            "l2-stream",
+        );
+    }
+}
+
+#[test]
+fn run_program_reference_entry_point_matches() {
+    // The explicit reference entry point behaves like the mode switch.
+    let mut a = Asm::new("mini");
+    let end = a.label();
+    a.lp_setup_imm(0, 10, end);
+    a.div(T0, A0, A1);
+    a.bind(end);
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    let init = |_: usize| vec![(A0, 100u32), (A1, 7u32)];
+    let mut c1 = Cluster::new();
+    let s1 = c1.run_program(&prog, 4, &mut FlatMem::new(L2_BASE, 4096), init, 1_000_000);
+    let mut c2 = Cluster::new();
+    let s2 =
+        c2.run_program_reference(&prog, 4, &mut FlatMem::new(L2_BASE, 4096), init, 1_000_000);
+    assert_eq!(s1, s2);
+}

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Tier-1 gate + perf smoke for the Vega reproduction.
+#
+#   scripts/ci.sh            full run (fmt, build, test, bench smoke)
+#   CI_SKIP_BENCH=1 ...      skip the bench smoke (e.g. resource-starved CI)
+#
+# The bench smoke runs every hotpath case once (VEGA_BENCH_ITERS=1) so a
+# scheduler regression that hangs or panics is caught even where full
+# benchmarking is too slow; BENCH_hotpath.json lands in rust/.
+
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo fmt --check =="
+# Non-fatal: formatting drift should not mask real build/test failures,
+# but it is reported loudly.
+if ! cargo fmt --check 2>/dev/null; then
+    echo "WARNING: cargo fmt --check reported drift (or rustfmt is unavailable)"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
+    echo "== hotpath bench smoke (VEGA_BENCH_ITERS=1) =="
+    VEGA_BENCH_ITERS=1 cargo bench --bench hotpath
+fi
+
+echo "ci.sh: all gates passed"
