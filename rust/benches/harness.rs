@@ -20,12 +20,28 @@ struct CaseResult {
 pub struct Bench {
     pub name: &'static str,
     results: RefCell<Vec<CaseResult>>,
+    metrics: RefCell<Vec<(String, f64)>>,
 }
 
 impl Bench {
     pub fn new(name: &'static str) -> Self {
         println!("\n### bench group: {name}");
-        Self { name, results: RefCell::new(Vec::new()) }
+        Self { name, results: RefCell::new(Vec::new()), metrics: RefCell::new(Vec::new()) }
+    }
+
+    /// Minimum recorded time of a finished case (derived metrics such as
+    /// in-run speedups are computed from these).
+    #[allow(dead_code)]
+    pub fn min_ms(&self, case: &str) -> Option<f64> {
+        self.results.borrow().iter().find(|r| r.case == case).map(|r| r.min_ms)
+    }
+
+    /// Record a named scalar (written into the JSON `metrics` object —
+    /// e.g. the sweep bench's in-run speedups).
+    #[allow(dead_code)]
+    pub fn metric(&self, name: &str, value: f64) {
+        println!("{:<40} metric {name} = {value:.3}", self.name);
+        self.metrics.borrow_mut().push((name.to_string(), value));
     }
 
     /// Time `f` over `iters` runs (after one warm-up) and print stats.
@@ -77,7 +93,19 @@ impl Bench {
                 if i + 1 < results.len() { "," } else { "" }
             ));
         }
-        s.push_str("  ]\n}\n");
+        s.push_str("  ]");
+        let metrics = self.metrics.borrow();
+        if !metrics.is_empty() {
+            s.push_str(",\n  \"metrics\": {\n");
+            for (i, (k, v)) in metrics.iter().enumerate() {
+                s.push_str(&format!(
+                    "    \"{k}\": {v:.6}{}\n",
+                    if i + 1 < metrics.len() { "," } else { "" }
+                ));
+            }
+            s.push_str("  }");
+        }
+        s.push_str("\n}\n");
         let path = format!("BENCH_{}.json", self.name);
         match std::fs::write(&path, s) {
             Ok(()) => println!("\nwrote {path}"),

@@ -1,0 +1,61 @@
+//! Suite-level sweep-engine benchmark (§Perf): wall-clock of the full
+//! `vega repro all` reproduction under the three engine configurations,
+//! so `BENCH_sweeps.json` carries the in-run speedups across PRs:
+//!
+//! * `repro_all_serial_nocache` — one worker, memoization off (the
+//!   pre-engine baseline: every report re-simulates everything);
+//! * `repro_all_serial_cached`  — one worker, memoization on (what the
+//!   cache alone buys: each distinct program simulates once per run);
+//! * `repro_all_parallel`      — `VEGA_JOBS` (or all-core) workers plus
+//!   the cache (the `vega repro all --jobs N` configuration).
+//!
+//! A fresh engine is built per iteration so the cache never carries over
+//! between timed runs. `VEGA_BENCH_ITERS` overrides the iteration count
+//! (the CI smoke uses 1). Determinism is asserted alongside the timing:
+//! all three configurations must produce identical bytes.
+
+mod harness;
+
+use harness::Bench;
+use vega::bench;
+use vega::sweep::{default_jobs, SweepEngine};
+
+fn main() {
+    let b = Bench::new("sweeps");
+    let jobs = default_jobs().max(2);
+
+    // Each closure keeps its last rendered suite so the determinism
+    // assertion below reuses the timed runs instead of re-running the
+    // whole suite three more times.
+    let (mut nocache, mut cached, mut parallel) = (String::new(), String::new(), String::new());
+    b.run("repro_all_serial_nocache", 3, || {
+        nocache = bench::run_all(&SweepEngine::without_cache(1));
+        nocache.len()
+    });
+    b.run("repro_all_serial_cached", 3, || {
+        cached = bench::run_all(&SweepEngine::new(1));
+        cached.len()
+    });
+    b.run("repro_all_parallel", 3, || {
+        parallel = bench::run_all(&SweepEngine::new(jobs));
+        parallel.len()
+    });
+
+    // The determinism invariant, asserted on the real suite output.
+    assert_eq!(nocache, cached, "memoization changed report bytes");
+    assert_eq!(cached, parallel, "parallel fan-out changed report bytes");
+
+    // In-run speedups, derived from the recorded minima.
+    if let (Some(nc), Some(c), Some(p)) = (
+        b.min_ms("repro_all_serial_nocache"),
+        b.min_ms("repro_all_serial_cached"),
+        b.min_ms("repro_all_parallel"),
+    ) {
+        b.metric("jobs", jobs as f64);
+        b.metric("memoization_speedup_x", nc / c);
+        b.metric("parallel_speedup_x", c / p);
+        b.metric("total_speedup_x", nc / p);
+    }
+
+    b.finish();
+}

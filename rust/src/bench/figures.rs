@@ -3,21 +3,43 @@
 
 use crate::coordinator::report::{f1, f2, si_power, Table};
 use crate::coordinator::{self, NSAA_KERNELS};
-use crate::dnn::{mobilenet_v2, run_network, Bound, PipelineConfig, StorePolicy};
+use crate::dnn::{mobilenet_v2, Bound, PipelineConfig, StorePolicy};
 use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
 use crate::power::{self, tables as pt};
+use crate::sweep::{Scenario, SweepEngine};
+
+/// The Fig. 6 scenario grid: the core-count and precision sweeps plus the
+/// int8 series reused by the Fig. 6b DVFS sweep (one cache entry).
+pub fn fig6_scenarios() -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for cores in [2usize, 4] {
+        v.push(Scenario::IntMatmul { w: IntWidth::I8, cores });
+    }
+    for cores in [1usize, 8] {
+        for w in [IntWidth::I8, IntWidth::I16, IntWidth::I32] {
+            v.push(Scenario::IntMatmul { w, cores });
+        }
+    }
+    for w in [FpWidth::F32, FpWidth::F16x2] {
+        v.push(Scenario::FpMatmul { w, cores: 8 });
+    }
+    // The Fig. 6b V/f series: same program as the 8-core int8 row above —
+    // the memoization case the sweep cache exists for.
+    v.push(Scenario::IntMatmul { w: IntWidth::I8, cores: 8 });
+    v
+}
 
 /// Fig. 6: matmul performance and efficiency across data formats, FC
 /// (1 core) vs cluster (8 cores), LV/HV, plus the HWCE point.
-pub fn fig6() -> String {
+pub fn fig6(eng: &SweepEngine) -> String {
     let mut t = Table::new(
         "Fig. 6 - matmul performance & efficiency vs format",
         &["Config", "Format", "GOPS @HV", "GOPS/W @LV"],
     );
     // Core-count sweep for the int8 series (the Fig. 6 x-axis).
     for cores in [2usize, 4] {
-        let kr = coordinator::bench_int_matmul(IntWidth::I8, cores);
+        let kr = eng.kernel_run(Scenario::IntMatmul { w: IntWidth::I8, cores });
         let (gops, _) = coordinator::efficiency(&kr, power::HV, 0.0);
         let (_, eff) = coordinator::efficiency(&kr, power::LV, 0.0);
         t.row(&[
@@ -29,7 +51,7 @@ pub fn fig6() -> String {
     }
     for (label, cores) in [("FC (1 core)", 1usize), ("Cluster (8 cores)", 8)] {
         for w in [IntWidth::I8, IntWidth::I16, IntWidth::I32] {
-            let kr = coordinator::bench_int_matmul(w, cores);
+            let kr = eng.kernel_run(Scenario::IntMatmul { w, cores });
             let (gops_hv, _) = coordinator::efficiency(&kr, power::HV, 0.0);
             let (_, eff_lv) = coordinator::efficiency(&kr, power::LV, 0.0);
             // FC shares: a single core burns roughly an eighth of the
@@ -48,7 +70,7 @@ pub fn fig6() -> String {
         }
     }
     for w in [FpWidth::F32, FpWidth::F16x2] {
-        let kr = coordinator::bench_fp_matmul(w, 8);
+        let kr = eng.kernel_run(Scenario::FpMatmul { w, cores: 8 });
         let (gops, _) = coordinator::efficiency(&kr, power::HV, 0.0);
         let (_, eff) = coordinator::efficiency(&kr, power::LV, 0.0);
         t.row(&[
@@ -74,12 +96,13 @@ pub fn fig6() -> String {
 
     // Voltage/frequency sweep (the Fig. 6 x-axis): efficiency peaks at
     // low voltage, performance at high — the power/performance/precision
-    // scalability story of the abstract.
+    // scalability story of the abstract. Cycle counts are frequency-
+    // independent, so all four points derive from one cached simulation.
     let mut v = Table::new(
         "Fig. 6b - int8 matmul across the DVFS range (8 cores)",
         &["Vdd", "f_cl", "GOPS", "GOPS/W"],
     );
-    let kr8 = coordinator::bench_int_matmul(IntWidth::I8, 8);
+    let kr8 = eng.kernel_run(Scenario::IntMatmul { w: IntWidth::I8, cores: 8 });
     for (vdd, f) in [(0.5, 120e6), (0.6, 220e6), (0.7, 330e6), (0.8, 450e6)] {
         let op = power::tables::OperatingPoint { name: "sweep", vdd, f_soc: f, f_cl: f };
         let (gops, eff) = coordinator::efficiency(&kr8, op, 0.0);
@@ -180,8 +203,19 @@ pub fn fig7() -> String {
     )
 }
 
+/// The Fig. 8 scenario grid: every NSAA kernel at both FP widths (the LV
+/// and HV columns derive from the same cached cycle counts).
+pub fn fig8_scenarios() -> Vec<Scenario> {
+    NSAA_KERNELS
+        .iter()
+        .flat_map(|&name| {
+            [FpWidth::F32, FpWidth::F16x2].map(|w| Scenario::Nsaa { name, w })
+        })
+        .collect()
+}
+
 /// Fig. 8: FP NSAA performance and efficiency, FP32 vs FP16, LV/HV.
-pub fn fig8() -> String {
+pub fn fig8(eng: &SweepEngine) -> String {
     let mut t = Table::new(
         "Fig. 8 - FP NSAA kernels (8 cores)",
         &[
@@ -190,8 +224,8 @@ pub fn fig8() -> String {
     );
     let mut speedup_sum = 0.0;
     for name in NSAA_KERNELS {
-        let k32 = coordinator::bench_nsaa_kernel(name, FpWidth::F32);
-        let k16 = coordinator::bench_nsaa_kernel(name, FpWidth::F16x2);
+        let k32 = eng.kernel_run(Scenario::Nsaa { name, w: FpWidth::F32 });
+        let k16 = eng.kernel_run(Scenario::Nsaa { name, w: FpWidth::F16x2 });
         let speedup = k32.stats.cycles as f64 / k16.stats.cycles as f64
             * (k16.ops as f64 / k32.ops as f64);
         speedup_sum += speedup;
@@ -218,9 +252,9 @@ pub fn fig8() -> String {
 }
 
 /// Fig. 9: the tiling pipeline schedule (text Gantt over one layer).
-pub fn fig9() -> String {
+pub fn fig9(eng: &SweepEngine) -> String {
     let net = mobilenet_v2();
-    let rep = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let rep = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
     // Render 4 pipeline stages over 3 tiles of a representative layer.
     let l = &rep.layers[4];
     let tile_c = l.compute_cycles.max(1) / 3;
@@ -242,10 +276,10 @@ pub fn fig9() -> String {
 }
 
 /// Fig. 10: MobileNetV2 layer-wise latency breakdown.
-pub fn fig10() -> String {
+pub fn fig10(eng: &SweepEngine) -> String {
     let net = mobilenet_v2();
-    let mram = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
-    let hyper = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
+    let mram = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let hyper = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
     let mut t = Table::new(
         "Fig. 10 - MobileNetV2 layer-wise latency @250 MHz [us]",
         &["Layer", "compute", "L2<->L1", "L3->L2 (MRAM)", "bound"],
@@ -277,10 +311,10 @@ pub fn fig10() -> String {
 }
 
 /// Fig. 11: MobileNetV2 inference energy, MRAM vs HyperRAM weights.
-pub fn fig11() -> String {
+pub fn fig11(eng: &SweepEngine) -> String {
     let net = mobilenet_v2();
-    let m = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
-    let h = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
+    let m = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::AllMram));
+    let h = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::AllHyperRam));
     let mut t = Table::new(
         "Fig. 11 - MobileNetV2 energy per inference [mJ]",
         &["Flow", "compute", "L2<->L1", "L1", "L3 weights", "total", "latency ms", "fps"],

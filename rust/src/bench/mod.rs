@@ -1,11 +1,19 @@
 //! Reproduction generators: one entry per table and figure of the paper's
 //! evaluation (DESIGN.md §4 experiment index). Each returns the rendered
-//! report; `vega repro <id>` prints it, the cargo benches time it, and
-//! `paper_anchors` integration tests assert the numbers inside.
+//! report; `vega repro <id> [--jobs N]` prints it, the cargo benches time
+//! it, and `paper_anchors` integration tests assert the numbers inside.
+//!
+//! All simulation-backed reports pull their kernel runs through a
+//! [`SweepEngine`], so V/f sweeps simulate each distinct program once and
+//! a whole-suite run (`vega repro all`) shares matmul simulations across
+//! tables and figures. Reports are byte-identical for any worker count
+//! (`tests/sweep_determinism.rs`).
 
 pub mod ablations;
 pub mod figures;
 pub mod tables;
+
+use crate::sweep::{Scenario, SweepEngine};
 
 /// All reproduction ids in paper order.
 pub const ALL: [&str; 13] = [
@@ -20,34 +28,114 @@ pub const ALL_WITH_FIG11: [&str; 16] = [
     "fig7", "fig8", "fig9", "fig10", "fig11", "ablations", "bootmodel",
 ];
 
-/// Run one reproduction by id.
+/// Run one reproduction by id on a fresh single-worker engine.
+///
+/// Compatibility entry point: identical output to [`run_with`] on any
+/// engine (the determinism invariant), but with no cross-report cache
+/// sharing. Suite runs should use [`run_many`] / [`run_all`].
 pub fn run(id: &str) -> Option<String> {
+    run_with(id, &SweepEngine::serial())
+}
+
+/// Run one reproduction by id, pulling simulations through `eng`.
+///
+/// Prefetches the report's scenario grid through the engine's worker
+/// pool first, so `vega repro <id> --jobs N` parallelises even for a
+/// single report; the render then reads cache hits. With memoization
+/// off (the bench's no-cache baseline) a prefetch would just simulate
+/// everything twice, so it is skipped.
+pub fn run_with(id: &str, eng: &SweepEngine) -> Option<String> {
+    if eng.cache().enabled() {
+        eng.run_scenarios(&scenarios_for(id));
+    }
+    render(id, eng)
+}
+
+/// Render one report from the engine's (already warm or warming) caches,
+/// without a prefetch fan-out — the path `SweepEngine::render_reports`
+/// workers use, so report-level parallelism never nests a second
+/// scenario-level thread pool per worker.
+pub(crate) fn render(id: &str, eng: &SweepEngine) -> Option<String> {
     Some(match id {
         "table1" => tables::table1(),
         "table2" => tables::table2(),
         "table3" => tables::table3(),
         "table4" => tables::table4(),
-        "table5" => tables::table5(),
+        "table5" => tables::table5(eng),
         "table6" => tables::table6(),
-        "table7" => tables::table7(),
-        "table8" => tables::table8(),
-        "fig6" => figures::fig6(),
+        "table7" => tables::table7(eng),
+        "table8" => tables::table8(eng),
+        "fig6" => figures::fig6(eng),
         "fig7" => figures::fig7(),
-        "fig8" => figures::fig8(),
-        "fig9" => figures::fig9(),
-        "fig10" => figures::fig10(),
-        "fig11" => figures::fig11(),
-        "ablations" => ablations::ablations(),
+        "fig8" => figures::fig8(eng),
+        "fig9" => figures::fig9(eng),
+        "fig10" => figures::fig10(eng),
+        "fig11" => figures::fig11(eng),
+        "ablations" => ablations::ablations(eng),
         "bootmodel" => figures::bootmodel(),
         _ => return None,
     })
 }
 
+/// The scenario grid a report id simulates (empty for analytic/static
+/// reports). Used to prefetch the union of a suite's simulations through
+/// the worker pool before the reports themselves render.
+pub fn scenarios_for(id: &str) -> Vec<Scenario> {
+    match id {
+        "table5" => tables::table5_scenarios(),
+        "table8" => tables::table8_scenarios(),
+        "fig6" => figures::fig6_scenarios(),
+        "fig8" => figures::fig8_scenarios(),
+        "ablations" => ablations::ablation_scenarios(),
+        _ => Vec::new(),
+    }
+}
+
+/// Run a list of reproductions through one engine: prefetch the union of
+/// their scenario grids (fine-grained parallel fan-out, deduplicated by
+/// the cache), then render the reports (coarse-grained fan-out). Output
+/// order is `ids` order regardless of completion order; unknown ids yield
+/// `None`.
+pub fn run_many(ids: &[&str], eng: &SweepEngine) -> Vec<Option<String>> {
+    if eng.cache().enabled() {
+        // Dedup by canonical scenario so no worker stalls on a slot lock
+        // behind a duplicate's in-flight simulation.
+        let mut seen = std::collections::HashSet::new();
+        let union: Vec<Scenario> = ids
+            .iter()
+            .flat_map(|id| scenarios_for(id))
+            .map(Scenario::canonical)
+            .filter(|s| seen.insert(*s))
+            .collect();
+        eng.run_scenarios(&union);
+    }
+    eng.render_reports(ids)
+}
+
+/// Run the full [`ALL_WITH_FIG11`] suite through one engine (the
+/// `vega repro all` body): matmul programs recurring across tables and
+/// figures are simulated once. Returns the concatenated reports in paper
+/// order, one trailing newline per report (matching the CLI's `println!`
+/// framing).
+pub fn run_all(eng: &SweepEngine) -> String {
+    run_many(&ALL_WITH_FIG11, eng)
+        .into_iter()
+        .map(|r| {
+            let mut s = r.expect("known id");
+            s.push('\n');
+            s
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn unknown_id_is_none() {
         assert!(super::run("table99").is_none());
+        assert!(run_with("table99", &SweepEngine::serial()).is_none());
     }
 
     #[test]
@@ -57,6 +145,21 @@ mod tests {
         for id in ["table2", "table3", "table4", "table6", "fig7", "bootmodel"] {
             let r = super::run(id).unwrap();
             assert!(r.len() > 100, "{id} report too short");
+        }
+    }
+
+    #[test]
+    fn every_id_declares_its_grid() {
+        // Simulation-backed reports expose non-empty scenario lists; the
+        // analytic ones are (and must stay) empty rather than panicking.
+        for id in ALL_WITH_FIG11 {
+            let grid = scenarios_for(id);
+            match id {
+                "table5" | "table8" | "fig6" | "fig8" | "ablations" => {
+                    assert!(!grid.is_empty(), "{id} lost its scenario grid")
+                }
+                _ => assert!(grid.is_empty(), "{id} unexpectedly simulates"),
+            }
         }
     }
 }

@@ -3,11 +3,12 @@
 use crate::coordinator::report::{f1, f2, si_power, Table};
 use crate::coordinator::{self, NSAA_KERNELS};
 use crate::cwu::CWU_AREA_MM2;
-use crate::dnn::{self, repvgg, run_network, PipelineConfig, StorePolicy, Variant};
+use crate::dnn::{self, repvgg, PipelineConfig, StorePolicy, Variant};
 use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
 use crate::mem::BulkChannel;
 use crate::power::{self, tables as pt};
+use crate::sweep::{Scenario, SweepEngine};
 
 /// Table I: CWU implementation details and power at 32 kHz / 200 kHz.
 pub fn table1() -> String {
@@ -143,17 +144,25 @@ pub fn table4() -> String {
     )
 }
 
+/// The Table V scenario grid: every NSAA kernel at FP32 on 8 cores.
+pub fn table5_scenarios() -> Vec<Scenario> {
+    NSAA_KERNELS.iter().map(|&name| Scenario::Nsaa { name, w: FpWidth::F32 }).collect()
+}
+
 /// Table V: benchmark suite FP intensity — *measured* from the executed
 /// instruction streams of our kernels.
-pub fn table5() -> String {
+pub fn table5(eng: &SweepEngine) -> String {
     let paper = [57, 55, 28, 63, 64, 46, 83, 35];
     let mut t = Table::new(
         "Table V - FP NSAA suite, FP intensity (measured on the ISS)",
         &["Kernel", "measured %", "paper %"],
     );
+    // Per-row cache lookups (not a nested run_scenarios fan-out: under
+    // `repro all` the grid is already prefetched, and report workers must
+    // not spawn second-level thread pools just to read cache hits).
     let mut avg = 0.0;
-    for (name, p) in NSAA_KERNELS.iter().zip(paper) {
-        let kr = coordinator::bench_nsaa_kernel(name, FpWidth::F32);
+    for (&name, p) in NSAA_KERNELS.iter().zip(paper) {
+        let kr = eng.kernel_run(Scenario::Nsaa { name, w: FpWidth::F32 });
         let fi = kr.fp_intensity() * 100.0;
         avg += fi;
         t.row(&[name.to_string(), f1(fi), p.to_string()]);
@@ -197,7 +206,7 @@ pub fn table6() -> String {
 }
 
 /// Table VII: RepVGG-A0/A1/A2, software vs HWCE.
-pub fn table7() -> String {
+pub fn table7(eng: &SweepEngine) -> String {
     let mut t = Table::new(
         "Table VII - RepVGG on Vega (SW @250MHz vs HWCE @450MHz, greedy MRAM)",
         &[
@@ -207,8 +216,8 @@ pub fn table7() -> String {
     );
     for v in [Variant::A0, Variant::A1, Variant::A2] {
         let net = repvgg(v);
-        let sw = run_network(&net, PipelineConfig::nominal_sw(StorePolicy::GreedyMram));
-        let hw = run_network(&net, PipelineConfig::table7_hwce(StorePolicy::GreedyMram));
+        let sw = eng.network_report(&net, PipelineConfig::nominal_sw(StorePolicy::GreedyMram));
+        let hw = eng.network_report(&net, PipelineConfig::table7_hwce(StorePolicy::GreedyMram));
         let speedup = sw.latency_s() / hw.latency_s();
         let gain = (sw.energy_mj() / hw.energy_mj() - 1.0) * 100.0;
         let split = hw
@@ -235,22 +244,33 @@ pub fn table7() -> String {
     )
 }
 
+/// The Table VIII scenario grid: the three 8-core matmul headliners (the
+/// HV and LV rows derive from the same cached simulations analytically).
+pub fn table8_scenarios() -> Vec<Scenario> {
+    vec![
+        Scenario::IntMatmul { w: IntWidth::I8, cores: 8 },
+        Scenario::FpMatmul { w: FpWidth::F32, cores: 8 },
+        Scenario::FpMatmul { w: FpWidth::F16x2, cores: 8 },
+    ]
+}
+
 /// Table VIII: comparison with the state of the art — the Vega column
 /// measured from this simulator, the published columns as constants.
-pub fn table8() -> String {
-    // Measured Vega numbers.
-    let i8_hv = coordinator::bench_int_matmul(IntWidth::I8, 8);
+pub fn table8(eng: &SweepEngine) -> String {
+    // Measured Vega numbers (one simulation per scenario; both operating
+    // points read the same cached cycle counts).
+    let i8_hv = eng.kernel_run(Scenario::IntMatmul { w: IntWidth::I8, cores: 8 });
     let (int_perf, _) = coordinator::efficiency(&i8_hv, power::HV, 0.0);
     let (int_perf_lv, int_eff) = coordinator::efficiency(&i8_hv, power::LV, 0.0);
-    let f32_run = coordinator::bench_fp_matmul(FpWidth::F32, 8);
+    let f32_run = eng.kernel_run(Scenario::FpMatmul { w: FpWidth::F32, cores: 8 });
     let (fp32_perf, _) = coordinator::efficiency(&f32_run, power::HV, 0.0);
     let (_, fp32_eff) = coordinator::efficiency(&f32_run, power::LV, 0.0);
-    let f16_run = coordinator::bench_fp_matmul(FpWidth::F16x2, 8);
+    let f16_run = eng.kernel_run(Scenario::FpMatmul { w: FpWidth::F16x2, cores: 8 });
     let (fp16_perf, _) = coordinator::efficiency(&f16_run, power::HV, 0.0);
     let (_, fp16_eff) = coordinator::efficiency(&f16_run, power::LV, 0.0);
     // Peak ML = SW + HWCE hybrid on a RepVGG stage at HV.
     let net = repvgg(Variant::A0);
-    let hy = run_network(
+    let hy = eng.network_report(
         &net,
         crate::dnn::PipelineConfig {
             op: power::HV,

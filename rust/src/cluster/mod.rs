@@ -132,10 +132,18 @@ impl Cluster {
     /// Cheap between-runs reset: clears TCDM contents, arbitration
     /// pointers and counters without re-allocating the 128 kB backing
     /// store (§Perf: drivers that used to build a fresh `Cluster` per
-    /// kernel invocation reuse one instead).
+    /// kernel invocation reuse one instead). Restores the default FPU
+    /// fabric configuration — unlike the per-run [`FpuFabric::reset`],
+    /// which deliberately preserves the ablation switch across a single
+    /// driver's set-flag-then-run sequence. The `scheduler` selection is
+    /// deliberately *not* restored: the hotpath bench flips it between
+    /// timed runs that each call `reset()`. Callers needing a fully
+    /// default cluster (the sweep arena, whose cache key has no scheduler
+    /// component) pin `scheduler` themselves.
     pub fn reset(&mut self) {
         self.tcdm.reset();
         self.fpus.reset();
+        self.fpus.private_per_core = false;
         self.dma = ClusterDma::new();
         self.event_unit = EventUnit::new(N_CORES);
         self.cycle = 0;
@@ -498,6 +506,14 @@ impl Default for Cluster {
         Self::new()
     }
 }
+
+// The sweep engine moves one owned `Cluster`/`FlatMem` arena into each of
+// its scoped worker threads; keep the fabric free of non-`Send` state.
+const fn _assert_send<T: Send>() {}
+const _: () = {
+    _assert_send::<Cluster>();
+    _assert_send::<FlatMem>();
+};
 
 #[cfg(test)]
 mod tests {

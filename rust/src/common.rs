@@ -138,6 +138,38 @@ pub fn property(name: &str, n: u64, mut f: impl FnMut(&mut Rng)) {
     }
 }
 
+/// FNV-1a 64-bit hash accumulator — the crate's one pinned hash algorithm
+/// (shared by [`crate::isa::Program::content_hash`] and the sweep cache's
+/// output digests). Implemented as a [`std::hash::Hasher`] so derived
+/// `Hash` impls can feed it.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::hash::Hasher for Fnv1a {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
 /// Pretty-print a byte count.
 pub fn fmt_bytes(b: usize) -> String {
     if b >= 1 << 20 {
@@ -200,6 +232,16 @@ mod tests {
         let v = r.bitvec(70);
         assert_eq!(v.len(), 2);
         assert_eq!(v[1] >> 6, 0);
+    }
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        use std::hash::Hasher;
+        // Published FNV-1a 64-bit vectors: "" and "a".
+        assert_eq!(Fnv1a::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv1a::new();
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
     }
 
     #[test]

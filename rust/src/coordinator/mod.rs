@@ -4,98 +4,38 @@
 
 pub mod report;
 
-use crate::cluster::Cluster;
-use crate::common::Rng;
 use crate::cwu::{ChannelConfig, Cwu};
 use crate::hdc::{self, datasets, EncoderConfig};
-use crate::iss::FlatMem;
 use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
-use crate::kernels::{fp_conv, fp_fft, fp_filters, fp_kmeans, fp_matmul, fp_svm, int_matmul,
-    KernelRun};
+use crate::kernels::KernelRun;
 use crate::power::tables::OperatingPoint;
+use crate::sweep::{Scenario, SimArena};
 
 pub use report::Table;
 
-fn fresh() -> (Cluster, FlatMem) {
-    (Cluster::new(), FlatMem::new(crate::cluster::L2_BASE, crate::cluster::L2_SIZE))
-}
-
 /// Run the int matmul benchmark at a width on `cores` cores (Fig. 6).
+///
+/// Stand-alone entry point (fresh arena, no memoization); the
+/// table/figure generators pull the same scenario through a shared
+/// [`crate::sweep::SweepEngine`] instead.
 pub fn bench_int_matmul(w: IntWidth, cores: usize) -> KernelRun {
-    let (mut cl, mut l2) = fresh();
-    let mut rng = Rng::new(0xF16_6);
-    let (m, n, k) = (64, 64, 64);
-    let lim = match w {
-        IntWidth::I8 => 127,
-        IntWidth::I16 => 2047,
-        IntWidth::I32 => 1000,
-    };
-    let av: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
-    let bv: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
-    let (_, kr) = int_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, w, cores);
-    kr
+    Scenario::IntMatmul { w, cores }.simulate(&mut SimArena::new()).run
 }
 
 /// Run the FP matmul benchmark (Fig. 6 / Fig. 8).
 pub fn bench_fp_matmul(w: FpWidth, cores: usize) -> KernelRun {
-    let (mut cl, mut l2) = fresh();
-    let mut rng = Rng::new(0xF16_8);
-    let (m, n, k) = (32, 32, 64);
-    let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
-    let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
-    let (_, kr) = fp_matmul::run(&mut cl, &mut l2, &av, &bv, m, n, k, w, cores);
-    kr
+    Scenario::FpMatmul { w, cores }.simulate(&mut SimArena::new()).run
 }
 
 /// One Fig. 8 / Table V kernel run on 8 cores.
 pub fn bench_nsaa_kernel(name: &str, w: FpWidth) -> KernelRun {
-    let mut rng = Rng::new(0x85AA ^ name.len() as u64);
-    let (mut cl, mut l2) = fresh();
-    match name {
-        "MATMUL" => bench_fp_matmul(w, 8),
-        "CONV" => {
-            let (h, wd) = (16, 32);
-            let x: Vec<f32> = (0..(h + 2) * (wd + 2)).map(|_| rng.f32_pm1()).collect();
-            let k: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
-            fp_conv::run(&mut cl, &mut l2, &x, &k, h, wd, w, 8).1
-        }
-        "DWT" => {
-            let x: Vec<f32> = (0..1024).map(|_| rng.f32_pm1()).collect();
-            fp_filters::run_dwt(&mut cl, &mut l2, &x, w, 8).2
-        }
-        "FFT" => {
-            let x: Vec<(f32, f32)> =
-                (0..256).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
-            fp_fft::run(&mut cl, &mut l2, &x, w, 8).1
-        }
-        "FIR" => {
-            let taps: Vec<f32> = (0..fp_filters::FIR_TAPS).map(|_| rng.f32_pm1()).collect();
-            let x: Vec<f32> = (0..512 + 16).map(|_| rng.f32_pm1()).collect();
-            fp_filters::run_fir(&mut cl, &mut l2, &x, &taps, 512, w, 8).1
-        }
-        "IIR" => {
-            let b = fp_filters::Biquad::lowpass();
-            let chans: Vec<Vec<f32>> = (0..8)
-                .map(|_| (0..256).map(|_| rng.f32_pm1()).collect())
-                .collect();
-            fp_filters::run_iir(&mut cl, &mut l2, &chans, b, b, w).1
-        }
-        "KMEANS" => {
-            let centroids: Vec<f32> =
-                (0..fp_kmeans::K * fp_kmeans::D).map(|_| 2.0 * rng.f32_pm1()).collect();
-            let pts: Vec<f32> = (0..256 * fp_kmeans::D).map(|_| 2.0 * rng.f32_pm1()).collect();
-            fp_kmeans::run(&mut cl, &mut l2, &pts, &centroids, w, 8).1
-        }
-        "SVM" => {
-            let d = 16;
-            let wv: Vec<f32> = (0..fp_svm::CLASSES * d).map(|_| rng.f32_pm1()).collect();
-            let b: Vec<f32> = (0..fp_svm::CLASSES).map(|_| rng.f32_pm1()).collect();
-            let pts: Vec<f32> = (0..128 * d).map(|_| rng.f32_pm1()).collect();
-            fp_svm::run(&mut cl, &mut l2, &pts, &wv, &b, d, w, 8).1
-        }
-        other => panic!("unknown NSAA kernel {other}"),
-    }
+    let name = NSAA_KERNELS
+        .iter()
+        .copied()
+        .find(|&k| k == name)
+        .unwrap_or_else(|| panic!("unknown NSAA kernel {name}"));
+    Scenario::Nsaa { name, w }.simulate(&mut SimArena::new()).run
 }
 
 /// The Table V / Fig. 8 kernel list.

@@ -31,6 +31,23 @@ impl Program {
         self.insts.is_empty()
     }
 
+    /// Deterministic content hash of the resolved instruction stream.
+    ///
+    /// Part of the sweep-cache key ([`crate::sweep::SimKey`]): any change
+    /// to a kernel's emitted instructions changes this hash, so memoized
+    /// stats can never go stale against the program they were measured on.
+    /// The hasher is the crate's pinned FNV-1a, but the byte stream comes
+    /// from derived `Hash` impls, which Rust does not guarantee stable
+    /// across toolchains — the hash is stable within a build (all the
+    /// in-process cache needs); persisting it across builds (ROADMAP)
+    /// requires an explicit `Inst` byte serialization first.
+    pub fn content_hash(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = crate::common::Fnv1a::new();
+        self.insts.hash(&mut h);
+        h.finish()
+    }
+
     /// Static instruction-mix summary (Table V's "FP intensity" is
     /// computed on kernel assembly code, i.e. statically).
     pub fn static_fp_intensity(&self) -> f64 {

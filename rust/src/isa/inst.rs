@@ -8,7 +8,7 @@
 use super::Reg;
 
 /// Branch conditions (RV32I B-type).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Cond {
     Eq,
     Ne,
@@ -19,7 +19,7 @@ pub enum Cond {
 }
 
 /// Integer ALU operations (RV32IM + Xpulp scalar extras).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AluOp {
     Add,
     Sub,
@@ -57,7 +57,7 @@ impl AluOp {
 }
 
 /// Memory access widths. Sub-word loads sign- or zero-extend.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemSize {
     B,
     Bu,
@@ -78,14 +78,14 @@ impl MemSize {
 
 /// Packed-SIMD element format (Xpulp v2: one 32-bit register holds 4×i8 or
 /// 2×i16).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SimdFmt {
     B4,
     H2,
 }
 
 /// Packed-SIMD integer operations.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SimdOp {
     Add,
     Sub,
@@ -102,7 +102,7 @@ pub enum SimdOp {
 }
 
 /// Floating-point formats of the shared FPnew-style FPU (Fig. 3).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FpFmt {
     /// Scalar IEEE binary32.
     S,
@@ -126,7 +126,7 @@ impl FpFmt {
 }
 
 /// Floating-point operations (subset of FPnew used by the NSAA kernels).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FpOp {
     Add,
     Sub,
@@ -194,7 +194,7 @@ impl FpOp {
 }
 
 /// Hardware-loop trip count: immediate or register.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum LoopCount {
     Imm(u32),
     Reg(Reg),
@@ -204,7 +204,7 @@ pub enum LoopCount {
 pub type Target = usize;
 
 /// One symbolic instruction.
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Inst {
     /// ALU register-register.
     Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg },

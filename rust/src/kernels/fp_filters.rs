@@ -26,7 +26,7 @@ pub const FIR_TAPS: usize = 8;
 /// FP32 FIR: y[j] = Σ_i x[j+i]·t_i, 4 outputs per iteration.
 /// Params: a2=&x a3=&y a4=&taps a5=n_outputs (per core chunk handled by
 /// driver-set pointers; SPMD over contiguous chunks).
-fn build_fir_f32() -> Program {
+pub(crate) fn build_fir_f32() -> Program {
     let name = "fp_fir_f32";
     let taps: [Reg; FIR_TAPS] = [S8, S9, S10, S11, RA, SP, GP, TP];
     let accs = [S4, S5, S6, S7];
@@ -81,7 +81,7 @@ fn build_fir_f32() -> Program {
 /// 9 `vfdotpex` with shifted tap packs:
 ///   even: P0·(t0,t1) P1·(t2,t3) P2·(t4,t5) P3·(t6,t7)
 ///   odd:  P0·(0,t0)  P1·(t1,t2) P2·(t3,t4) P3·(t5,t6) P4·(t7,0)
-fn build_fir_f16() -> Program {
+pub(crate) fn build_fir_f16() -> Program {
     let name = "fp_fir_f16";
     let even_t: [Reg; 4] = [S8, S9, S10, S11];
     let odd_t: [Reg; 5] = [RA, SP, GP, TP, S1];
@@ -219,7 +219,7 @@ impl Biquad {
 
 /// FP32 IIR: 2-stage cascade, one sample per trip.
 /// a2=&x a3=&y a4=&coeffs(10 f32) a5=n.
-fn build_iir_f32() -> Program {
+pub(crate) fn build_iir_f32() -> Program {
     let name = "fp_iir_f32";
     // Stage coeffs: (b0,b1,b2,a1,a2) ×2 → 10 registers.
     let c: [Reg; 10] = [S8, S9, S10, S11, RA, SP, GP, TP, S1, S2];
@@ -262,7 +262,7 @@ fn build_iir_f32() -> Program {
 
 /// FP16 IIR: identical structure on packed lanes — each core filters two
 /// interleaved channels at once (`vfmac`/packed states).
-fn build_iir_f16() -> Program {
+pub(crate) fn build_iir_f16() -> Program {
     let name = "fp_iir_f16";
     let c: [Reg; 10] = [S8, S9, S10, S11, RA, SP, GP, TP, S1, S2];
     let (d11, d12, d21, d22) = (S4, S5, S6, S7);
@@ -405,7 +405,7 @@ pub fn run_iir(
 /// FP32 Haar DWT, one level: approx[i] = (x[2i]+x[2i+1])·c,
 /// detail[i] = (x[2i]−x[2i+1])·c with c = 1/√2.
 /// a2=&x a3=&approx a4=&detail a5=n_pairs a6=c (f32 bits).
-fn build_dwt_f32() -> Program {
+pub(crate) fn build_dwt_f32() -> Program {
     let name = "fp_dwt_f32";
     let mut a = Asm::new(name);
     let end = a.label();
@@ -428,7 +428,7 @@ fn build_dwt_f32() -> Program {
 /// FP16 Haar DWT: one packed load per pair; sum/difference emerge as
 /// `vfdotpex` against constant packs (c, c) and (c, −c); two results are
 /// re-packed per two pairs.
-fn build_dwt_f16() -> Program {
+pub(crate) fn build_dwt_f16() -> Program {
     let name = "fp_dwt_f16";
     let mut a = Asm::new(name);
     let end = a.label();

@@ -18,7 +18,7 @@ pub const K: usize = 3;
 pub const D: usize = 4;
 
 /// Params: a2=&points a3=&labels(out i32) a4=&centroids a5=n_points.
-fn build_f32() -> Program {
+pub(crate) fn build_f32() -> Program {
     let name = "fp_kmeans_f32";
     // Centroid registers: 3 × 4.
     let cent: [[Reg; D]; K] = [
@@ -71,7 +71,7 @@ fn build_f32() -> Program {
 }
 
 /// FP16: dims packed two per word (D=4 → 2 words/point).
-fn build_f16() -> Program {
+pub(crate) fn build_f16() -> Program {
     let name = "fp_kmeans_f16";
     let cent: [[Reg; 2]; K] = [[S8, S9], [S10, S11], [RA, SP]];
     let mut a = Asm::new(name);

@@ -14,7 +14,7 @@ use crate::iss::FlatMem;
 use super::{check_program, require, KernelRun, TcdmAlloc};
 
 /// FP operand width.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FpWidth {
     F32,
     /// Packed 2×binary16 (smallFloat SIMD).

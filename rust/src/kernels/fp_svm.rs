@@ -17,7 +17,7 @@ pub const CLASSES: usize = 3;
 
 /// Params: a2=&x(points) a3=&labels a4=&W (C rows of D, then C biases)
 /// a5=n_points a6=D.
-fn build(d: usize, fw: FpWidth) -> Program {
+pub(crate) fn build(d: usize, fw: FpWidth) -> Program {
     let name = match fw {
         FpWidth::F32 => "fp_svm_f32",
         FpWidth::F16x2 => "fp_svm_f16",

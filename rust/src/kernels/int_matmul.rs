@@ -24,7 +24,7 @@ use crate::iss::FlatMem;
 use super::{check_program, require, KernelRun, TcdmAlloc};
 
 /// Operand width of the integer matmul.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum IntWidth {
     I8,
     I16,

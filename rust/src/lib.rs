@@ -30,6 +30,8 @@
 //! * [`dnn`] — layer graph IR, MobileNetV2 / RepVGG topologies, the
 //!   DORY-style tiler and the four-stage double-buffered pipeline model.
 //! * [`runtime`] — PJRT bridge loading `artifacts/*.hlo.txt`.
+//! * [`sweep`] — the sweep execution engine: memoized, parallel scenario
+//!   fan-out behind the reproduction suite (`vega repro --jobs N`).
 //! * [`coordinator`] / [`bench`] — experiment drivers regenerating every
 //!   table and figure of the paper's evaluation.
 
@@ -48,5 +50,6 @@ pub mod mem;
 pub mod power;
 pub mod runtime;
 pub mod soc;
+pub mod sweep;
 
 pub use common::{Cycles, PicoJoules, VegaError};

@@ -2,7 +2,11 @@
 //!
 //! ```text
 //! vega list                 list reproduction ids
-//! vega repro <id>|all       regenerate a paper table/figure
+//! vega repro <id>|all [--jobs N]
+//!                           regenerate a paper table/figure through the
+//!                           sweep engine (N workers; output is byte-
+//!                           identical for any N — default VEGA_JOBS or
+//!                           the machine's parallelism)
 //! vega runtime              show the PJRT artifact registry
 //! vega golden <name>        run one artifact and cross-check the
 //!                           simulator's functional model against it
@@ -15,13 +19,15 @@
 
 use vega::bench;
 use vega::runtime::{Runtime, Tensor};
+use vega::sweep::SweepEngine;
 
 fn usage() -> ! {
     eprintln!(
         "usage: vega <command>\n\
          commands:\n\
            list                 list reproduction ids\n\
-           repro <id>|all       regenerate a paper table/figure\n\
+           repro <id>|all [--jobs N]\n\
+                                regenerate a paper table/figure\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
@@ -42,12 +48,23 @@ fn main() {
         }
         Some("repro") => {
             let id = args.get(1).map(String::as_str).unwrap_or_else(|| usage());
+            let mut jobs = vega::sweep::default_jobs();
+            let mut it = args[2..].iter();
+            while let Some(a) = it.next() {
+                match a.as_str() {
+                    "--jobs" => {
+                        jobs = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
+                    }
+                    _ => usage(),
+                }
+            }
+            let eng = SweepEngine::new(jobs);
             if id == "all" {
-                for id in bench::ALL_WITH_FIG11 {
-                    println!("{}", bench::run(id).expect("known id"));
+                for report in bench::run_many(&bench::ALL_WITH_FIG11, &eng) {
+                    println!("{}", report.expect("known id"));
                 }
             } else {
-                match bench::run(id) {
+                match bench::run_with(id, &eng) {
                     Some(report) => println!("{report}"),
                     None => {
                         eprintln!("unknown reproduction id '{id}' (try `vega list`)");

@@ -18,6 +18,7 @@ pub enum EccResult {
 }
 
 impl EccResult {
+    #[inline]
     pub fn value(self) -> u64 {
         match self {
             EccResult::Clean(v) | EccResult::Corrected(v) | EccResult::Detected(v) => v,
@@ -31,54 +32,65 @@ const CHECK_BITS: usize = 7;
 
 /// Precomputed parity masks: `MASKS[c]` covers every codeword position
 /// whose index has bit `c` set, so syndrome bit c = popcount(cw & MASKS[c])
-/// & 1 — turns per-word ECC from ~500 bit probes into 7 popcounts (§Perf).
-static MASKS: std::sync::OnceLock<[u128; CHECK_BITS]> = std::sync::OnceLock::new();
+/// & 1 — turns per-word ECC from ~500 bit probes into 7 popcounts. Built
+/// at compile time, so the per-word hot path carries no lazy-init check
+/// (§Perf: `encode`/`decode` run once per 64-bit MRAM word).
+const MASKS: [u128; CHECK_BITS] = parity_masks();
 
-fn masks() -> &'static [u128; CHECK_BITS] {
-    MASKS.get_or_init(|| {
-        std::array::from_fn(|c| {
-            let mut m = 0u128;
-            for pos in 1..=71u32 {
-                if pos & (1u32 << c) != 0 {
-                    m |= 1u128 << pos;
-                }
+const fn parity_masks() -> [u128; CHECK_BITS] {
+    let mut masks = [0u128; CHECK_BITS];
+    let mut c = 0;
+    while c < CHECK_BITS {
+        let mut pos = 1u32;
+        while pos <= 71 {
+            if pos & (1u32 << c) != 0 {
+                masks[c] |= 1u128 << pos;
             }
-            m
-        })
-    })
+            pos += 1;
+        }
+        c += 1;
+    }
+    masks
 }
 
 /// Data-bit codeword positions (the non-power-of-two slots in 1..=71).
-static DATA_POS: std::sync::OnceLock<[u32; 64]> = std::sync::OnceLock::new();
+const DATA_POS: [u32; 64] = data_positions();
 
-fn data_pos() -> &'static [u32; 64] {
-    DATA_POS.get_or_init(|| {
-        let mut out = [0u32; 64];
-        let mut d = 0;
-        for pos in 1..=71u32 {
-            if !pos.is_power_of_two() {
-                out[d] = pos;
-                d += 1;
-            }
+const fn data_positions() -> [u32; 64] {
+    let mut out = [0u32; 64];
+    let mut d = 0;
+    let mut pos = 1u32;
+    while pos <= 71 {
+        if !pos.is_power_of_two() {
+            out[d] = pos;
+            d += 1;
         }
-        debug_assert_eq!(d, 64);
-        out
-    })
+        pos += 1;
+    }
+    out
 }
+
+// 64 data slots exactly fill positions 1..=71 minus the 7 check bits.
+const _: () = assert!(DATA_POS[63] == 71);
 
 /// Expand 64 data bits into a 72-bit codeword layout: positions 1..=71,
 /// with powers-of-two positions reserved for check bits and position 0 for
 /// the overall parity.
+#[inline]
 fn encode_codeword(data: u64) -> u128 {
     let mut cw: u128 = 0;
-    for (d, &pos) in data_pos().iter().enumerate() {
-        cw |= (((data >> d) & 1) as u128) << pos;
+    let mut d = 0;
+    while d < 64 {
+        cw |= (((data >> d) & 1) as u128) << DATA_POS[d];
+        d += 1;
     }
     // Hamming check bits via the precomputed masks.
-    for (c, &mask) in masks().iter().enumerate() {
-        if (cw & mask).count_ones() & 1 == 1 {
+    let mut c = 0;
+    while c < CHECK_BITS {
+        if (cw & MASKS[c]).count_ones() & 1 == 1 {
             cw |= 1u128 << (1u32 << c);
         }
+        c += 1;
     }
     // Overall parity at position 0 (extends Hamming to SECDED).
     cw |= (cw.count_ones() & 1) as u128;
@@ -86,24 +98,29 @@ fn encode_codeword(data: u64) -> u128 {
 }
 
 /// Extract the 64 data bits from a codeword.
+#[inline]
 fn extract_data(cw: u128) -> u64 {
     let mut data = 0u64;
-    for (d, &pos) in data_pos().iter().enumerate() {
-        data |= (((cw >> pos) & 1) as u64) << d;
+    let mut d = 0;
+    while d < 64 {
+        data |= (((cw >> DATA_POS[d]) & 1) as u64) << d;
+        d += 1;
     }
     data
 }
 
 /// Encode one 64-bit word to its 73-bit (data+check+parity) codeword.
+#[inline]
 pub fn encode(data: u64) -> u128 {
     encode_codeword(data)
 }
 
 /// Decode a codeword, correcting single-bit and detecting double-bit
 /// errors.
+#[inline]
 pub fn decode(cw: u128) -> EccResult {
     let mut syndrome = 0u32;
-    for (c, &mask) in masks().iter().enumerate() {
+    for (c, &mask) in MASKS.iter().enumerate() {
         syndrome |= ((cw & mask).count_ones() & 1) << c;
     }
     let overall = cw.count_ones() % 2;

@@ -1,0 +1,179 @@
+//! The simulation memo: each distinct key is computed exactly once per
+//! cache lifetime, even under concurrent lookups.
+//!
+//! Concurrency protocol ([`OnceMap`]): the global map only hands out
+//! per-key slots; the computation itself runs while holding that key's
+//! slot lock, so a second worker asking for an in-flight key blocks until
+//! the first finishes and then reads the stored result (no duplicated
+//! simulation, no global lock held during multi-millisecond simulations).
+//! Hit/miss totals are therefore deterministic for a fixed lookup
+//! multiset regardless of the worker count: `misses == distinct keys`,
+//! `hits == lookups - misses`.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::scenario::{SimKey, SimResult};
+
+/// Generic compute-once map with hit/miss counters (backs the scenario
+/// cache and the engine's network-report memo).
+pub(crate) struct OnceMap<K, V> {
+    enabled: bool,
+    entries: Mutex<HashMap<K, Arc<Mutex<Option<V>>>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<K: Eq + Hash, V: Clone> OnceMap<K, V> {
+    pub(crate) fn new(enabled: bool) -> Self {
+        Self {
+            enabled,
+            entries: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up, running `compute` (exactly once per distinct key)
+    /// on miss. With `enabled = false` every lookup recomputes.
+    pub(crate) fn get_or_compute(&self, key: K, compute: impl FnOnce() -> V) -> V {
+        if !self.enabled {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return compute();
+        }
+        let slot = {
+            let mut map = self.entries.lock().unwrap();
+            Arc::clone(map.entry(key).or_insert_with(|| Arc::new(Mutex::new(None))))
+        };
+        let mut guard = slot.lock().unwrap();
+        match &*guard {
+            Some(cached) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                cached.clone()
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                let value = compute();
+                *guard = Some(value.clone());
+                value
+            }
+        }
+    }
+
+    pub(crate) fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub(crate) fn enabled(&self) -> bool {
+        self.enabled
+    }
+}
+
+/// Keyed kernel-simulation results plus hit/miss counters.
+pub struct SimCache {
+    map: OnceMap<SimKey, SimResult>,
+}
+
+impl SimCache {
+    pub fn new() -> Self {
+        Self::with_enabled(true)
+    }
+
+    /// `enabled = false` turns every lookup into a fresh simulation (the
+    /// memoization-off baseline of `cargo bench --bench sweeps`).
+    pub fn with_enabled(enabled: bool) -> Self {
+        Self { map: OnceMap::new(enabled) }
+    }
+
+    /// Look `key` up, running `sim` (exactly once per distinct key) on miss.
+    pub fn get_or_sim(&self, key: SimKey, sim: impl FnOnce() -> SimResult) -> SimResult {
+        self.map.get_or_compute(key, sim)
+    }
+
+    /// (hits, misses) so far. With the cache enabled, `misses` equals the
+    /// number of distinct keys ever looked up.
+    pub fn counters(&self) -> (u64, u64) {
+        self.map.counters()
+    }
+
+    /// Number of distinct keys resident.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Whether lookups are memoized (false = every lookup re-simulates).
+    pub fn enabled(&self) -> bool {
+        self.map.enabled()
+    }
+}
+
+impl Default for SimCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fp_matmul::FpWidth;
+    use crate::sweep::{Scenario, SimArena};
+
+    fn key_a() -> SimKey {
+        Scenario::FpMatmul { w: FpWidth::F32, cores: 2 }.key()
+    }
+
+    fn result_a() -> SimResult {
+        Scenario::FpMatmul { w: FpWidth::F32, cores: 2 }.simulate(&mut SimArena::new())
+    }
+
+    #[test]
+    fn second_lookup_hits_without_simulating() {
+        let cache = SimCache::new();
+        let mut sims = 0;
+        for _ in 0..3 {
+            cache.get_or_sim(key_a(), || {
+                sims += 1;
+                result_a()
+            });
+        }
+        assert_eq!(sims, 1);
+        assert_eq!(cache.counters(), (2, 1));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn disabled_cache_always_simulates() {
+        let cache = SimCache::with_enabled(false);
+        let mut sims = 0;
+        for _ in 0..2 {
+            cache.get_or_sim(key_a(), || {
+                sims += 1;
+                result_a()
+            });
+        }
+        assert_eq!(sims, 2);
+        assert_eq!(cache.counters(), (0, 2));
+        assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn once_map_is_generic_over_values() {
+        let m: OnceMap<&'static str, u32> = OnceMap::new(true);
+        assert_eq!(m.get_or_compute("a", || 1), 1);
+        assert_eq!(m.get_or_compute("a", || 2), 1);
+        assert_eq!(m.get_or_compute("b", || 3), 3);
+        assert_eq!(m.counters(), (1, 2));
+        assert_eq!(m.len(), 2);
+    }
+}

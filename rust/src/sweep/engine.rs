@@ -1,0 +1,208 @@
+//! The worker pool: scenario fan-out, report fan-out, memoized lookup.
+//!
+//! `std::thread::scope` keeps everything dependency-free and borrow-safe;
+//! the work queue is an atomic index over the input slice and results land
+//! in index-tagged `OnceLock` slots, so output order is the input (paper)
+//! order no matter which worker finishes when. Each worker thread owns one
+//! lazily-built [`SimArena`] (thread-local), reused across every scenario
+//! it drains — no per-scenario `Cluster`/L2 allocations.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+use super::cache::{OnceMap, SimCache};
+use super::scenario::{Scenario, SimArena, SimResult};
+use crate::dnn::{run_network, Network, NetworkReport, PipelineConfig};
+use crate::kernels::KernelRun;
+
+thread_local! {
+    /// The calling thread's owned simulation arena (one per worker).
+    static ARENA: RefCell<SimArena> = RefCell::new(SimArena::new());
+}
+
+/// Worker count to use when the caller doesn't pass `--jobs`: `VEGA_JOBS`
+/// if set, else the machine's available parallelism.
+pub fn default_jobs() -> usize {
+    std::env::var("VEGA_JOBS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
+}
+
+/// The sweep execution engine: a [`SimCache`] (kernel scenarios), a
+/// network-report memo (DNN pipeline sweeps), and a worker count.
+pub struct SweepEngine {
+    jobs: usize,
+    cache: SimCache,
+    nets: OnceMap<String, NetworkReport>,
+}
+
+impl SweepEngine {
+    pub fn new(jobs: usize) -> Self {
+        Self { jobs: jobs.max(1), cache: SimCache::new(), nets: OnceMap::new(true) }
+    }
+
+    /// Single-worker engine (the `bench::run(id)` compatibility path).
+    pub fn serial() -> Self {
+        Self::new(1)
+    }
+
+    /// Engine with memoization off — every lookup re-simulates. The
+    /// serial-without-cache baseline of `cargo bench --bench sweeps`.
+    pub fn without_cache(jobs: usize) -> Self {
+        Self {
+            jobs: jobs.max(1),
+            cache: SimCache::with_enabled(false),
+            nets: OnceMap::new(false),
+        }
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    pub fn cache(&self) -> &SimCache {
+        &self.cache
+    }
+
+    /// Memoized result of one scenario, simulated on this thread's arena
+    /// on miss.
+    pub fn result(&self, s: Scenario) -> SimResult {
+        let s = s.canonical();
+        self.cache
+            .get_or_sim(s.key(), || ARENA.with(|a| s.simulate(&mut a.borrow_mut())))
+    }
+
+    /// Memoized [`KernelRun`] of one scenario (what the table/figure
+    /// renderers consume; per-operating-point energy is derived from it
+    /// analytically, which is what makes V/f sweeps one simulation each).
+    pub fn kernel_run(&self, s: Scenario) -> KernelRun {
+        self.result(s).run
+    }
+
+    /// Memoized DNN pipeline run (Figs. 9–11, Table VII/VIII rows and the
+    /// store-policy / double-buffering ablations). `run_network` is a pure
+    /// function of the network and config, so recurring (network, config)
+    /// pairs across reports — e.g. MobileNetV2 `AllMram`, used by Fig. 9,
+    /// Fig. 10, Fig. 11 and an ablation — run once per engine. The key
+    /// includes a content hash of the per-layer structure (the DNN
+    /// analogue of the kernel cache's `Program::content_hash`), so a
+    /// topology edit that preserves name and aggregate totals can never
+    /// serve a stale per-layer breakdown.
+    pub fn network_report(&self, net: &Network, config: PipelineConfig) -> NetworkReport {
+        use std::hash::Hasher;
+        let mut h = crate::common::Fnv1a::new();
+        h.write(format!("{:?}", net.layers).as_bytes());
+        let key = format!(
+            "{}|{}l/{:016x}|{}@{:x}/{:x}/{:x}|{:?}|{:?}",
+            net.name,
+            net.layers.len(),
+            h.finish(),
+            config.op.name,
+            config.op.vdd.to_bits(),
+            config.op.f_soc.to_bits(),
+            config.op.f_cl.to_bits(),
+            config.engine,
+            config.policy,
+        );
+        self.nets.get_or_compute(key, || run_network(net, config))
+    }
+
+    /// (hits, misses) of the network-report memo.
+    pub fn network_counters(&self) -> (u64, u64) {
+        self.nets.counters()
+    }
+
+    /// Drain a scenario list through the worker pool; `out[i]` corresponds
+    /// to `list[i]` regardless of completion order.
+    pub fn run_scenarios(&self, list: &[Scenario]) -> Vec<SimResult> {
+        fan_out(self.jobs, list.len(), |i| self.result(list[i]))
+    }
+
+    /// Render whole reproduction reports through the worker pool (ids as
+    /// accepted by [`crate::bench::run_with`]); output order is `ids`
+    /// order. Reports share this engine's cache, so kernels recurring
+    /// across tables and figures are simulated once. Uses the
+    /// prefetch-free renderer: report workers read caches directly and
+    /// never spawn a nested per-report scenario pool.
+    pub fn render_reports(&self, ids: &[&str]) -> Vec<Option<String>> {
+        fan_out(self.jobs, ids.len(), |i| crate::bench::render(ids[i], self))
+    }
+}
+
+impl Default for SweepEngine {
+    fn default() -> Self {
+        Self::new(default_jobs())
+    }
+}
+
+/// Index-tagged fan-out of `n` work items over at most `jobs` scoped
+/// workers. Results are returned in index order.
+fn fan_out<T, F>(jobs: usize, n: usize, work: F) -> Vec<T>
+where
+    T: Send + Sync,
+    F: Fn(usize) -> T + Sync,
+{
+    if jobs <= 1 || n <= 1 {
+        return (0..n).map(work).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+    std::thread::scope(|s| {
+        for _ in 0..jobs.min(n) {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let value = work(i);
+                let _ = slots[i].set(value);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().expect("every work item produced a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::int_matmul::IntWidth;
+
+    #[test]
+    fn fan_out_preserves_index_order() {
+        let out = fan_out(4, 17, |i| i * i);
+        assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn duplicate_scenarios_simulate_once() {
+        let eng = SweepEngine::new(2);
+        let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 2 };
+        let out = eng.run_scenarios(&[s, s, s, s]);
+        assert_eq!(out.len(), 4);
+        let (hits, misses) = eng.cache().counters();
+        assert_eq!(misses, 1);
+        assert_eq!(hits, 3);
+        assert!(out.windows(2).all(|w| w[0].outputs_digest == w[1].outputs_digest));
+    }
+
+    #[test]
+    fn parallel_results_match_serial() {
+        let list = [
+            Scenario::IntMatmul { w: IntWidth::I8, cores: 1 },
+            Scenario::IntMatmul { w: IntWidth::I16, cores: 2 },
+            Scenario::IntMatmul { w: IntWidth::I8, cores: 1 },
+        ];
+        let serial = SweepEngine::serial().run_scenarios(&list);
+        let parallel = SweepEngine::new(4).run_scenarios(&list);
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.outputs_digest, b.outputs_digest);
+            assert_eq!(a.run.stats, b.run.stats);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The sweep execution engine (§Perf, suite level).
+//!
+//! The paper's evaluation is a grid of sweeps — core counts, V/f operating
+//! points, precisions, store policies (Figs. 6–11, Tables V–VIII) — and the
+//! reported *cycle counts* are frequency-independent: only the power/energy
+//! numbers change per [`crate::power::tables::OperatingPoint`]. This module
+//! exploits that structure twice:
+//!
+//! 1. **Memoization** ([`SimCache`]): every distinct simulated program —
+//!    keyed by (kernel id, problem size, precision, core count) plus a
+//!    content hash of the assembled [`crate::isa::Program`] — is simulated
+//!    exactly once. V/f sweeps derive each point analytically from the
+//!    cached [`crate::cluster::ClusterStats`], and matmul programs that
+//!    recur across tables and figures are shared when a whole suite runs
+//!    through one engine (`vega repro all`). A sibling memo does the same
+//!    for DNN pipeline runs ([`SweepEngine::network_report`]): MobileNetV2
+//!    store-policy flows recur across Figs. 9–11 and the ablations.
+//! 2. **Parallel fan-out** ([`SweepEngine`]): a `std::thread::scope`-based
+//!    worker pool (no dependencies — the build is offline) drains a work
+//!    queue of [`Scenario`] descriptors and of whole report ids. Each
+//!    worker owns its [`SimArena`] (a `Cluster` + L2 `FlatMem` pair), and
+//!    results are index-tagged so reports are assembled in deterministic
+//!    paper order regardless of completion order.
+//!
+//! Determinism invariant: the rendered reports are **byte-identical** for
+//! any `--jobs` value (asserted by `tests/sweep_determinism.rs`) because
+//! every scenario simulation is a pure function of its descriptor and the
+//! cache only ever stores the first (hence: the only possible) result.
+
+pub mod cache;
+pub mod engine;
+pub mod scenario;
+
+pub use cache::SimCache;
+pub use engine::{default_jobs, SweepEngine};
+pub use scenario::{Scenario, SimArena, SimKey, SimResult};

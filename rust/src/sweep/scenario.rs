@@ -1,0 +1,468 @@
+//! Scenario descriptors: the unit of work in the sweep engine.
+//!
+//! A [`Scenario`] is a value describing one distinct cluster simulation of
+//! the reproduction suite (which kernel, which problem size, which
+//! precision, how many cores, which fabric configuration). It is `Copy`,
+//! hashable, and knows how to
+//!
+//! * assemble its [`Program`] (hashed into the cache key so a kernel
+//!   change can never serve stale cached stats),
+//! * canonicalise itself (Table V's MATMUL row *is* the Fig. 6 FP matmul,
+//!   so both map to one cache entry), and
+//! * simulate itself on a caller-owned [`SimArena`].
+//!
+//! The input data of every scenario is generated from a fixed seed, so a
+//! scenario's result is a pure function of its descriptor — the property
+//! that makes both the memoization and the parallel fan-out exact. Seeds
+//! and problem sizes are transplanted verbatim from the original
+//! coordinator drivers (EXPERIMENTS.md records them); the coordinator's
+//! `bench_*` entry points now delegate here.
+
+use crate::cluster::{Cluster, L2_BASE, L2_SIZE};
+use crate::common::Rng;
+use crate::isa::Program;
+use crate::iss::FlatMem;
+use crate::kernels::fp_matmul::FpWidth;
+use crate::kernels::int_matmul::IntWidth;
+use crate::kernels::{
+    fp_conv, fp_fft, fp_filters, fp_kmeans, fp_matmul, fp_svm, int_matmul, KernelRun,
+};
+
+/// One worker's owned simulation state: a cluster fabric plus its L2 view,
+/// allocated once and zeroed between scenarios ([`SimArena::reset`] is
+/// bit-equivalent to building a fresh pair, without the allocations).
+pub struct SimArena {
+    pub cluster: Cluster,
+    pub l2: FlatMem,
+}
+
+impl SimArena {
+    pub fn new() -> Self {
+        Self { cluster: Cluster::new(), l2: FlatMem::new(L2_BASE, L2_SIZE) }
+    }
+
+    /// Restore the freshly-built state in place. Pins the scheduler back
+    /// to the default cycle-skip fast path too: the cache key has no
+    /// scheduler component, so a scenario must never be simulated (and
+    /// cached) on anything but the default scheduler.
+    pub fn reset(&mut self) {
+        self.cluster.reset();
+        self.cluster.scheduler = crate::cluster::SchedulerMode::CycleSkip;
+        self.l2.reset();
+    }
+}
+
+impl Default for SimArena {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Cache key of one distinct simulation (ISSUE: kernel id, problem size,
+/// precision, core count, plus the assembled program's content hash).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct SimKey {
+    pub kernel: String,
+    pub size: (usize, usize, usize),
+    pub precision: &'static str,
+    pub cores: usize,
+    pub prog_hash: u64,
+}
+
+/// Cached outcome of one simulation: the stats bundle every report renders
+/// from, plus a digest of the kernel's functional outputs (so equivalence
+/// checks don't need to retain megabytes of result tensors).
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub run: KernelRun,
+    pub outputs_digest: u64,
+}
+
+// Canonical problem sizes, shared by `program()` (the hashed cache-key
+// program), `key()` (the size field) and `simulate()` (the driver run) so
+// the three can never drift apart — the prog_hash staleness guard is only
+// as good as program() assembling the exact program the driver executes.
+const INT_MATMUL_DIMS: (usize, usize, usize) = (64, 64, 64);
+const FP_MATMUL_DIMS: (usize, usize, usize) = (32, 32, 64);
+const FPU_ABLATION_DIMS: (usize, usize, usize) = (32, 32, 32);
+const CONV_HW: (usize, usize) = (16, 32);
+const DWT_N: usize = 1024;
+const FFT_N: usize = 256;
+const FIR_N: usize = 512;
+const IIR_CHANNELS: usize = 8;
+const IIR_N: usize = 256;
+const KMEANS_POINTS: usize = 256;
+const SVM_POINTS: usize = 128;
+const SVM_DIM: usize = 16;
+
+/// One distinct simulated workload of the reproduction suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scenario {
+    /// PULP-NN integer matmul, 64×64×64 (Fig. 6 / Table VIII).
+    IntMatmul { w: IntWidth, cores: usize },
+    /// Layout-ablation variant with an explicit row pad (ablation 1).
+    IntMatmulPadded { w: IntWidth, cores: usize, pad_words: usize },
+    /// FP matmul, 32×32×64 (Fig. 6 / Fig. 8 / Table V MATMUL row).
+    FpMatmul { w: FpWidth, cores: usize },
+    /// FPU-fabric ablation variant, 32×32×32 (ablation 2).
+    FpMatmulFpu { w: FpWidth, cores: usize, private_fpu: bool },
+    /// One Table V / Fig. 8 NSAA kernel on 8 cores.
+    Nsaa { name: &'static str, w: FpWidth },
+}
+
+impl IntWidth {
+    fn precision_str(self) -> &'static str {
+        match self {
+            IntWidth::I8 => "i8",
+            IntWidth::I16 => "i16",
+            IntWidth::I32 => "i32",
+        }
+    }
+}
+
+impl FpWidth {
+    fn precision_str(self) -> &'static str {
+        match self {
+            FpWidth::F32 => "f32",
+            FpWidth::F16x2 => "f16x2",
+        }
+    }
+}
+
+impl Scenario {
+    /// Collapse aliases onto one cache entry: Table V's MATMUL row runs
+    /// the same program on the same inputs as the Fig. 6 FP matmul.
+    pub fn canonical(self) -> Self {
+        match self {
+            Scenario::Nsaa { name: "MATMUL", w } => Scenario::FpMatmul { w, cores: 8 },
+            s => s,
+        }
+    }
+
+    /// Assemble the scenario's program (cache-key component only; the
+    /// simulation assembles its own copy through the kernel driver).
+    pub fn program(&self) -> Program {
+        let (im, ik, il) = INT_MATMUL_DIMS;
+        let (fm, fk, fl) = FP_MATMUL_DIMS;
+        let (am, ak, al) = FPU_ABLATION_DIMS;
+        match self.canonical() {
+            Scenario::IntMatmul { w, .. } => int_matmul::build(im, ik, il, w),
+            Scenario::IntMatmulPadded { w, pad_words, .. } => {
+                int_matmul::build_padded(im, ik, il, w, pad_words)
+            }
+            Scenario::FpMatmul { w, .. } => fp_matmul::build(fm, fk, fl, w),
+            Scenario::FpMatmulFpu { w, .. } => fp_matmul::build(am, ak, al, w),
+            Scenario::Nsaa { name, w } => match name {
+                "CONV" => fp_conv::build(CONV_HW.0, CONV_HW.1, w),
+                "DWT" => match w {
+                    FpWidth::F32 => fp_filters::build_dwt_f32(),
+                    FpWidth::F16x2 => fp_filters::build_dwt_f16(),
+                },
+                "FFT" => fp_fft::build(FFT_N, 8, w),
+                "FIR" => match w {
+                    FpWidth::F32 => fp_filters::build_fir_f32(),
+                    FpWidth::F16x2 => fp_filters::build_fir_f16(),
+                },
+                "IIR" => match w {
+                    FpWidth::F32 => fp_filters::build_iir_f32(),
+                    FpWidth::F16x2 => fp_filters::build_iir_f16(),
+                },
+                "KMEANS" => match w {
+                    FpWidth::F32 => fp_kmeans::build_f32(),
+                    FpWidth::F16x2 => fp_kmeans::build_f16(),
+                },
+                "SVM" => fp_svm::build(SVM_DIM, w),
+                other => panic!("unknown NSAA kernel {other}"),
+            },
+        }
+    }
+
+    /// Program content hash of the canonical scenario, assembled once per
+    /// process per scenario (kernel code is fixed for a process lifetime,
+    /// and `key()` sits on the cache-lookup hot path — hits must not pay
+    /// for a full program assembly).
+    fn prog_hash(self) -> u64 {
+        use std::sync::OnceLock;
+        static HASHES: OnceLock<super::cache::OnceMap<Scenario, u64>> = OnceLock::new();
+        let c = self.canonical();
+        HASHES
+            .get_or_init(|| super::cache::OnceMap::new(true))
+            .get_or_compute(c, || c.program().content_hash())
+    }
+
+    /// The memoization key (canonicalised).
+    pub fn key(&self) -> SimKey {
+        let c = self.canonical();
+        let prog_hash = c.prog_hash();
+        match c {
+            Scenario::IntMatmul { w, cores } => SimKey {
+                kernel: format!("matmul_i{}", w.bytes() * 8),
+                size: INT_MATMUL_DIMS,
+                precision: w.precision_str(),
+                cores,
+                prog_hash,
+            },
+            Scenario::IntMatmulPadded { w, cores, pad_words } => SimKey {
+                kernel: format!("matmul_i{}_pad{pad_words}", w.bytes() * 8),
+                size: INT_MATMUL_DIMS,
+                precision: w.precision_str(),
+                cores,
+                prog_hash,
+            },
+            Scenario::FpMatmul { w, cores } => SimKey {
+                kernel: "fp_matmul".into(),
+                size: FP_MATMUL_DIMS,
+                precision: w.precision_str(),
+                cores,
+                prog_hash,
+            },
+            Scenario::FpMatmulFpu { w, cores, private_fpu } => SimKey {
+                kernel: format!(
+                    "fp_matmul_{}_fpu",
+                    if private_fpu { "private" } else { "shared" }
+                ),
+                size: FPU_ABLATION_DIMS,
+                precision: w.precision_str(),
+                cores,
+                prog_hash,
+            },
+            Scenario::Nsaa { name, w } => SimKey {
+                kernel: format!("nsaa_{}", name.to_lowercase()),
+                size: nsaa_size(name),
+                precision: w.precision_str(),
+                cores: 8,
+                prog_hash,
+            },
+        }
+    }
+
+    /// Simulate this scenario on `arena` (reset first; results are a pure
+    /// function of the descriptor).
+    pub fn simulate(&self, arena: &mut SimArena) -> SimResult {
+        arena.reset();
+        let (cl, l2) = (&mut arena.cluster, &mut arena.l2);
+        match self.canonical() {
+            Scenario::IntMatmul { w, cores } => {
+                let mut rng = Rng::new(0xF16_6);
+                let (m, n, k) = INT_MATMUL_DIMS;
+                let lim = match w {
+                    IntWidth::I8 => 127,
+                    IntWidth::I16 => 2047,
+                    IntWidth::I32 => 1000,
+                };
+                let av: Vec<i32> =
+                    (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+                let bv: Vec<i32> =
+                    (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+                let (c, kr) = int_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
+                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+            }
+            Scenario::IntMatmulPadded { w, cores, pad_words } => {
+                let mut rng = Rng::new(0xAB1);
+                let (m, n, k) = INT_MATMUL_DIMS;
+                let av: Vec<i32> =
+                    (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+                let bv: Vec<i32> =
+                    (0..n * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+                let (c, kr) =
+                    int_matmul::run_padded(cl, l2, &av, &bv, m, n, k, w, cores, pad_words);
+                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+            }
+            Scenario::FpMatmul { w, cores } => {
+                let mut rng = Rng::new(0xF16_8);
+                let (m, n, k) = FP_MATMUL_DIMS;
+                let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+                let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+                let (c, kr) = fp_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
+                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+            }
+            Scenario::FpMatmulFpu { w, cores, private_fpu } => {
+                let mut rng = Rng::new(0xAB2);
+                let (m, n, k) = FPU_ABLATION_DIMS;
+                let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+                let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+                cl.fpus.private_per_core = private_fpu;
+                let (c, kr) = fp_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
+                cl.fpus.private_per_core = false;
+                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+            }
+            Scenario::Nsaa { name, w } => {
+                let mut rng = Rng::new(0x85AA ^ name.len() as u64);
+                match name {
+                    "CONV" => {
+                        let (h, wd) = CONV_HW;
+                        let x: Vec<f32> =
+                            (0..(h + 2) * (wd + 2)).map(|_| rng.f32_pm1()).collect();
+                        let k: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
+                        let (c, kr) = fp_conv::run(cl, l2, &x, &k, h, wd, w, 8);
+                        SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                    }
+                    "DWT" => {
+                        let x: Vec<f32> = (0..DWT_N).map(|_| rng.f32_pm1()).collect();
+                        let (lo, hi, kr) = fp_filters::run_dwt(cl, l2, &x, w, 8);
+                        let mut d = OutDigest::new();
+                        d.f32s(&lo);
+                        d.f32s(&hi);
+                        SimResult { outputs_digest: d.finish(), run: kr }
+                    }
+                    "FFT" => {
+                        let x: Vec<(f32, f32)> =
+                            (0..FFT_N).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
+                        let (c, kr) = fp_fft::run(cl, l2, &x, w, 8);
+                        let mut d = OutDigest::new();
+                        for (re, im) in &c {
+                            d.f32s(&[*re, *im]);
+                        }
+                        SimResult { outputs_digest: d.finish(), run: kr }
+                    }
+                    "FIR" => {
+                        let taps: Vec<f32> =
+                            (0..fp_filters::FIR_TAPS).map(|_| rng.f32_pm1()).collect();
+                        let x: Vec<f32> = (0..FIR_N + 16).map(|_| rng.f32_pm1()).collect();
+                        let (c, kr) = fp_filters::run_fir(cl, l2, &x, &taps, FIR_N, w, 8);
+                        SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                    }
+                    "IIR" => {
+                        let b = fp_filters::Biquad::lowpass();
+                        let chans: Vec<Vec<f32>> = (0..IIR_CHANNELS)
+                            .map(|_| (0..IIR_N).map(|_| rng.f32_pm1()).collect())
+                            .collect();
+                        let (c, kr) = fp_filters::run_iir(cl, l2, &chans, b, b, w);
+                        let mut d = OutDigest::new();
+                        for ch in &c {
+                            d.f32s(ch);
+                        }
+                        SimResult { outputs_digest: d.finish(), run: kr }
+                    }
+                    "KMEANS" => {
+                        let centroids: Vec<f32> = (0..fp_kmeans::K * fp_kmeans::D)
+                            .map(|_| 2.0 * rng.f32_pm1())
+                            .collect();
+                        let pts: Vec<f32> = (0..KMEANS_POINTS * fp_kmeans::D)
+                            .map(|_| 2.0 * rng.f32_pm1())
+                            .collect();
+                        let (c, kr) = fp_kmeans::run(cl, l2, &pts, &centroids, w, 8);
+                        SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                    }
+                    "SVM" => {
+                        let wv: Vec<f32> =
+                            (0..fp_svm::CLASSES * SVM_DIM).map(|_| rng.f32_pm1()).collect();
+                        let b: Vec<f32> = (0..fp_svm::CLASSES).map(|_| rng.f32_pm1()).collect();
+                        let pts: Vec<f32> =
+                            (0..SVM_POINTS * SVM_DIM).map(|_| rng.f32_pm1()).collect();
+                        let (c, kr) = fp_svm::run(cl, l2, &pts, &wv, &b, SVM_DIM, w, 8);
+                        SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                    }
+                    other => panic!("unknown NSAA kernel {other}"),
+                }
+            }
+        }
+    }
+}
+
+/// Canonical problem-size triple per NSAA kernel (cache-key component).
+fn nsaa_size(name: &str) -> (usize, usize, usize) {
+    match name {
+        "CONV" => (CONV_HW.0, CONV_HW.1, 9),
+        "DWT" => (DWT_N, 0, 0),
+        "FFT" => (FFT_N, 0, 0),
+        "FIR" => (FIR_N, fp_filters::FIR_TAPS, 0),
+        "IIR" => (IIR_CHANNELS, IIR_N, 0),
+        "KMEANS" => (KMEANS_POINTS, fp_kmeans::K, fp_kmeans::D),
+        "SVM" => (SVM_POINTS, SVM_DIM, fp_svm::CLASSES),
+        other => panic!("unknown NSAA kernel {other}"),
+    }
+}
+
+/// Output-tensor digest over the crate's pinned FNV-1a (bit-exact across
+/// runs; f32s are digested by their IEEE bit patterns).
+struct OutDigest(crate::common::Fnv1a);
+
+impl OutDigest {
+    fn new() -> Self {
+        Self(crate::common::Fnv1a::new())
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        use std::hash::Hasher;
+        self.0.write(bytes);
+    }
+
+    fn i32s(&mut self, v: &[i32]) {
+        for &x in v {
+            self.bytes(&x.to_le_bytes());
+        }
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        for &x in v {
+            self.bytes(&x.to_bits().to_le_bytes());
+        }
+    }
+
+    fn finish(self) -> u64 {
+        use std::hash::Hasher;
+        self.0.finish()
+    }
+}
+
+fn digest_i32s(v: &[i32]) -> u64 {
+    let mut d = OutDigest::new();
+    d.i32s(v);
+    d.finish()
+}
+
+fn digest_f32s(v: &[f32]) -> u64 {
+    let mut d = OutDigest::new();
+    d.f32s(v);
+    d.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_row_canonicalises_to_fp_matmul() {
+        let a = Scenario::Nsaa { name: "MATMUL", w: FpWidth::F32 };
+        let b = Scenario::FpMatmul { w: FpWidth::F32, cores: 8 };
+        assert_eq!(a.canonical(), b);
+        assert_eq!(a.key(), b.key());
+    }
+
+    #[test]
+    fn keys_distinguish_precision_cores_and_padding() {
+        let base = Scenario::IntMatmul { w: IntWidth::I8, cores: 8 };
+        assert_ne!(base.key(), Scenario::IntMatmul { w: IntWidth::I16, cores: 8 }.key());
+        assert_ne!(base.key(), Scenario::IntMatmul { w: IntWidth::I8, cores: 4 }.key());
+        assert_ne!(
+            Scenario::IntMatmulPadded { w: IntWidth::I8, cores: 8, pad_words: 0 }.key(),
+            Scenario::IntMatmulPadded { w: IntWidth::I8, cores: 8, pad_words: 1 }.key(),
+        );
+        assert_ne!(
+            Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 8, private_fpu: true }.key(),
+            Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 8, private_fpu: false }.key(),
+        );
+    }
+
+    #[test]
+    fn simulate_is_a_pure_function_of_the_descriptor() {
+        let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 4 };
+        let mut arena = SimArena::new();
+        let a = s.simulate(&mut arena);
+        // Interleave an unrelated scenario on the same arena, then re-run.
+        let _ = Scenario::Nsaa { name: "FIR", w: FpWidth::F32 }.simulate(&mut arena);
+        let b = s.simulate(&mut arena);
+        assert_eq!(a.outputs_digest, b.outputs_digest);
+        assert_eq!(a.run.stats, b.run.stats);
+        assert_eq!(a.run.ops, b.run.ops);
+    }
+
+    #[test]
+    fn fpu_ablation_restores_the_shared_fabric() {
+        let mut arena = SimArena::new();
+        let _ = Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 8, private_fpu: true }
+            .simulate(&mut arena);
+        assert!(!arena.cluster.fpus.private_per_core);
+    }
+}

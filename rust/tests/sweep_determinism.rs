@@ -1,0 +1,105 @@
+//! Sweep-engine invariants (ISSUE 2 acceptance):
+//!
+//! * reproduction reports are **byte-identical** at `--jobs 1` and
+//!   `--jobs 8` — parallel fan-out may never change a paper number;
+//! * the [`SimCache`] simulates each distinct (kernel, problem size,
+//!   precision, core count, program hash) exactly once per engine — V/f
+//!   sweeps and cross-report recurrences are served from the cache.
+
+use std::collections::HashSet;
+
+use vega::bench;
+use vega::kernels::fp_matmul::FpWidth;
+use vega::sweep::{Scenario, SimArena, SweepEngine};
+
+/// (a) Byte-identical output for serial vs 8-way parallel engines, on the
+/// three report shapes the issue names: a figure with a V/f sweep, a
+/// table over the NSAA grid, and the ablation suite.
+#[test]
+fn repro_output_byte_identical_across_jobs() {
+    for id in ["fig6", "table5", "ablations"] {
+        let serial = bench::run_with(id, &SweepEngine::new(1)).unwrap();
+        let parallel = bench::run_with(id, &SweepEngine::new(8)).unwrap();
+        assert_eq!(serial, parallel, "{id}: --jobs 1 vs --jobs 8 output diverged");
+    }
+}
+
+/// The suite runner (prefetch + parallel report rendering) produces the
+/// same bytes as independent per-report runs, in paper order.
+#[test]
+fn run_many_matches_independent_runs() {
+    let ids = ["table5", "fig6", "fig8", "table8", "fig9", "fig10", "fig11", "ablations"];
+    let many = bench::run_many(&ids, &SweepEngine::new(8));
+    for (id, got) in ids.iter().zip(many) {
+        assert_eq!(got.unwrap(), bench::run(id).unwrap(), "{id} diverged under run_many");
+    }
+}
+
+/// The network-report memo shares DNN pipeline runs across reports:
+/// Figs. 9/10/11 all need MobileNetV2 `AllMram`, so after fig9 primes the
+/// memo, fig10 adds only the `AllHyperRam` flow and fig11 adds nothing.
+#[test]
+fn network_runs_shared_across_reports() {
+    let eng = SweepEngine::new(1);
+    bench::run_with("fig9", &eng).unwrap();
+    let (_, m_fig9) = eng.network_counters();
+    assert_eq!(m_fig9, 1, "fig9 = one MobileNetV2 AllMram run");
+
+    bench::run_with("fig10", &eng).unwrap();
+    let (_, m_fig10) = eng.network_counters();
+    assert_eq!(m_fig10 - m_fig9, 1, "fig10 adds only the AllHyperRam flow");
+
+    bench::run_with("fig11", &eng).unwrap();
+    let (hits, m_fig11) = eng.network_counters();
+    assert_eq!(m_fig11, m_fig10, "fig11 is fully served from the memo");
+    assert!(hits >= 3);
+}
+
+/// (b) Fig. 6 simulates each distinct program exactly once: the misses
+/// equal the number of distinct cache keys in its declared grid, and the
+/// Fig. 6b DVFS sweep is served from the cache (it reuses the 8-core int8
+/// simulation — four operating points, zero extra simulations).
+#[test]
+fn fig6_vf_sweep_simulates_each_distinct_program_once() {
+    let eng = SweepEngine::new(1);
+    bench::run_with("fig6", &eng).unwrap();
+    let distinct: HashSet<_> =
+        bench::scenarios_for("fig6").iter().map(|s| s.key()).collect();
+    let (hits, misses) = eng.cache().counters();
+    assert_eq!(
+        misses as usize,
+        distinct.len(),
+        "every distinct (kernel, size, precision, cores) simulates exactly once"
+    );
+    assert!(hits >= 1, "the DVFS sweep must reuse the cached 8-core int8 run");
+    assert_eq!(eng.cache().len(), distinct.len());
+}
+
+/// Cross-report sharing: Table V's FP32 NSAA runs are reused verbatim by
+/// Fig. 8, which only simulates the FP16 variants anew.
+#[test]
+fn cross_report_cache_sharing() {
+    let eng = SweepEngine::new(1);
+    bench::run_with("table5", &eng).unwrap();
+    let (_, misses_after_t5) = eng.cache().counters();
+    assert_eq!(misses_after_t5, 8, "table5 = 8 distinct kernel programs");
+
+    bench::run_with("fig8", &eng).unwrap();
+    let (hits, misses) = eng.cache().counters();
+    assert_eq!(misses - misses_after_t5, 8, "fig8 only adds the 8 FP16 variants");
+    assert!(hits >= 8, "fig8's FP32 side must come from table5's cache");
+}
+
+/// The cached result is the simulation's result: spot-check one scenario
+/// against a direct arena run (stats and output digest).
+#[test]
+fn cached_results_match_direct_simulation() {
+    let s = Scenario::Nsaa { name: "FIR", w: FpWidth::F32 };
+    let eng = SweepEngine::new(1);
+    let via_engine = eng.result(s);
+    let direct = s.simulate(&mut SimArena::new());
+    assert_eq!(via_engine.outputs_digest, direct.outputs_digest);
+    assert_eq!(via_engine.run.stats, direct.run.stats);
+    assert_eq!(via_engine.run.ops, direct.run.ops);
+    assert_eq!(via_engine.run.name, direct.run.name);
+}

@@ -4,9 +4,11 @@
 #   scripts/ci.sh            full run (fmt, build, test, bench smoke)
 #   CI_SKIP_BENCH=1 ...      skip the bench smoke (e.g. resource-starved CI)
 #
-# The bench smoke runs every hotpath case once (VEGA_BENCH_ITERS=1) so a
-# scheduler regression that hangs or panics is caught even where full
-# benchmarking is too slow; BENCH_hotpath.json lands in rust/.
+# The bench smoke runs every hotpath and sweep case once
+# (VEGA_BENCH_ITERS=1) so a scheduler regression that hangs or panics is
+# caught even where full benchmarking is too slow; BENCH_hotpath.json and
+# BENCH_sweeps.json land in rust/. The determinism smoke diffs a --jobs 2
+# `vega repro` against the serial run byte-for-byte.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -21,12 +23,21 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== sweep determinism smoke (vega repro table5: --jobs 2 vs serial) =="
+mkdir -p target/ci
+./target/release/vega repro table5 --jobs 1 > target/ci/repro_table5_serial.txt
+./target/release/vega repro table5 --jobs 2 > target/ci/repro_table5_jobs2.txt
+diff target/ci/repro_table5_serial.txt target/ci/repro_table5_jobs2.txt
+echo "parallel repro output is byte-identical to serial"
+
 echo "== cargo test -q =="
 cargo test -q
 
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
     echo "== hotpath bench smoke (VEGA_BENCH_ITERS=1) =="
     VEGA_BENCH_ITERS=1 cargo bench --bench hotpath
+    echo "== sweep-engine bench smoke (VEGA_BENCH_ITERS=1, VEGA_JOBS=2) =="
+    VEGA_BENCH_ITERS=1 VEGA_JOBS=2 cargo bench --bench sweeps
 fi
 
 echo "ci.sh: all gates passed"
