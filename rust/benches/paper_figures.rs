@@ -1,13 +1,20 @@
 //! `cargo bench` target regenerating every paper *figure* series.
+//!
+//! Timed iterations use a fresh serial in-memory engine per call (see
+//! `paper_tables.rs`: `bench::run` is globally cached now, and this
+//! target tracks the uncached per-report cost).
 
 mod harness;
 
 use harness::Bench;
+use vega::sweep::SweepEngine;
 
 fn main() {
     let b = Bench::new("paper_figures");
     for id in ["fig6", "fig7", "fig8", "fig9", "fig10", "fig11"] {
-        b.run(id, 3, || vega::bench::run(id).expect("known id").len());
+        b.run(id, 3, || {
+            vega::bench::run_with(id, &SweepEngine::serial()).expect("known id").len()
+        });
     }
     for id in ["fig6", "fig7", "fig8", "fig10", "fig11"] {
         println!("\n{}", vega::bench::run(id).unwrap());

@@ -1,17 +1,26 @@
 //! `cargo bench` target regenerating every paper *table* end-to-end and
 //! timing the regeneration (the content itself is printed by
 //! `vega repro <id>` and asserted by `rust/tests/paper_anchors.rs`).
+//!
+//! Each timed iteration runs on a fresh serial in-memory engine:
+//! `bench::run` now routes through the process-wide cached engine (which
+//! would make every iteration after the first a cache read), and what
+//! this target tracks is the *uncached* per-report cost. Suite-level
+//! cached/parallel timings live in `cargo bench --bench sweeps`.
 
 mod harness;
 
 use harness::Bench;
+use vega::sweep::SweepEngine;
 
 fn main() {
     let b = Bench::new("paper_tables");
     // Table III/IV are static; included for completeness of the sweep.
     for id in ["table1", "table2", "table3", "table4", "table5", "table6", "table7", "table8"]
     {
-        b.run(id, 3, || vega::bench::run(id).expect("known id").len());
+        b.run(id, 3, || {
+            vega::bench::run_with(id, &SweepEngine::serial()).expect("known id").len()
+        });
     }
     // Print the actual reports once so `cargo bench` output doubles as a
     // full reproduction record (captured into bench_output.txt).

@@ -103,7 +103,7 @@ pub fn fig6(eng: &SweepEngine) -> String {
         &["Vdd", "f_cl", "GOPS", "GOPS/W"],
     );
     let kr8 = eng.kernel_run(Scenario::IntMatmul { w: IntWidth::I8, cores: 8 });
-    for (vdd, f) in [(0.5, 120e6), (0.6, 220e6), (0.7, 330e6), (0.8, 450e6)] {
+    for (vdd, f) in pt::VF_ANCHORS {
         let op = power::tables::OperatingPoint { name: "sweep", vdd, f_soc: f, f_cl: f };
         let (gops, eff) = coordinator::efficiency(&kr8, op, 0.0);
         v.row(&[

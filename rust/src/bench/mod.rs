@@ -28,13 +28,18 @@ pub const ALL_WITH_FIG11: [&str; 16] = [
     "fig7", "fig8", "fig9", "fig10", "fig11", "ablations", "bootmodel",
 ];
 
-/// Run one reproduction by id on a fresh single-worker engine.
+/// Run one reproduction by id on the process-wide shared engine
+/// ([`SweepEngine::global`]).
 ///
 /// Compatibility entry point: identical output to [`run_with`] on any
-/// engine (the determinism invariant), but with no cross-report cache
-/// sharing. Suite runs should use [`run_many`] / [`run_all`].
+/// engine (the determinism invariant). Repeated per-id calls in one
+/// process — and, through the engine's on-disk store, repeated CLI
+/// invocations of the same id across processes — reuse cached cycle
+/// results instead of rebuilding Cluster/L2 state per call. Callers that
+/// need an isolated cache (timing baselines, counter assertions) should
+/// use [`run_with`] on their own engine.
 pub fn run(id: &str) -> Option<String> {
-    run_with(id, &SweepEngine::serial())
+    run_with(id, SweepEngine::global())
 }
 
 /// Run one reproduction by id, pulling simulations through `eng`.
@@ -57,7 +62,7 @@ pub fn run_with(id: &str, eng: &SweepEngine) -> Option<String> {
 /// scenario-level thread pool per worker.
 pub(crate) fn render(id: &str, eng: &SweepEngine) -> Option<String> {
     Some(match id {
-        "table1" => tables::table1(),
+        "table1" => tables::table1(eng),
         "table2" => tables::table2(),
         "table3" => tables::table3(),
         "table4" => tables::table4(),

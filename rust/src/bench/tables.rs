@@ -11,17 +11,18 @@ use crate::power::{self, tables as pt};
 use crate::sweep::{Scenario, SweepEngine};
 
 /// Table I: CWU implementation details and power at 32 kHz / 200 kHz.
-pub fn table1() -> String {
+/// The reference workload (HDC-training-dominated) is memoized on the
+/// engine, so repeated renders train once per process.
+pub fn table1(eng: &SweepEngine) -> String {
     let mut t = Table::new(
         "Table I - CWU power (measured workload: 3ch x 16-bit HDC classification)",
         &["", "f_clk = 32 kHz", "f_clk = 200 kHz"],
     );
-    let run = coordinator::cwu_reference_run(32_000.0);
+    let run = eng.cwu_summary(32_000.0);
     let duty = run.duty_at_150sps;
     // Max sample rate: datapath cycles/frame plus the SPI acquisition
     // (3 x 18 clocks at an SPI clock of f_clk/2 => x2 in system cycles).
-    let cpf = run.cwu.hypnos.stats.datapath_cycles as f64 / run.frames as f64
-        + (3.0 * 18.0) * 2.0;
+    let cpf = run.datapath_cycles as f64 / run.frames as f64 + (3.0 * 18.0) * 2.0;
     let max_sps_32k = 32_000.0 / cpf;
     let max_sps_200k = 200_000.0 / cpf;
     let dp32 = pt::CWU_DATAPATH_W_PER_HZ * 32e3 * (duty / pt::CWU_REF_DUTY).min(3.0);

@@ -7,6 +7,12 @@
 //!                           sweep engine (N workers; output is byte-
 //!                           identical for any N — default VEGA_JOBS or
 //!                           the machine's parallelism)
+//! vega sweep [--cores 1..9] [--precision int8,fp16,...]
+//!            [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]
+//!                           render a user-defined design-space grid
+//!                           (cores × precision × DVFS) beyond the
+//!                           paper's tables; one simulation per cell,
+//!                           DVFS rows derived analytically
 //! vega runtime              show the PJRT artifact registry
 //! vega golden <name>        run one artifact and cross-check the
 //!                           simulator's functional model against it
@@ -14,8 +20,12 @@
 //!                           run a kernel on the simulated cluster and
 //!                           report cycles / rates / contention
 //! ```
-//! (hand-rolled argument parsing: clap is unavailable offline,
-//! DESIGN.md §5.)
+//!
+//! `repro` and `sweep` run on a *persistent* engine: simulations land in
+//! the on-disk cache (`$VEGA_CACHE_DIR`, default `target/vega-cache`), so
+//! a re-invocation of the same grid serves every simulation from disk.
+//! `VEGA_CACHE=off` disables persistence. (Hand-rolled argument parsing:
+//! clap is unavailable offline, DESIGN.md §5.)
 
 use vega::bench;
 use vega::runtime::{Runtime, Tensor};
@@ -28,6 +38,9 @@ fn usage() -> ! {
            list                 list reproduction ids\n\
            repro <id>|all [--jobs N]\n\
                                 regenerate a paper table/figure\n\
+           sweep [--cores 1..9] [--precision int8,fp16,...]\n\
+                 [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]\n\
+                                render a custom design-space grid\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
@@ -58,7 +71,7 @@ fn main() {
                     _ => usage(),
                 }
             }
-            let eng = SweepEngine::new(jobs);
+            let eng = SweepEngine::persistent(jobs);
             if id == "all" {
                 for report in bench::run_many(&bench::ALL_WITH_FIG11, &eng) {
                     println!("{}", report.expect("known id"));
@@ -71,6 +84,25 @@ fn main() {
                         std::process::exit(1);
                     }
                 }
+            }
+        }
+        Some("sweep") => {
+            let cmd = vega::sweep::explore::SweepCmd::parse(&args[1..]).unwrap_or_else(|e| {
+                eprintln!("vega sweep: {e}");
+                std::process::exit(2);
+            });
+            let eng = SweepEngine::persistent(cmd.jobs);
+            print!("{}", vega::sweep::explore::render(&eng, &cmd.spec));
+            if cmd.stats {
+                let (h, m) = eng.cache().counters();
+                let disk = match eng.disk_counters() {
+                    Some((dh, dm, dw)) => format!("{dh} hits / {dm} misses / {dw} writes"),
+                    None => "off".into(),
+                };
+                eprintln!(
+                    "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {disk}",
+                    cmd.spec.rows()
+                );
             }
         }
         Some("runtime") => {

@@ -28,6 +28,14 @@ pub const NOM: OperatingPoint =
 pub const HV: OperatingPoint =
     OperatingPoint { name: "HV", vdd: 0.8, f_soc: 450e6, f_cl: 450e6 };
 
+/// Measured V/f curve anchors of the logic domains (Fig. 6b's DVFS
+/// series): (Vdd, f) from the 0.5 V/120 MHz floor to the 0.8 V/450 MHz
+/// peak. The single source of truth for every DVFS ladder — the Fig. 6b
+/// reproduction and `vega sweep`'s interpolated operating points
+/// ([`crate::sweep::explore::vf_hz`]) both read it.
+pub const VF_ANCHORS: [(f64, f64); 4] =
+    [(0.5, 120e6), (0.6, 220e6), (0.7, 330e6), (0.8, 450e6)];
+
 /// DNN deployment point: 250 MHz with the cluster DVFS'd to 0.66 V.
 /// §IV-B quotes Vdd_SOC = 0.8 V / 250 MHz; the measured MobileNetV2
 /// energy (1.19 mJ over ~80 ms ⇒ ≈15 mW total) is only consistent with

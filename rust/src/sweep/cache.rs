@@ -1,7 +1,7 @@
 //! The simulation memo: each distinct key is computed exactly once per
 //! cache lifetime, even under concurrent lookups.
 //!
-//! Concurrency protocol ([`OnceMap`]): the global map only hands out
+//! Concurrency protocol (`OnceMap`): the global map only hands out
 //! per-key slots; the computation itself runs while holding that key's
 //! slot lock, so a second worker asking for an in-flight key blocks until
 //! the first finishes and then reads the stored result (no duplicated

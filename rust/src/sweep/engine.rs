@@ -12,7 +12,9 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
 use super::cache::{OnceMap, SimCache};
+use super::persist::DiskStore;
 use super::scenario::{Scenario, SimArena, SimResult};
+use crate::coordinator::CwuSummary;
 use crate::dnn::{run_network, Network, NetworkReport, PipelineConfig};
 use crate::kernels::KernelRun;
 
@@ -31,20 +33,33 @@ pub fn default_jobs() -> usize {
         .unwrap_or_else(|| std::thread::available_parallelism().map_or(1, |n| n.get()))
 }
 
-/// The sweep execution engine: a [`SimCache`] (kernel scenarios), a
-/// network-report memo (DNN pipeline sweeps), and a worker count.
+/// The sweep execution engine: a [`SimCache`] (kernel scenarios), sibling
+/// memos for DNN pipeline runs, the CWU reference workload and the HD
+/// ablation, an optional persistent [`DiskStore`], and a worker count.
 pub struct SweepEngine {
     jobs: usize,
     cache: SimCache,
     nets: OnceMap<String, NetworkReport>,
+    cwu: OnceMap<u64, CwuSummary>,
+    hd: OnceMap<usize, f64>,
+    disk: Option<DiskStore>,
 }
 
 impl SweepEngine {
+    /// In-memory engine with `jobs` workers (no cross-process
+    /// persistence; see [`SweepEngine::persistent`]).
     pub fn new(jobs: usize) -> Self {
-        Self { jobs: jobs.max(1), cache: SimCache::new(), nets: OnceMap::new(true) }
+        Self {
+            jobs: jobs.max(1),
+            cache: SimCache::new(),
+            nets: OnceMap::new(true),
+            cwu: OnceMap::new(true),
+            hd: OnceMap::new(true),
+            disk: None,
+        }
     }
 
-    /// Single-worker engine (the `bench::run(id)` compatibility path).
+    /// Single-worker engine (unit tests, deterministic baselines).
     pub fn serial() -> Self {
         Self::new(1)
     }
@@ -56,7 +71,43 @@ impl SweepEngine {
             jobs: jobs.max(1),
             cache: SimCache::with_enabled(false),
             nets: OnceMap::new(false),
+            cwu: OnceMap::new(false),
+            hd: OnceMap::new(false),
+            disk: None,
         }
+    }
+
+    /// Engine backed by an explicit on-disk store: in-memory misses probe
+    /// `store` before simulating, and freshly simulated results are
+    /// written back, so a later engine (or process) on the same directory
+    /// starts warm.
+    pub fn with_disk(jobs: usize, store: DiskStore) -> Self {
+        Self { disk: Some(store), ..Self::new(jobs) }
+    }
+
+    /// Engine backed by the default on-disk store (`$VEGA_CACHE_DIR`,
+    /// else `target/vega-cache`; `VEGA_CACHE=off` disables). The CLI's
+    /// engine. Falls back to a memory-only engine — with a warning on
+    /// stderr — when the store directory cannot be created.
+    pub fn persistent(jobs: usize) -> Self {
+        match DiskStore::open_default() {
+            Ok(Some(store)) => Self::with_disk(jobs, store),
+            Ok(None) => Self::new(jobs),
+            Err(e) => {
+                eprintln!("vega: on-disk sim cache disabled ({e})");
+                Self::new(jobs)
+            }
+        }
+    }
+
+    /// The process-wide shared engine behind the per-id compatibility
+    /// paths ([`crate::bench::run`], the `coordinator::bench_*` drivers):
+    /// persistent and sized by [`default_jobs`], so repeated per-id calls
+    /// — and repeated CLI invocations across processes — reuse cached
+    /// cycle results instead of rebuilding Cluster/L2 state per call.
+    pub fn global() -> &'static SweepEngine {
+        static GLOBAL: OnceLock<SweepEngine> = OnceLock::new();
+        GLOBAL.get_or_init(|| SweepEngine::persistent(default_jobs()))
     }
 
     pub fn jobs(&self) -> usize {
@@ -67,12 +118,26 @@ impl SweepEngine {
         &self.cache
     }
 
-    /// Memoized result of one scenario, simulated on this thread's arena
-    /// on miss.
+    /// Memoized result of one scenario: in-memory cache first, then the
+    /// on-disk store (when persistent), then a simulation on this
+    /// thread's arena (written back to disk). Disk probes happen inside
+    /// the in-memory miss path, so [`SimCache`] hit/miss counters — and
+    /// every determinism invariant built on them — are unaffected by
+    /// persistence.
     pub fn result(&self, s: Scenario) -> SimResult {
         let s = s.canonical();
-        self.cache
-            .get_or_sim(s.key(), || ARENA.with(|a| s.simulate(&mut a.borrow_mut())))
+        let key = s.key();
+        self.cache.get_or_sim(key.clone(), || {
+            if let Some(disk) = &self.disk {
+                if let Some(cached) = disk.load(&key) {
+                    return cached;
+                }
+                let fresh = ARENA.with(|a| s.simulate(&mut a.borrow_mut()));
+                disk.store(&key, &fresh);
+                return fresh;
+            }
+            ARENA.with(|a| s.simulate(&mut a.borrow_mut()))
+        })
     }
 
     /// Memoized [`KernelRun`] of one scenario (what the table/figure
@@ -113,6 +178,39 @@ impl SweepEngine {
     /// (hits, misses) of the network-report memo.
     pub fn network_counters(&self) -> (u64, u64) {
         self.nets.counters()
+    }
+
+    /// Memoized CWU reference workload (Table I's measurement setup —
+    /// dominated by HDC training, which is a pure function of the CWU
+    /// clock and the fixed encoder config/seed). One training run per
+    /// distinct `f_clk` per engine, however many times Table I renders.
+    pub fn cwu_summary(&self, f_clk: f64) -> CwuSummary {
+        self.cwu.get_or_compute(f_clk.to_bits(), || crate::coordinator::cwu_summary(f_clk))
+    }
+
+    /// (hits, misses) of the CWU reference-workload memo.
+    pub fn cwu_counters(&self) -> (u64, u64) {
+        self.cwu.counters()
+    }
+
+    /// Memoized HD-dimension ablation accuracy (a pure function of the
+    /// Hypnos vector dimension; the 2-shot noisy EMG training inside is
+    /// the most expensive part of the ablation report).
+    pub fn hd_accuracy(&self, dim: usize) -> f64 {
+        self.hd.get_or_compute(dim, || crate::bench::ablations::hd_ablation_accuracy(dim))
+    }
+
+    /// (hits, misses) of the HD-dimension ablation memo.
+    pub fn hd_counters(&self) -> (u64, u64) {
+        self.hd.counters()
+    }
+
+    /// (hits, misses, writes) of the on-disk store, or `None` for a
+    /// memory-only engine. Disk lookups happen once per in-memory miss,
+    /// so on a warm store `hits` equals the in-memory miss count and
+    /// `misses`/`writes` are zero.
+    pub fn disk_counters(&self) -> Option<(u64, u64, u64)> {
+        self.disk.as_ref().map(|d| d.counters())
     }
 
     /// Drain a scenario list through the worker pool; `out[i]` corresponds

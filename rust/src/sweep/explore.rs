@@ -1,0 +1,528 @@
+//! Design-space exploration: user-defined grids beyond the paper's tables
+//! (the `vega sweep` subcommand).
+//!
+//! The paper's evaluation fixes a handful of operating points (Figs. 6–8:
+//! 1 or 8 cores, LV/HV); TinyVers and SamurAI (PAPERS.md) frame the same
+//! class of SoC as a *design space* instead. This module renders that
+//! space on demand: any subset of core counts 1–9 × the kernel library's
+//! precisions × an arbitrarily fine DVFS ladder, as CSV, Markdown or
+//! JSON. Each (cores, precision) cell is **one** simulation pulled
+//! through the [`SweepEngine`] — cycle counts are frequency-independent,
+//! so every DVFS row of a cell derives analytically from the same cached
+//! [`crate::cluster::ClusterStats`] — and the grid fans out across the
+//! engine's worker pool (`--jobs N`), warm-starting from the on-disk
+//! [`crate::sweep::DiskStore`] when the engine is persistent.
+//!
+//! Determinism: rows are emitted in nested grid order (cores, then
+//! precision, then DVFS point), never completion order, so the rendered
+//! bytes are identical for any `--jobs` value (asserted by
+//! `tests/sweep_determinism.rs`).
+
+use crate::cluster::N_CORES;
+use crate::coordinator;
+use crate::kernels::fp_matmul::FpWidth;
+use crate::kernels::int_matmul::IntWidth;
+use crate::power::tables::OperatingPoint;
+use crate::sweep::{default_jobs, Scenario, SweepEngine};
+
+/// A matmul precision of the exploration grid (the kernel library's
+/// supported data formats).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// PULP-NN int8 SIMD matmul.
+    Int8,
+    /// PULP-NN int16 SIMD matmul.
+    Int16,
+    /// int32 matmul.
+    Int32,
+    /// fp16 SIMD (2-way packed) matmul.
+    Fp16,
+    /// fp32 matmul.
+    Fp32,
+}
+
+impl Precision {
+    /// Every supported precision, in grid order.
+    pub const ALL: [Precision; 5] =
+        [Precision::Int8, Precision::Int16, Precision::Int32, Precision::Fp16, Precision::Fp32];
+
+    /// Parse one `--precision` token.
+    pub fn parse(s: &str) -> Result<Precision, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "int8" | "i8" => Ok(Precision::Int8),
+            "int16" | "i16" => Ok(Precision::Int16),
+            "int32" | "i32" => Ok(Precision::Int32),
+            "fp16" | "f16" => Ok(Precision::Fp16),
+            "fp32" | "f32" => Ok(Precision::Fp32),
+            "fp8" | "f8" => Err(
+                "fp8: the paper's FPU advertises an FP8 SIMD mode but the kernel \
+                 library has no FP8 matmul yet (tracked in ROADMAP.md); supported: \
+                 int8,int16,int32,fp16,fp32"
+                    .into(),
+            ),
+            other => {
+                Err(format!("unknown precision '{other}' (supported: int8,int16,int32,fp16,fp32)"))
+            }
+        }
+    }
+
+    /// Column label.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Int8 => "int8",
+            Precision::Int16 => "int16",
+            Precision::Int32 => "int32",
+            Precision::Fp16 => "fp16",
+            Precision::Fp32 => "fp32",
+        }
+    }
+
+    /// The scenario one grid cell simulates (the canonical matmul of the
+    /// reproduction suite at this precision, on `cores` cores).
+    pub fn scenario(self, cores: usize) -> Scenario {
+        match self {
+            Precision::Int8 => Scenario::IntMatmul { w: IntWidth::I8, cores },
+            Precision::Int16 => Scenario::IntMatmul { w: IntWidth::I16, cores },
+            Precision::Int32 => Scenario::IntMatmul { w: IntWidth::I32, cores },
+            Precision::Fp16 => Scenario::FpMatmul { w: FpWidth::F16x2, cores },
+            Precision::Fp32 => Scenario::FpMatmul { w: FpWidth::F32, cores },
+        }
+    }
+}
+
+/// Output format of the rendered grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridFormat {
+    /// Comma-separated values with a header row.
+    Csv,
+    /// A GitHub-flavoured Markdown pipe table.
+    Markdown,
+    /// A single JSON object: `{"grid": {...}, "rows": [...]}`.
+    Json,
+}
+
+impl GridFormat {
+    /// Parse one `--format` token.
+    pub fn parse(s: &str) -> Result<GridFormat, String> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "csv" => Ok(GridFormat::Csv),
+            "md" | "markdown" => Ok(GridFormat::Markdown),
+            "json" => Ok(GridFormat::Json),
+            other => Err(format!("unknown format '{other}' (supported: csv,md,json)")),
+        }
+    }
+}
+
+/// A user-defined exploration grid: the cross product of core counts,
+/// precisions and DVFS points.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Active core counts (1..=9, the physical cluster).
+    pub cores: Vec<usize>,
+    /// Data formats to sweep.
+    pub precisions: Vec<Precision>,
+    /// Number of evenly spaced V/f points over 0.5–0.8 V (≥ 2; 4 lands
+    /// exactly on the paper's Fig. 6b anchors, more is finer-than-paper).
+    pub dvfs_steps: usize,
+    /// Output renderer.
+    pub format: GridFormat,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        Self {
+            cores: vec![2, 4, 8],
+            precisions: vec![Precision::Int8, Precision::Fp32],
+            dvfs_steps: 4,
+            format: GridFormat::Markdown,
+        }
+    }
+}
+
+impl GridSpec {
+    /// The distinct scenarios this grid simulates (one per
+    /// (cores, precision) cell; DVFS points are derived analytically).
+    pub fn scenarios(&self) -> Vec<Scenario> {
+        let mut v = Vec::with_capacity(self.cores.len() * self.precisions.len());
+        for &cores in &self.cores {
+            for &p in &self.precisions {
+                v.push(p.scenario(cores));
+            }
+        }
+        v
+    }
+
+    /// Number of rendered data rows.
+    pub fn rows(&self) -> usize {
+        self.cores.len() * self.precisions.len() * self.dvfs_steps
+    }
+}
+
+/// A parsed `vega sweep` invocation.
+#[derive(Debug, Clone)]
+pub struct SweepCmd {
+    /// The grid to render.
+    pub spec: GridSpec,
+    /// Worker count (`--jobs`, default `VEGA_JOBS`/all cores).
+    pub jobs: usize,
+    /// Print cache statistics to stderr after rendering (`--stats`).
+    pub stats: bool,
+}
+
+impl SweepCmd {
+    /// Parse the arguments following `vega sweep`. Unknown flags and
+    /// malformed values are errors (listed in the returned message).
+    pub fn parse(args: &[String]) -> Result<SweepCmd, String> {
+        let mut spec = GridSpec::default();
+        let mut jobs = default_jobs();
+        let mut stats = false;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let mut value = |flag: &str| {
+                it.next().map(String::as_str).ok_or_else(|| format!("{flag} needs a value"))
+            };
+            match a.as_str() {
+                "--cores" => spec.cores = parse_cores(value("--cores")?)?,
+                "--precision" => spec.precisions = parse_precisions(value("--precision")?)?,
+                "--dvfs-steps" => {
+                    let v = value("--dvfs-steps")?;
+                    spec.dvfs_steps = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| (2..=64).contains(&n))
+                        .ok_or_else(|| format!("--dvfs-steps must be 2..=64, got '{v}'"))?;
+                }
+                "--format" => spec.format = GridFormat::parse(value("--format")?)?,
+                "--jobs" => {
+                    let v = value("--jobs")?;
+                    jobs = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("--jobs must be a positive integer, got '{v}'"))?;
+                }
+                "--stats" => stats = true,
+                other => return Err(format!("unknown flag '{other}'")),
+            }
+        }
+        Ok(SweepCmd { spec, jobs, stats })
+    }
+}
+
+/// Parse a `--cores` value: comma-separated core counts and/or inclusive
+/// `a..b` ranges, e.g. `1..9`, `1,2,4,8`, `1..4,8`. Duplicates collapse,
+/// first occurrence wins the ordering.
+pub fn parse_cores(s: &str) -> Result<Vec<usize>, String> {
+    let mut out = Vec::new();
+    let mut push = |n: usize| -> Result<(), String> {
+        if !(1..=N_CORES).contains(&n) {
+            return Err(format!("core count {n} outside the physical cluster (1..={N_CORES})"));
+        }
+        if !out.contains(&n) {
+            out.push(n);
+        }
+        Ok(())
+    };
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        if let Some((a, b)) = tok.split_once("..") {
+            let lo: usize =
+                a.trim().parse().map_err(|_| format!("bad range start in '{tok}'"))?;
+            let hi: usize = b.trim().parse().map_err(|_| format!("bad range end in '{tok}'"))?;
+            if lo > hi {
+                return Err(format!("empty range '{tok}'"));
+            }
+            for n in lo..=hi {
+                push(n)?;
+            }
+        } else {
+            push(tok.parse().map_err(|_| format!("bad core count '{tok}'"))?)?;
+        }
+    }
+    if out.is_empty() {
+        return Err("--cores selected no core counts".into());
+    }
+    Ok(out)
+}
+
+/// Parse a `--precision` value: comma-separated precision tokens.
+pub fn parse_precisions(s: &str) -> Result<Vec<Precision>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let p = Precision::parse(tok)?;
+        if !out.contains(&p) {
+            out.push(p);
+        }
+    }
+    if out.is_empty() {
+        return Err("--precision selected no formats".into());
+    }
+    Ok(out)
+}
+
+/// Cluster frequency at `vdd`, by piecewise-linear interpolation through
+/// the paper's measured V/f anchors
+/// ([`crate::power::tables::VF_ANCHORS`]: 0.5 V/120 MHz … 0.8 V/450
+/// MHz), clamped at the ends.
+pub fn vf_hz(vdd: f64) -> f64 {
+    let pts = crate::power::tables::VF_ANCHORS;
+    if vdd <= pts[0].0 {
+        return pts[0].1;
+    }
+    for w in pts.windows(2) {
+        let ((v0, f0), (v1, f1)) = (w[0], w[1]);
+        if vdd <= v1 {
+            return f0 + (f1 - f0) * (vdd - v0) / (v1 - v0);
+        }
+    }
+    pts[pts.len() - 1].1
+}
+
+/// `steps` evenly spaced operating points over the 0.5–0.8 V DVFS range
+/// (`steps` ≥ 2; 4 reproduces the paper's anchors exactly, larger values
+/// are the finer-than-paper ladder the exploration exists for).
+pub fn operating_points(steps: usize) -> Vec<OperatingPoint> {
+    assert!(steps >= 2, "a DVFS ladder needs at least 2 points");
+    let pts = crate::power::tables::VF_ANCHORS;
+    let (lo, hi) = (pts[0].0, pts[pts.len() - 1].0);
+    (0..steps)
+        .map(|i| {
+            let vdd = lo + (hi - lo) * i as f64 / (steps - 1) as f64;
+            let f = vf_hz(vdd);
+            OperatingPoint { name: "sweep", vdd, f_soc: f, f_cl: f }
+        })
+        .collect()
+}
+
+/// One rendered grid row (all values derived from the cell's cached
+/// simulation at one operating point).
+struct Row {
+    cores: usize,
+    precision: &'static str,
+    vdd: f64,
+    f_mhz: f64,
+    cycles: u64,
+    gops: f64,
+    gops_per_w: f64,
+    tcdm_pct: f64,
+    fpu_pct: f64,
+}
+
+/// Render `spec` through `eng`: fan the distinct cells out across the
+/// engine's worker pool, then emit rows in deterministic grid order. The
+/// returned string ends in exactly one newline.
+pub fn render(eng: &SweepEngine, spec: &GridSpec) -> String {
+    // Parallel prefetch of every distinct cell; rendering below then
+    // reads cache hits only.
+    eng.run_scenarios(&spec.scenarios());
+    let ops = operating_points(spec.dvfs_steps);
+    let mut rows = Vec::with_capacity(spec.rows());
+    for &cores in &spec.cores {
+        for &p in &spec.precisions {
+            let kr = eng.kernel_run(p.scenario(cores));
+            for op in &ops {
+                let (gops, gops_per_w) = coordinator::efficiency(&kr, *op, 0.0);
+                rows.push(Row {
+                    cores,
+                    precision: p.name(),
+                    vdd: op.vdd,
+                    f_mhz: op.f_cl / 1e6,
+                    cycles: kr.stats.cycles,
+                    gops,
+                    gops_per_w,
+                    tcdm_pct: kr.stats.tcdm_conflict_rate * 100.0,
+                    fpu_pct: kr.stats.fpu_contention_rate * 100.0,
+                });
+            }
+        }
+    }
+    match spec.format {
+        GridFormat::Csv => render_csv(&rows),
+        GridFormat::Markdown => render_md(&rows),
+        GridFormat::Json => render_json(spec, &rows),
+    }
+}
+
+const COLUMNS: [&str; 9] = [
+    "cores",
+    "precision",
+    "vdd_v",
+    "f_mhz",
+    "cycles",
+    "gops",
+    "gops_per_w",
+    "tcdm_conflict_pct",
+    "fpu_contention_pct",
+];
+
+impl Row {
+    fn cells(&self) -> [String; 9] {
+        [
+            self.cores.to_string(),
+            self.precision.to_string(),
+            format!("{:.3}", self.vdd),
+            format!("{:.1}", self.f_mhz),
+            self.cycles.to_string(),
+            format!("{:.3}", self.gops),
+            format!("{:.1}", self.gops_per_w),
+            format!("{:.2}", self.tcdm_pct),
+            format!("{:.2}", self.fpu_pct),
+        ]
+    }
+}
+
+fn render_csv(rows: &[Row]) -> String {
+    let mut out = COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.cells().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn render_md(rows: &[Row]) -> String {
+    let mut out = format!("| {} |\n", COLUMNS.join(" | "));
+    out.push_str(&format!("|{}\n", "---:|".repeat(COLUMNS.len())));
+    for r in rows {
+        out.push_str(&format!("| {} |\n", r.cells().join(" | ")));
+    }
+    out
+}
+
+fn render_json(spec: &GridSpec, rows: &[Row]) -> String {
+    let cores: Vec<String> = spec.cores.iter().map(|c| c.to_string()).collect();
+    let precs: Vec<String> =
+        spec.precisions.iter().map(|p| format!("\"{}\"", p.name())).collect();
+    let mut out = format!(
+        "{{\n  \"grid\": {{\"cores\": [{}], \"precisions\": [{}], \"dvfs_steps\": {}}},\n  \"rows\": [\n",
+        cores.join(", "),
+        precs.join(", "),
+        spec.dvfs_steps
+    );
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"cores\": {}, \"precision\": \"{}\", \"vdd_v\": {:.3}, \"f_mhz\": {:.1}, \
+             \"cycles\": {}, \"gops\": {:.3}, \"gops_per_w\": {:.1}, \
+             \"tcdm_conflict_pct\": {:.2}, \"fpu_contention_pct\": {:.2}}}{}\n",
+            r.cores,
+            r.precision,
+            r.vdd,
+            r.f_mhz,
+            r.cycles,
+            r.gops,
+            r.gops_per_w,
+            r.tcdm_pct,
+            r.fpu_pct,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cores_parse_ranges_lists_and_mixes() {
+        assert_eq!(parse_cores("1..9").unwrap(), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(parse_cores("1,2,4,8").unwrap(), vec![1, 2, 4, 8]);
+        assert_eq!(parse_cores("1..3,8,2").unwrap(), vec![1, 2, 3, 8]);
+        assert!(parse_cores("0..2").is_err());
+        assert!(parse_cores("10").is_err());
+        assert!(parse_cores("4..2").is_err());
+        assert!(parse_cores("").is_err());
+        assert!(parse_cores("two").is_err());
+    }
+
+    #[test]
+    fn precision_parse_accepts_known_and_explains_fp8() {
+        assert_eq!(parse_precisions("int8,fp16").unwrap(), vec![Precision::Int8, Precision::Fp16]);
+        assert_eq!(parse_precisions("i32").unwrap(), vec![Precision::Int32]);
+        let e = Precision::parse("fp8").unwrap_err();
+        assert!(e.contains("ROADMAP"), "fp8 error should point at the roadmap: {e}");
+        assert!(Precision::parse("bf16").is_err());
+    }
+
+    #[test]
+    fn default_ladder_lands_on_the_paper_anchors() {
+        let ops = operating_points(4);
+        let vf: Vec<(f64, f64)> = ops.iter().map(|o| (o.vdd, o.f_cl)).collect();
+        for ((v, f), (ev, ef)) in
+            vf.iter().zip([(0.5, 120e6), (0.6, 220e6), (0.7, 330e6), (0.8, 450e6)])
+        {
+            assert!((v - ev).abs() < 1e-12, "vdd {v} vs {ev}");
+            assert!((f - ef).abs() < 1.0, "f {f} vs {ef}");
+        }
+        // Finer-than-paper ladder interpolates monotonically.
+        let fine = operating_points(7);
+        assert_eq!(fine.len(), 7);
+        assert!(fine.windows(2).all(|w| w[1].f_cl > w[0].f_cl));
+    }
+
+    #[test]
+    fn cmd_parse_round_trips_the_acceptance_invocation() {
+        let args: Vec<String> = ["--cores", "1..9", "--precision", "int8,fp16", "--format", "csv"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let cmd = SweepCmd::parse(&args).unwrap();
+        assert_eq!(cmd.spec.cores.len(), 9);
+        assert_eq!(cmd.spec.precisions, vec![Precision::Int8, Precision::Fp16]);
+        assert_eq!(cmd.spec.format, GridFormat::Csv);
+        assert_eq!(cmd.spec.rows(), 9 * 2 * 4);
+        assert!(SweepCmd::parse(&["--bogus".to_string()]).is_err());
+        assert!(SweepCmd::parse(&["--cores".to_string()]).is_err());
+    }
+
+    #[test]
+    fn csv_grid_renders_every_row_of_a_small_grid() {
+        let spec = GridSpec {
+            cores: vec![1, 2],
+            precisions: vec![Precision::Int8],
+            dvfs_steps: 3,
+            format: GridFormat::Csv,
+        };
+        let eng = SweepEngine::serial();
+        let out = render(&eng, &spec);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 1 + spec.rows());
+        assert_eq!(lines[0], COLUMNS.join(","));
+        assert!(lines[1].starts_with("1,int8,0.500,120.0,"));
+        // 3 DVFS rows per cell share one simulation (same cycle count).
+        let cyc = |l: &str| l.split(',').nth(4).unwrap().to_string();
+        assert_eq!(cyc(lines[1]), cyc(lines[2]));
+        assert_eq!(cyc(lines[1]), cyc(lines[3]));
+        let (_, misses) = eng.cache().counters();
+        assert_eq!(misses, 2, "one simulation per (cores, precision) cell");
+    }
+
+    #[test]
+    fn md_and_json_render_consistent_row_counts() {
+        let base = GridSpec {
+            cores: vec![2],
+            precisions: vec![Precision::Fp32],
+            dvfs_steps: 2,
+            format: GridFormat::Markdown,
+        };
+        let eng = SweepEngine::serial();
+        let md = render(&eng, &base);
+        assert_eq!(md.lines().count(), 2 + base.rows());
+        let json = render(&eng, &GridSpec { format: GridFormat::Json, ..base.clone() });
+        assert!(json.contains("\"dvfs_steps\": 2"));
+        assert_eq!(json.matches("\"cores\": 2,").count(), base.rows());
+        // JSON reuses the Markdown render's cached simulation.
+        let (hits, misses) = eng.cache().counters();
+        assert_eq!(misses, 1);
+        assert!(hits >= 1);
+    }
+}

@@ -26,11 +26,25 @@
 //! any `--jobs` value (asserted by `tests/sweep_determinism.rs`) because
 //! every scenario simulation is a pure function of its descriptor and the
 //! cache only ever stores the first (hence: the only possible) result.
+//!
+//! Two layers extend the engine beyond the paper's fixed reproduction
+//! suite (see `ARCHITECTURE.md` for the full dataflow):
+//!
+//! * [`explore`] — user-defined design-space grids (`vega sweep`): core
+//!   counts 1–9 × precisions × an arbitrarily fine DVFS ladder, rendered
+//!   as CSV/Markdown/JSON through the same cache and worker pool.
+//! * [`persist`] — the on-disk [`DiskStore`] (one versioned,
+//!   checksummed file per [`SimKey`]) that lets persistent engines —
+//!   chiefly the CLI's — share simulations **across processes**; the
+//!   test suite's regression oracles deliberately stay memory-only.
 
 pub mod cache;
 pub mod engine;
+pub mod explore;
+pub mod persist;
 pub mod scenario;
 
 pub use cache::SimCache;
 pub use engine::{default_jobs, SweepEngine};
+pub use persist::DiskStore;
 pub use scenario::{Scenario, SimArena, SimKey, SimResult};

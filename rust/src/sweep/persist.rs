@@ -1,0 +1,467 @@
+//! Persistent on-disk [`SimResult`] store: one file per [`SimKey`],
+//! shared across processes by every *persistent* engine — the `vega`
+//! CLI's repro/sweep commands and anything built on
+//! [`crate::sweep::SweepEngine::persistent`] /
+//! [`crate::sweep::SweepEngine::global`].
+//!
+//! The in-memory [`crate::sweep::SimCache`] dies with its engine, so
+//! every CLI invocation used to re-simulate the same programs. The
+//! [`DiskStore`] sits *inside* the in-memory cache's compute closure: an
+//! in-memory miss first probes the store, and only simulates (then
+//! writes back) when the disk misses too. In-memory hit/miss semantics —
+//! and therefore every counter the determinism tests assert — are
+//! unchanged by the disk layer. The *test suite* deliberately stays off
+//! the shared store: the regression oracles (`paper_anchors`,
+//! `sweep_determinism`, the coordinator unit tests) run memory-only so a
+//! stale entry can never satisfy them, and `tests/disk_cache.rs`
+//! exercises persistence against private per-test directories.
+//!
+//! ## File format (version [`STORE_VERSION`], model epoch [`MODEL_EPOCH`])
+//!
+//! ```text
+//! magic    b"VEGASIMC"                    8 bytes
+//! version  u32 LE  = STORE_VERSION        layout of this very file
+//! epoch    u32 LE  = MODEL_EPOCH          timing-model generation
+//! key      u32 LE length + UTF-8 bytes    full SimKey echo (collision guard)
+//! payload  u64 LE length + bytes          serialized SimResult
+//! checksum u64 LE                         FNV-1a of the payload bytes
+//! ```
+//!
+//! Reads are corruption-tolerant by construction: any mismatch — magic,
+//! version, epoch, key echo, truncation, checksum, trailing garbage —
+//! makes [`DiskStore::load`] return `None` and the caller re-simulates
+//! (overwriting the entry). Writes go to a per-process temp file and are
+//! `rename`d into place, so a concurrent reader can never observe a
+//! partial entry and concurrent writers of the same key race benignly
+//! (both write identical bytes: simulations are pure).
+//!
+//! ## Staleness guards
+//!
+//! * A *kernel* change changes `Program::content_hash`, which is part of
+//!   the [`SimKey`] (and of the file name), so stale entries are simply
+//!   never looked up again.
+//! * A *timing-model* change (scheduler, stall costs) can change the
+//!   stats of an unchanged program. Bump [`MODEL_EPOCH`] with any such
+//!   change; every older entry then reads as a miss.
+//! * `Program::content_hash` feeds derived `Hash` impls, which Rust does
+//!   not guarantee stable across toolchains — after a toolchain change,
+//!   old entries are orphaned (never hit), not wrong. `ROADMAP.md` tracks
+//!   the explicit `Inst` byte serialization that would make keys
+//!   toolchain-portable.
+//!
+//! The store location is `$VEGA_CACHE_DIR` if set, else
+//! `$CARGO_TARGET_DIR/vega-cache`, else `target/vega-cache` relative to
+//! the working directory; `VEGA_CACHE=off` disables persistence entirely
+//! (see [`DiskStore::open_default`]).
+
+use std::fs;
+use std::hash::Hasher;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::scenario::{SimKey, SimResult};
+use crate::cluster::ClusterStats;
+use crate::iss::stats::{ClassCounts, CoreStats};
+use crate::kernels::KernelRun;
+
+/// On-disk layout version of one store entry. Bump when the serialized
+/// byte layout itself changes.
+pub const STORE_VERSION: u32 = 1;
+
+/// Timing-model generation. Bump whenever a change to the simulator can
+/// alter the [`ClusterStats`] of an *unchanged* program (scheduler
+/// rework, stall-cost recalibration, arbitration changes) — the program
+/// content hash cannot see those, and a stale entry would otherwise serve
+/// pre-change cycle counts.
+pub const MODEL_EPOCH: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"VEGASIMC";
+
+/// A directory of serialized [`SimResult`]s, one file per [`SimKey`].
+///
+/// All methods are best-effort and lock-free: `load` treats every failure
+/// mode as a miss, `store` silently drops entries it cannot write (a
+/// read-only cache directory degrades to the in-memory-only behaviour,
+/// it never fails a simulation).
+pub struct DiskStore {
+    dir: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+    /// Per-process temp-file disambiguator (concurrent writers).
+    tmp_seq: AtomicU64,
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a store rooted at `dir`.
+    pub fn at(dir: impl Into<PathBuf>) -> io::Result<Self> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(Self {
+            dir,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            writes: AtomicU64::new(0),
+            tmp_seq: AtomicU64::new(0),
+        })
+    }
+
+    /// Open the default store: `$VEGA_CACHE_DIR` if set, else
+    /// `$CARGO_TARGET_DIR/vega-cache`, else `target/vega-cache`.
+    /// Returns `Ok(None)` when persistence is disabled via
+    /// `VEGA_CACHE=off` (or `0`).
+    pub fn open_default() -> io::Result<Option<Self>> {
+        if let Ok(v) = std::env::var("VEGA_CACHE") {
+            if v == "off" || v == "0" {
+                return Ok(None);
+            }
+        }
+        let dir = match std::env::var_os("VEGA_CACHE_DIR") {
+            Some(d) => PathBuf::from(d),
+            None => match std::env::var_os("CARGO_TARGET_DIR") {
+                Some(t) => Path::new(&t).join("vega-cache"),
+                None => PathBuf::from("target").join("vega-cache"),
+            },
+        };
+        Self::at(dir).map(Some)
+    }
+
+    /// The directory entries live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// (hits, misses, writes) so far. Every [`DiskStore::load`] counts as
+    /// exactly one hit or miss; every successful [`DiskStore::store`] as
+    /// one write.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.writes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Look `key` up. Any read/format/checksum failure is a miss.
+    pub fn load(&self, key: &SimKey) -> Option<SimResult> {
+        let res = fs::read(self.path_for(key)).ok().and_then(|bytes| decode_entry(key, &bytes));
+        match &res {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        res
+    }
+
+    /// Write `result` under `key` (atomic temp-file + rename;
+    /// best-effort — errors are swallowed, the entry is simply absent).
+    pub fn store(&self, key: &SimKey, result: &SimResult) {
+        let bytes = encode_entry(key, result);
+        let tmp = self.dir.join(format!(
+            ".tmp-{}-{}",
+            std::process::id(),
+            self.tmp_seq.fetch_add(1, Ordering::Relaxed)
+        ));
+        if fs::write(&tmp, &bytes).is_ok() && fs::rename(&tmp, self.path_for(key)).is_ok() {
+            self.writes.fetch_add(1, Ordering::Relaxed);
+        } else {
+            // Drop the temp file whether the write or the rename failed —
+            // names are never reused, so litter would accumulate forever.
+            let _ = fs::remove_file(&tmp);
+        }
+    }
+
+    /// File an entry lives in: an FNV-1a tag of the canonical key string
+    /// (the full string is echoed inside the file, so a tag collision
+    /// reads as a miss, never as wrong data).
+    fn path_for(&self, key: &SimKey) -> PathBuf {
+        let mut h = crate::common::Fnv1a::new();
+        h.write(key_string(key).as_bytes());
+        self.dir.join(format!("{:016x}.sim", h.finish()))
+    }
+}
+
+/// Canonical textual form of a [`SimKey`] (file-name tag + in-file echo).
+fn key_string(key: &SimKey) -> String {
+    format!(
+        "{}|{}x{}x{}|{}|{}c|{:016x}",
+        key.kernel, key.size.0, key.size.1, key.size.2, key.precision, key.cores, key.prog_hash
+    )
+}
+
+// ---------------------------------------------------------------------
+// Byte-level encode/decode (std-only; serde is unavailable offline).
+// ---------------------------------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
+fn encode_core_stats(e: &mut Enc, s: &CoreStats) {
+    e.u64(s.cycles);
+    e.u64(s.retired);
+    e.u64(s.int_ops);
+    e.u64(s.flops);
+    e.u64(s.bytes_loaded);
+    e.u64(s.bytes_stored);
+    e.u64(s.stall_loaduse);
+    e.u64(s.stall_tcdm);
+    e.u64(s.stall_fpu);
+    e.u64(s.stall_divsqrt);
+    e.u64(s.stall_icache);
+    e.u64(s.stall_barrier);
+    e.u64(s.branch_penalty);
+    e.u64(s.multicycle_busy);
+    let c = &s.by_class;
+    for v in [c.alu, c.mul, c.div, c.load, c.store, c.branch, c.fp, c.simd, c.control] {
+        e.u64(v);
+    }
+}
+
+fn decode_core_stats(d: &mut Dec) -> Option<CoreStats> {
+    Some(CoreStats {
+        cycles: d.u64()?,
+        retired: d.u64()?,
+        int_ops: d.u64()?,
+        flops: d.u64()?,
+        bytes_loaded: d.u64()?,
+        bytes_stored: d.u64()?,
+        stall_loaduse: d.u64()?,
+        stall_tcdm: d.u64()?,
+        stall_fpu: d.u64()?,
+        stall_divsqrt: d.u64()?,
+        stall_icache: d.u64()?,
+        stall_barrier: d.u64()?,
+        branch_penalty: d.u64()?,
+        multicycle_busy: d.u64()?,
+        by_class: ClassCounts {
+            alu: d.u64()?,
+            mul: d.u64()?,
+            div: d.u64()?,
+            load: d.u64()?,
+            store: d.u64()?,
+            branch: d.u64()?,
+            fp: d.u64()?,
+            simd: d.u64()?,
+            control: d.u64()?,
+        },
+    })
+}
+
+fn encode_payload(r: &SimResult) -> Vec<u8> {
+    let mut e = Enc(Vec::with_capacity(2048));
+    e.u64(r.outputs_digest);
+    e.str(&r.run.name);
+    e.u64(r.run.ops);
+    let s = &r.run.stats;
+    e.u64(s.cycles);
+    e.f64(s.tcdm_conflict_rate);
+    e.f64(s.fpu_contention_rate);
+    e.u64(s.barrier_gated_cycles);
+    encode_core_stats(&mut e, &s.total);
+    e.u32(s.per_core.len() as u32);
+    for core in &s.per_core {
+        encode_core_stats(&mut e, core);
+    }
+    e.0
+}
+
+fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
+    let mut d = Dec { buf: bytes, pos: 0 };
+    let outputs_digest = d.u64()?;
+    let name = d.str()?;
+    let ops = d.u64()?;
+    let cycles = d.u64()?;
+    let tcdm_conflict_rate = d.f64()?;
+    let fpu_contention_rate = d.f64()?;
+    let barrier_gated_cycles = d.u64()?;
+    let total = decode_core_stats(&mut d)?;
+    let n = d.u32()? as usize;
+    // Per-core lists are bounded by the 9-core cluster; reject anything
+    // larger outright rather than trusting a corrupt length prefix.
+    if n > crate::cluster::N_CORES {
+        return None;
+    }
+    let mut per_core = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_core.push(decode_core_stats(&mut d)?);
+    }
+    if !d.done() {
+        return None;
+    }
+    Some(SimResult {
+        run: KernelRun::new(
+            name,
+            ClusterStats {
+                cycles,
+                per_core,
+                total,
+                tcdm_conflict_rate,
+                fpu_contention_rate,
+                barrier_gated_cycles,
+            },
+            ops,
+        ),
+        outputs_digest,
+    })
+}
+
+fn encode_entry(key: &SimKey, result: &SimResult) -> Vec<u8> {
+    let payload = encode_payload(result);
+    let mut h = crate::common::Fnv1a::new();
+    h.write(&payload);
+    let mut e = Enc(Vec::with_capacity(payload.len() + 64));
+    e.0.extend_from_slice(MAGIC);
+    e.u32(STORE_VERSION);
+    e.u32(MODEL_EPOCH);
+    e.str(&key_string(key));
+    e.u64(payload.len() as u64);
+    e.0.extend_from_slice(&payload);
+    e.u64(h.finish());
+    e.0
+}
+
+fn decode_entry(key: &SimKey, bytes: &[u8]) -> Option<SimResult> {
+    let mut d = Dec { buf: bytes, pos: 0 };
+    if d.take(MAGIC.len())? != MAGIC {
+        return None;
+    }
+    if d.u32()? != STORE_VERSION || d.u32()? != MODEL_EPOCH {
+        return None;
+    }
+    if d.str()? != key_string(key) {
+        return None;
+    }
+    let len = d.u64()? as usize;
+    let payload = d.take(len)?;
+    let checksum = d.u64()?;
+    if !d.done() {
+        return None;
+    }
+    let mut h = crate::common::Fnv1a::new();
+    h.write(payload);
+    if h.finish() != checksum {
+        return None;
+    }
+    decode_payload(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::int_matmul::IntWidth;
+    use crate::sweep::{Scenario, SimArena};
+
+    fn sample() -> (SimKey, SimResult) {
+        let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 2 };
+        (s.key(), s.simulate(&mut SimArena::new()))
+    }
+
+    fn assert_same(a: &SimResult, b: &SimResult) {
+        assert_eq!(a.outputs_digest, b.outputs_digest);
+        assert_eq!(a.run.name, b.run.name);
+        assert_eq!(a.run.ops, b.run.ops);
+        assert_eq!(a.run.stats, b.run.stats);
+    }
+
+    #[test]
+    fn payload_round_trips_bit_exactly() {
+        let (_, r) = sample();
+        let back = decode_payload(&encode_payload(&r)).unwrap();
+        assert_same(&r, &back);
+    }
+
+    #[test]
+    fn entry_round_trips_and_guards_the_key() {
+        let (key, r) = sample();
+        let bytes = encode_entry(&key, &r);
+        assert_same(&r, &decode_entry(&key, &bytes).unwrap());
+        // Same bytes probed under a different key (tag collision) = miss.
+        let other = Scenario::IntMatmul { w: IntWidth::I8, cores: 3 }.key();
+        assert!(decode_entry(&other, &bytes).is_none());
+    }
+
+    #[test]
+    fn version_epoch_truncation_and_checksum_mismatches_are_misses() {
+        let (key, r) = sample();
+        let good = encode_entry(&key, &r);
+
+        let mut wrong_version = good.clone();
+        wrong_version[8] ^= 0xFF; // first byte of the version field
+        assert!(decode_entry(&key, &wrong_version).is_none());
+
+        let mut wrong_epoch = good.clone();
+        wrong_epoch[12] ^= 0xFF; // first byte of the epoch field
+        assert!(decode_entry(&key, &wrong_epoch).is_none());
+
+        for cut in [0, 7, good.len() / 2, good.len() - 1] {
+            assert!(decode_entry(&key, &good[..cut]).is_none(), "truncated at {cut}");
+        }
+
+        let mut flipped = good.clone();
+        let mid = flipped.len() / 2;
+        flipped[mid] ^= 0x01;
+        assert!(decode_entry(&key, &flipped).is_none());
+
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_entry(&key, &trailing).is_none());
+
+        assert_same(&r, &decode_entry(&key, &good).unwrap());
+    }
+}

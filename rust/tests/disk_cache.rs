@@ -1,0 +1,146 @@
+//! Persistent on-disk SimCache invariants (ISSUE 3 acceptance):
+//!
+//! * a simulation written by one engine is served from disk to a later
+//!   engine on the same directory (the cross-process sharing story —
+//!   each engine here stands in for a process, which is exactly what it
+//!   is to the store: a cold in-memory cache over a shared directory);
+//! * the acceptance grid (`--cores 1..9 --precision int8,fp16`) renders
+//!   byte-identically on a second invocation with **every** simulation
+//!   served from disk (hit counts asserted);
+//! * corrupted, truncated or version-mismatched entries are misses that
+//!   fall back to re-simulation — never wrong data, never a panic.
+
+use std::fs;
+use std::path::PathBuf;
+
+use vega::kernels::int_matmul::IntWidth;
+use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
+use vega::sweep::{DiskStore, Scenario, SweepEngine};
+
+/// Fresh per-test store directory (unique per process and case; removed
+/// at entry so a leftover from a crashed run can't pollute counters).
+fn store_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("vega-disk-cache-test-{}-{case}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine_at(dir: &PathBuf, jobs: usize) -> SweepEngine {
+    SweepEngine::with_disk(jobs, DiskStore::at(dir).expect("store dir"))
+}
+
+/// The single `.sim` entry file of a store directory.
+fn only_entry(dir: &PathBuf) -> PathBuf {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .filter(|p| p.extension().is_some_and(|x| x == "sim"))
+        .collect();
+    assert_eq!(entries.len(), 1, "expected exactly one cache entry in {dir:?}");
+    entries.pop().unwrap()
+}
+
+#[test]
+fn results_round_trip_across_engines() {
+    let dir = store_dir("roundtrip");
+    let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 2 };
+
+    let cold = engine_at(&dir, 1);
+    let first = cold.result(s);
+    assert_eq!(cold.disk_counters(), Some((0, 1, 1)), "cold: one disk miss, one write");
+
+    let warm = engine_at(&dir, 1);
+    let second = warm.result(s);
+    assert_eq!(warm.disk_counters(), Some((1, 0, 0)), "warm: served from disk, no write");
+    assert_eq!(first.outputs_digest, second.outputs_digest);
+    assert_eq!(first.run.stats, second.run.stats);
+    assert_eq!(first.run.ops, second.run.ops);
+    assert_eq!(first.run.name, second.run.name);
+
+    // And the disk result equals a from-scratch simulation (purity).
+    let fresh = SweepEngine::serial().result(s);
+    assert_eq!(second.outputs_digest, fresh.outputs_digest);
+    assert_eq!(second.run.stats, fresh.run.stats);
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The acceptance grid: cores 1..9 × {int8, fp16} renders a table not in
+/// the paper, byte-identical across jobs, and a second invocation of the
+/// same grid serves every simulation from the on-disk cache.
+#[test]
+fn acceptance_grid_warm_starts_entirely_from_disk() {
+    let dir = store_dir("acceptance");
+    let spec = GridSpec {
+        cores: (1..=9).collect(),
+        precisions: vec![Precision::Int8, Precision::Fp16],
+        dvfs_steps: 4,
+        format: GridFormat::Csv,
+    };
+    let cells = (spec.cores.len() * spec.precisions.len()) as u64;
+
+    let cold = engine_at(&dir, 4);
+    let first = explore::render(&cold, &spec);
+    assert_eq!(first.lines().count(), 1 + spec.rows(), "header + one row per grid point");
+    let (_, dm, dw) = cold.disk_counters().unwrap();
+    assert_eq!((dm, dw), (cells, cells), "cold run simulates and persists every cell");
+
+    let warm = engine_at(&dir, 1);
+    let second = explore::render(&warm, &spec);
+    assert_eq!(first, second, "warm render must be byte-identical to the cold one");
+    assert_eq!(
+        warm.disk_counters(),
+        Some((cells, 0, 0)),
+        "second invocation serves every simulation from the on-disk cache"
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn version_mismatch_falls_back_to_resimulation() {
+    let dir = store_dir("version");
+    let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 3 };
+    let baseline = engine_at(&dir, 1).result(s);
+
+    // Flip a byte of the version field (offset 8, right after the magic).
+    let path = only_entry(&dir);
+    let mut bytes = fs::read(&path).unwrap();
+    bytes[8] ^= 0xFF;
+    fs::write(&path, &bytes).unwrap();
+
+    let eng = engine_at(&dir, 1);
+    let recovered = eng.result(s);
+    assert_eq!(eng.disk_counters(), Some((0, 1, 1)), "mismatch = miss + fresh write-back");
+    assert_eq!(recovered.outputs_digest, baseline.outputs_digest);
+    assert_eq!(recovered.run.stats, baseline.run.stats);
+
+    // The rewritten entry is valid again.
+    let healed = engine_at(&dir, 1);
+    healed.result(s);
+    assert_eq!(healed.disk_counters(), Some((1, 0, 0)));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_and_garbage_entries_fall_back_to_resimulation() {
+    let dir = store_dir("truncated");
+    let s = Scenario::IntMatmul { w: IntWidth::I16, cores: 2 };
+    let baseline = engine_at(&dir, 1).result(s);
+
+    let path = only_entry(&dir);
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+    let eng = engine_at(&dir, 1);
+    let recovered = eng.result(s);
+    assert_eq!(eng.disk_counters(), Some((0, 1, 1)), "truncated entry is a miss");
+    assert_eq!(recovered.outputs_digest, baseline.outputs_digest);
+
+    fs::write(&path, b"not a cache entry at all").unwrap();
+    let eng = engine_at(&dir, 1);
+    eng.result(s);
+    assert_eq!(eng.disk_counters(), Some((0, 1, 1)), "garbage entry is a miss");
+
+    let _ = fs::remove_dir_all(&dir);
+}

@@ -10,6 +10,7 @@ use std::collections::HashSet;
 
 use vega::bench;
 use vega::kernels::fp_matmul::FpWidth;
+use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
 use vega::sweep::{Scenario, SimArena, SweepEngine};
 
 /// (a) Byte-identical output for serial vs 8-way parallel engines, on the
@@ -25,13 +26,17 @@ fn repro_output_byte_identical_across_jobs() {
 }
 
 /// The suite runner (prefetch + parallel report rendering) produces the
-/// same bytes as independent per-report runs, in paper order.
+/// same bytes as independent per-report runs, in paper order. The
+/// independent runs use fresh in-memory engines (not `bench::run`'s
+/// persistent global engine) so the comparison always exercises the live
+/// simulator regardless of on-disk cache state.
 #[test]
 fn run_many_matches_independent_runs() {
     let ids = ["table5", "fig6", "fig8", "table8", "fig9", "fig10", "fig11", "ablations"];
     let many = bench::run_many(&ids, &SweepEngine::new(8));
     for (id, got) in ids.iter().zip(many) {
-        assert_eq!(got.unwrap(), bench::run(id).unwrap(), "{id} diverged under run_many");
+        let alone = bench::run_with(id, &SweepEngine::serial()).unwrap();
+        assert_eq!(got.unwrap(), alone, "{id} diverged under run_many");
     }
 }
 
@@ -88,6 +93,46 @@ fn cross_report_cache_sharing() {
     let (hits, misses) = eng.cache().counters();
     assert_eq!(misses - misses_after_t5, 8, "fig8 only adds the 8 FP16 variants");
     assert!(hits >= 8, "fig8's FP32 side must come from table5's cache");
+}
+
+/// `vega sweep` grids obey the same invariant as the reproduction
+/// reports: byte-identical output at `--jobs 1` and `--jobs 8`, in every
+/// render format (ISSUE 3 acceptance).
+#[test]
+fn sweep_grid_byte_identical_across_jobs() {
+    let base = GridSpec {
+        cores: vec![1, 2, 4, 8],
+        precisions: vec![Precision::Int8, Precision::Fp16],
+        dvfs_steps: 6,
+        format: GridFormat::Csv,
+    };
+    // One engine per worker count, shared across formats: the renderers
+    // read the same cached simulations, so only the first format pays.
+    let eng1 = SweepEngine::new(1);
+    let eng8 = SweepEngine::new(8);
+    for format in [GridFormat::Csv, GridFormat::Markdown, GridFormat::Json] {
+        let spec = GridSpec { format, ..base.clone() };
+        let serial = explore::render(&eng1, &spec);
+        let parallel = explore::render(&eng8, &spec);
+        assert_eq!(serial, parallel, "{format:?}: --jobs 1 vs --jobs 8 grid diverged");
+    }
+}
+
+/// The widened memos (ISSUE 3): the CWU reference workload and the
+/// HD-dimension ablation run once per engine however many times their
+/// reports render.
+#[test]
+fn cwu_and_hd_ablation_memoized_per_engine() {
+    let eng = SweepEngine::new(1);
+    bench::run_with("table1", &eng).unwrap();
+    bench::run_with("table1", &eng).unwrap();
+    assert_eq!(eng.cwu_counters(), (1, 1), "second table1 must reuse the CWU training run");
+
+    bench::run_with("ablations", &eng).unwrap();
+    bench::run_with("ablations", &eng).unwrap();
+    let (hd_hits, hd_misses) = eng.hd_counters();
+    assert_eq!(hd_misses, 3, "one HD training per dimension (512/1024/2048)");
+    assert_eq!(hd_hits, 3, "second ablation render must reuse all three");
 }
 
 /// The cached result is the simulation's result: spot-check one scenario

@@ -1,14 +1,16 @@
 #!/usr/bin/env bash
 # Tier-1 gate + perf smoke for the Vega reproduction.
 #
-#   scripts/ci.sh            full run (fmt, build, test, bench smoke)
+#   scripts/ci.sh            full run (fmt, build, doc, test, bench smoke)
 #   CI_SKIP_BENCH=1 ...      skip the bench smoke (e.g. resource-starved CI)
 #
 # The bench smoke runs every hotpath and sweep case once
 # (VEGA_BENCH_ITERS=1) so a scheduler regression that hangs or panics is
 # caught even where full benchmarking is too slow; BENCH_hotpath.json and
-# BENCH_sweeps.json land in rust/. The determinism smoke diffs a --jobs 2
-# `vega repro` against the serial run byte-for-byte.
+# BENCH_sweeps.json land in rust/. The determinism smokes diff --jobs 2
+# runs of `vega repro` and `vega sweep` against serial runs byte-for-byte,
+# and the cache smoke runs the same sweep grid twice against a fresh
+# on-disk store, asserting the second run is served entirely from disk.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -23,21 +25,59 @@ fi
 echo "== cargo build --release =="
 cargo build --release
 
+echo "== cargo doc --no-deps (warnings fatal) =="
+# --lib: the bin target shares the crate name, and documenting both
+# triggers cargo's output-filename-collision warning, which RUSTDOCFLAGS
+# cannot gate; the bin is a thin CLI over the documented library.
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
+
 echo "== sweep determinism smoke (vega repro table5: --jobs 2 vs serial) =="
 mkdir -p target/ci
-./target/release/vega repro table5 --jobs 1 > target/ci/repro_table5_serial.txt
-./target/release/vega repro table5 --jobs 2 > target/ci/repro_table5_jobs2.txt
+# Memory-only engines here: the repro smoke checks parallel determinism,
+# the dedicated cache smoke below checks persistence.
+VEGA_CACHE=off ./target/release/vega repro table5 --jobs 1 > target/ci/repro_table5_serial.txt
+VEGA_CACHE=off ./target/release/vega repro table5 --jobs 2 > target/ci/repro_table5_jobs2.txt
 diff target/ci/repro_table5_serial.txt target/ci/repro_table5_jobs2.txt
 echo "parallel repro output is byte-identical to serial"
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== vega sweep smoke grid (serial vs --jobs 2) =="
+SWEEP_GRID=(--cores 1..2 --precision int8,fp16 --dvfs-steps 5 --format csv)
+VEGA_CACHE=off ./target/release/vega sweep "${SWEEP_GRID[@]}" --jobs 1 > target/ci/sweep_serial.csv
+VEGA_CACHE=off ./target/release/vega sweep "${SWEEP_GRID[@]}" --jobs 2 > target/ci/sweep_jobs2.csv
+diff target/ci/sweep_serial.csv target/ci/sweep_jobs2.csv
+echo "parallel sweep grid is byte-identical to serial"
+
+echo "== on-disk cache smoke (cold vs warm process) =="
+rm -rf target/ci/sweep-cache
+export VEGA_CACHE_DIR=target/ci/sweep-cache
+./target/release/vega sweep "${SWEEP_GRID[@]}" --stats > target/ci/sweep_cold.csv 2> target/ci/sweep_cold.log
+./target/release/vega sweep "${SWEEP_GRID[@]}" --stats > target/ci/sweep_warm.csv 2> target/ci/sweep_warm.log
+unset VEGA_CACHE_DIR
+diff target/ci/sweep_cold.csv target/ci/sweep_warm.csv
+grep -q "disk: 0 hits / 4 misses / 4 writes" target/ci/sweep_cold.log \
+    || { echo "FAIL: cold run did not populate the store:"; cat target/ci/sweep_cold.log; exit 1; }
+grep -q "disk: 4 hits / 0 misses / 0 writes" target/ci/sweep_warm.log \
+    || { echo "FAIL: warm run did not hit the on-disk cache:"; cat target/ci/sweep_warm.log; exit 1; }
+echo "warm process served every simulation from the on-disk cache"
+
+echo "== cargo test -q (fresh cache dir, defense in depth) =="
+# The regression oracles are memory-only by construction (paper_anchors'
+# oracle(), fresh engines in sweep_determinism, private dirs in
+# disk_cache); the per-run VEGA_CACHE_DIR is defense in depth so any
+# code path that does open the default store during tests can never read
+# entries written by an older build (stale if a timing-model change
+# forgot its MODEL_EPOCH bump).
+rm -rf target/ci/test-cache
+VEGA_CACHE_DIR=target/ci/test-cache cargo test -q
 
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
+    # VEGA_CACHE=off: bench timings and the printed reproduction record
+    # must reflect the live simulator, never a warm (possibly stale)
+    # target/vega-cache left by an earlier run.
     echo "== hotpath bench smoke (VEGA_BENCH_ITERS=1) =="
-    VEGA_BENCH_ITERS=1 cargo bench --bench hotpath
+    VEGA_CACHE=off VEGA_BENCH_ITERS=1 cargo bench --bench hotpath
     echo "== sweep-engine bench smoke (VEGA_BENCH_ITERS=1, VEGA_JOBS=2) =="
-    VEGA_BENCH_ITERS=1 VEGA_JOBS=2 cargo bench --bench sweeps
+    VEGA_CACHE=off VEGA_BENCH_ITERS=1 VEGA_JOBS=2 cargo bench --bench sweeps
 fi
 
 echo "ci.sh: all gates passed"
