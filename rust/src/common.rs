@@ -170,6 +170,120 @@ impl std::hash::Hasher for Fnv1a {
     }
 }
 
+/// Little-endian byte-stream writer: the crate's one way to produce
+/// *persistable* bytes (std-only; serde is unavailable offline).
+///
+/// Every on-disk artifact — cache keys, [`crate::sweep::DiskStore`]
+/// entries, the explicit ISA/DNN encodings — is written through these
+/// primitives, so the byte layout is defined here, by this code, and
+/// never by a derived impl whose layout the toolchain may change.
+#[derive(Debug, Default)]
+pub struct ByteWriter(Vec<u8>);
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self(Vec::new())
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self(Vec::with_capacity(n))
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f64 by IEEE bit pattern (bit-exact round trip, NaNs included).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed (u32 LE) UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn bytes(&mut self, b: &[u8]) {
+        self.0.extend_from_slice(b);
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.0
+    }
+}
+
+/// Bounds-checked reader over a [`ByteWriter`]-produced stream. Every
+/// accessor returns `None` past the end — callers treat that as a cache
+/// miss, never a panic.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let end = self.pos.checked_add(n)?;
+        if end > self.buf.len() {
+            return None;
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Some(s)
+    }
+
+    pub fn u8(&mut self) -> Option<u8> {
+        Some(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Option<u32> {
+        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
+    }
+
+    pub fn u64(&mut self) -> Option<u64> {
+        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
+    }
+
+    pub fn f64(&mut self) -> Option<f64> {
+        Some(f64::from_bits(self.u64()?))
+    }
+
+    pub fn str(&mut self) -> Option<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec()).ok()
+    }
+
+    /// Has every byte been consumed? (Trailing garbage = corrupt entry.)
+    pub fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
+}
+
 /// Pretty-print a byte count.
 pub fn fmt_bytes(b: usize) -> String {
     if b >= 1 << 20 {
@@ -242,6 +356,32 @@ mod tests {
         let mut h = Fnv1a::new();
         h.write(b"a");
         assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn byte_stream_round_trips_and_bounds_checks() {
+        let mut w = ByteWriter::new();
+        w.u8(0xAB);
+        w.u32(0xDEAD_BEEF);
+        w.u64(0x0123_4567_89AB_CDEF);
+        w.f64(-0.5);
+        w.str("vega");
+        let bytes = w.into_vec();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u8(), Some(0xAB));
+        assert_eq!(r.u32(), Some(0xDEAD_BEEF));
+        assert_eq!(r.u64(), Some(0x0123_4567_89AB_CDEF));
+        assert_eq!(r.f64(), Some(-0.5));
+        assert_eq!(r.str().as_deref(), Some("vega"));
+        assert!(r.done());
+        assert_eq!(r.u8(), None, "reads past the end are None, not panics");
+        // A truncated stream fails cleanly mid-field.
+        let mut t = ByteReader::new(&bytes[..bytes.len() - 1]);
+        t.u8();
+        t.u32();
+        t.u64();
+        t.f64();
+        assert_eq!(t.str(), None);
     }
 
     #[test]

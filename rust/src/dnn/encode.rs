@@ -1,0 +1,524 @@
+//! Canonical byte encoding of the DNN pipeline types (the network-memo
+//! analogue of [`crate::isa::encode`]).
+//!
+//! Three jobs, all in service of making [`NetworkReport`]s persistable
+//! across processes and toolchains (`sweep/persist.rs` stores them beside
+//! the kernel `SimResult`s):
+//!
+//! 1. **Structure hash** ([`network_struct_hash`]): FNV-1a over an
+//!    explicit per-[`Layer`] byte record — never over `Debug` formatting
+//!    or derived `Hash`, neither of which is a stability contract — so a
+//!    topology edit that preserves the network's name can never serve a
+//!    stale per-layer breakdown.
+//! 2. **Canonical key string** ([`net_key`]): the full
+//!    (network, [`PipelineConfig`]) identity as text — file-name tag and
+//!    in-file echo of the on-disk network store, and the in-memory memo
+//!    key of [`crate::sweep::SweepEngine::network_report`].
+//! 3. **Report serialization** ([`encode_report`] / [`decode_report`]):
+//!    bit-exact round trip of a whole [`NetworkReport`] (f64s travel as
+//!    IEEE bit patterns). Decoding is corruption-tolerant: any malformed
+//!    field reads as `None` and the caller recomputes.
+//!
+//! Changing any code or layout here is a breaking change to persisted
+//! network entries: bump [`NET_ENCODING_VERSION`] (it is baked into both
+//! the struct hash and the payload) so old entries read as misses.
+
+use crate::common::{ByteReader, ByteWriter};
+use crate::power::tables::OperatingPoint;
+
+use super::graph::{Layer, LayerKind, Network};
+use super::pipeline::{
+    Bound, Engine, LayerReport, NetworkReport, PipelineConfig, StorePolicy, WeightStore,
+};
+
+/// Version of the DNN byte layout (struct-hash records, key string
+/// fields, report payload). Bump on any change here.
+pub const NET_ENCODING_VERSION: u32 = 1;
+
+impl Engine {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            Engine::Software => 0,
+            Engine::HwceOnly => 1,
+            Engine::HwceHybrid => 2,
+        }
+    }
+
+    /// Stable key-string tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Engine::Software => "sw",
+            Engine::HwceOnly => "hwce",
+            Engine::HwceHybrid => "hybrid",
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => Engine::Software,
+            1 => Engine::HwceOnly,
+            2 => Engine::HwceHybrid,
+            _ => return None,
+        })
+    }
+}
+
+impl StorePolicy {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            StorePolicy::AllMram => 0,
+            StorePolicy::AllHyperRam => 1,
+            StorePolicy::GreedyMram => 2,
+        }
+    }
+
+    /// Stable key-string tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            StorePolicy::AllMram => "mram",
+            StorePolicy::AllHyperRam => "hyper",
+            StorePolicy::GreedyMram => "greedy",
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => StorePolicy::AllMram,
+            1 => StorePolicy::AllHyperRam,
+            2 => StorePolicy::GreedyMram,
+            _ => return None,
+        })
+    }
+}
+
+impl WeightStore {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            WeightStore::Mram => 0,
+            WeightStore::HyperRam => 1,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => WeightStore::Mram,
+            1 => WeightStore::HyperRam,
+            _ => return None,
+        })
+    }
+}
+
+impl Bound {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            Bound::Compute => 0,
+            Bound::L2L1 => 1,
+            Bound::L3 => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Option<Self> {
+        Some(match c {
+            0 => Bound::Compute,
+            1 => Bound::L2L1,
+            2 => Bound::L3,
+            _ => return None,
+        })
+    }
+}
+
+/// Append one layer's structural record: kind code, kind parameters in
+/// declaration order (u32 LE), input geometry, then the layer name
+/// (names appear verbatim in rendered reports, so a rename must change
+/// the hash).
+pub fn encode_layer(w: &mut ByteWriter, layer: &Layer) {
+    match layer.kind {
+        LayerKind::Conv { k, stride, cin, cout } => {
+            w.u8(1);
+            w.u32(k as u32);
+            w.u32(stride as u32);
+            w.u32(cin as u32);
+            w.u32(cout as u32);
+        }
+        LayerKind::DwConv { stride, c } => {
+            w.u8(2);
+            w.u32(stride as u32);
+            w.u32(c as u32);
+        }
+        LayerKind::Linear { cin, cout } => {
+            w.u8(3);
+            w.u32(cin as u32);
+            w.u32(cout as u32);
+        }
+        LayerKind::Add { c } => {
+            w.u8(4);
+            w.u32(c as u32);
+        }
+        LayerKind::GlobalPool { c } => {
+            w.u8(5);
+            w.u32(c as u32);
+        }
+    }
+    w.u32(layer.in_h as u32);
+    w.u32(layer.in_w as u32);
+    w.str(&layer.name);
+}
+
+/// FNV-1a over [`NET_ENCODING_VERSION`], the layer count, and every
+/// layer's explicit record — the persistable identity of a network's
+/// structure (the DNN analogue of
+/// [`crate::isa::Program::content_hash`]).
+pub fn network_struct_hash(net: &Network) -> u64 {
+    use std::hash::Hasher;
+    let mut w = ByteWriter::with_capacity(64 + net.layers.len() * 40);
+    w.u32(NET_ENCODING_VERSION);
+    w.u32(net.layers.len() as u32);
+    for layer in &net.layers {
+        encode_layer(&mut w, layer);
+    }
+    let mut h = crate::common::Fnv1a::new();
+    h.write(w.as_slice());
+    h.finish()
+}
+
+/// Canonical textual key of one (network, config) pipeline run: memo key
+/// of [`crate::sweep::SweepEngine::network_report`], file-name tag and
+/// in-file echo of the on-disk network store. Every field is explicit:
+/// the structure hash from [`network_struct_hash`], operating-point
+/// floats by IEEE bit pattern, engine/policy by their stable tags.
+pub fn net_key(net: &Network, cfg: &PipelineConfig) -> String {
+    format!(
+        "{}|{}l/{:016x}|{}@{:016x}/{:016x}/{:016x}|{}|{}",
+        net.name,
+        net.layers.len(),
+        network_struct_hash(net),
+        cfg.op.name,
+        cfg.op.vdd.to_bits(),
+        cfg.op.f_soc.to_bits(),
+        cfg.op.f_cl.to_bits(),
+        cfg.engine.tag(),
+        cfg.policy.tag(),
+    )
+}
+
+/// Operating-point names that may appear in persisted reports.
+/// [`OperatingPoint::name`] is `&'static str`, so decoding interns
+/// against this table; an unknown name fails the decode (reads as a
+/// miss, and the recompute writes back a known one — correctness is
+/// never at risk, but an uninterned point would recompute every warm
+/// process). The entries reference the `power::tables` constants
+/// directly so a rename cannot desynchronise them; when *adding* an
+/// operating-point constant that reaches `network_report`, extend this
+/// table (the `every_table_operating_point_interns` test is the
+/// reminder).
+const OP_NAMES: [&str; 5] = [
+    crate::power::tables::LV.name,
+    crate::power::tables::NOM.name,
+    crate::power::tables::HV.name,
+    crate::power::tables::DNN.name,
+    // `vega sweep`'s interpolated DVFS ladder (explore::operating_points).
+    "sweep",
+];
+
+fn intern_op_name(s: &str) -> Option<&'static str> {
+    OP_NAMES.iter().find(|&&n| n == s).copied()
+}
+
+fn encode_op(w: &mut ByteWriter, op: &OperatingPoint) {
+    w.str(op.name);
+    w.f64(op.vdd);
+    w.f64(op.f_soc);
+    w.f64(op.f_cl);
+}
+
+fn decode_op(r: &mut ByteReader) -> Option<OperatingPoint> {
+    let name = intern_op_name(&r.str()?)?;
+    Some(OperatingPoint { name, vdd: r.f64()?, f_soc: r.f64()?, f_cl: r.f64()? })
+}
+
+fn encode_layer_report(w: &mut ByteWriter, l: &LayerReport) {
+    w.str(&l.name);
+    w.u64(l.macs);
+    w.u8(l.store.code());
+    w.u64(l.compute_cycles);
+    w.u64(l.l2l1_cycles);
+    w.u64(l.l3_cycles);
+    w.u64(l.latency_cycles);
+    w.u8(l.bound.code());
+    w.u64(l.weight_bytes);
+    w.u64(l.l2l1_bytes);
+    w.u64(l.l1_bytes);
+    w.f64(l.hwce_fraction);
+}
+
+fn decode_layer_report(r: &mut ByteReader) -> Option<LayerReport> {
+    Some(LayerReport {
+        name: r.str()?,
+        macs: r.u64()?,
+        store: WeightStore::from_code(r.u8()?)?,
+        compute_cycles: r.u64()?,
+        l2l1_cycles: r.u64()?,
+        l3_cycles: r.u64()?,
+        latency_cycles: r.u64()?,
+        bound: Bound::from_code(r.u8()?)?,
+        weight_bytes: r.u64()?,
+        l2l1_bytes: r.u64()?,
+        l1_bytes: r.u64()?,
+        hwce_fraction: r.f64()?,
+    })
+}
+
+/// Largest plausible layer count in a persisted report; a corrupt length
+/// prefix beyond it is rejected outright rather than trusted with an
+/// allocation.
+const MAX_LAYERS: usize = 4096;
+
+/// Serialize a whole [`NetworkReport`] (bit-exact; see
+/// [`decode_report`]). Layout: [`NET_ENCODING_VERSION`], network name,
+/// engine/policy codes, operating point, `mram_up_to`
+/// (presence byte + u64), the five energy-ledger components, then the
+/// length-prefixed layer reports.
+pub fn encode_report(rep: &NetworkReport) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(256 + rep.layers.len() * 128);
+    w.u32(NET_ENCODING_VERSION);
+    w.str(&rep.network);
+    w.u8(rep.engine.code());
+    w.u8(rep.policy.code());
+    encode_op(&mut w, &rep.op);
+    match rep.mram_up_to {
+        Some(i) => {
+            w.u8(1);
+            w.u64(i as u64);
+        }
+        None => {
+            w.u8(0);
+            w.u64(0);
+        }
+    }
+    w.f64(rep.energy.compute_pj);
+    w.f64(rep.energy.l2l1_pj);
+    w.f64(rep.energy.l1_pj);
+    w.f64(rep.energy.mram_pj);
+    w.f64(rep.energy.hyperram_pj);
+    w.u32(rep.layers.len() as u32);
+    for l in &rep.layers {
+        encode_layer_report(&mut w, l);
+    }
+    w.into_vec()
+}
+
+/// Inverse of [`encode_report`]. Any malformed field — wrong version,
+/// unknown code, truncation, trailing bytes, absurd layer count —
+/// returns `None`; callers recompute and overwrite.
+pub fn decode_report(bytes: &[u8]) -> Option<NetworkReport> {
+    let mut r = ByteReader::new(bytes);
+    if r.u32()? != NET_ENCODING_VERSION {
+        return None;
+    }
+    let network = r.str()?;
+    let engine = Engine::from_code(r.u8()?)?;
+    let policy = StorePolicy::from_code(r.u8()?)?;
+    let op = decode_op(&mut r)?;
+    let mram_up_to = match (r.u8()?, r.u64()?) {
+        (0, _) => None,
+        (1, i) => Some(i as usize),
+        _ => return None,
+    };
+    let energy = crate::power::EnergyLedger {
+        compute_pj: r.f64()?,
+        l2l1_pj: r.f64()?,
+        l1_pj: r.f64()?,
+        mram_pj: r.f64()?,
+        hyperram_pj: r.f64()?,
+    };
+    let n = r.u32()? as usize;
+    if n > MAX_LAYERS {
+        return None;
+    }
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        layers.push(decode_layer_report(&mut r)?);
+    }
+    if !r.done() {
+        return None;
+    }
+    Some(NetworkReport { network, engine, policy, op, layers, energy, mram_up_to })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::mobilenetv2::mobilenet_v2;
+    use crate::dnn::pipeline::run_network;
+
+    fn sample() -> NetworkReport {
+        run_network(&mobilenet_v2(), PipelineConfig::nominal_sw(StorePolicy::GreedyMram))
+    }
+
+    #[test]
+    fn report_round_trips_bit_exactly() {
+        let rep = sample();
+        let back = decode_report(&encode_report(&rep)).unwrap();
+        assert_eq!(back.network, rep.network);
+        assert_eq!(back.engine, rep.engine);
+        assert_eq!(back.policy, rep.policy);
+        assert_eq!(back.op.name, rep.op.name);
+        assert_eq!(back.op.vdd.to_bits(), rep.op.vdd.to_bits());
+        assert_eq!(back.mram_up_to, rep.mram_up_to);
+        assert_eq!(back.energy.total_pj().to_bits(), rep.energy.total_pj().to_bits());
+        assert_eq!(back.layers.len(), rep.layers.len());
+        for (a, b) in back.layers.iter().zip(&rep.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+            assert_eq!(a.bound, b.bound);
+            assert_eq!(a.hwce_fraction.to_bits(), b.hwce_fraction.to_bits());
+        }
+        assert_eq!(back.total_cycles(), rep.total_cycles());
+        assert_eq!(back.energy_mj().to_bits(), rep.energy_mj().to_bits());
+    }
+
+    #[test]
+    fn struct_hash_sees_topology_name_and_geometry() {
+        let base = mobilenet_v2();
+        let h = network_struct_hash(&base);
+        assert_eq!(h, network_struct_hash(&mobilenet_v2()), "hash is deterministic");
+
+        let mut renamed = mobilenet_v2();
+        renamed.layers[0].name.push('!');
+        assert_ne!(h, network_struct_hash(&renamed), "layer rename must change the hash");
+
+        let mut reshaped = mobilenet_v2();
+        reshaped.layers[0].in_h += 1;
+        assert_ne!(h, network_struct_hash(&reshaped), "geometry edit must change the hash");
+
+        // Net-level name is in the key string, not the struct hash.
+        let mut retitled = mobilenet_v2();
+        retitled.name.push('!');
+        assert_eq!(h, network_struct_hash(&retitled));
+        let cfg = PipelineConfig::nominal_sw(StorePolicy::AllMram);
+        assert_ne!(net_key(&base, &cfg), net_key(&retitled, &cfg));
+    }
+
+    #[test]
+    fn keys_distinguish_every_config_axis() {
+        let net = mobilenet_v2();
+        let base = PipelineConfig::nominal_sw(StorePolicy::AllMram);
+        let k = net_key(&net, &base);
+        assert_ne!(k, net_key(&net, &PipelineConfig::nominal_sw(StorePolicy::AllHyperRam)));
+        assert_ne!(k, net_key(&net, &PipelineConfig::nominal_hwce(StorePolicy::AllMram)));
+        assert_ne!(k, net_key(&net, &PipelineConfig::table7_hwce(StorePolicy::AllMram)));
+        let mut op_edit = base;
+        op_edit.op.f_cl += 1.0;
+        assert_ne!(k, net_key(&net, &op_edit));
+    }
+
+    #[test]
+    fn wire_codes_are_golden() {
+        assert_eq!(
+            [Engine::Software.code(), Engine::HwceOnly.code(), Engine::HwceHybrid.code()],
+            [0, 1, 2]
+        );
+        assert_eq!(
+            [
+                StorePolicy::AllMram.code(),
+                StorePolicy::AllHyperRam.code(),
+                StorePolicy::GreedyMram.code()
+            ],
+            [0, 1, 2]
+        );
+        assert_eq!([WeightStore::Mram.code(), WeightStore::HyperRam.code()], [0, 1]);
+        assert_eq!([Bound::Compute.code(), Bound::L2L1.code(), Bound::L3.code()], [0, 1, 2]);
+        assert_eq!(Engine::HwceHybrid.tag(), "hybrid");
+        assert_eq!(StorePolicy::GreedyMram.tag(), "greedy");
+    }
+
+    /// The DNN half of the key-stability gate (the analogue of
+    /// `tests/isa_encoding.rs::golden_content_hashes`): hard-coded
+    /// struct hash and canonical key string for a fixed synthetic
+    /// network, cross-computed offline with a reference FNV-1a. If
+    /// either changes, every persisted `.net` entry everywhere is
+    /// orphaned — only ever acceptable as a deliberate
+    /// `NET_ENCODING_VERSION` bump updating these constants.
+    #[test]
+    fn golden_struct_hash_and_net_key() {
+        assert_eq!(NET_ENCODING_VERSION, 1);
+        let net = Network {
+            name: "golden-net".into(),
+            layers: vec![
+                Layer {
+                    name: "c0".into(),
+                    kind: LayerKind::Conv { k: 3, stride: 2, cin: 3, cout: 8 },
+                    in_h: 8,
+                    in_w: 8,
+                },
+                Layer {
+                    name: "gp".into(),
+                    kind: LayerKind::GlobalPool { c: 8 },
+                    in_h: 4,
+                    in_w: 4,
+                },
+            ],
+        };
+        assert_eq!(network_struct_hash(&net), 0x5e1fb6ae4c04569c);
+        let cfg = PipelineConfig::nominal_sw(StorePolicy::AllMram);
+        assert_eq!(
+            net_key(&net, &cfg),
+            "golden-net|2l/5e1fb6ae4c04569c|DNN@3fe3333333333333/41adcd6500000000/41adcd6500000000|sw|mram"
+        );
+    }
+
+    /// Every operating-point constant in `power::tables` (and the sweep
+    /// ladder's name) interns, so a persisted report at any of them
+    /// round-trips. Add new constants to `OP_NAMES` or their reports
+    /// recompute on every warm process.
+    #[test]
+    fn every_table_operating_point_interns() {
+        use crate::power::tables;
+        for op in [tables::LV, tables::NOM, tables::HV, tables::DNN] {
+            assert!(
+                intern_op_name(op.name).is_some(),
+                "operating point '{}' missing from OP_NAMES",
+                op.name
+            );
+        }
+        for op in crate::sweep::explore::operating_points(3) {
+            assert!(intern_op_name(op.name).is_some(), "sweep ladder name must intern");
+        }
+    }
+
+    #[test]
+    fn corrupt_reports_decode_as_none() {
+        let good = encode_report(&sample());
+        assert!(decode_report(&good).is_some());
+        for cut in [0, 3, good.len() / 2, good.len() - 1] {
+            assert!(decode_report(&good[..cut]).is_none(), "truncated at {cut}");
+        }
+        let mut versioned = good.clone();
+        versioned[0] ^= 0xFF;
+        assert!(decode_report(&versioned).is_none(), "version mismatch");
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_report(&trailing).is_none(), "trailing garbage");
+        let mut bad_engine = good;
+        // engine code sits right after version + name (4 + 4 + len).
+        let name_len = u32::from_le_bytes([bad_engine[4], bad_engine[5], bad_engine[6], bad_engine[7]]) as usize;
+        bad_engine[8 + name_len] = 0x7F;
+        assert!(decode_report(&bad_engine).is_none(), "unknown engine code");
+    }
+
+    #[test]
+    fn unknown_op_names_fail_the_decode() {
+        let mut rep = sample();
+        rep.op.name = "LV";
+        assert!(decode_report(&encode_report(&rep)).is_some());
+        // All persisted configs use the intern table's names.
+        for n in OP_NAMES {
+            assert!(intern_op_name(n).is_some());
+        }
+        assert!(intern_op_name("bespoke").is_none());
+    }
+}

@@ -2,12 +2,14 @@
 //! RepVGG-A topologies of the evaluation, the DORY-style tiling solver,
 //! and the four-stage double-buffered pipeline latency/energy model.
 
+pub mod encode;
 pub mod graph;
 pub mod mobilenetv2;
 pub mod pipeline;
 pub mod repvgg;
 pub mod tiler;
 
+pub use encode::{net_key, network_struct_hash, NET_ENCODING_VERSION};
 pub use graph::{Layer, LayerKind, Network};
 pub use mobilenetv2::mobilenet_v2;
 pub use pipeline::{

@@ -35,16 +35,16 @@ impl Program {
     ///
     /// Part of the sweep-cache key ([`crate::sweep::SimKey`]): any change
     /// to a kernel's emitted instructions changes this hash, so memoized
-    /// stats can never go stale against the program they were measured on.
-    /// The hasher is the crate's pinned FNV-1a, but the byte stream comes
-    /// from derived `Hash` impls, which Rust does not guarantee stable
-    /// across toolchains — the hash is stable within a build (all the
-    /// in-process cache needs); persisting it across builds (ROADMAP)
-    /// requires an explicit `Inst` byte serialization first.
+    /// stats can never go stale against the program they were measured
+    /// on. The hasher is the crate's pinned FNV-1a and the byte stream is
+    /// the explicit versioned encoding of [`crate::isa::encode`] — never
+    /// a derived `Hash` impl — so the hash is stable across builds *and
+    /// toolchains* and safe to persist in on-disk cache keys
+    /// (golden-asserted by `tests/isa_encoding.rs`).
     pub fn content_hash(&self) -> u64 {
-        use std::hash::{Hash, Hasher};
+        use std::hash::Hasher;
         let mut h = crate::common::Fnv1a::new();
-        self.insts.hash(&mut h);
+        h.write(&super::encode::encode_stream(&self.insts));
         h.finish()
     }
 

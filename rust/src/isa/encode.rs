@@ -1,0 +1,320 @@
+//! Canonical byte encoding of the symbolic ISA (the persisted-key
+//! contract).
+//!
+//! [`Program::content_hash`](crate::isa::Program::content_hash) keys every
+//! on-disk cache entry, so the bytes it hashes must be *defined by this
+//! crate*, not by `#[derive(Hash)]` — Rust documents that derived `Hash`
+//! output may change between releases, and a silent change would orphan
+//! every persisted simulation (the PR 3 store shipped with exactly that
+//! caveat). This module is the fix: every [`Inst`] variant and operand
+//! enum gets an explicit, versioned little-endian encoding, asserted
+//! byte-for-byte by golden-vector tests (`tests/isa_encoding.rs`) so key
+//! stability is a CI invariant rather than a convention.
+//!
+//! ## Layout (version [`ISA_ENCODING_VERSION`])
+//!
+//! One opcode byte selects the variant, then operands follow in
+//! declaration order; registers are one byte, immediates are `i32` LE,
+//! targets are `u32` LE. The opcode determines the record length, so the
+//! concatenated stream is self-delimiting and the encoding is injective
+//! on instruction streams (property-tested).
+//!
+//! ```text
+//! 0x01 Alu      op:u8 rd rs1 rs2
+//! 0x02 AluImm   op:u8 rd rs1 imm:i32
+//! 0x03 Li       rd imm:i32
+//! 0x04 Load     size:u8 rd rs1 imm:i32 post_inc:u8
+//! 0x05 Store    size:u8 rs2 rs1 imm:i32 post_inc:u8
+//! 0x06 Branch   cond:u8 rs1 rs2 target:u32
+//! 0x07 Jal      rd target:u32
+//! 0x08 Jalr     rd rs1
+//! 0x09 Mac      rd rs1 rs2
+//! 0x0A Msu      rd rs1 rs2
+//! 0x0B Simd     op:u8 fmt:u8 rd rs1 rs2
+//! 0x0C LpSetup  lp:u8 tag:u8 (0=imm,1=reg) value:u32 body_end:u32
+//! 0x0D Fp       op:u8 fmt:u8 rd rs1 rs2
+//! 0x0E Barrier
+//! 0x0F Halt
+//! 0x10 Nop
+//! ```
+//!
+//! Changing any code or layout here is a **breaking key change**: bump
+//! [`ISA_ENCODING_VERSION`] (the version is hashed into every content
+//! hash, so old on-disk entries are orphaned, never misread) and update
+//! the golden vectors deliberately in the same commit.
+
+use super::inst::{AluOp, Cond, FpFmt, FpOp, Inst, LoopCount, MemSize, SimdFmt, SimdOp};
+
+/// Version of the byte layout below, hashed into every
+/// [`Program::content_hash`](crate::isa::Program::content_hash). Bump on
+/// any change to the opcode table, operand codes, or field layout.
+pub const ISA_ENCODING_VERSION: u32 = 1;
+
+impl Cond {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            Cond::Eq => 0,
+            Cond::Ne => 1,
+            Cond::Lt => 2,
+            Cond::Ge => 3,
+            Cond::Ltu => 4,
+            Cond::Geu => 5,
+        }
+    }
+}
+
+impl AluOp {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            AluOp::Add => 0,
+            AluOp::Sub => 1,
+            AluOp::Sll => 2,
+            AluOp::Srl => 3,
+            AluOp::Sra => 4,
+            AluOp::And => 5,
+            AluOp::Or => 6,
+            AluOp::Xor => 7,
+            AluOp::Slt => 8,
+            AluOp::Sltu => 9,
+            AluOp::Mul => 10,
+            AluOp::Mulh => 11,
+            AluOp::Div => 12,
+            AluOp::Divu => 13,
+            AluOp::Rem => 14,
+            AluOp::Remu => 15,
+            AluOp::Min => 16,
+            AluOp::Max => 17,
+            AluOp::Abs => 18,
+            AluOp::Clip => 19,
+        }
+    }
+}
+
+impl MemSize {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            MemSize::B => 0,
+            MemSize::Bu => 1,
+            MemSize::H => 2,
+            MemSize::Hu => 3,
+            MemSize::W => 4,
+        }
+    }
+}
+
+impl SimdFmt {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            SimdFmt::B4 => 0,
+            SimdFmt::H2 => 1,
+        }
+    }
+}
+
+impl SimdOp {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            SimdOp::Add => 0,
+            SimdOp::Sub => 1,
+            SimdOp::Min => 2,
+            SimdOp::Max => 3,
+            SimdOp::Avg => 4,
+            SimdOp::SDotSp => 5,
+            SimdOp::SDotUp => 6,
+            SimdOp::Pack => 7,
+        }
+    }
+}
+
+impl FpFmt {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            FpFmt::S => 0,
+            FpFmt::H => 1,
+            FpFmt::B => 2,
+            FpFmt::VH => 3,
+            FpFmt::VB => 4,
+        }
+    }
+}
+
+impl FpOp {
+    /// Stable wire code (golden-asserted; append-only).
+    pub fn code(self) -> u8 {
+        match self {
+            FpOp::Add => 0,
+            FpOp::Sub => 1,
+            FpOp::Mul => 2,
+            FpOp::Madd => 3,
+            FpOp::Msub => 4,
+            FpOp::Min => 5,
+            FpOp::Max => 6,
+            FpOp::Div => 7,
+            FpOp::Sqrt => 8,
+            FpOp::Abs => 9,
+            FpOp::Neg => 10,
+            FpOp::CmpLt => 11,
+            FpOp::CmpLe => 12,
+            FpOp::CmpEq => 13,
+            FpOp::CvtIF => 14,
+            FpOp::CvtFI => 15,
+            FpOp::CvtSH2 => 16,
+            FpOp::CvtH2S0 => 17,
+            FpOp::CvtH2S1 => 18,
+            FpOp::DotpEx => 19,
+        }
+    }
+}
+
+fn target_u32(t: usize) -> u32 {
+    debug_assert!(t <= u32::MAX as usize, "branch target {t} exceeds u32");
+    t as u32
+}
+
+impl Inst {
+    /// Append this instruction's canonical encoding to `out`.
+    ///
+    /// The layout is the module-level opcode table; the opcode byte
+    /// determines the record length, so concatenated encodings parse
+    /// unambiguously and distinct instruction streams encode to distinct
+    /// byte streams.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match *self {
+            Inst::Alu { op, rd, rs1, rs2 } => {
+                out.extend_from_slice(&[0x01, op.code(), rd, rs1, rs2]);
+            }
+            Inst::AluImm { op, rd, rs1, imm } => {
+                out.extend_from_slice(&[0x02, op.code(), rd, rs1]);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Inst::Li { rd, imm } => {
+                out.extend_from_slice(&[0x03, rd]);
+                out.extend_from_slice(&imm.to_le_bytes());
+            }
+            Inst::Load { size, rd, rs1, imm, post_inc } => {
+                out.extend_from_slice(&[0x04, size.code(), rd, rs1]);
+                out.extend_from_slice(&imm.to_le_bytes());
+                out.push(post_inc as u8);
+            }
+            Inst::Store { size, rs2, rs1, imm, post_inc } => {
+                out.extend_from_slice(&[0x05, size.code(), rs2, rs1]);
+                out.extend_from_slice(&imm.to_le_bytes());
+                out.push(post_inc as u8);
+            }
+            Inst::Branch { cond, rs1, rs2, target } => {
+                out.extend_from_slice(&[0x06, cond.code(), rs1, rs2]);
+                out.extend_from_slice(&target_u32(target).to_le_bytes());
+            }
+            Inst::Jal { rd, target } => {
+                out.extend_from_slice(&[0x07, rd]);
+                out.extend_from_slice(&target_u32(target).to_le_bytes());
+            }
+            Inst::Jalr { rd, rs1 } => {
+                out.extend_from_slice(&[0x08, rd, rs1]);
+            }
+            Inst::Mac { rd, rs1, rs2 } => {
+                out.extend_from_slice(&[0x09, rd, rs1, rs2]);
+            }
+            Inst::Msu { rd, rs1, rs2 } => {
+                out.extend_from_slice(&[0x0A, rd, rs1, rs2]);
+            }
+            Inst::Simd { op, fmt, rd, rs1, rs2 } => {
+                out.extend_from_slice(&[0x0B, op.code(), fmt.code(), rd, rs1, rs2]);
+            }
+            Inst::LpSetup { lp, count, body_end } => {
+                let (tag, value) = match count {
+                    LoopCount::Imm(n) => (0u8, n),
+                    LoopCount::Reg(r) => (1u8, r as u32),
+                };
+                out.extend_from_slice(&[0x0C, lp, tag]);
+                out.extend_from_slice(&value.to_le_bytes());
+                out.extend_from_slice(&target_u32(body_end).to_le_bytes());
+            }
+            Inst::Fp { op, fmt, rd, rs1, rs2 } => {
+                out.extend_from_slice(&[0x0D, op.code(), fmt.code(), rd, rs1, rs2]);
+            }
+            Inst::Barrier => out.push(0x0E),
+            Inst::Halt => out.push(0x0F),
+            Inst::Nop => out.push(0x10),
+        }
+    }
+
+    /// This instruction's canonical encoding as a fresh vector
+    /// (convenience over [`Inst::encode_into`]).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14);
+        self.encode_into(&mut out);
+        out
+    }
+}
+
+/// Encode a resolved instruction stream: the [`ISA_ENCODING_VERSION`]
+/// (u32 LE), the instruction count (u32 LE), then each instruction's
+/// record. This is the exact byte stream
+/// [`Program::content_hash`](crate::isa::Program::content_hash) runs the
+/// pinned FNV-1a over.
+pub fn encode_stream(insts: &[Inst]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + insts.len() * 14);
+    out.extend_from_slice(&ISA_ENCODING_VERSION.to_le_bytes());
+    out.extend_from_slice(&(insts.len() as u32).to_le_bytes());
+    for i in insts {
+        i.encode_into(&mut out);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_lengths_match_the_opcode_table() {
+        let cases: [(Inst, usize); 17] = [
+            (Inst::Alu { op: AluOp::Add, rd: 1, rs1: 2, rs2: 3 }, 5),
+            (Inst::AluImm { op: AluOp::Add, rd: 1, rs1: 2, imm: -1 }, 8),
+            (Inst::Li { rd: 1, imm: 7 }, 6),
+            (Inst::Load { size: MemSize::W, rd: 1, rs1: 2, imm: 4, post_inc: true }, 9),
+            (Inst::Store { size: MemSize::B, rs2: 1, rs1: 2, imm: 0, post_inc: false }, 9),
+            (Inst::Branch { cond: Cond::Ne, rs1: 1, rs2: 2, target: 9 }, 8),
+            (Inst::Jal { rd: 0, target: 3 }, 6),
+            (Inst::Jalr { rd: 0, rs1: 1 }, 3),
+            (Inst::Mac { rd: 1, rs1: 2, rs2: 3 }, 4),
+            (Inst::Msu { rd: 1, rs1: 2, rs2: 3 }, 4),
+            (Inst::Simd { op: SimdOp::SDotSp, fmt: SimdFmt::B4, rd: 1, rs1: 2, rs2: 3 }, 6),
+            (Inst::LpSetup { lp: 0, count: LoopCount::Imm(10), body_end: 4 }, 11),
+            (Inst::LpSetup { lp: 1, count: LoopCount::Reg(5), body_end: 4 }, 11),
+            (Inst::Fp { op: FpOp::Madd, fmt: FpFmt::S, rd: 1, rs1: 2, rs2: 3 }, 6),
+            (Inst::Barrier, 1),
+            (Inst::Halt, 1),
+            (Inst::Nop, 1),
+        ];
+        for (inst, want) in cases {
+            assert_eq!(inst.encode().len(), want, "{inst:?}");
+        }
+    }
+
+    #[test]
+    fn stream_prefixes_version_and_count() {
+        let bytes = encode_stream(&[Inst::Nop, Inst::Halt]);
+        assert_eq!(&bytes[..4], &ISA_ENCODING_VERSION.to_le_bytes());
+        assert_eq!(&bytes[4..8], &2u32.to_le_bytes());
+        assert_eq!(&bytes[8..], &[0x10, 0x0F]);
+    }
+
+    #[test]
+    fn loop_count_forms_disambiguate() {
+        // Imm(5) and Reg(5) carry the same value word; only the tag
+        // separates them — it must.
+        let imm = Inst::LpSetup { lp: 0, count: LoopCount::Imm(5), body_end: 2 }.encode();
+        let reg = Inst::LpSetup { lp: 0, count: LoopCount::Reg(5), body_end: 2 }.encode();
+        assert_ne!(imm, reg);
+        assert_eq!(imm[2], 0);
+        assert_eq!(reg[2], 1);
+    }
+}

@@ -18,10 +18,12 @@
 //! single register file" (§IV-A).
 
 pub mod asm;
+pub mod encode;
 pub mod inst;
 pub mod predecode;
 
 pub use asm::{Asm, Label, Program};
+pub use encode::ISA_ENCODING_VERSION;
 pub use inst::{
     AluOp, Cond, FpFmt, FpOp, Inst, InstClass, LoopCount, MemSize, SimdFmt, SimdOp,
 };

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! vega list                 list reproduction ids
-//! vega repro <id>|all [--jobs N]
+//! vega repro <id>|all [--jobs N] [--stats]
 //!                           regenerate a paper table/figure through the
 //!                           sweep engine (N workers; output is byte-
 //!                           identical for any N — default VEGA_JOBS or
-//!                           the machine's parallelism)
+//!                           the machine's parallelism); --stats prints
+//!                           the kernel- and network-cache counters
+//!                           (memory + both on-disk tiers) to stderr
 //! vega sweep [--cores 1..9] [--precision int8,fp16,...]
 //!            [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]
 //!                           render a user-defined design-space grid
@@ -21,11 +23,13 @@
 //!                           report cycles / rates / contention
 //! ```
 //!
-//! `repro` and `sweep` run on a *persistent* engine: simulations land in
-//! the on-disk cache (`$VEGA_CACHE_DIR`, default `target/vega-cache`), so
-//! a re-invocation of the same grid serves every simulation from disk.
-//! `VEGA_CACHE=off` disables persistence. (Hand-rolled argument parsing:
-//! clap is unavailable offline, DESIGN.md §5.)
+//! `repro` and `sweep` run on a *persistent* engine: kernel simulations
+//! and DNN network reports land in the on-disk cache (`$VEGA_CACHE_DIR`,
+//! default `target/vega-cache`), so a re-invocation of the same grid or
+//! report serves everything from disk. `VEGA_CACHE=off|0|false|no`
+//! (case-insensitive) disables persistence — see
+//! `sweep::persist::DiskStore::open_default`. (Hand-rolled argument
+//! parsing: clap is unavailable offline, DESIGN.md §5.)
 
 use vega::bench;
 use vega::runtime::{Runtime, Tensor};
@@ -36,7 +40,7 @@ fn usage() -> ! {
         "usage: vega <command>\n\
          commands:\n\
            list                 list reproduction ids\n\
-           repro <id>|all [--jobs N]\n\
+           repro <id>|all [--jobs N] [--stats]\n\
                                 regenerate a paper table/figure\n\
            sweep [--cores 1..9] [--precision int8,fp16,...]\n\
                  [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]\n\
@@ -62,12 +66,14 @@ fn main() {
         Some("repro") => {
             let id = args.get(1).map(String::as_str).unwrap_or_else(|| usage());
             let mut jobs = vega::sweep::default_jobs();
+            let mut stats = false;
             let mut it = args[2..].iter();
             while let Some(a) = it.next() {
                 match a.as_str() {
                     "--jobs" => {
                         jobs = it.next().and_then(|v| v.parse().ok()).unwrap_or_else(|| usage())
                     }
+                    "--stats" => stats = true,
                     _ => usage(),
                 }
             }
@@ -85,6 +91,16 @@ fn main() {
                     }
                 }
             }
+            if stats {
+                let (sh, sm) = eng.cache().counters();
+                let (nh, nm) = eng.network_counters();
+                eprintln!(
+                    "repro stats: sims: {sh} hits / {sm} misses; nets: {nh} hits / {nm} misses; \
+                     disk(sim): {}; disk(net): {}",
+                    fmt_disk(eng.disk_counters()),
+                    fmt_disk(eng.disk_net_counters()),
+                );
+            }
         }
         Some("sweep") => {
             let cmd = vega::sweep::explore::SweepCmd::parse(&args[1..]).unwrap_or_else(|e| {
@@ -95,13 +111,10 @@ fn main() {
             print!("{}", vega::sweep::explore::render(&eng, &cmd.spec));
             if cmd.stats {
                 let (h, m) = eng.cache().counters();
-                let disk = match eng.disk_counters() {
-                    Some((dh, dm, dw)) => format!("{dh} hits / {dm} misses / {dw} writes"),
-                    None => "off".into(),
-                };
                 eprintln!(
-                    "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {disk}",
-                    cmd.spec.rows()
+                    "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {}",
+                    cmd.spec.rows(),
+                    fmt_disk(eng.disk_counters()),
                 );
             }
         }
@@ -144,6 +157,14 @@ fn main() {
             run_sim(kernel, cores, size);
         }
         _ => usage(),
+    }
+}
+
+/// Render one disk-tier counter triple for the `--stats` lines.
+fn fmt_disk(counters: Option<(u64, u64, u64)>) -> String {
+    match counters {
+        Some((h, m, w)) => format!("{h} hits / {m} misses / {w} writes"),
+        None => "off".into(),
     }
 }
 

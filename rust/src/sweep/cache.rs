@@ -1,6 +1,11 @@
 //! The simulation memo: each distinct key is computed exactly once per
 //! cache lifetime, even under concurrent lookups.
 //!
+//! This layer is in-memory only and may use derived `Hash`/`HashMap`
+//! machinery freely; everything *persisted* (the on-disk key strings and
+//! payloads of [`crate::sweep::persist`]) is byte-defined by the
+//! explicit encoders instead.
+//!
 //! Concurrency protocol (`OnceMap`): the global map only hands out
 //! per-key slots; the computation itself runs while holding that key's
 //! slot lock, so a second worker asking for an in-flight key blocks until

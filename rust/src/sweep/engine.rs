@@ -151,28 +151,31 @@ impl SweepEngine {
     /// store-policy / double-buffering ablations). `run_network` is a pure
     /// function of the network and config, so recurring (network, config)
     /// pairs across reports — e.g. MobileNetV2 `AllMram`, used by Fig. 9,
-    /// Fig. 10, Fig. 11 and an ablation — run once per engine. The key
-    /// includes a content hash of the per-layer structure (the DNN
-    /// analogue of the kernel cache's `Program::content_hash`), so a
-    /// topology edit that preserves name and aggregate totals can never
-    /// serve a stale per-layer breakdown.
+    /// Fig. 10, Fig. 11 and an ablation — run once per engine, and, on a
+    /// persistent engine, once per *store directory*: in-memory misses
+    /// probe the on-disk network tier before running the pipeline, then
+    /// write back (the same layering as [`SweepEngine::result`], with the
+    /// same counter transparency).
+    ///
+    /// The memo key is the canonical [`crate::dnn::net_key`] string: an
+    /// explicit byte-encoded structure hash of the per-layer topology
+    /// (the DNN analogue of the kernel cache's `Program::content_hash`)
+    /// plus the full operating point, engine and policy — so a topology
+    /// edit that preserves name and aggregate totals can never serve a
+    /// stale per-layer breakdown, on disk or in memory.
     pub fn network_report(&self, net: &Network, config: PipelineConfig) -> NetworkReport {
-        use std::hash::Hasher;
-        let mut h = crate::common::Fnv1a::new();
-        h.write(format!("{:?}", net.layers).as_bytes());
-        let key = format!(
-            "{}|{}l/{:016x}|{}@{:x}/{:x}/{:x}|{:?}|{:?}",
-            net.name,
-            net.layers.len(),
-            h.finish(),
-            config.op.name,
-            config.op.vdd.to_bits(),
-            config.op.f_soc.to_bits(),
-            config.op.f_cl.to_bits(),
-            config.engine,
-            config.policy,
-        );
-        self.nets.get_or_compute(key, || run_network(net, config))
+        let key = crate::dnn::net_key(net, &config);
+        self.nets.get_or_compute(key.clone(), || {
+            if let Some(disk) = &self.disk {
+                if let Some(cached) = disk.load_net(&key) {
+                    return cached;
+                }
+                let fresh = run_network(net, config);
+                disk.store_net(&key, &fresh);
+                return fresh;
+            }
+            run_network(net, config)
+        })
     }
 
     /// (hits, misses) of the network-report memo.
@@ -205,12 +208,20 @@ impl SweepEngine {
         self.hd.counters()
     }
 
-    /// (hits, misses, writes) of the on-disk store, or `None` for a
-    /// memory-only engine. Disk lookups happen once per in-memory miss,
-    /// so on a warm store `hits` equals the in-memory miss count and
-    /// `misses`/`writes` are zero.
+    /// (hits, misses, writes) of the on-disk store's kernel tier, or
+    /// `None` for a memory-only engine. Disk lookups happen once per
+    /// in-memory miss, so on a warm store `hits` equals the in-memory
+    /// miss count and `misses`/`writes` are zero.
     pub fn disk_counters(&self) -> Option<(u64, u64, u64)> {
         self.disk.as_ref().map(|d| d.counters())
+    }
+
+    /// (hits, misses, writes) of the on-disk store's network-report
+    /// tier, or `None` for a memory-only engine. Same layering as
+    /// [`SweepEngine::disk_counters`]: one disk probe per in-memory
+    /// network-memo miss.
+    pub fn disk_net_counters(&self) -> Option<(u64, u64, u64)> {
+        self.disk.as_ref().map(|d| d.net_counters())
     }
 
     /// Drain a scenario list through the worker pool; `out[i]` corresponds

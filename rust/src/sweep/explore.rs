@@ -11,7 +11,9 @@
 //! so every DVFS row of a cell derives analytically from the same cached
 //! [`crate::cluster::ClusterStats`] — and the grid fans out across the
 //! engine's worker pool (`--jobs N`), warm-starting from the on-disk
-//! [`crate::sweep::DiskStore`] when the engine is persistent.
+//! [`crate::sweep::DiskStore`] when the engine is persistent (since the
+//! cache keys are byte-defined, a warm store may even have been produced
+//! by a different toolchain or machine).
 //!
 //! Determinism: rows are emitted in nested grid order (cores, then
 //! precision, then DVFS point), never completion order, so the rendered

@@ -33,10 +33,13 @@
 //! * [`explore`] — user-defined design-space grids (`vega sweep`): core
 //!   counts 1–9 × precisions × an arbitrarily fine DVFS ladder, rendered
 //!   as CSV/Markdown/JSON through the same cache and worker pool.
-//! * [`persist`] — the on-disk [`DiskStore`] (one versioned,
-//!   checksummed file per [`SimKey`]) that lets persistent engines —
-//!   chiefly the CLI's — share simulations **across processes**; the
-//!   test suite's regression oracles deliberately stay memory-only.
+//! * [`persist`] — the on-disk [`DiskStore`] (one versioned, checksummed
+//!   file per [`SimKey`] and per DNN network run) that lets persistent
+//!   engines — chiefly the CLI's — share simulations **and network
+//!   reports** across processes. Keys derive from the explicit byte
+//!   encodings ([`crate::isa::encode`], [`crate::dnn::encode`]), so the
+//!   store survives toolchain bumps and can be shared across machines;
+//!   the test suite's regression oracles deliberately stay memory-only.
 
 pub mod cache;
 pub mod engine;

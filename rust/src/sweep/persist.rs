@@ -1,58 +1,70 @@
-//! Persistent on-disk [`SimResult`] store: one file per [`SimKey`],
+//! Persistent on-disk store for simulation results: one file per key,
 //! shared across processes by every *persistent* engine — the `vega`
 //! CLI's repro/sweep commands and anything built on
 //! [`crate::sweep::SweepEngine::persistent`] /
 //! [`crate::sweep::SweepEngine::global`].
 //!
-//! The in-memory [`crate::sweep::SimCache`] dies with its engine, so
-//! every CLI invocation used to re-simulate the same programs. The
-//! [`DiskStore`] sits *inside* the in-memory cache's compute closure: an
-//! in-memory miss first probes the store, and only simulates (then
-//! writes back) when the disk misses too. In-memory hit/miss semantics —
-//! and therefore every counter the determinism tests assert — are
-//! unchanged by the disk layer. The *test suite* deliberately stays off
-//! the shared store: the regression oracles (`paper_anchors`,
-//! `sweep_determinism`, the coordinator unit tests) run memory-only so a
-//! stale entry can never satisfy them, and `tests/disk_cache.rs`
-//! exercises persistence against private per-test directories.
+//! Two entry types share the directory and the entry format:
+//!
+//! * **kernel entries** (`<fnv>.sim`): one [`SimResult`] per [`SimKey`]
+//!   — the cluster simulations behind tables/figures and `vega sweep`;
+//! * **network entries** (`<fnv>.net`): one
+//!   [`NetworkReport`](crate::dnn::NetworkReport) per canonical
+//!   [`crate::dnn::net_key`] — the DNN pipeline runs recurring across
+//!   Figs. 9–11, Tables VII/VIII and the ablations.
+//!
+//! The in-memory memos ([`crate::sweep::SimCache`] and the engine's
+//! network map) die with their engine, so every CLI invocation used to
+//! re-simulate the same programs and re-run the same pipelines. The
+//! [`DiskStore`] sits *inside* the in-memory miss path: an in-memory miss
+//! first probes the store, and only computes (then writes back) when the
+//! disk misses too. In-memory hit/miss semantics — and therefore every
+//! counter the determinism tests assert — are unchanged by the disk
+//! layer. The *test suite* deliberately stays off the shared store: the
+//! regression oracles (`paper_anchors`, `sweep_determinism`, the
+//! coordinator unit tests) run memory-only so a stale entry can never
+//! satisfy them, and `tests/disk_cache.rs` / `tests/network_store.rs`
+//! exercise persistence against private per-test directories.
 //!
 //! ## File format (version [`STORE_VERSION`], model epoch [`MODEL_EPOCH`])
 //!
 //! ```text
-//! magic    b"VEGASIMC"                    8 bytes
-//! version  u32 LE  = STORE_VERSION        layout of this very file
-//! epoch    u32 LE  = MODEL_EPOCH          timing-model generation
-//! key      u32 LE length + UTF-8 bytes    full SimKey echo (collision guard)
-//! payload  u64 LE length + bytes          serialized SimResult
-//! checksum u64 LE                         FNV-1a of the payload bytes
+//! magic    b"VEGASIMC" / b"VEGANETR"     8 bytes   (entry type)
+//! version  u32 LE  = STORE_VERSION       layout of this very file
+//! epoch    u32 LE  = MODEL_EPOCH         timing-model generation
+//! key      u32 LE length + UTF-8 bytes   full key echo (collision guard)
+//! payload  u64 LE length + bytes         serialized result
+//! checksum u64 LE                        FNV-1a of the payload bytes
 //! ```
 //!
 //! Reads are corruption-tolerant by construction: any mismatch — magic,
 //! version, epoch, key echo, truncation, checksum, trailing garbage —
-//! makes [`DiskStore::load`] return `None` and the caller re-simulates
-//! (overwriting the entry). Writes go to a per-process temp file and are
-//! `rename`d into place, so a concurrent reader can never observe a
-//! partial entry and concurrent writers of the same key race benignly
-//! (both write identical bytes: simulations are pure).
+//! reads as a miss and the caller recomputes (overwriting the entry).
+//! Writes go to a temp file named from the PID plus a per-process
+//! sequence number — two concurrent processes on one cache directory can
+//! never collide on a temp path — and are `rename`d into place, so a
+//! concurrent reader can never observe a partial entry and same-key
+//! racers are benign (both write identical bytes: simulations are pure).
 //!
 //! ## Staleness guards
 //!
-//! * A *kernel* change changes `Program::content_hash`, which is part of
-//!   the [`SimKey`] (and of the file name), so stale entries are simply
-//!   never looked up again.
-//! * A *timing-model* change (scheduler, stall costs) can change the
-//!   stats of an unchanged program. Bump [`MODEL_EPOCH`] with any such
-//!   change; every older entry then reads as a miss.
-//! * `Program::content_hash` feeds derived `Hash` impls, which Rust does
-//!   not guarantee stable across toolchains — after a toolchain change,
-//!   old entries are orphaned (never hit), not wrong. `ROADMAP.md` tracks
-//!   the explicit `Inst` byte serialization that would make keys
-//!   toolchain-portable.
+//! * A *kernel* change changes `Program::content_hash`; a *topology*
+//!   change changes [`crate::dnn::network_struct_hash`]. Both are part
+//!   of their key (and of the file name), so stale entries are simply
+//!   never looked up again. Since PR 4 both hashes run over the explicit
+//!   byte encodings of [`crate::isa::encode`] / [`crate::dnn::encode`] —
+//!   no derived `Hash` feeds any persisted key, so keys survive
+//!   toolchain bumps and may be shared across machines.
+//! * A *timing-model* change (scheduler, stall costs, pipeline-model
+//!   constants) can change the stats of an unchanged program or network.
+//!   Bump [`MODEL_EPOCH`] with any such change; every older entry then
+//!   reads as a miss.
 //!
 //! The store location is `$VEGA_CACHE_DIR` if set, else
 //! `$CARGO_TARGET_DIR/vega-cache`, else `target/vega-cache` relative to
-//! the working directory; `VEGA_CACHE=off` disables persistence entirely
-//! (see [`DiskStore::open_default`]).
+//! the working directory; `VEGA_CACHE=off|0|false|no` (case-insensitive)
+//! disables persistence entirely (see [`DiskStore::open_default`], the
+//! one place the accepted values are defined).
 
 use std::fs;
 use std::hash::Hasher;
@@ -62,34 +74,68 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use super::scenario::{SimKey, SimResult};
 use crate::cluster::ClusterStats;
+use crate::common::{ByteReader, ByteWriter};
+use crate::dnn::NetworkReport;
 use crate::iss::stats::{ClassCounts, CoreStats};
 use crate::kernels::KernelRun;
 
 /// On-disk layout version of one store entry. Bump when the serialized
-/// byte layout itself changes.
-pub const STORE_VERSION: u32 = 1;
+/// byte layout itself changes. Version 2: cache keys derive from the
+/// explicit ISA/DNN byte encodings (toolchain-portable) and the network
+/// entry type exists; version-1 entries (derived-`Hash` keys) read as
+/// misses.
+pub const STORE_VERSION: u32 = 2;
 
 /// Timing-model generation. Bump whenever a change to the simulator can
-/// alter the [`ClusterStats`] of an *unchanged* program (scheduler
-/// rework, stall-cost recalibration, arbitration changes) — the program
-/// content hash cannot see those, and a stale entry would otherwise serve
-/// pre-change cycle counts.
+/// alter the [`ClusterStats`] (or a
+/// [`NetworkReport`](crate::dnn::NetworkReport)) of an *unchanged*
+/// program — the content hashes cannot see those, and a stale entry
+/// would otherwise serve pre-change cycle counts.
 pub const MODEL_EPOCH: u32 = 1;
 
-const MAGIC: &[u8; 8] = b"VEGASIMC";
+const SIM_MAGIC: &[u8; 8] = b"VEGASIMC";
+const NET_MAGIC: &[u8; 8] = b"VEGANETR";
 
-/// A directory of serialized [`SimResult`]s, one file per [`SimKey`].
+/// Hit/miss/write counters of one entry tier.
+#[derive(Debug, Default)]
+struct TierCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    writes: AtomicU64,
+}
+
+impl TierCounters {
+    fn observe(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.misses.load(Ordering::Relaxed),
+            self.writes.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// A directory of serialized results: kernel [`SimResult`]s (`.sim`) and
+/// [`NetworkReport`](crate::dnn::NetworkReport)s (`.net`), one file per
+/// key, with independent hit/miss/write counters per tier.
 ///
-/// All methods are best-effort and lock-free: `load` treats every failure
-/// mode as a miss, `store` silently drops entries it cannot write (a
+/// All methods are best-effort and lock-free: loads treat every failure
+/// mode as a miss, stores silently drop entries they cannot write (a
 /// read-only cache directory degrades to the in-memory-only behaviour,
 /// it never fails a simulation).
 pub struct DiskStore {
     dir: PathBuf,
-    hits: AtomicU64,
-    misses: AtomicU64,
-    writes: AtomicU64,
-    /// Per-process temp-file disambiguator (concurrent writers).
+    sim: TierCounters,
+    net: TierCounters,
+    /// Per-process temp-file disambiguator (paired with the PID in the
+    /// temp name; see `write_entry`).
     tmp_seq: AtomicU64,
 }
 
@@ -100,20 +146,23 @@ impl DiskStore {
         fs::create_dir_all(&dir)?;
         Ok(Self {
             dir,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
-            writes: AtomicU64::new(0),
+            sim: TierCounters::default(),
+            net: TierCounters::default(),
             tmp_seq: AtomicU64::new(0),
         })
     }
 
     /// Open the default store: `$VEGA_CACHE_DIR` if set, else
     /// `$CARGO_TARGET_DIR/vega-cache`, else `target/vega-cache`.
-    /// Returns `Ok(None)` when persistence is disabled via
-    /// `VEGA_CACHE=off` (or `0`).
+    ///
+    /// Returns `Ok(None)` when persistence is disabled via the
+    /// `VEGA_CACHE` environment variable. Accepted disable values
+    /// (case-insensitive, whitespace-trimmed): `off`, `0`, `false`,
+    /// `no`. Anything else — including empty — leaves persistence on.
+    /// README.md's cache section documents the same list and defers here.
     pub fn open_default() -> io::Result<Option<Self>> {
         if let Ok(v) = std::env::var("VEGA_CACHE") {
-            if v == "off" || v == "0" {
+            if matches!(v.trim().to_ascii_lowercase().as_str(), "off" | "0" | "false" | "no") {
                 return Ok(None);
             }
         }
@@ -132,52 +181,88 @@ impl DiskStore {
         &self.dir
     }
 
-    /// (hits, misses, writes) so far. Every [`DiskStore::load`] counts as
-    /// exactly one hit or miss; every successful [`DiskStore::store`] as
-    /// one write.
+    /// (hits, misses, writes) of the kernel tier so far. Every
+    /// [`DiskStore::load`] counts as exactly one hit or miss; every
+    /// successful [`DiskStore::store`] as one write.
     pub fn counters(&self) -> (u64, u64, u64) {
-        (
-            self.hits.load(Ordering::Relaxed),
-            self.misses.load(Ordering::Relaxed),
-            self.writes.load(Ordering::Relaxed),
-        )
+        self.sim.snapshot()
     }
 
-    /// Look `key` up. Any read/format/checksum failure is a miss.
+    /// (hits, misses, writes) of the network-report tier
+    /// ([`DiskStore::load_net`] / [`DiskStore::store_net`]).
+    pub fn net_counters(&self) -> (u64, u64, u64) {
+        self.net.snapshot()
+    }
+
+    /// Look a kernel `key` up. Any read/format/checksum failure is a miss.
     pub fn load(&self, key: &SimKey) -> Option<SimResult> {
-        let res = fs::read(self.path_for(key)).ok().and_then(|bytes| decode_entry(key, &bytes));
-        match &res {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
-        };
+        let key_str = key_string(key);
+        let res = fs::read(self.path_for(&key_str, "sim"))
+            .ok()
+            .and_then(|bytes| decode_entry(SIM_MAGIC, &key_str, &bytes))
+            .and_then(|payload| decode_payload(&payload));
+        self.sim.observe(res.is_some());
         res
     }
 
     /// Write `result` under `key` (atomic temp-file + rename;
     /// best-effort — errors are swallowed, the entry is simply absent).
     pub fn store(&self, key: &SimKey, result: &SimResult) {
-        let bytes = encode_entry(key, result);
+        let key_str = key_string(key);
+        let bytes = encode_entry(SIM_MAGIC, &key_str, &encode_payload(result));
+        if self.write_entry(&self.path_for(&key_str, "sim"), &bytes) {
+            self.sim.writes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Look a network-report `key` (a [`crate::dnn::net_key`] string) up.
+    /// Any read/format/checksum failure is a miss.
+    pub fn load_net(&self, key: &str) -> Option<NetworkReport> {
+        let res = fs::read(self.path_for(key, "net"))
+            .ok()
+            .and_then(|bytes| decode_entry(NET_MAGIC, key, &bytes))
+            .and_then(|payload| crate::dnn::encode::decode_report(&payload));
+        self.net.observe(res.is_some());
+        res
+    }
+
+    /// Write `report` under a [`crate::dnn::net_key`] string (same
+    /// temp-file + rename protocol as [`DiskStore::store`]).
+    pub fn store_net(&self, key: &str, report: &NetworkReport) {
+        let bytes = encode_entry(NET_MAGIC, key, &crate::dnn::encode::encode_report(report));
+        if self.write_entry(&self.path_for(key, "net"), &bytes) {
+            self.net.writes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Write `bytes` to `dest` atomically: a temp file named from the
+    /// PID *and* a per-process sequence number (concurrent processes on
+    /// one directory can never collide on the temp path; concurrent
+    /// writes within a process get distinct sequence numbers), renamed
+    /// into place. Returns whether the entry landed.
+    fn write_entry(&self, dest: &Path, bytes: &[u8]) -> bool {
         let tmp = self.dir.join(format!(
             ".tmp-{}-{}",
             std::process::id(),
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
         ));
-        if fs::write(&tmp, &bytes).is_ok() && fs::rename(&tmp, self.path_for(key)).is_ok() {
-            self.writes.fetch_add(1, Ordering::Relaxed);
+        if fs::write(&tmp, bytes).is_ok() && fs::rename(&tmp, dest).is_ok() {
+            true
         } else {
             // Drop the temp file whether the write or the rename failed —
             // names are never reused, so litter would accumulate forever.
             let _ = fs::remove_file(&tmp);
+            false
         }
     }
 
     /// File an entry lives in: an FNV-1a tag of the canonical key string
     /// (the full string is echoed inside the file, so a tag collision
-    /// reads as a miss, never as wrong data).
-    fn path_for(&self, key: &SimKey) -> PathBuf {
+    /// reads as a miss, never as wrong data) plus the tier extension.
+    fn path_for(&self, key_str: &str, ext: &str) -> PathBuf {
         let mut h = crate::common::Fnv1a::new();
-        h.write(key_string(key).as_bytes());
-        self.dir.join(format!("{:016x}.sim", h.finish()))
+        h.write(key_str.as_bytes());
+        self.dir.join(format!("{:016x}.{ext}", h.finish()))
     }
 }
 
@@ -190,69 +275,11 @@ fn key_string(key: &SimKey) -> String {
 }
 
 // ---------------------------------------------------------------------
-// Byte-level encode/decode (std-only; serde is unavailable offline).
+// Entry framing (shared by both tiers) and the SimResult payload codec
+// (the NetworkReport payload codec lives in `crate::dnn::encode`).
 // ---------------------------------------------------------------------
 
-struct Enc(Vec<u8>);
-
-impl Enc {
-    fn u32(&mut self, v: u32) {
-        self.0.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn u64(&mut self, v: u64) {
-        self.0.extend_from_slice(&v.to_le_bytes());
-    }
-
-    fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
-    }
-
-    fn str(&mut self, s: &str) {
-        self.u32(s.len() as u32);
-        self.0.extend_from_slice(s.as_bytes());
-    }
-}
-
-struct Dec<'a> {
-    buf: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Dec<'a> {
-    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
-        let end = self.pos.checked_add(n)?;
-        if end > self.buf.len() {
-            return None;
-        }
-        let s = &self.buf[self.pos..end];
-        self.pos = end;
-        Some(s)
-    }
-
-    fn u32(&mut self) -> Option<u32> {
-        Some(u32::from_le_bytes(self.take(4)?.try_into().ok()?))
-    }
-
-    fn u64(&mut self) -> Option<u64> {
-        Some(u64::from_le_bytes(self.take(8)?.try_into().ok()?))
-    }
-
-    fn f64(&mut self) -> Option<f64> {
-        Some(f64::from_bits(self.u64()?))
-    }
-
-    fn str(&mut self) -> Option<String> {
-        let n = self.u32()? as usize;
-        String::from_utf8(self.take(n)?.to_vec()).ok()
-    }
-
-    fn done(&self) -> bool {
-        self.pos == self.buf.len()
-    }
-}
-
-fn encode_core_stats(e: &mut Enc, s: &CoreStats) {
+fn encode_core_stats(e: &mut ByteWriter, s: &CoreStats) {
     e.u64(s.cycles);
     e.u64(s.retired);
     e.u64(s.int_ops);
@@ -273,7 +300,7 @@ fn encode_core_stats(e: &mut Enc, s: &CoreStats) {
     }
 }
 
-fn decode_core_stats(d: &mut Dec) -> Option<CoreStats> {
+fn decode_core_stats(d: &mut ByteReader) -> Option<CoreStats> {
     Some(CoreStats {
         cycles: d.u64()?,
         retired: d.u64()?,
@@ -304,7 +331,7 @@ fn decode_core_stats(d: &mut Dec) -> Option<CoreStats> {
 }
 
 fn encode_payload(r: &SimResult) -> Vec<u8> {
-    let mut e = Enc(Vec::with_capacity(2048));
+    let mut e = ByteWriter::with_capacity(2048);
     e.u64(r.outputs_digest);
     e.str(&r.run.name);
     e.u64(r.run.ops);
@@ -318,11 +345,11 @@ fn encode_payload(r: &SimResult) -> Vec<u8> {
     for core in &s.per_core {
         encode_core_stats(&mut e, core);
     }
-    e.0
+    e.into_vec()
 }
 
 fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
-    let mut d = Dec { buf: bytes, pos: 0 };
+    let mut d = ByteReader::new(bytes);
     let outputs_digest = d.u64()?;
     let name = d.str()?;
     let ops = d.u64()?;
@@ -361,30 +388,33 @@ fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
     })
 }
 
-fn encode_entry(key: &SimKey, result: &SimResult) -> Vec<u8> {
-    let payload = encode_payload(result);
+/// Frame a payload: magic, version, epoch, key echo, length-prefixed
+/// payload, FNV checksum of the payload bytes.
+fn encode_entry(magic: &[u8; 8], key_str: &str, payload: &[u8]) -> Vec<u8> {
     let mut h = crate::common::Fnv1a::new();
-    h.write(&payload);
-    let mut e = Enc(Vec::with_capacity(payload.len() + 64));
-    e.0.extend_from_slice(MAGIC);
+    h.write(payload);
+    let mut e = ByteWriter::with_capacity(payload.len() + 64);
+    e.bytes(magic);
     e.u32(STORE_VERSION);
     e.u32(MODEL_EPOCH);
-    e.str(&key_string(key));
+    e.str(key_str);
     e.u64(payload.len() as u64);
-    e.0.extend_from_slice(&payload);
+    e.bytes(payload);
     e.u64(h.finish());
-    e.0
+    e.into_vec()
 }
 
-fn decode_entry(key: &SimKey, bytes: &[u8]) -> Option<SimResult> {
-    let mut d = Dec { buf: bytes, pos: 0 };
-    if d.take(MAGIC.len())? != MAGIC {
+/// Unframe an entry, verifying magic, version, epoch, key echo, length,
+/// checksum, and the absence of trailing bytes. Returns the payload.
+fn decode_entry(magic: &[u8; 8], key_str: &str, bytes: &[u8]) -> Option<Vec<u8>> {
+    let mut d = ByteReader::new(bytes);
+    if d.take(magic.len())? != magic {
         return None;
     }
     if d.u32()? != STORE_VERSION || d.u32()? != MODEL_EPOCH {
         return None;
     }
-    if d.str()? != key_string(key) {
+    if d.str()? != key_str {
         return None;
     }
     let len = d.u64()? as usize;
@@ -398,7 +428,7 @@ fn decode_entry(key: &SimKey, bytes: &[u8]) -> Option<SimResult> {
     if h.finish() != checksum {
         return None;
     }
-    decode_payload(payload)
+    Some(payload.to_vec())
 }
 
 #[cfg(test)]
@@ -419,6 +449,14 @@ mod tests {
         assert_eq!(a.run.stats, b.run.stats);
     }
 
+    fn entry_for(key: &SimKey, r: &SimResult) -> Vec<u8> {
+        encode_entry(SIM_MAGIC, &key_string(key), &encode_payload(r))
+    }
+
+    fn decode_for(key: &SimKey, bytes: &[u8]) -> Option<SimResult> {
+        decode_entry(SIM_MAGIC, &key_string(key), bytes).and_then(|p| decode_payload(&p))
+    }
+
     #[test]
     fn payload_round_trips_bit_exactly() {
         let (_, r) = sample();
@@ -429,39 +467,41 @@ mod tests {
     #[test]
     fn entry_round_trips_and_guards_the_key() {
         let (key, r) = sample();
-        let bytes = encode_entry(&key, &r);
-        assert_same(&r, &decode_entry(&key, &bytes).unwrap());
+        let bytes = entry_for(&key, &r);
+        assert_same(&r, &decode_for(&key, &bytes).unwrap());
         // Same bytes probed under a different key (tag collision) = miss.
         let other = Scenario::IntMatmul { w: IntWidth::I8, cores: 3 }.key();
-        assert!(decode_entry(&other, &bytes).is_none());
+        assert!(decode_for(&other, &bytes).is_none());
+        // And under the other entry type's magic = miss.
+        assert!(decode_entry(NET_MAGIC, &key_string(&key), &bytes).is_none());
     }
 
     #[test]
     fn version_epoch_truncation_and_checksum_mismatches_are_misses() {
         let (key, r) = sample();
-        let good = encode_entry(&key, &r);
+        let good = entry_for(&key, &r);
 
         let mut wrong_version = good.clone();
         wrong_version[8] ^= 0xFF; // first byte of the version field
-        assert!(decode_entry(&key, &wrong_version).is_none());
+        assert!(decode_for(&key, &wrong_version).is_none());
 
         let mut wrong_epoch = good.clone();
         wrong_epoch[12] ^= 0xFF; // first byte of the epoch field
-        assert!(decode_entry(&key, &wrong_epoch).is_none());
+        assert!(decode_for(&key, &wrong_epoch).is_none());
 
         for cut in [0, 7, good.len() / 2, good.len() - 1] {
-            assert!(decode_entry(&key, &good[..cut]).is_none(), "truncated at {cut}");
+            assert!(decode_for(&key, &good[..cut]).is_none(), "truncated at {cut}");
         }
 
         let mut flipped = good.clone();
         let mid = flipped.len() / 2;
         flipped[mid] ^= 0x01;
-        assert!(decode_entry(&key, &flipped).is_none());
+        assert!(decode_for(&key, &flipped).is_none());
 
         let mut trailing = good.clone();
         trailing.push(0);
-        assert!(decode_entry(&key, &trailing).is_none());
+        assert!(decode_for(&key, &trailing).is_none());
 
-        assert_same(&r, &decode_entry(&key, &good).unwrap());
+        assert_same(&r, &decode_for(&key, &good).unwrap());
     }
 }

@@ -60,6 +60,12 @@ impl Default for SimArena {
 
 /// Cache key of one distinct simulation (ISSUE: kernel id, problem size,
 /// precision, core count, plus the assembled program's content hash).
+///
+/// `prog_hash` is [`Program::content_hash`] — FNV-1a over the explicit
+/// versioned byte encoding of [`crate::isa::encode`], never a derived
+/// `Hash` impl — so keys are stable across toolchains and safe to
+/// persist / share between machines. (The `Hash` derive below only feeds
+/// the in-process `HashMap`; no derived hash ever reaches disk.)
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct SimKey {
     pub kernel: String,

@@ -8,9 +8,15 @@
 # (VEGA_BENCH_ITERS=1) so a scheduler regression that hangs or panics is
 # caught even where full benchmarking is too slow; BENCH_hotpath.json and
 # BENCH_sweeps.json land in rust/. The determinism smokes diff --jobs 2
-# runs of `vega repro` and `vega sweep` against serial runs byte-for-byte,
-# and the cache smoke runs the same sweep grid twice against a fresh
-# on-disk store, asserting the second run is served entirely from disk.
+# runs of `vega repro` and `vega sweep` against serial runs byte-for-byte;
+# the cache smokes run the same sweep grid / fig9 repro twice against a
+# fresh on-disk store, asserting the second run is served entirely from
+# disk (kernel tier and network-report tier respectively); and the
+# key-stability gate runs the golden-vector tests that pin the on-disk
+# cache-key byte encoding (a drift there silently orphans every persisted
+# entry everywhere — it must only ever happen as a deliberate
+# ISA_ENCODING_VERSION/NET_ENCODING_VERSION bump that updates the
+# vectors).
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
@@ -30,6 +36,13 @@ echo "== cargo doc --no-deps (warnings fatal) =="
 # triggers cargo's output-filename-collision warning, which RUSTDOCFLAGS
 # cannot gate; the bin is a thin CLI over the documented library.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
+
+echo "== key-stability gate (golden byte/hash vectors) =="
+# These run again under the full `cargo test -q` below; running them
+# first and by name makes a key-encoding drift fail loudly on its own
+# line instead of drowning in an unrelated test-suite failure.
+cargo test -q --test isa_encoding golden
+cargo test -q --lib dnn::encode::tests
 
 echo "== sweep determinism smoke (vega repro table5: --jobs 2 vs serial) =="
 mkdir -p target/ci
@@ -59,6 +72,19 @@ grep -q "disk: 0 hits / 4 misses / 4 writes" target/ci/sweep_cold.log \
 grep -q "disk: 4 hits / 0 misses / 0 writes" target/ci/sweep_warm.log \
     || { echo "FAIL: warm run did not hit the on-disk cache:"; cat target/ci/sweep_warm.log; exit 1; }
 echo "warm process served every simulation from the on-disk cache"
+
+echo "== network-report store smoke (vega repro fig9: cold vs warm process) =="
+rm -rf target/ci/net-cache
+export VEGA_CACHE_DIR=target/ci/net-cache
+./target/release/vega repro fig9 --stats > target/ci/fig9_cold.txt 2> target/ci/fig9_cold.log
+./target/release/vega repro fig9 --stats > target/ci/fig9_warm.txt 2> target/ci/fig9_warm.log
+unset VEGA_CACHE_DIR
+diff target/ci/fig9_cold.txt target/ci/fig9_warm.txt
+grep -q "disk(net): 0 hits / 1 misses / 1 writes" target/ci/fig9_cold.log \
+    || { echo "FAIL: cold fig9 did not populate the network store:"; cat target/ci/fig9_cold.log; exit 1; }
+grep -q "disk(net): 1 hits / 0 misses / 0 writes" target/ci/fig9_warm.log \
+    || { echo "FAIL: warm fig9 did not serve the NetworkReport from disk:"; cat target/ci/fig9_warm.log; exit 1; }
+echo "warm process served the fig9 NetworkReport from the on-disk cache"
 
 echo "== cargo test -q (fresh cache dir, defense in depth) =="
 # The regression oracles are memory-only by construction (paper_anchors'
