@@ -414,6 +414,13 @@ impl Asm {
         self.fp(FpOp::DotpEx, FpFmt::VH, rd, rs1, rs2);
     }
 
+    /// vfdotpex.s.b rd, rs1, rs2 — multi-format fp8: rd(f32) += dot of
+    /// two packed 4×binary8 (E5M2) registers. Four MACs per single-cycle
+    /// FPU issue — the widest SIMD mode of the shared FPUs.
+    pub fn vfdotpex_s_b(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
+        self.fp(FpOp::DotpEx, FpFmt::VB4, rd, rs1, rs2);
+    }
+
     /// vfcpka.h.s rd, rs1, rs2 — cast-and-pack two f32 into packed f16.
     pub fn vfcpka_h_s(&mut self, rd: Reg, rs1: Reg, rs2: Reg) {
         self.fp(FpOp::CvtSH2, FpFmt::VH, rd, rs1, rs2);

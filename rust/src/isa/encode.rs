@@ -41,7 +41,10 @@
 //! Changing any code or layout here is a **breaking key change**: bump
 //! [`ISA_ENCODING_VERSION`] (the version is hashed into every content
 //! hash, so old on-disk entries are orphaned, never misread) and update
-//! the golden vectors deliberately in the same commit.
+//! the golden vectors deliberately in the same commit. *Appending* a new
+//! operand code (e.g. `FpFmt::VB4 = 5`, the fp8 SIMD format) is additive:
+//! no existing byte changes, so no version bump and no orphaned entries —
+//! only new keys that older builds simply never produced.
 
 use super::inst::{AluOp, Cond, FpFmt, FpOp, Inst, LoopCount, MemSize, SimdFmt, SimdOp};
 
@@ -140,6 +143,7 @@ impl FpFmt {
             FpFmt::B => 2,
             FpFmt::VH => 3,
             FpFmt::VB => 4,
+            FpFmt::VB4 => 5,
         }
     }
 }

@@ -114,6 +114,11 @@ pub enum FpFmt {
     VH,
     /// Packed 2×bfloat16 SIMD.
     VB,
+    /// Packed 4×binary8 (E5M2 smallFloat FP8) SIMD — the 8-bit mode the
+    /// shared FPUs advertise behind the paper's 8-bit efficiency point.
+    /// Four lanes per 32-bit register, like [`SimdFmt::B4`] on the
+    /// integer side.
+    VB4,
 }
 
 impl FpFmt {
@@ -121,6 +126,7 @@ impl FpFmt {
         match self {
             FpFmt::S | FpFmt::H | FpFmt::B => 1,
             FpFmt::VH | FpFmt::VB => 2,
+            FpFmt::VB4 => 4,
         }
     }
 }
@@ -157,9 +163,12 @@ pub enum FpOp {
     /// Widening from packed half to f32 lane 0 / lane 1.
     CvtH2S0,
     CvtH2S1,
-    /// Multi-format dot product: rd(f32) += rs1.h0·rs2.h0 + rs1.h1·rs2.h1
-    /// ("taking the product of two 16-bit operands and returning a 32-bit
-    /// single-precision result", §II-C). 2 FMAs = 4 FLOPs.
+    /// Multi-format dot product accumulating into a wider rd: f32 rd +=
+    /// Σ rs1.lane_i·rs2.lane_i ("taking the product of two 16-bit
+    /// operands and returning a 32-bit single-precision result", §II-C).
+    /// One FMA per input lane: 2 FMAs = 4 FLOPs in `VH`/`VB`, 4 FMAs =
+    /// 8 FLOPs in `VB4` — still a single pipelined FPU issue, which is
+    /// what makes the fp8 path 4 MACs per FPU op in the timing model.
     DotpEx,
 }
 
@@ -185,7 +194,7 @@ impl FpOp {
         let lanes = fmt.lanes() as u64;
         match self {
             FpOp::Madd | FpOp::Msub => 2 * lanes,
-            FpOp::DotpEx => 4,
+            FpOp::DotpEx => 2 * lanes,
             FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Min | FpOp::Max => lanes,
             FpOp::Div | FpOp::Sqrt => lanes,
             _ => 0,
@@ -377,6 +386,11 @@ mod tests {
         assert_eq!(vadd.flops(), 2);
         let dotp = Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VH, rd: 1, rs1: 2, rs2: 3 };
         assert_eq!(dotp.flops(), 4);
+        // fp8 SIMD: 4 lanes per register, 4 MACs = 8 FLOPs per issue.
+        let dotp8 = Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VB4, rd: 1, rs1: 2, rs2: 3 };
+        assert_eq!(FpFmt::VB4.lanes(), 4);
+        assert_eq!(dotp8.flops(), 8);
+        assert_eq!(FpOp::DotpEx.cycles(), 1, "fp8 dot product stays single-issue");
     }
 
     #[test]

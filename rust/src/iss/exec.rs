@@ -169,6 +169,7 @@ pub fn fp(op: FpOp, fmt: FpFmt, a: u32, b: u32, acc: u32) -> u32 {
         FpFmt::B => fp_scalar_bf(op, a, b, acc),
         FpFmt::VH => fp_vec_h(op, a, b, acc),
         FpFmt::VB => fp_vec_bf(op, a, b, acc),
+        FpFmt::VB4 => fp_vec_f8(op, a, b, acc),
     }
 }
 
@@ -285,6 +286,15 @@ fn fp_vec_bf(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
     }
 }
 
+fn fp_vec_f8(op: FpOp, a: u32, b: u32, acc: u32) -> u32 {
+    match op {
+        // The one fp8 SIMD op the kernels use: 4-lane dot product
+        // accumulating into an f32 rd (vfdotpex.s.b).
+        FpOp::DotpEx => sf::f8x4_dotpex_s(a, b, acc),
+        other => unreachable!("unsupported packed-fp8 op {other:?}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +366,20 @@ mod tests {
         let acc = 0.25f32.to_bits();
         let r = fp(FpOp::DotpEx, FpFmt::VH, a, b, acc);
         assert_eq!(f32::from_bits(r), 3.0 + 8.0 + 0.25);
+    }
+
+    #[test]
+    fn packed_f8_dotpex_accumulates_in_f32() {
+        use crate::iss::softfloat::f32_to_f8;
+        // lanes a = [1, 2, 3, 4], b = [0.5, 0.5, 0.5, 0.5]
+        let a = (f32_to_f8(1.0) as u32)
+            | ((f32_to_f8(2.0) as u32) << 8)
+            | ((f32_to_f8(3.0) as u32) << 16)
+            | ((f32_to_f8(4.0) as u32) << 24);
+        let b = u32::from_le_bytes([f32_to_f8(0.5); 4]);
+        let acc = 1.0f32.to_bits();
+        let r = fp(FpOp::DotpEx, FpFmt::VB4, a, b, acc);
+        assert_eq!(f32::from_bits(r), 0.5 + 1.0 + 1.5 + 2.0 + 1.0);
     }
 
     #[test]

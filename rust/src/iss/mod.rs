@@ -87,6 +87,12 @@ impl FlatMem {
         }
     }
 
+    pub fn write_f8s(&mut self, addr: u32, vals: &[f32]) {
+        for (i, &v) in vals.iter().enumerate() {
+            self.write_bytes(addr + i as u32, &[softfloat::f32_to_f8(v)]);
+        }
+    }
+
     pub fn read_i32s(&self, addr: u32, n: usize) -> Vec<i32> {
         (0..n)
             .map(|i| {
@@ -116,6 +122,10 @@ impl FlatMem {
                 softfloat::f16_to_f32(u16::from_le_bytes([b[0], b[1]]))
             })
             .collect()
+    }
+
+    pub fn read_f8s(&self, addr: u32, n: usize) -> Vec<f32> {
+        self.read_bytes(addr, n).iter().map(|&b| softfloat::f8_to_f32(b)).collect()
     }
 }
 
@@ -177,5 +187,7 @@ mod tests {
         assert_eq!(m.read_f32s(24, 2), vec![1.5, -2.5]);
         m.write_f16s(32, &[0.5, -0.25]);
         assert_eq!(m.read_f16s(32, 2), vec![0.5, -0.25]);
+        m.write_f8s(40, &[1.5, -0.25, 4.0, -1.0]);
+        assert_eq!(m.read_f8s(40, 4), vec![1.5, -0.25, 4.0, -1.0]);
     }
 }

@@ -1,10 +1,14 @@
-//! Software FP16 (IEEE binary16) and bfloat16 conversion/arithmetic.
+//! Software FP16 (IEEE binary16), bfloat16 and FP8 (E5M2 binary8)
+//! conversion/arithmetic.
 //!
-//! Vega's shared FPnew FPUs operate natively on FP32, FP16 and bfloat16
-//! (§II-C). Rust has no stable `f16`, so the packed-SIMD smallFloat lanes
-//! are evaluated by converting to f32, operating, and rounding back —
-//! which is also exactly FPnew's internal behaviour for FP16 (it computes
-//! in a wider datapath and rounds to the target format, RNE).
+//! Vega's shared FPnew FPUs operate natively on FP32, FP16, bfloat16 and
+//! an 8-bit smallFloat mode (§II-C). Rust has no stable `f16` (let alone
+//! `f8`), so the packed-SIMD smallFloat lanes are evaluated by converting
+//! to f32, operating, and rounding back — which is also exactly FPnew's
+//! internal behaviour for the narrow formats (it computes in a wider
+//! datapath and rounds to the target format, RNE). The FP8 format is
+//! E5M2: 1 sign, 5 exponent (bias 15, the binary16 range) and 2 mantissa
+//! bits — binary16 with the bottom 8 mantissa bits cut off.
 
 /// binary16 -> binary32 (exact).
 pub fn f16_to_f32(h: u16) -> f32 {
@@ -99,6 +103,96 @@ pub fn f32_to_bf16(f: f32) -> u16 {
     (rounded >> 16) as u16
 }
 
+/// binary8 E5M2 -> binary32 (exact: every E5M2 value is representable).
+pub fn f8_to_f32(b: u8) -> f32 {
+    let sign = ((b >> 7) & 1) as u32;
+    let exp = ((b >> 2) & 0x1F) as u32;
+    let frac = (b & 0x3) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal (multiples of 2^-16): normalise
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x4 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3) << 21)
+        }
+    } else if exp == 0x1F {
+        (sign << 31) | (0xFF << 23) | (frac << 21) // inf / NaN
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 21)
+    };
+    f32::from_bits(bits)
+}
+
+/// binary32 -> binary8 E5M2, round to nearest even (the quantize step of
+/// the fp8 kernels' host-side data preparation and reference model).
+pub fn f32_to_f8(f: f32) -> u8 {
+    let bits = f.to_bits();
+    let sign = ((bits >> 31) & 1) as u8;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // inf / NaN
+        let payload = if frac != 0 { 0x2 } else { 0 };
+        return (sign << 7) | (0x1F << 2) | payload;
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return (sign << 7) | (0x1F << 2); // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal range
+        let mut e8 = (unbiased + 15) as u32;
+        let mut f8 = frac >> 21;
+        // RNE on the 21 dropped bits
+        let rem = frac & 0x1F_FFFF;
+        if rem > 0x10_0000 || (rem == 0x10_0000 && (f8 & 1) == 1) {
+            f8 += 1;
+            if f8 == 0x4 {
+                f8 = 0;
+                e8 += 1;
+                if e8 >= 0x1F {
+                    return (sign << 7) | (0x1F << 2);
+                }
+            }
+        }
+        (sign << 7) | ((e8 as u8) << 2) | (f8 as u8)
+    } else if unbiased >= -17 {
+        // subnormal (shift 3 covers the round-up-from-below-minimum band)
+        let shift = (-14 - unbiased) as u32; // 1..=3
+        let mant = 0x80_0000 | frac; // implicit bit
+        let total_shift = 21 + shift;
+        let mut f8 = mant >> total_shift;
+        let rem_mask = (1u32 << total_shift) - 1;
+        let rem = mant & rem_mask;
+        let half = 1u32 << (total_shift - 1);
+        if rem > half || (rem == half && (f8 & 1) == 1) {
+            f8 += 1;
+        }
+        (sign << 7) | (f8 as u8)
+    } else {
+        sign << 7 // underflow -> signed zero
+    }
+}
+
+/// Multi-format fp8 dot: f32 acc += Σᵢ a.bᵢ·b.bᵢ over the four E5M2
+/// lanes (vfdotpex.s.b). Lane products are exact in f32; they are summed
+/// lane 0 → 3 and the accumulator added last — one fixed association, so
+/// the result is bit-deterministic.
+pub fn f8x4_dotpex_s(a: u32, b: u32, acc: u32) -> u32 {
+    let mut s = 0f32;
+    for i in 0..4 {
+        s += f8_to_f32((a >> (8 * i)) as u8) * f8_to_f32((b >> (8 * i)) as u8);
+    }
+    (s + f32::from_bits(acc)).to_bits()
+}
+
 /// Apply `op` on two packed-f16 registers, lane-wise, rounding each lane.
 pub fn f16_lanes_op(a: u32, b: u32, op: impl Fn(f32, f32) -> f32) -> u32 {
     let lo = f32_to_f16(op(f16_to_f32(a as u16), f16_to_f32(b as u16)));
@@ -186,6 +280,74 @@ mod tests {
         // dotpex: 1*4 + 2*3 + 0.5 = 10.5
         let acc = 0.5f32.to_bits();
         assert_eq!(f32::from_bits(f16_dotpex_s(a, b, acc)), 10.5);
+    }
+
+    #[test]
+    fn f8_roundtrip_exact_values() {
+        for v in [
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            1.25,
+            1.75,
+            57344.0,  // max normal: 1.75 * 2^15
+            -57344.0,
+            6.1035156e-5,     // min normal: 2^-14
+            1.5258789e-5,     // min subnormal: 2^-16
+            4.5776367e-5,     // 3 * 2^-16 (subnormal)
+        ] {
+            assert_eq!(f8_to_f32(f32_to_f8(v)), v, "value {v}");
+        }
+    }
+
+    #[test]
+    fn f8_overflow_underflow_and_nan() {
+        assert_eq!(f32_to_f8(65536.0), 0x7C); // 2^16 -> +inf
+        assert_eq!(f32_to_f8(-65536.0), 0xFC);
+        assert!(f8_to_f32(0x7C).is_infinite());
+        assert!(f8_to_f32(f32_to_f8(f32::NAN)).is_nan());
+        assert_eq!(f32_to_f8(1e-12), 0); // deep underflow -> +0
+        // Just above half the min subnormal rounds up to it.
+        assert_eq!(f32_to_f8(1.2e-5), 0x01);
+    }
+
+    #[test]
+    fn f8_rne_ties() {
+        // 1.125 lies exactly between 1.0 and 1.25 -> even (1.0).
+        assert_eq!(f8_to_f32(f32_to_f8(1.125)), 1.0);
+        // 1.375 between 1.25 and 1.5 -> even (1.5).
+        assert_eq!(f8_to_f32(f32_to_f8(1.375)), 1.5);
+    }
+
+    #[test]
+    fn exhaustive_f8_f32_f8_identity() {
+        // every finite E5M2 value must round-trip bit-exactly through f32
+        for b in 0u16..=0xFF {
+            let b = b as u8;
+            let exp = (b >> 2) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/NaN
+            }
+            assert_eq!(f32_to_f8(f8_to_f32(b)), b, "b={b:#x}");
+        }
+    }
+
+    #[test]
+    fn f8_dotpex_accumulates_in_f32() {
+        // lanes a = [1.0, 2.0, -0.5, 4.0], b = [3.0, 0.5, 2.0, 0.25]
+        let a = (f32_to_f8(1.0) as u32)
+            | ((f32_to_f8(2.0) as u32) << 8)
+            | ((f32_to_f8(-0.5) as u32) << 16)
+            | ((f32_to_f8(4.0) as u32) << 24);
+        let b = (f32_to_f8(3.0) as u32)
+            | ((f32_to_f8(0.5) as u32) << 8)
+            | ((f32_to_f8(2.0) as u32) << 16)
+            | ((f32_to_f8(0.25) as u32) << 24);
+        let acc = 0.125f32.to_bits();
+        // 3 + 1 - 1 + 1 + 0.125
+        assert_eq!(f32::from_bits(f8x4_dotpex_s(a, b, acc)), 4.125);
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub fn build(h: usize, w: usize, fw: FpWidth) -> Program {
     match fw {
         FpWidth::F32 => build_f32(h, w),
         FpWidth::F16x2 => build_f16(h, w),
+        FpWidth::F8x4 => panic!("fp_conv: no fp8 variant (fp8 is matmul-only)"),
     }
 }
 
@@ -210,6 +211,7 @@ pub fn run(
     let esz = match fw {
         FpWidth::F32 => 4,
         FpWidth::F16x2 => 2,
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     };
     let istride = in_stride(w + 2, esz) as usize;
     let mut alloc = TcdmAlloc::new();
@@ -223,6 +225,7 @@ pub fn run(
         match fw {
             FpWidth::F32 => cluster.tcdm.mem.write_f32s(addr, row),
             FpWidth::F16x2 => cluster.tcdm.mem.write_f16s(addr, row),
+            FpWidth::F8x4 => unreachable!("rejected by build()"),
         }
     }
     match fw {
@@ -242,6 +245,7 @@ pub fn run(
             }
             cluster.tcdm.mem.write_i32s(tap_base, &words);
         }
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     }
 
     let stats: ClusterStats = cluster.run_program(
@@ -265,6 +269,7 @@ pub fn run(
     let out = match fw {
         FpWidth::F32 => cluster.tcdm.mem.read_f32s(out_base, h * w),
         FpWidth::F16x2 => cluster.tcdm.mem.read_f16s(out_base, h * w),
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     };
     let flops = 2 * 9 * (h * w) as u64;
     (out, KernelRun::new(prog.name.clone(), stats, flops))

@@ -28,12 +28,14 @@ pub fn build(n: usize, n_cores: usize, fw: FpWidth) -> Program {
     let name = match fw {
         FpWidth::F32 => "fp_fft_f32",
         FpWidth::F16x2 => "fp_fft_f16",
+        FpWidth::F8x4 => panic!("fp_fft: no fp8 variant (fp8 is matmul-only)"),
     };
     require(n.is_power_of_two() && n >= 4, name, "N power of two >= 4");
     require(n_cores.is_power_of_two(), name, "n_cores power of two");
     let csz: i32 = match fw {
         FpWidth::F32 => 8, // complex = 2 × f32
         FpWidth::F16x2 => 4, // complex = packed (re,im) f16
+        FpWidth::F8x4 => unreachable!("rejected above"),
     };
     // Twiddle record: f32 = (wr, wi) 8 B; f16 = (w1, w2) packed pair 8 B.
     let tsz: i32 = 8;
@@ -157,6 +159,7 @@ fn emit_butterfly_strided(a: &mut Asm, fw: FpWidth, cstride: i32, twstride: i32)
             a.sw_pi(T5, S5, cstride);
             a.sw_pi(T6, S6, cstride);
         }
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     }
 }
 
@@ -250,6 +253,7 @@ pub fn run(
                 .collect();
             cluster.tcdm.mem.write_i32s(tw_base, &tw);
         }
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     }
 
     let stats: ClusterStats = cluster.run_program(
@@ -270,6 +274,7 @@ pub fn run(
             let flat = cluster.tcdm.mem.read_f16s(x_base, 2 * n);
             flat.chunks(2).map(|c| (c[0], c[1])).collect()
         }
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     };
     // 10 real FLOPs per butterfly, N/2·log2(N) butterflies.
     let flops = 10 * (n as u64 / 2) * n.trailing_zeros() as u64;

@@ -143,6 +143,7 @@ pub fn run_fir(
     let prog = match fw {
         FpWidth::F32 => build_fir_f32(),
         FpWidth::F16x2 => build_fir_f16(),
+        FpWidth::F8x4 => panic!("fir: no fp8 variant (fp8 is matmul-only)"),
     };
     let esz = if fw == FpWidth::F32 { 4 } else { 2 };
     let mut alloc = TcdmAlloc::new();
@@ -173,6 +174,7 @@ pub fn run_fir(
             ];
             cluster.tcdm.mem.write_i32s(tap_base, &words);
         }
+        FpWidth::F8x4 => unreachable!("rejected above"),
     }
     let stats: ClusterStats = cluster.run_program(
         &prog,
@@ -192,6 +194,7 @@ pub fn run_fir(
     let y = match fw {
         FpWidth::F32 => cluster.tcdm.mem.read_f32s(y_base, n_out),
         FpWidth::F16x2 => cluster.tcdm.mem.read_f16s(y_base, n_out),
+        FpWidth::F8x4 => unreachable!("rejected above"),
     };
     let flops = 2 * (FIR_TAPS * n_out) as u64;
     (y, KernelRun::new(prog.name.clone(), stats, flops))
@@ -330,6 +333,7 @@ pub fn run_iir(
     let prog = match fw {
         FpWidth::F32 => build_iir_f32(),
         FpWidth::F16x2 => build_iir_f16(),
+        FpWidth::F8x4 => panic!("iir: no fp8 variant (fp8 is matmul-only)"),
     };
     let lanes = if fw == FpWidth::F32 { 1 } else { 2 };
     let n_cores = x.len() / lanes;
@@ -370,6 +374,7 @@ pub fn run_iir(
             ];
             cluster.tcdm.mem.write_i32s(c_base, &words);
         }
+        FpWidth::F8x4 => unreachable!("rejected above"),
     }
     let stats = cluster.run_program(
         &prog,
@@ -395,6 +400,7 @@ pub fn run_iir(
                 out.push(inter.iter().skip(1).step_by(2).copied().collect());
             }
         }
+        FpWidth::F8x4 => unreachable!("rejected above"),
     }
     let flops = (10 * n * x.len()) as u64 * if lanes == 2 { 1 } else { 1 };
     (out, KernelRun::new(prog.name.clone(), stats, flops))
@@ -481,6 +487,7 @@ pub fn run_dwt(
     let prog = match fw {
         FpWidth::F32 => build_dwt_f32(),
         FpWidth::F16x2 => build_dwt_f16(),
+        FpWidth::F8x4 => panic!("dwt: no fp8 variant (fp8 is matmul-only)"),
     };
     let esz = if fw == FpWidth::F32 { 4 } else { 2 };
     let mut alloc = TcdmAlloc::new();
@@ -491,6 +498,7 @@ pub fn run_dwt(
     match fw {
         FpWidth::F32 => cluster.tcdm.mem.write_f32s(x_base, x),
         FpWidth::F16x2 => cluster.tcdm.mem.write_f16s(x_base, x),
+        FpWidth::F8x4 => unreachable!("rejected above"),
     }
     let stats = cluster.run_program(
         &prog,
@@ -513,6 +521,7 @@ pub fn run_dwt(
                     regs.push((A6, (h << 16) | h));
                     regs.push((A7, (hn << 16) | h));
                 }
+                FpWidth::F8x4 => unreachable!("rejected above"),
             }
             regs
         },
@@ -527,6 +536,7 @@ pub fn run_dwt(
             cluster.tcdm.mem.read_f16s(a_base, n_pairs),
             cluster.tcdm.mem.read_f16s(d_base, n_pairs),
         ),
+        FpWidth::F8x4 => unreachable!("rejected above"),
     };
     let flops = 4 * n_pairs as u64;
     (ap, de, KernelRun::new(prog.name.clone(), stats, flops))

@@ -147,10 +147,12 @@ pub fn run(
     let prog = match fw {
         FpWidth::F32 => build_f32(),
         FpWidth::F16x2 => build_f16(),
+        FpWidth::F8x4 => panic!("fp_kmeans: no fp8 variant (fp8 is matmul-only)"),
     };
     let psz = match fw {
         FpWidth::F32 => D * 4,
         FpWidth::F16x2 => D * 2,
+        FpWidth::F8x4 => unreachable!("rejected above"),
     };
     let mut alloc = TcdmAlloc::new();
     let p_base = alloc.alloc(n_points * psz + 16);
@@ -165,6 +167,7 @@ pub fn run(
             cluster.tcdm.mem.write_f16s(p_base, points);
             cluster.tcdm.mem.write_f16s(c_base, centroids);
         }
+        FpWidth::F8x4 => unreachable!("rejected above"),
     }
     let stats: ClusterStats = cluster.run_program(
         &prog,

@@ -1,15 +1,19 @@
-//! FP MATMUL (Table V row 1): FP32 scalar FMA and FP16 packed-SIMD
-//! (`vfdotpex.s.h`) variants — the Fig. 8 leader thanks to fused
-//! multiply-accumulate ("2 FP operations per cycle").
+//! FP MATMUL (Table V row 1): FP32 scalar FMA, FP16 packed-SIMD
+//! (`vfdotpex.s.h`) and FP8 packed-SIMD (`vfdotpex.s.b`) variants — the
+//! Fig. 8 leader thanks to fused multiply-accumulate ("2 FP operations
+//! per cycle"; 4 MACs per issue in the 8-bit smallFloat mode).
 //!
 //! 2×2 register tiling (the shared-FPU fabric sustains one FP issue per
 //! two cores, so deeper unrolling only piles up contention stalls), same
-//! padded SPMD layout as the integer kernels.
+//! padded SPMD layout as the integer kernels. The fp8 variant quantizes
+//! inputs to E5M2 on the host, packs four lanes per TCDM word, and
+//! accumulates every dot product in f32 (the multi-format DotpEx
+//! datapath), so its numerics are the quantization error only.
 
 use crate::cluster::{Cluster, ClusterStats};
 use crate::isa::{Asm, Program, A0, A1, A2, A3, A4, A5, A6, A7, S0, S1, S3, S4, S5, S6, S7,
     S8, S9, T0, T1, T4, T5};
-use crate::iss::FlatMem;
+use crate::iss::{softfloat as sf, FlatMem};
 
 use super::{check_program, require, KernelRun, TcdmAlloc};
 
@@ -19,6 +23,9 @@ pub enum FpWidth {
     F32,
     /// Packed 2×binary16 (smallFloat SIMD).
     F16x2,
+    /// Packed 4×binary8 E5M2 (smallFloat fp8 SIMD; matmul-only — the
+    /// NSAA kernel family stops at fp16).
+    F8x4,
 }
 
 /// Build the SPMD FP matmul for `(m, n, k)`.
@@ -26,12 +33,14 @@ pub fn build(m: usize, n: usize, k: usize, w: FpWidth) -> Program {
     let name = match w {
         FpWidth::F32 => "fp_matmul_f32",
         FpWidth::F16x2 => "fp_matmul_f16",
+        FpWidth::F8x4 => "fp_matmul_f8",
     };
     require(m % 2 == 0, name, "M % 2 == 0");
     require(n % 2 == 0, name, "N % 2 == 0");
     let (esz, per_word) = match w {
         FpWidth::F32 => (4usize, 1usize),
         FpWidth::F16x2 => (2, 2),
+        FpWidth::F8x4 => (1, 4),
     };
     require(k % per_word == 0, name, "K multiple of SIMD lanes");
     let row = (k * esz) as i32 + 4; // +pad word against bank aliasing
@@ -84,6 +93,12 @@ pub fn build(m: usize, n: usize, k: usize, w: FpWidth) -> Program {
             a.vfdotpex_s_h(S8, T1, T4);
             a.vfdotpex_s_h(S9, T1, T5);
         }
+        FpWidth::F8x4 => {
+            a.vfdotpex_s_b(A0, T0, T4);
+            a.vfdotpex_s_b(A1, T0, T5);
+            a.vfdotpex_s_b(S8, T1, T4);
+            a.vfdotpex_s_b(S9, T1, T5);
+        }
     }
     a.bind(end_k);
 
@@ -102,6 +117,36 @@ pub fn build(m: usize, n: usize, k: usize, w: FpWidth) -> Program {
     let p = a.finish().expect("assembly");
     check_program(&p);
     p
+}
+
+/// Host fp8 reference: inputs quantized through E5M2 (the same
+/// quantization [`run`] applies when packing TCDM words), lane products
+/// and accumulation in f32 following the SIMD path's exact association —
+/// so the cluster's fp8 result must match this reference **bit for bit**
+/// (asserted by `f8_matches_scalar_reference_bit_exactly`). The only
+/// numerics difference vs [`host_ref`] is the 2-mantissa-bit input
+/// quantization; accumulation stays full f32 (the multi-format DotpEx
+/// contract, §II-C).
+pub fn host_ref_f8(av: &[f32], bv: &[f32], m: usize, n: usize, k: usize) -> Vec<f32> {
+    assert_eq!(k % 4, 0, "fp8 reference needs K % 4 == 0");
+    let q = |v: f32| sf::f8_to_f32(sf::f32_to_f8(v));
+    let mut c = vec![0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f32;
+            for kk in (0..k).step_by(4) {
+                // One vfdotpex.s.b: lane products summed lane 0 → 3,
+                // accumulator added last.
+                let mut s = 0f32;
+                for l in 0..4 {
+                    s += q(av[i * k + kk + l]) * q(bv[j * k + kk + l]);
+                }
+                acc += s;
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
 }
 
 /// Host reference in f32 (A row-major, B column-major).
@@ -123,6 +168,7 @@ fn write_rows(mem: &mut FlatMem, base: u32, vals: &[f32], rows: usize, k: usize,
     let esz = match w {
         FpWidth::F32 => 4,
         FpWidth::F16x2 => 2,
+        FpWidth::F8x4 => 1,
     };
     let stride = (k * esz + 4) as u32;
     for r in 0..rows {
@@ -130,6 +176,7 @@ fn write_rows(mem: &mut FlatMem, base: u32, vals: &[f32], rows: usize, k: usize,
         match w {
             FpWidth::F32 => mem.write_f32s(base + r as u32 * stride, row),
             FpWidth::F16x2 => mem.write_f16s(base + r as u32 * stride, row),
+            FpWidth::F8x4 => mem.write_f8s(base + r as u32 * stride, row),
         }
     }
 }
@@ -153,6 +200,7 @@ pub fn run(
     let esz = match w {
         FpWidth::F32 => 4,
         FpWidth::F16x2 => 2,
+        FpWidth::F8x4 => 1,
     };
     let stride = k * esz + 4;
     let mut alloc = TcdmAlloc::new();
@@ -243,6 +291,50 @@ mod tests {
         let f16r = check(32, 32, 32, FpWidth::F16x2, 8, 3e-2);
         let speedup = f32r.stats.cycles as f64 / f16r.stats.cycles as f64;
         assert!(speedup > 1.4, "speedup = {speedup}");
+    }
+
+    /// The fp8 SIMD path against [`host_ref_f8`], bit for bit: same E5M2
+    /// quantization, same f32 association — any divergence is a real
+    /// datapath bug, not float noise.
+    #[test]
+    fn f8_matches_scalar_reference_bit_exactly() {
+        for (m, n, k, cores) in [(8, 8, 16, 8), (2, 2, 4, 1), (16, 16, 32, 4), (32, 32, 64, 8)] {
+            let (av, bv) = setup(m, n, k, 3);
+            let mut cl = Cluster::new();
+            let mut l2 = FlatMem::new(L2_BASE, 4096);
+            let (c, _) = run(&mut cl, &mut l2, &av, &bv, m, n, k, FpWidth::F8x4, cores);
+            let want = host_ref_f8(&av, &bv, m, n, k);
+            for (i, (&g, &r)) in c.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    r.to_bits(),
+                    "{m}x{n}x{k}@{cores}: elem {i}: {g} vs {r}"
+                );
+            }
+        }
+    }
+
+    /// fp8 halves the fp16 K loop again: 4 lanes per load/issue. Expect
+    /// clearly more than the fp16 gain over f32, and >2x vs f32 overall.
+    #[test]
+    fn f8_vectorization_speedup() {
+        let f32r = check(32, 32, 32, FpWidth::F32, 8, 1e-4);
+        let f16r = check(32, 32, 32, FpWidth::F16x2, 8, 3e-2);
+        let (av, bv) = setup(32, 32, 32, 3);
+        let mut cl = Cluster::new();
+        let mut l2 = FlatMem::new(L2_BASE, 4096);
+        let (_, f8r) = run(&mut cl, &mut l2, &av, &bv, 32, 32, 32, FpWidth::F8x4, 8);
+        let vs_f32 = f32r.stats.cycles as f64 / f8r.stats.cycles as f64;
+        let vs_f16 = f16r.stats.cycles as f64 / f8r.stats.cycles as f64;
+        assert!(vs_f32 > 2.0, "fp8 speedup vs f32 = {vs_f32}");
+        assert!(vs_f16 > 1.2, "fp8 speedup vs f16 = {vs_f16}");
+        // 4 MACs = 8 FLOPs per DotpEx issue reach the FLOP counters.
+        assert!(
+            f8r.stats.flops_per_cycle() > f16r.stats.flops_per_cycle(),
+            "fp8 {} vs fp16 {} FLOP/cycle",
+            f8r.stats.flops_per_cycle(),
+            f16r.stats.flops_per_cycle()
+        );
     }
 
     #[test]

@@ -21,6 +21,7 @@ pub(crate) fn build(d: usize, fw: FpWidth) -> Program {
     let name = match fw {
         FpWidth::F32 => "fp_svm_f32",
         FpWidth::F16x2 => "fp_svm_f16",
+        FpWidth::F8x4 => panic!("fp_svm: no fp8 variant (fp8 is matmul-only)"),
     };
     let esz = if fw == FpWidth::F32 { 4usize } else { 2 };
     let per_word = 4 / esz;
@@ -61,6 +62,7 @@ pub(crate) fn build(d: usize, fw: FpWidth) -> Program {
                 a.vfdotpex_s_h(S6, T0, T2);
                 a.vfdotpex_s_h(S7, T0, T3);
             }
+            FpWidth::F8x4 => unreachable!("rejected above"),
         }
         a.bind(end_d);
     }
@@ -136,6 +138,7 @@ pub fn run(
             cluster.tcdm.mem.write_f16s(p_base, points);
             cluster.tcdm.mem.write_f16s(w_base, w);
         }
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
     }
     // Biases always f32, appended after the weight rows.
     cluster

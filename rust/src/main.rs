@@ -49,8 +49,8 @@ fn usage() -> ! {
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
                                 kernels: matmul-i8|matmul-i16|matmul-i32|\n\
-                                matmul-f32|matmul-f16|fft|MATMUL|CONV|DWT|\n\
-                                FFT|FIR|IIR|KMEANS|SVM"
+                                matmul-f32|matmul-f16|matmul-f8|fft|MATMUL|\n\
+                                CONV|DWT|FFT|FIR|IIR|KMEANS|SVM"
     );
     std::process::exit(2);
 }
@@ -194,8 +194,12 @@ fn run_sim(kernel: &str, cores: usize, size: usize) {
                 (0..size * size).map(|_| rng.range_i64(-lim, lim) as i32).collect();
             int_matmul::run(&mut cl, &mut l2, &av, &bv, size, size, size, w, cores).1
         }
-        "matmul-f32" | "matmul-f16" => {
-            let w = if kernel == "matmul-f32" { FpWidth::F32 } else { FpWidth::F16x2 };
+        "matmul-f32" | "matmul-f16" | "matmul-f8" => {
+            let w = match kernel {
+                "matmul-f32" => FpWidth::F32,
+                "matmul-f16" => FpWidth::F16x2,
+                _ => FpWidth::F8x4,
+            };
             let av: Vec<f32> = (0..size * size).map(|_| rng.f32_pm1()).collect();
             let bv: Vec<f32> = (0..size * size).map(|_| rng.f32_pm1()).collect();
             fp_matmul::run(&mut cl, &mut l2, &av, &bv, size, size, size, w, cores).1

@@ -37,6 +37,9 @@ pub enum Precision {
     Int16,
     /// int32 matmul.
     Int32,
+    /// fp8 SIMD (4-way packed E5M2 smallFloat) matmul — the 8-bit mode
+    /// of the shared FPUs, completing the precision axis.
+    Fp8,
     /// fp16 SIMD (2-way packed) matmul.
     Fp16,
     /// fp32 matmul.
@@ -45,8 +48,14 @@ pub enum Precision {
 
 impl Precision {
     /// Every supported precision, in grid order.
-    pub const ALL: [Precision; 5] =
-        [Precision::Int8, Precision::Int16, Precision::Int32, Precision::Fp16, Precision::Fp32];
+    pub const ALL: [Precision; 6] = [
+        Precision::Int8,
+        Precision::Int16,
+        Precision::Int32,
+        Precision::Fp8,
+        Precision::Fp16,
+        Precision::Fp32,
+    ];
 
     /// Parse one `--precision` token.
     pub fn parse(s: &str) -> Result<Precision, String> {
@@ -54,17 +63,12 @@ impl Precision {
             "int8" | "i8" => Ok(Precision::Int8),
             "int16" | "i16" => Ok(Precision::Int16),
             "int32" | "i32" => Ok(Precision::Int32),
+            "fp8" | "f8" => Ok(Precision::Fp8),
             "fp16" | "f16" => Ok(Precision::Fp16),
             "fp32" | "f32" => Ok(Precision::Fp32),
-            "fp8" | "f8" => Err(
-                "fp8: the paper's FPU advertises an FP8 SIMD mode but the kernel \
-                 library has no FP8 matmul yet (tracked in ROADMAP.md); supported: \
-                 int8,int16,int32,fp16,fp32"
-                    .into(),
-            ),
-            other => {
-                Err(format!("unknown precision '{other}' (supported: int8,int16,int32,fp16,fp32)"))
-            }
+            other => Err(format!(
+                "unknown precision '{other}' (supported: int8,int16,int32,fp8,fp16,fp32)"
+            )),
         }
     }
 
@@ -74,6 +78,7 @@ impl Precision {
             Precision::Int8 => "int8",
             Precision::Int16 => "int16",
             Precision::Int32 => "int32",
+            Precision::Fp8 => "fp8",
             Precision::Fp16 => "fp16",
             Precision::Fp32 => "fp32",
         }
@@ -86,6 +91,7 @@ impl Precision {
             Precision::Int8 => Scenario::IntMatmul { w: IntWidth::I8, cores },
             Precision::Int16 => Scenario::IntMatmul { w: IntWidth::I16, cores },
             Precision::Int32 => Scenario::IntMatmul { w: IntWidth::I32, cores },
+            Precision::Fp8 => Scenario::FpMatmul { w: FpWidth::F8x4, cores },
             Precision::Fp16 => Scenario::FpMatmul { w: FpWidth::F16x2, cores },
             Precision::Fp32 => Scenario::FpMatmul { w: FpWidth::F32, cores },
         }
@@ -212,8 +218,8 @@ impl SweepCmd {
 }
 
 /// Parse a `--cores` value: comma-separated core counts and/or inclusive
-/// `a..b` ranges, e.g. `1..9`, `1,2,4,8`, `1..4,8`. Duplicates collapse,
-/// first occurrence wins the ordering.
+/// ranges in either `a..b` or `a-b` form, e.g. `1..9`, `1-9`, `1,2,4,8`,
+/// `1..4,8`. Duplicates collapse, first occurrence wins the ordering.
 pub fn parse_cores(s: &str) -> Result<Vec<usize>, String> {
     let mut out = Vec::new();
     let mut push = |n: usize| -> Result<(), String> {
@@ -230,7 +236,7 @@ pub fn parse_cores(s: &str) -> Result<Vec<usize>, String> {
         if tok.is_empty() {
             continue;
         }
-        if let Some((a, b)) = tok.split_once("..") {
+        if let Some((a, b)) = tok.split_once("..").or_else(|| tok.split_once('-')) {
             let lo: usize =
                 a.trim().parse().map_err(|_| format!("bad range start in '{tok}'"))?;
             let hi: usize = b.trim().parse().map_err(|_| format!("bad range end in '{tok}'"))?;
@@ -437,6 +443,8 @@ mod tests {
     #[test]
     fn cores_parse_ranges_lists_and_mixes() {
         assert_eq!(parse_cores("1..9").unwrap(), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(parse_cores("1-9").unwrap(), vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(parse_cores("1-3,8").unwrap(), vec![1, 2, 3, 8]);
         assert_eq!(parse_cores("1,2,4,8").unwrap(), vec![1, 2, 4, 8]);
         assert_eq!(parse_cores("1..3,8,2").unwrap(), vec![1, 2, 3, 8]);
         assert!(parse_cores("0..2").is_err());
@@ -447,12 +455,37 @@ mod tests {
     }
 
     #[test]
-    fn precision_parse_accepts_known_and_explains_fp8() {
+    fn precision_parse_accepts_the_full_axis_including_fp8() {
         assert_eq!(parse_precisions("int8,fp16").unwrap(), vec![Precision::Int8, Precision::Fp16]);
         assert_eq!(parse_precisions("i32").unwrap(), vec![Precision::Int32]);
-        let e = Precision::parse("fp8").unwrap_err();
-        assert!(e.contains("ROADMAP"), "fp8 error should point at the roadmap: {e}");
+        assert_eq!(Precision::parse("fp8").unwrap(), Precision::Fp8);
+        assert_eq!(Precision::parse("f8").unwrap(), Precision::Fp8);
+        assert_eq!(
+            parse_precisions("int8,fp8,fp16").unwrap(),
+            vec![Precision::Int8, Precision::Fp8, Precision::Fp16]
+        );
         assert!(Precision::parse("bf16").is_err());
+        assert!(Precision::ALL.contains(&Precision::Fp8), "fp8 is a first-class grid axis");
+    }
+
+    #[test]
+    fn fp8_cells_render_real_rows() {
+        let spec = GridSpec {
+            cores: vec![1, 2],
+            precisions: vec![Precision::Fp8],
+            dvfs_steps: 2,
+            format: GridFormat::Csv,
+        };
+        let eng = SweepEngine::serial();
+        let out = render(&eng, &spec);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 1 + spec.rows());
+        assert!(lines[1].starts_with("1,fp8,0.500,120.0,"));
+        // Real cycle counts, not placeholders.
+        let cycles: u64 = lines[1].split(',').nth(4).unwrap().parse().unwrap();
+        assert!(cycles > 0);
+        let (_, misses) = eng.cache().counters();
+        assert_eq!(misses, 2, "one simulation per fp8 (cores, precision) cell");
     }
 
     #[test]

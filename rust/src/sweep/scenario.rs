@@ -131,6 +131,7 @@ impl FpWidth {
         match self {
             FpWidth::F32 => "f32",
             FpWidth::F16x2 => "f16x2",
+            FpWidth::F8x4 => "f8x4",
         }
     }
 }
@@ -163,19 +164,23 @@ impl Scenario {
                 "DWT" => match w {
                     FpWidth::F32 => fp_filters::build_dwt_f32(),
                     FpWidth::F16x2 => fp_filters::build_dwt_f16(),
+                    FpWidth::F8x4 => panic!("NSAA kernels stop at fp16"),
                 },
                 "FFT" => fp_fft::build(FFT_N, 8, w),
                 "FIR" => match w {
                     FpWidth::F32 => fp_filters::build_fir_f32(),
                     FpWidth::F16x2 => fp_filters::build_fir_f16(),
+                    FpWidth::F8x4 => panic!("NSAA kernels stop at fp16"),
                 },
                 "IIR" => match w {
                     FpWidth::F32 => fp_filters::build_iir_f32(),
                     FpWidth::F16x2 => fp_filters::build_iir_f16(),
+                    FpWidth::F8x4 => panic!("NSAA kernels stop at fp16"),
                 },
                 "KMEANS" => match w {
                     FpWidth::F32 => fp_kmeans::build_f32(),
                     FpWidth::F16x2 => fp_kmeans::build_f16(),
+                    FpWidth::F8x4 => panic!("NSAA kernels stop at fp16"),
                 },
                 "SVM" => fp_svm::build(SVM_DIM, w),
                 other => panic!("unknown NSAA kernel {other}"),
@@ -449,6 +454,21 @@ mod tests {
             Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 8, private_fpu: true }.key(),
             Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 8, private_fpu: false }.key(),
         );
+    }
+
+    #[test]
+    fn fp8_matmul_scenario_simulates_and_keys_distinctly() {
+        let f8 = Scenario::FpMatmul { w: FpWidth::F8x4, cores: 8 };
+        assert_eq!(f8.key().precision, "f8x4");
+        assert_eq!(f8.key().kernel, "fp_matmul");
+        assert_ne!(f8.key(), Scenario::FpMatmul { w: FpWidth::F16x2, cores: 8 }.key());
+        assert_ne!(f8.key(), Scenario::FpMatmul { w: FpWidth::F8x4, cores: 4 }.key());
+        let mut arena = SimArena::new();
+        let a = f8.simulate(&mut arena);
+        let b = f8.simulate(&mut arena);
+        assert_eq!(a.outputs_digest, b.outputs_digest);
+        assert_eq!(a.run.stats, b.run.stats);
+        assert_eq!(a.run.name, "fp_matmul_f8");
     }
 
     #[test]

@@ -18,7 +18,7 @@ use vega::isa::{
 /// `isa/encode.rs`). One entry per variant, both `LoopCount` forms.
 #[test]
 fn golden_byte_vectors_for_every_variant() {
-    let cases: [(Inst, &[u8]); 18] = [
+    let cases: [(Inst, &[u8]); 19] = [
         (
             Inst::Alu { op: AluOp::Add, rd: 1, rs1: 2, rs2: 3 },
             &[0x01, 0, 1, 2, 3],
@@ -63,6 +63,12 @@ fn golden_byte_vectors_for_every_variant() {
         (
             Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VH, rd: 1, rs1: 2, rs2: 3 },
             &[0x0D, 19, 3, 1, 2, 3],
+        ),
+        // fp8 SIMD (vfdotpex.s.b): appended fmt code 5, everything else
+        // unchanged — the additive-extension contract of ISSUE 5.
+        (
+            Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VB4, rd: 1, rs1: 2, rs2: 3 },
+            &[0x0D, 19, 5, 1, 2, 3],
         ),
         (Inst::Barrier, &[0x0E]),
         (Inst::Halt, &[0x0F]),
@@ -149,8 +155,15 @@ fn golden_operand_codes() {
     }
     assert_eq!([SimdFmt::B4.code(), SimdFmt::H2.code()], [0, 1]);
     assert_eq!(
-        [FpFmt::S.code(), FpFmt::H.code(), FpFmt::B.code(), FpFmt::VH.code(), FpFmt::VB.code()],
-        [0, 1, 2, 3, 4]
+        [
+            FpFmt::S.code(),
+            FpFmt::H.code(),
+            FpFmt::B.code(),
+            FpFmt::VH.code(),
+            FpFmt::VB.code(),
+            FpFmt::VB4.code(),
+        ],
+        [0, 1, 2, 3, 4, 5]
     );
 }
 
@@ -185,6 +198,30 @@ fn golden_content_hashes() {
     assert_eq!(nop.content_hash(), 0x5f4900070d4482df);
 }
 
+/// The fp8 extension's own golden hashes (cross-computed offline in
+/// Python like the PR 4 set). These freeze the `FpFmt::VB4 = 5` wire
+/// code: any accidental renumbering of the fp8 format — or any byte
+/// drift in the shared framing — fails here before it can orphan or
+/// corrupt persisted fp8 cache entries.
+#[test]
+fn golden_fp8_content_hashes() {
+    let solo = Program {
+        insts: vec![Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VB4, rd: 1, rs1: 2, rs2: 3 }],
+        name: "fp8-solo".into(),
+    };
+    assert_eq!(solo.content_hash(), 0x1477abe1c2d9f6c4);
+
+    let prog = Program {
+        insts: vec![
+            Inst::Li { rd: 10, imm: 64 },
+            Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VB4, rd: 1, rs1: 2, rs2: 3 },
+            Inst::Halt,
+        ],
+        name: "fp8-golden".into(),
+    };
+    assert_eq!(prog.content_hash(), 0x271a8b7d8addc0b4);
+}
+
 /// The name is display metadata, not key material: two programs with the
 /// same instruction stream share a content hash.
 #[test]
@@ -202,7 +239,7 @@ fn rand_inst(rng: &mut Rng) -> Inst {
     let (rd, rs1, rs2) = (rand_reg(rng), rand_reg(rng), rand_reg(rng));
     let imm = rng.range_i64(-4096, 4096) as i32;
     let target = rng.below(1024) as usize;
-    match rng.below(17) {
+    match rng.below(18) {
         0 => Inst::Alu { op: AluOp::Add, rd, rs1, rs2 },
         1 => Inst::AluImm { op: AluOp::And, rd, rs1, imm },
         2 => Inst::Li { rd, imm },
@@ -225,8 +262,9 @@ fn rand_inst(rng: &mut Rng) -> Inst {
         },
         12 => Inst::Fp { op: FpOp::Madd, fmt: FpFmt::S, rd, rs1, rs2 },
         13 => Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VH, rd, rs1, rs2 },
-        14 => Inst::Barrier,
-        15 => Inst::Halt,
+        14 => Inst::Fp { op: FpOp::DotpEx, fmt: FpFmt::VB4, rd, rs1, rs2 },
+        15 => Inst::Barrier,
+        16 => Inst::Halt,
         _ => Inst::Nop,
     }
 }
@@ -264,6 +302,7 @@ fn real_kernel_programs_hash_distinctly() {
         int_matmul::build(64, 64, 64, IntWidth::I32),
         fp_matmul::build(32, 32, 64, FpWidth::F32),
         fp_matmul::build(32, 32, 64, FpWidth::F16x2),
+        fp_matmul::build(32, 32, 64, FpWidth::F8x4),
     ];
     let mut hashes: Vec<u64> = progs.iter().map(|p| p.content_hash()).collect();
     hashes.sort_unstable();

@@ -118,6 +118,47 @@ fn sweep_grid_byte_identical_across_jobs() {
     }
 }
 
+/// fp8 grid cells (ISSUE 5): one simulation per fp8 (cores, precision)
+/// cell, exact hit/miss counts through prefetch, render and re-render.
+#[test]
+fn fp8_grid_one_simulation_per_cell_with_exact_counters() {
+    let spec = GridSpec {
+        cores: vec![1, 2, 4, 8],
+        precisions: vec![Precision::Fp8],
+        dvfs_steps: 4,
+        format: GridFormat::Csv,
+    };
+    let eng = SweepEngine::new(1);
+    let first = explore::render(&eng, &spec);
+    let (hits0, misses0) = eng.cache().counters();
+    assert_eq!(misses0, 4, "one simulation per fp8 (cores, precision) cell");
+    assert_eq!(hits0, 4, "rendering reads each prefetched cell back as a hit");
+    let second = explore::render(&eng, &spec);
+    assert_eq!(first, second, "re-render must be byte-identical");
+    let (hits1, misses1) = eng.cache().counters();
+    assert_eq!(misses1, 4, "re-render must not resimulate any fp8 cell");
+    assert_eq!(hits1, 12, "second render is fully cache-served (4 prefetch + 4 read hits)");
+}
+
+/// The ISSUE 5 acceptance grid: `--precision int8,fp8,fp16 --cores 1-9`
+/// renders a full 27-cell grid — no unsupported-precision error — and
+/// the bytes are identical at `--jobs 1` and `--jobs 8`.
+#[test]
+fn acceptance_grid_int8_fp8_fp16_full_and_jobs_identical() {
+    let base = GridSpec {
+        cores: explore::parse_cores("1-9").unwrap(),
+        precisions: explore::parse_precisions("int8,fp8,fp16").unwrap(),
+        dvfs_steps: 4,
+        format: GridFormat::Csv,
+    };
+    let serial = explore::render(&SweepEngine::new(1), &base);
+    let parallel = explore::render(&SweepEngine::new(8), &base);
+    assert_eq!(serial, parallel, "--jobs 1 vs --jobs 8 grid diverged");
+    assert_eq!(serial.lines().count(), 1 + base.rows());
+    // Every core count renders all 4 DVFS rows of its fp8 cell.
+    assert_eq!(serial.matches(",fp8,").count(), 9 * 4);
+}
+
 /// The widened memos (ISSUE 3): the CWU reference workload and the
 /// HD-dimension ablation run once per engine however many times their
 /// reports render.

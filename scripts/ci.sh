@@ -8,18 +8,29 @@
 # (VEGA_BENCH_ITERS=1) so a scheduler regression that hangs or panics is
 # caught even where full benchmarking is too slow; BENCH_hotpath.json and
 # BENCH_sweeps.json land in rust/. The determinism smokes diff --jobs 2
-# runs of `vega repro` and `vega sweep` against serial runs byte-for-byte;
-# the cache smokes run the same sweep grid / fig9 repro twice against a
-# fresh on-disk store, asserting the second run is served entirely from
-# disk (kernel tier and network-report tier respectively); and the
-# key-stability gate runs the golden-vector tests that pin the on-disk
-# cache-key byte encoding (a drift there silently orphans every persisted
-# entry everywhere — it must only ever happen as a deliberate
-# ISA_ENCODING_VERSION/NET_ENCODING_VERSION bump that updates the
-# vectors).
+# runs of `vega repro` and `vega sweep` (including the fp8 precision
+# cells) against serial runs byte-for-byte; the cache smokes run the same
+# sweep grid / fp8 grid / fig9 repro twice against a fresh on-disk store,
+# asserting the second run is served entirely from disk (kernel tier and
+# network-report tier respectively); the clippy gate fails on any
+# non-allow-listed lint; and the key-stability gate runs the
+# golden-vector tests that pin the on-disk cache-key byte encoding (a
+# drift there silently orphans every persisted entry everywhere — it must
+# only ever happen as a deliberate ISA_ENCODING_VERSION/
+# NET_ENCODING_VERSION bump that updates the vectors).
+#
+# Runs on the toolchain pinned by rust-toolchain.toml; the GitHub Actions
+# workflow (.github/workflows/ci.yml) executes this script verbatim.
 
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
+
+# Default store location for anything not explicitly overridden below: a
+# fresh per-run directory, so a cached target/ (e.g. the GitHub Actions
+# target cache) can never carry persisted sim entries between runs. The
+# cache-smoke sections switch to their own private dirs and switch back.
+export VEGA_CACHE_DIR="${VEGA_CACHE_DIR:-$(mktemp -d)/vega-cache}"
+CI_RUN_CACHE="$VEGA_CACHE_DIR"
 
 echo "== cargo fmt --check =="
 # Non-fatal: formatting drift should not mask real build/test failures,
@@ -30,6 +41,11 @@ fi
 
 echo "== cargo build --release =="
 cargo build --release
+
+echo "== cargo clippy --all-targets (warnings fatal) =="
+# Gate added with ISSUE 5; the one-pass triage allow-list for stylistic
+# lints lives in Cargo.toml [lints.clippy] — correctness lints are fatal.
+cargo clippy --all-targets -- -D warnings
 
 echo "== cargo doc --no-deps (warnings fatal) =="
 # --lib: the bin target shares the crate name, and documenting both
@@ -60,12 +76,34 @@ VEGA_CACHE=off ./target/release/vega sweep "${SWEEP_GRID[@]}" --jobs 2 > target/
 diff target/ci/sweep_serial.csv target/ci/sweep_jobs2.csv
 echo "parallel sweep grid is byte-identical to serial"
 
+echo "== fp8 sweep smoke (serial vs --jobs 2) =="
+FP8_GRID=(--cores 1,9 --precision fp8 --dvfs-steps 3 --format csv)
+VEGA_CACHE=off ./target/release/vega sweep "${FP8_GRID[@]}" --jobs 1 > target/ci/fp8_serial.csv
+VEGA_CACHE=off ./target/release/vega sweep "${FP8_GRID[@]}" --jobs 2 > target/ci/fp8_jobs2.csv
+diff target/ci/fp8_serial.csv target/ci/fp8_jobs2.csv
+grep -q "^1,fp8," target/ci/fp8_serial.csv \
+    || { echo "FAIL: fp8 grid rendered no fp8 rows:"; cat target/ci/fp8_serial.csv; exit 1; }
+echo "parallel fp8 grid is byte-identical to serial"
+
+echo "== fp8 on-disk cache smoke (cold vs warm process) =="
+rm -rf target/ci/fp8-cache
+export VEGA_CACHE_DIR=target/ci/fp8-cache
+./target/release/vega sweep "${FP8_GRID[@]}" --stats > target/ci/fp8_cold.csv 2> target/ci/fp8_cold.log
+./target/release/vega sweep "${FP8_GRID[@]}" --stats > target/ci/fp8_warm.csv 2> target/ci/fp8_warm.log
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
+diff target/ci/fp8_cold.csv target/ci/fp8_warm.csv
+grep -q "disk: 0 hits / 2 misses / 2 writes" target/ci/fp8_cold.log \
+    || { echo "FAIL: cold fp8 run did not populate the store:"; cat target/ci/fp8_cold.log; exit 1; }
+grep -q "disk: 2 hits / 0 misses / 0 writes" target/ci/fp8_warm.log \
+    || { echo "FAIL: warm fp8 run did not hit the on-disk cache:"; cat target/ci/fp8_warm.log; exit 1; }
+echo "warm process served both fp8 cells from the on-disk cache"
+
 echo "== on-disk cache smoke (cold vs warm process) =="
 rm -rf target/ci/sweep-cache
 export VEGA_CACHE_DIR=target/ci/sweep-cache
 ./target/release/vega sweep "${SWEEP_GRID[@]}" --stats > target/ci/sweep_cold.csv 2> target/ci/sweep_cold.log
 ./target/release/vega sweep "${SWEEP_GRID[@]}" --stats > target/ci/sweep_warm.csv 2> target/ci/sweep_warm.log
-unset VEGA_CACHE_DIR
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
 diff target/ci/sweep_cold.csv target/ci/sweep_warm.csv
 grep -q "disk: 0 hits / 4 misses / 4 writes" target/ci/sweep_cold.log \
     || { echo "FAIL: cold run did not populate the store:"; cat target/ci/sweep_cold.log; exit 1; }
@@ -78,7 +116,7 @@ rm -rf target/ci/net-cache
 export VEGA_CACHE_DIR=target/ci/net-cache
 ./target/release/vega repro fig9 --stats > target/ci/fig9_cold.txt 2> target/ci/fig9_cold.log
 ./target/release/vega repro fig9 --stats > target/ci/fig9_warm.txt 2> target/ci/fig9_warm.log
-unset VEGA_CACHE_DIR
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
 diff target/ci/fig9_cold.txt target/ci/fig9_warm.txt
 grep -q "disk(net): 0 hits / 1 misses / 1 writes" target/ci/fig9_cold.log \
     || { echo "FAIL: cold fig9 did not populate the network store:"; cat target/ci/fig9_cold.log; exit 1; }
