@@ -74,7 +74,7 @@ fn main() {
 
     // Inject a retention upset and show ECC transparently fixing it.
     soc.mram.inject_bit_flip(1000, 12);
-    let _ = soc.mram.read(0, offset.min(1 << 20));
+    let _ = soc.mram.read(0, offset.min(1 << 20)).expect("single upset is ECC-corrected");
     println!(
         "MRAM readback through ECC: {} corrected, {} uncorrectable\n",
         soc.mram.ecc_stats.corrected, soc.mram.ecc_stats.detected
@@ -86,9 +86,9 @@ fn main() {
             let mut rng = Rng::new(7);
             let x: Vec<i8> = (0..14 * 14 * 24).map(|_| rng.range_i64(-8, 8) as i8).collect();
             // Weights for the block come *from the simulated MRAM*.
-            let we = soc.mram.read(0, 24 * 96);
-            let wd = soc.mram.read(24 * 96, 9 * 96);
-            let wp = soc.mram.read(24 * 96 + 9 * 96, 96 * 24);
+            let we = soc.mram.read(0, 24 * 96).expect("weights survive ECC");
+            let wd = soc.mram.read(24 * 96, 9 * 96).expect("weights survive ECC");
+            let wp = soc.mram.read(24 * 96 + 9 * 96, 96 * 24).expect("weights survive ECC");
             let as_i8 = |v: Vec<u8>| Tensor::I8(v.into_iter().map(|b| b as i8).collect());
             let out = rt
                 .execute(

@@ -67,6 +67,9 @@ pub struct ClusterStats {
     pub tcdm_conflict_rate: f64,
     pub fpu_contention_rate: f64,
     pub barrier_gated_cycles: u64,
+    /// Fault-injection ledger (ISSUE 6). All zeros outside fault
+    /// campaigns — the normal simulation path never touches it.
+    pub faults: crate::faults::FaultStats,
 }
 
 impl ClusterStats {
@@ -189,6 +192,7 @@ impl Cluster {
             tcdm_conflict_rate: self.tcdm.conflict_rate(),
             fpu_contention_rate: self.fpus.contention_rate(),
             barrier_gated_cycles: self.event_unit.gated_cycles,
+            faults: crate::faults::FaultStats::default(),
         }
     }
 

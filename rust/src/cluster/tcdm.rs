@@ -113,6 +113,13 @@ impl Tcdm {
         mask
     }
 
+    /// Flip one bit of the byte at `addr` (absolute, TCDM-mapped): the
+    /// L1 soft-error injection hook (ISSUE 6). TCDM banks carry no ECC,
+    /// so an upset lands directly in the data the cores consume.
+    pub fn flip_bit(&mut self, addr: u32, bit: u8) {
+        self.mem.flip_bit(addr, bit);
+    }
+
     /// Fraction of requests that lost arbitration.
     pub fn conflict_rate(&self) -> f64 {
         let total = self.grants + self.conflicts;
@@ -170,6 +177,16 @@ mod tests {
         }
         assert_eq!(wins[0], 5);
         assert_eq!(wins[1], 5);
+    }
+
+    #[test]
+    fn flip_bit_is_a_self_inverse_xor() {
+        let mut t = Tcdm::new();
+        t.mem.write_bytes(TCDM_BASE + 100, &[0x0F]);
+        t.flip_bit(TCDM_BASE + 100, 2);
+        assert_eq!(t.mem.read_bytes(TCDM_BASE + 100, 1), &[0x0B]);
+        t.flip_bit(TCDM_BASE + 100, 2);
+        assert_eq!(t.mem.read_bytes(TCDM_BASE + 100, 1), &[0x0F]);
     }
 
     #[test]

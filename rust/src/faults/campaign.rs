@@ -1,0 +1,298 @@
+//! Campaign execution: stage a scenario's inputs through the real
+//! memory tiers under injected upsets, classify every outcome, then run
+//! the unmodified kernel on whatever survived.
+//!
+//! The injection model is *pre-run image corruption*: the scenario's
+//! serialized input image is written into a tier ([`crate::mem::Mram`]
+//! for the retention store, [`crate::iss::FlatMem`] for L2,
+//! [`crate::cluster::Tcdm`] for L1), the plan's flips are applied
+//! through the tier's own injection hook, and the image is read back
+//! through the tier's architectural path — for MRAM that is the live
+//! SECDED decode with correction, scrubbing, counter bumps and the
+//! typed [`MemFault`] on uncorrectables. The kernel then runs, bit-true,
+//! on the post-fault bytes; divergence is judged against the fault-free
+//! oracle's output digest. The normal `simulate()` path shares none of
+//! this staging — campaigns cost nothing when not requested.
+
+use crate::cluster::{TCDM_BASE, TCDM_SIZE};
+use crate::iss::FlatMem;
+use crate::kernels::KernelRun;
+use crate::mem::ecc::{self, EccResult};
+use crate::mem::mram::EccStats;
+use crate::mem::{MemFault, Mram};
+use crate::sweep::{Scenario, SimArena, SimResult};
+
+use super::plan::{FaultPlan, FlipList};
+use super::{FaultStats, Tier, TierFaults};
+
+/// Version of the fault model (expansion algorithm, classification
+/// rules, outcome payload). Part of every campaign's cache key: bump it
+/// when the model changes so persisted outcomes can never go stale.
+pub const FAULT_MODEL_VERSION: u32 = 1;
+
+/// One cell of a campaign grid: a scenario attacked by a plan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Campaign {
+    pub scenario: Scenario,
+    pub plan: FaultPlan,
+}
+
+impl Campaign {
+    /// Stable identity string: fault-model version, the scenario's full
+    /// persisted cache key (kernel, size, precision, cores, program
+    /// hash), and the plan's bit-exact parameter fragment.
+    pub fn key(&self) -> String {
+        format!(
+            "faults-v{}|{}|{}",
+            FAULT_MODEL_VERSION,
+            crate::sweep::persist::key_string(&self.scenario.key()),
+            self.plan.key_fragment()
+        )
+    }
+
+    /// The exact flip lists this campaign injects: the plan expanded
+    /// against the scenario's staged input-image length. This is the
+    /// same expansion [`run_campaign`] performs, exposed so tests and
+    /// reports can derive classification expectations from the flips
+    /// alone, without re-running the campaign.
+    pub fn flip_lists(&self) -> Vec<FlipList> {
+        let image_len = self.scenario.canonical().gen_inputs().to_bytes().len();
+        self.plan.expand(image_len)
+    }
+}
+
+/// Everything one campaign produced.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CampaignOutcome {
+    /// The faulted kernel run (its `stats.faults` ledger is populated —
+    /// the one place in the codebase where it is nonzero).
+    pub run: KernelRun,
+    /// Per-tier classification counters (same data as
+    /// `run.stats.faults`, duplicated at top level for reporting).
+    pub stats: FaultStats,
+    /// The MRAM controller's own ECC counters from the architectural
+    /// read-back. `ecc.corrected` can exceed `stats.mram.corrected`:
+    /// ≥3-flip escapes decode as "corrections" at the controller while
+    /// the classifier, which knows the staged truth, counts them silent.
+    pub ecc: EccStats,
+    /// Words the MRAM read-back reported detected-uncorrectable
+    /// (the typed [`MemFault`] path).
+    pub poisoned_words: u64,
+    /// Output digest of the fault-free oracle run.
+    pub oracle_digest: u64,
+    /// Output digest of the faulted run.
+    pub faulted_digest: u64,
+    /// Whether the faulted outputs differ from the oracle's.
+    pub diverged: bool,
+}
+
+/// Run one campaign on `arena`, judging divergence against `oracle`
+/// (the scenario's fault-free [`SimResult`]). Deterministic: the flip
+/// lists come from the plan's seed alone, and injection is pure XOR
+/// staging — two runs of the same campaign are bit-identical at any
+/// worker count.
+pub fn run_campaign(c: &Campaign, oracle: &SimResult, arena: &mut SimArena) -> CampaignOutcome {
+    let scenario = c.scenario.canonical();
+    let mut image = scenario.gen_inputs().to_bytes();
+    let lists = c.plan.expand(image.len());
+
+    let mut stats = FaultStats::default();
+    let mut ecc = EccStats::default();
+    let mut poisoned_words = 0u64;
+    for list in &lists {
+        match list.tier {
+            Tier::Mram => inject_mram(
+                &mut image,
+                list,
+                stats.tier_mut(Tier::Mram),
+                &mut ecc,
+                &mut poisoned_words,
+            ),
+            Tier::L2 => {
+                arena.l2.reset();
+                inject_flat(&mut arena.l2, &mut image, list, stats.tier_mut(Tier::L2));
+            }
+            Tier::Tcdm => {
+                assert!(image.len() <= TCDM_SIZE, "campaign image must fit the 128 kB L1");
+                let tcdm = &mut arena.cluster.tcdm;
+                tcdm.reset();
+                tcdm.mem.write_bytes(TCDM_BASE, &image);
+                for f in &list.flips {
+                    tcdm.flip_bit(TCDM_BASE + f.unit as u32, f.bit as u8);
+                }
+                let after = tcdm.mem.read_bytes(TCDM_BASE, image.len()).to_vec();
+                classify_plain(&image, &after, list, stats.tier_mut(Tier::Tcdm));
+                image = after;
+            }
+        }
+    }
+
+    // The kernel itself runs unmodified on the post-fault image
+    // (run_on resets the arena, harmlessly wiping the staging bytes).
+    let faulted = scenario.run_on(arena, &scenario.with_bytes(&image));
+    let mut run = faulted.run;
+    run.stats.faults = stats;
+    CampaignOutcome {
+        run,
+        stats,
+        ecc,
+        poisoned_words,
+        oracle_digest: oracle.outputs_digest,
+        faulted_digest: faulted.outputs_digest,
+        diverged: faulted.outputs_digest != oracle.outputs_digest,
+    }
+}
+
+/// The 64-bit data word `w` of the staged image, zero-padded past the
+/// end (matching [`Mram::new`]'s zero-initialized array).
+fn word_truth(image: &[u8], w: usize) -> u64 {
+    let mut b = [0u8; 8];
+    let start = w * 8;
+    let end = (start + 8).min(image.len());
+    b[..end - start].copy_from_slice(&image[start..end]);
+    u64::from_le_bytes(b)
+}
+
+/// MRAM hop: write the image, apply the plan's codeword flips, classify
+/// every upset word against the staged truth via a raw SECDED decode,
+/// then perform the architectural read-back (live correction, scrub,
+/// [`MemFault`] on uncorrectables) whose bytes become the new image.
+fn inject_mram(
+    image: &mut Vec<u8>,
+    list: &FlipList,
+    tf: &mut TierFaults,
+    ecc_out: &mut EccStats,
+    poisoned: &mut u64,
+) {
+    if list.flips.is_empty() {
+        return;
+    }
+    let mut mram = Mram::new();
+    mram.write(0, image);
+    for f in &list.flips {
+        mram.inject_bit_flip(f.unit * 8, f.bit);
+    }
+    tf.flips += list.flips.len() as u64;
+
+    let mut units: Vec<usize> = list.flips.iter().map(|f| f.unit).collect();
+    units.sort_unstable();
+    units.dedup();
+    tf.words += units.len() as u64;
+    for &w in &units {
+        let truth = word_truth(image, w);
+        match ecc::decode(mram.codeword(w * 8)) {
+            // Clean with the right data = the flips net-cancelled;
+            // clean with wrong data would be a ≥4-flip valid-codeword
+            // escape — silent by definition.
+            EccResult::Clean(v) if v == truth => tf.masked += 1,
+            EccResult::Clean(_) => tf.silent += 1,
+            // Corrected back to truth is SECDED doing its job; a
+            // "correction" to the wrong value is a ≥3-flip
+            // miscorrection escape — silent data corruption.
+            EccResult::Corrected(v) if v == truth => tf.corrected += 1,
+            EccResult::Corrected(_) => tf.silent += 1,
+            EccResult::Detected(_) => tf.detected += 1,
+        }
+    }
+
+    let len = image.len();
+    let bytes = match mram.read(0, len) {
+        Ok(b) => b,
+        Err(fault) => {
+            let MemFault::Uncorrectable { ref word_offsets, .. } = fault;
+            *poisoned += word_offsets.len() as u64;
+            fault.into_data()
+        }
+    };
+    ecc_out.corrected += mram.ecc_stats.corrected;
+    ecc_out.detected += mram.ecc_stats.detected;
+    *image = bytes;
+}
+
+/// Unprotected-SRAM hop (L2): stage, flip through the tier hook, read
+/// back, classify byte-wise.
+fn inject_flat(mem: &mut FlatMem, image: &mut Vec<u8>, list: &FlipList, tf: &mut TierFaults) {
+    let base = mem.base;
+    mem.write_bytes(base, image);
+    for f in &list.flips {
+        mem.flip_bit(base + f.unit as u32, f.bit as u8);
+    }
+    let after = mem.read_bytes(base, image.len()).to_vec();
+    classify_plain(image, &after, list, tf);
+    *image = after;
+}
+
+/// Classify an unprotected tier's upsets: a byte that reads back equal
+/// to the staged value had its flips net-cancel (masked); anything else
+/// is silent data corruption — there is no ECC to correct or detect.
+fn classify_plain(before: &[u8], after: &[u8], list: &FlipList, tf: &mut TierFaults) {
+    tf.flips += list.flips.len() as u64;
+    let mut units: Vec<usize> = list.flips.iter().map(|f| f.unit).collect();
+    units.sort_unstable();
+    units.dedup();
+    tf.words += units.len() as u64;
+    for &u in &units {
+        if after[u] == before[u] {
+            tf.masked += 1;
+        } else {
+            tf.silent += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::TierMask;
+    use crate::kernels::fp_matmul::FpWidth;
+
+    fn campaign(seed: u64) -> Campaign {
+        Campaign {
+            scenario: Scenario::FpMatmul { w: FpWidth::F32, cores: 2 },
+            plan: FaultPlan {
+                seed,
+                sleep_s: 3600.0,
+                mram_rate: 1e-4,
+                sram_rate: 1e-3,
+                tiers: TierMask::ALL,
+            },
+        }
+    }
+
+    #[test]
+    fn campaign_is_deterministic_on_one_arena() {
+        let mut arena = SimArena::new();
+        let c = campaign(7);
+        let oracle = c.scenario.simulate(&mut arena);
+        let a = run_campaign(&c, &oracle, &mut arena);
+        let b = run_campaign(&c, &oracle, &mut arena);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn classification_accounts_for_every_upset_unit() {
+        let mut arena = SimArena::new();
+        let c = campaign(11);
+        let oracle = c.scenario.simulate(&mut arena);
+        let out = run_campaign(&c, &oracle, &mut arena);
+        for t in [Tier::Mram, Tier::L2, Tier::Tcdm] {
+            let tf = out.stats.tier(t);
+            assert_eq!(tf.classified(), tf.words, "{}: every unit classified once", t.name());
+            assert!(tf.flips >= tf.words, "{}: units can't outnumber flips", t.name());
+        }
+        assert_eq!(out.diverged, out.faulted_digest != out.oracle_digest);
+    }
+
+    #[test]
+    fn keys_separate_seeds_scenarios_and_model_version() {
+        let a = campaign(1).key();
+        let b = campaign(2).key();
+        assert_ne!(a, b);
+        assert!(a.starts_with("faults-v1|"));
+        let other = Campaign {
+            scenario: Scenario::FpMatmul { w: FpWidth::F32, cores: 4 },
+            plan: campaign(1).plan,
+        };
+        assert_ne!(a, other.key());
+    }
+}

@@ -1,0 +1,436 @@
+//! The `vega faults` subcommand: run a campaign grid — seeds × an
+//! upset-rate ladder × a tier mask — over one kernel and render the
+//! ECC-coverage report as CSV, Markdown or JSON.
+//!
+//! Grid cells fan out across the engine's worker pool and memoize
+//! through the persistent `.flt` store tier, and the report is emitted
+//! in deterministic grid order (seed-major, then rate) — byte-identical
+//! for any `--jobs`, like every other renderer in the crate. A
+//! panicking cell renders as its own `status` column error while the
+//! rest of the grid completes (the sweep-engine fault isolation this
+//! issue added, applied to its own reporting path).
+
+use crate::kernels::fp_matmul::FpWidth;
+use crate::kernels::int_matmul::IntWidth;
+use crate::sweep::explore::{sanitize_cell, GridFormat};
+use crate::sweep::{default_jobs, Scenario, SweepEngine};
+
+use super::{Campaign, CampaignOutcome, FaultPlan, TierMask};
+
+/// A parsed `vega faults` invocation.
+#[derive(Debug, Clone)]
+pub struct FaultsCmd {
+    /// The attacked kernel (canonical CLI token, for report labels).
+    pub kernel: &'static str,
+    /// The scenario every campaign of the grid attacks.
+    pub scenario: Scenario,
+    /// Active cores (matmul kernels only; NSAA kernels pin 8).
+    pub cores: usize,
+    /// Campaign seeds (`--seeds`, grid-major axis).
+    pub seeds: Vec<u64>,
+    /// Upset-rate ladder in upsets per Mbit (per hour of sleep for
+    /// MRAM, per run for the SRAM tiers) — `--rates`, grid-minor axis.
+    pub rates: Vec<f64>,
+    /// Tiers under attack (`--tiers mram+l2+tcdm`, `l1` = `tcdm`).
+    pub tiers: TierMask,
+    /// Modeled sleep duration scaling MRAM retention upsets (`--sleep-s`).
+    pub sleep_s: f64,
+    /// Output renderer (`--format csv|md|json`).
+    pub format: GridFormat,
+    /// Worker count (`--jobs`, default `VEGA_JOBS`/all cores).
+    pub jobs: usize,
+    /// Print memo/store counters to stderr after rendering (`--stats`).
+    pub stats: bool,
+}
+
+/// Resolve one `--kernel` token to its canonical label and scenario.
+fn parse_kernel(tok: &str, cores: usize) -> Result<(&'static str, Scenario), String> {
+    let t = tok.trim();
+    match t.to_ascii_lowercase().as_str() {
+        "matmul-i8" => return Ok(("matmul-i8", Scenario::IntMatmul { w: IntWidth::I8, cores })),
+        "matmul-i16" => {
+            return Ok(("matmul-i16", Scenario::IntMatmul { w: IntWidth::I16, cores }))
+        }
+        "matmul-i32" => {
+            return Ok(("matmul-i32", Scenario::IntMatmul { w: IntWidth::I32, cores }))
+        }
+        "matmul-f32" => return Ok(("matmul-f32", Scenario::FpMatmul { w: FpWidth::F32, cores })),
+        "matmul-f16" => {
+            return Ok(("matmul-f16", Scenario::FpMatmul { w: FpWidth::F16x2, cores }))
+        }
+        "matmul-f8" => return Ok(("matmul-f8", Scenario::FpMatmul { w: FpWidth::F8x4, cores })),
+        _ => {}
+    }
+    // Table V NSAA kernels run on the fixed 8-core configuration.
+    let name = match t.to_ascii_uppercase().as_str() {
+        "CONV" => "CONV",
+        "DWT" => "DWT",
+        "FFT" => "FFT",
+        "FIR" => "FIR",
+        "IIR" => "IIR",
+        "KMEANS" => "KMEANS",
+        "SVM" => "SVM",
+        "MATMUL" => "MATMUL",
+        other => {
+            return Err(format!(
+                "unknown kernel '{other}' (supported: matmul-i8|matmul-i16|matmul-i32|\
+                 matmul-f32|matmul-f16|matmul-f8|CONV|DWT|FFT|FIR|IIR|KMEANS|SVM|MATMUL)"
+            ))
+        }
+    };
+    Ok((name, Scenario::Nsaa { name, w: FpWidth::F32 }))
+}
+
+fn parse_seeds(s: &str) -> Result<Vec<u64>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(tok.parse::<u64>().map_err(|_| format!("bad seed '{tok}'"))?);
+    }
+    if out.is_empty() {
+        return Err("--seeds selected no seeds".into());
+    }
+    Ok(out)
+}
+
+fn parse_rates(s: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let r = tok.parse::<f64>().ok().filter(|r| r.is_finite() && *r > 0.0).ok_or_else(
+            || format!("bad rate '{tok}' (must be a finite positive upsets-per-Mbit value)"),
+        )?;
+        out.push(r);
+    }
+    if out.is_empty() {
+        return Err("--rates selected no rates".into());
+    }
+    Ok(out)
+}
+
+impl FaultsCmd {
+    /// Parse the arguments following `vega faults`. Unknown flags and
+    /// malformed values are errors.
+    pub fn parse(args: &[String]) -> Result<FaultsCmd, String> {
+        let mut kernel_tok = "matmul-i8".to_string();
+        let mut cores = 8usize;
+        let mut seeds = vec![1u64];
+        let mut rates = vec![1e-6, 1e-5, 1e-4];
+        let mut tiers = TierMask::ALL;
+        let mut sleep_s = 3600.0f64;
+        let mut format = GridFormat::Csv;
+        let mut jobs = default_jobs();
+        let mut stats = false;
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let mut value = |flag: &str| {
+                it.next().map(String::as_str).ok_or_else(|| format!("{flag} needs a value"))
+            };
+            match a.as_str() {
+                "--kernel" => kernel_tok = value("--kernel")?.to_string(),
+                "--cores" => {
+                    let v = value("--cores")?;
+                    cores = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| (1..=crate::cluster::N_CORES).contains(&n))
+                        .ok_or_else(|| {
+                            format!(
+                                "--cores must be 1..={}, got '{v}'",
+                                crate::cluster::N_CORES
+                            )
+                        })?;
+                }
+                "--seeds" => seeds = parse_seeds(value("--seeds")?)?,
+                "--rates" => rates = parse_rates(value("--rates")?)?,
+                "--tiers" => tiers = TierMask::parse(value("--tiers")?)?,
+                "--sleep-s" => {
+                    let v = value("--sleep-s")?;
+                    sleep_s = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|s| s.is_finite() && *s > 0.0)
+                        .ok_or_else(|| format!("--sleep-s must be a positive duration, got '{v}'"))?;
+                }
+                "--format" => format = GridFormat::parse(value("--format")?)?,
+                "--jobs" => {
+                    let v = value("--jobs")?;
+                    jobs = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("--jobs must be a positive integer, got '{v}'"))?;
+                }
+                "--stats" => stats = true,
+                other => return Err(format!("unknown flag '{other}'")),
+            }
+        }
+        let (kernel, scenario) = parse_kernel(&kernel_tok, cores)?;
+        Ok(FaultsCmd {
+            kernel,
+            scenario,
+            cores,
+            seeds,
+            rates,
+            tiers,
+            sleep_s,
+            format,
+            jobs,
+            stats,
+        })
+    }
+
+    /// The grid's campaigns in render order (seed-major, then rate). The
+    /// single `--rates` value drives both the MRAM retention rate (scaled
+    /// by `--sleep-s`) and the per-run SRAM soft-error rate; the tier
+    /// mask selects which of those streams actually fire.
+    pub fn campaigns(&self) -> Vec<Campaign> {
+        let mut v = Vec::with_capacity(self.seeds.len() * self.rates.len());
+        for &seed in &self.seeds {
+            for &rate in &self.rates {
+                v.push(Campaign {
+                    scenario: self.scenario,
+                    plan: FaultPlan {
+                        seed,
+                        sleep_s: self.sleep_s,
+                        mram_rate: rate,
+                        sram_rate: rate,
+                        tiers: self.tiers,
+                    },
+                });
+            }
+        }
+        v
+    }
+}
+
+const COLUMNS: [&str; 25] = [
+    "kernel",
+    "cores",
+    "seed",
+    "rate",
+    "sleep_s",
+    "tiers",
+    "mram_flips",
+    "mram_words",
+    "mram_corrected",
+    "mram_detected",
+    "mram_silent",
+    "mram_masked",
+    "l2_flips",
+    "l2_words",
+    "l2_silent",
+    "l2_masked",
+    "tcdm_flips",
+    "tcdm_words",
+    "tcdm_silent",
+    "tcdm_masked",
+    "ecc_corrected",
+    "ecc_detected",
+    "poisoned_words",
+    "diverged",
+    "status",
+];
+
+/// One rendered grid row: the campaign's coordinates plus either its
+/// outcome or the cell's structured error.
+struct Row<'a> {
+    cmd: &'a FaultsCmd,
+    seed: u64,
+    rate: f64,
+    cell: Result<CampaignOutcome, String>,
+}
+
+impl Row<'_> {
+    fn cells(&self) -> [String; 25] {
+        let mut out: [String; 25] = Default::default();
+        out[0] = self.cmd.kernel.to_string();
+        out[1] = self.cmd.cores.to_string();
+        out[2] = self.seed.to_string();
+        out[3] = format!("{:e}", self.rate);
+        out[4] = format!("{:.1}", self.cmd.sleep_s);
+        out[5] = self.cmd.tiers.label();
+        match &self.cell {
+            Ok(o) => {
+                let m = &o.stats.mram;
+                let l = &o.stats.l2;
+                let t = &o.stats.tcdm;
+                for (i, v) in [
+                    m.flips,
+                    m.words,
+                    m.corrected,
+                    m.detected,
+                    m.silent,
+                    m.masked,
+                    l.flips,
+                    l.words,
+                    l.silent,
+                    l.masked,
+                    t.flips,
+                    t.words,
+                    t.silent,
+                    t.masked,
+                    o.ecc.corrected,
+                    o.ecc.detected,
+                    o.poisoned_words,
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    out[6 + i] = v.to_string();
+                }
+                out[23] = if o.diverged { "1" } else { "0" }.to_string();
+                out[24] = "ok".to_string();
+            }
+            // Errored cell: coordinates + status only, numerics blank —
+            // unmistakable for a zero-upset row.
+            Err(msg) => out[24] = sanitize_cell(msg),
+        }
+        out
+    }
+}
+
+/// Render `cmd`'s grid through `eng`. The returned string ends in
+/// exactly one newline and is byte-identical for any `--jobs`.
+pub fn render(eng: &SweepEngine, cmd: &FaultsCmd) -> String {
+    let grid = cmd.campaigns();
+    let cells = eng.run_campaigns(&grid);
+    let rows: Vec<Row> = grid
+        .iter()
+        .zip(cells)
+        .map(|(c, cell)| Row {
+            cmd,
+            seed: c.plan.seed,
+            rate: c.plan.mram_rate,
+            cell: cell.map_err(|e| e.message),
+        })
+        .collect();
+    match cmd.format {
+        GridFormat::Csv => render_csv(&rows),
+        GridFormat::Markdown => render_md(&rows),
+        GridFormat::Json => render_json(cmd, &rows),
+    }
+}
+
+fn render_csv(rows: &[Row]) -> String {
+    let mut out = COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.cells().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn render_md(rows: &[Row]) -> String {
+    let mut out = format!("| {} |\n", COLUMNS.join(" | "));
+    out.push_str(&format!("|{}\n", "---:|".repeat(COLUMNS.len())));
+    for r in rows {
+        out.push_str(&format!("| {} |\n", r.cells().join(" | ")));
+    }
+    out
+}
+
+fn render_json(cmd: &FaultsCmd, rows: &[Row]) -> String {
+    let seeds: Vec<String> = cmd.seeds.iter().map(|s| s.to_string()).collect();
+    let rates: Vec<String> = cmd.rates.iter().map(|r| format!("{r:e}")).collect();
+    let mut out = format!(
+        "{{\n  \"grid\": {{\"kernel\": \"{}\", \"cores\": {}, \"sleep_s\": {:.1}, \
+         \"tiers\": \"{}\", \"seeds\": [{}], \"rates\": [{}]}},\n  \"rows\": [\n",
+        cmd.kernel,
+        cmd.cores,
+        cmd.sleep_s,
+        cmd.tiers.label(),
+        seeds.join(", "),
+        rates.join(", ")
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let cells = r.cells();
+        out.push_str(&format!("    {{\"seed\": {}, \"rate\": {}, ", cells[2], cells[3]));
+        match &r.cell {
+            Ok(_) => {
+                for (name, cell) in COLUMNS.iter().zip(cells.iter()).skip(6).take(17) {
+                    out.push_str(&format!("\"{name}\": {cell}, "));
+                }
+                out.push_str(&format!(
+                    "\"diverged\": {}, \"status\": \"ok\"}}",
+                    if cells[23] == "1" { "true" } else { "false" }
+                ));
+            }
+            Err(_) => out.push_str(&format!("\"status\": \"{}\"}}", cells[24])),
+        }
+        out.push_str(if i + 1 == rows.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_round_trips_the_acceptance_invocation() {
+        let cmd = FaultsCmd::parse(&argv(&[
+            "--kernel",
+            "matmul-f32",
+            "--cores",
+            "8",
+            "--seeds",
+            "7,8",
+            "--rates",
+            "1e-5,2e-4",
+            "--tiers",
+            "mram",
+            "--sleep-s",
+            "3600",
+            "--format",
+            "csv",
+        ]))
+        .unwrap();
+        assert_eq!(cmd.kernel, "matmul-f32");
+        assert_eq!(cmd.scenario, Scenario::FpMatmul { w: FpWidth::F32, cores: 8 });
+        assert_eq!(cmd.seeds, vec![7, 8]);
+        assert_eq!(cmd.rates, vec![1e-5, 2e-4]);
+        assert_eq!(cmd.tiers, TierMask { mram: true, l2: false, tcdm: false });
+        assert_eq!(cmd.campaigns().len(), 4, "2 seeds x 2 rates");
+        // NSAA tokens resolve case-insensitively and pin 8 cores.
+        let fir = FaultsCmd::parse(&argv(&["--kernel", "fir"])).unwrap();
+        assert_eq!(fir.scenario, Scenario::Nsaa { name: "FIR", w: FpWidth::F32 });
+        assert!(FaultsCmd::parse(&argv(&["--kernel", "bogus"])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--rates", "0"])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--rates", "nan"])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--seeds", ""])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--cores", "10"])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn csv_grid_renders_every_cell_with_ok_status() {
+        let cmd = FaultsCmd::parse(&argv(&[
+            "--kernel",
+            "matmul-f32",
+            "--cores",
+            "2",
+            "--seeds",
+            "3",
+            "--rates",
+            "1e-4",
+            "--sleep-s",
+            "3600",
+        ]))
+        .unwrap();
+        let eng = SweepEngine::serial();
+        let out = render(&eng, &cmd);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 1 + 1);
+        assert_eq!(lines[0], COLUMNS.join(","));
+        assert!(lines[1].starts_with("matmul-f32,2,3,1e-4,3600.0,mram+l2+tcdm,"));
+        assert!(lines[1].ends_with(",ok"));
+        // Every data column is populated (no blank numerics on ok rows).
+        assert_eq!(lines[1].split(',').count(), COLUMNS.len());
+        assert!(lines[1].split(',').all(|c| !c.is_empty()));
+    }
+}

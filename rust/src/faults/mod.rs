@@ -1,0 +1,124 @@
+//! Deterministic fault injection & resilience measurement (ISSUE 6).
+//!
+//! Vega's headline claim — state retention through a 1.7 µW sleep mode —
+//! rests on the MRAM keeping its bits across the sleep interval, and on
+//! the 78-bit SECDED interface ([`crate::mem::ecc`]) catching the upsets
+//! it doesn't keep. This module attacks that protection on purpose:
+//!
+//! * [`FaultPlan`] describes a campaign as per-tier upset **rates**
+//!   (MRAM retention upsets scaled by a modeled sleep duration; SRAM/L2
+//!   and TCDM soft errors per active run) and expands them, via the
+//!   repo's own xorshift [`crate::common::Rng`], into an exact
+//!   `(unit, bit, time)` flip list — replayable from its seed alone, at
+//!   any `--jobs`.
+//! * [`run_campaign`] stages a scenario's input image through the real
+//!   tier objects ([`crate::mem::Mram`] with live SECDED encode/decode/
+//!   scrub, [`crate::iss::FlatMem`] for L2, [`crate::cluster::Tcdm`] for
+//!   L1), applies the flips, classifies every affected storage unit as
+//!   corrected / detected-uncorrectable / **silent data corruption** /
+//!   masked, then runs the unmodified kernel on the post-fault image and
+//!   compares its output digest against the fault-free oracle.
+//! * [`FaultStats`] rides inside [`crate::cluster::ClusterStats`] (all
+//!   zeros outside campaigns — the normal simulation path is untouched)
+//!   and out through the report/persistence pipeline.
+//!
+//! The sweep engine half of the issue — per-work-item `catch_unwind` and
+//! structured [`crate::sweep::SimError`] cells — lives in
+//! [`crate::sweep`]; the `vega faults` CLI grid lives in [`cli`].
+
+pub mod campaign;
+pub mod cli;
+pub mod plan;
+
+pub use campaign::{run_campaign, Campaign, CampaignOutcome, FAULT_MODEL_VERSION};
+pub use cli::FaultsCmd;
+pub use plan::{FaultPlan, Flip, FlipList, TierMask};
+
+/// A storage tier fault campaigns can target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tier {
+    /// Non-volatile MRAM behind SECDED(72,64) — the retention store.
+    Mram,
+    /// L2 interleaved SRAM (unprotected in the model).
+    L2,
+    /// Cluster L1 TCDM banks (unprotected).
+    Tcdm,
+}
+
+impl Tier {
+    pub fn name(self) -> &'static str {
+        match self {
+            Tier::Mram => "mram",
+            Tier::L2 => "l2",
+            Tier::Tcdm => "tcdm",
+        }
+    }
+}
+
+/// Per-tier outcome counters for one campaign.
+///
+/// A classified *event* is one storage unit — a 64-bit SECDED codeword
+/// for MRAM, a byte for the SRAM tiers — after net-XOR of every flip
+/// that landed in it (two flips on the same bit cancel in silicon and
+/// cancel here).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierFaults {
+    /// Raw flips the plan injected into this tier.
+    pub flips: u64,
+    /// Distinct storage units those flips landed in.
+    pub words: u64,
+    /// Units whose upset the tier's ECC corrected back to truth.
+    pub corrected: u64,
+    /// Units reported detected-uncorrectable (the controller interrupt).
+    pub detected: u64,
+    /// Units that read back wrong with no indication — silent data
+    /// corruption: every upset unit of an unprotected tier, plus ≥3-flip
+    /// miscorrection escapes through SECDED.
+    pub silent: u64,
+    /// Units whose flips net-cancelled or landed outside the data bits
+    /// (check/parity positions "corrected" back to intact data).
+    pub masked: u64,
+}
+
+impl TierFaults {
+    /// Total classified units — equals `words` by construction.
+    pub fn classified(&self) -> u64 {
+        self.corrected + self.detected + self.silent + self.masked
+    }
+}
+
+/// The per-tier fault ledger carried through [`crate::cluster::ClusterStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub mram: TierFaults,
+    pub l2: TierFaults,
+    pub tcdm: TierFaults,
+}
+
+impl FaultStats {
+    pub fn tier(&self, t: Tier) -> &TierFaults {
+        match t {
+            Tier::Mram => &self.mram,
+            Tier::L2 => &self.l2,
+            Tier::Tcdm => &self.tcdm,
+        }
+    }
+
+    pub fn tier_mut(&mut self, t: Tier) -> &mut TierFaults {
+        match t {
+            Tier::Mram => &mut self.mram,
+            Tier::L2 => &mut self.l2,
+            Tier::Tcdm => &mut self.tcdm,
+        }
+    }
+
+    /// Silent-data-corruption events across every tier.
+    pub fn silent_total(&self) -> u64 {
+        self.mram.silent + self.l2.silent + self.tcdm.silent
+    }
+
+    /// Raw injected flips across every tier.
+    pub fn flips_total(&self) -> u64 {
+        self.mram.flips + self.l2.flips + self.tcdm.flips
+    }
+}

@@ -1,0 +1,254 @@
+//! Campaign description and deterministic flip-list expansion.
+//!
+//! A [`FaultPlan`] is *rates*, not flips: MRAM retention upsets per Mbit
+//! per second of sleep, SRAM soft errors per Mbit per run. [`expand`]
+//! (`FaultPlan::expand`) turns the rates into an exact, ordered list of
+//! `(unit, bit, time)` flips using one [`Rng`] stream per tier, salted
+//! from the campaign seed — so the same plan expands to the same flips
+//! on every machine, at any `--jobs`, forever. No global state, no
+//! wall-clock entropy.
+
+use crate::common::Rng;
+
+use super::Tier;
+
+/// Per-tier salts XORed into the campaign seed so each tier draws from
+/// an independent deterministic stream — enabling or masking one tier
+/// never perturbs another tier's flips.
+const SALT_MRAM: u64 = 0x4D52_414D; // "MRAM"
+const SALT_L2: u64 = 0x4C32_5352; // "L2SR"
+const SALT_TCDM: u64 = 0x5443_444D; // "TCDM"
+
+/// MRAM codeword width: 64 data + 7 check + 1 parity modeled bits.
+const MRAM_UNIT_BITS: u64 = 72;
+
+/// Which tiers a campaign may flip.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TierMask {
+    pub mram: bool,
+    pub l2: bool,
+    pub tcdm: bool,
+}
+
+impl TierMask {
+    pub const ALL: TierMask = TierMask { mram: true, l2: true, tcdm: true };
+
+    /// Parse a comma-separated tier list (`mram,l2,tcdm`; `l1` is
+    /// accepted as an alias for `tcdm`).
+    pub fn parse(s: &str) -> Result<TierMask, String> {
+        let mut m = TierMask { mram: false, l2: false, tcdm: false };
+        for part in s.split(',') {
+            match part.trim() {
+                "mram" => m.mram = true,
+                "l2" => m.l2 = true,
+                "tcdm" | "l1" => m.tcdm = true,
+                other => return Err(format!("unknown tier '{other}' (expected mram, l2, tcdm)")),
+            }
+        }
+        if !(m.mram || m.l2 || m.tcdm) {
+            return Err("empty tier mask".into());
+        }
+        Ok(m)
+    }
+
+    /// Canonical `mram+l2+tcdm` subset label (stable: used in cache keys
+    /// and report rows).
+    pub fn label(&self) -> String {
+        let mut parts = Vec::new();
+        if self.mram {
+            parts.push("mram");
+        }
+        if self.l2 {
+            parts.push("l2");
+        }
+        if self.tcdm {
+            parts.push("tcdm");
+        }
+        parts.join("+")
+    }
+
+    pub fn enabled(&self, t: Tier) -> bool {
+        match t {
+            Tier::Mram => self.mram,
+            Tier::L2 => self.l2,
+            Tier::Tcdm => self.tcdm,
+        }
+    }
+}
+
+/// One exact bit upset: storage `unit` (64-bit codeword index for MRAM,
+/// byte index for SRAM tiers), `bit` within the unit, and a normalized
+/// occurrence `time` in [0, 1) that orders the flips within the modeled
+/// interval.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Flip {
+    pub unit: usize,
+    pub bit: u32,
+    pub time: f64,
+}
+
+/// All flips one campaign injects into one tier, time-ordered.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlipList {
+    pub tier: Tier,
+    pub flips: Vec<Flip>,
+}
+
+/// A seeded fault campaign over one scenario's input image.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Campaign seed — the whole expansion derives from it.
+    pub seed: u64,
+    /// Modeled sleep interval in seconds (scales MRAM retention upsets;
+    /// the SRAM tiers are powered off in retentive sleep, so it does not
+    /// scale them).
+    pub sleep_s: f64,
+    /// MRAM retention-upset rate: upsets per Mbit per second of sleep.
+    pub mram_rate: f64,
+    /// SRAM soft-error rate: upsets per Mbit per (active) run.
+    pub sram_rate: f64,
+    /// Which tiers to attack.
+    pub tiers: TierMask,
+}
+
+impl FaultPlan {
+    /// Expand the rates into exact per-tier flip lists for an input
+    /// image of `image_len` bytes. Canonical tier order MRAM → L2 →
+    /// TCDM; each tier draws from its own salted stream, so the same
+    /// seed yields the same MRAM flips whether or not L2 is masked.
+    pub fn expand(&self, image_len: usize) -> Vec<FlipList> {
+        let mut out = Vec::new();
+        if self.tiers.mram {
+            let words = image_len.div_ceil(8);
+            let lambda =
+                self.mram_rate * (words as f64 * MRAM_UNIT_BITS as f64 / 1e6) * self.sleep_s;
+            out.push(self.expand_tier(Tier::Mram, SALT_MRAM, words, MRAM_UNIT_BITS, lambda));
+        }
+        if self.tiers.l2 {
+            let lambda = self.sram_rate * (image_len as f64 * 8.0 / 1e6);
+            out.push(self.expand_tier(Tier::L2, SALT_L2, image_len, 8, lambda));
+        }
+        if self.tiers.tcdm {
+            let lambda = self.sram_rate * (image_len as f64 * 8.0 / 1e6);
+            out.push(self.expand_tier(Tier::Tcdm, SALT_TCDM, image_len, 8, lambda));
+        }
+        out
+    }
+
+    fn expand_tier(
+        &self,
+        tier: Tier,
+        salt: u64,
+        units: usize,
+        unit_bits: u64,
+        lambda: f64,
+    ) -> FlipList {
+        let mut rng = Rng::new(self.seed ^ salt);
+        // Expected count λ realized as floor(λ) certain flips plus one
+        // Bernoulli(frac(λ)) flip — deterministic given the stream, with
+        // E[count] = λ exactly.
+        let count = if units == 0 {
+            0
+        } else {
+            lambda as u64 + u64::from(rng.f64() < lambda.fract())
+        };
+        let mut flips: Vec<Flip> = (0..count)
+            .map(|_| Flip {
+                unit: rng.below(units as u64) as usize,
+                bit: rng.below(unit_bits) as u32,
+                time: rng.f64(),
+            })
+            .collect();
+        // Stable time order: XOR injection is commutative, but a pinned
+        // order keeps the expansion itself byte-reproducible.
+        flips.sort_by(|a, b| a.time.partial_cmp(&b.time).expect("times are finite"));
+        FlipList { tier, flips }
+    }
+
+    /// Stable key fragment for cache/report identity: every field that
+    /// changes the expansion, bit-exact (f64 fields via `to_bits`).
+    pub fn key_fragment(&self) -> String {
+        format!(
+            "seed={:016x}|sleep={:016x}|mr={:016x}|sr={:016x}|tiers={}",
+            self.seed,
+            self.sleep_s.to_bits(),
+            self.mram_rate.to_bits(),
+            self.sram_rate.to_bits(),
+            self.tiers.label()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            seed: 42,
+            sleep_s: 3600.0,
+            mram_rate: 1e-4,
+            sram_rate: 1e-3,
+            tiers: TierMask::ALL,
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        assert_eq!(plan().expand(4096), plan().expand(4096));
+    }
+
+    #[test]
+    fn tier_streams_are_independent_of_the_mask() {
+        let full = plan().expand(4096);
+        let solo = FaultPlan { tiers: TierMask { mram: false, l2: false, tcdm: true }, ..plan() }
+            .expand(4096);
+        let tcdm_full = full.iter().find(|l| l.tier == Tier::Tcdm).unwrap();
+        assert_eq!(solo.len(), 1);
+        assert_eq!(&solo[0], tcdm_full, "masking other tiers must not move TCDM's flips");
+    }
+
+    #[test]
+    fn flips_stay_in_bounds_and_time_ordered() {
+        for list in plan().expand(4096) {
+            let (units, bits) = match list.tier {
+                Tier::Mram => (4096usize.div_ceil(8), 72),
+                Tier::L2 | Tier::Tcdm => (4096, 8),
+            };
+            let mut last = 0.0f64;
+            for f in &list.flips {
+                assert!(f.unit < units);
+                assert!(f.bit < bits);
+                assert!((0.0..1.0).contains(&f.time));
+                assert!(f.time >= last, "flips must be time-sorted");
+                last = f.time;
+            }
+        }
+    }
+
+    #[test]
+    fn count_is_floor_or_ceil_of_lambda() {
+        // λ for MRAM here: 1e-4 × (512 × 72 / 1e6) × 3600 ≈ 13.27.
+        let lists = plan().expand(4096);
+        let mram = lists.iter().find(|l| l.tier == Tier::Mram).unwrap();
+        let lambda = 1e-4 * (512.0 * 72.0 / 1e6) * 3600.0;
+        let n = mram.flips.len() as f64;
+        assert!(n == lambda.floor() || n == lambda.floor() + 1.0, "count {n} vs λ {lambda}");
+    }
+
+    #[test]
+    fn empty_image_expands_to_no_flips() {
+        for list in plan().expand(0) {
+            assert!(list.flips.is_empty());
+        }
+    }
+
+    #[test]
+    fn tier_mask_parse_and_label_round_trip() {
+        assert_eq!(TierMask::parse("mram,l2,tcdm").unwrap(), TierMask::ALL);
+        assert_eq!(TierMask::parse("l1").unwrap().label(), "tcdm");
+        assert_eq!(TierMask::parse("mram").unwrap().label(), "mram");
+        assert!(TierMask::parse("flash").is_err());
+        assert_eq!(TierMask::ALL.label(), "mram+l2+tcdm");
+    }
+}

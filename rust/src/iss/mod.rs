@@ -58,6 +58,16 @@ impl FlatMem {
         self.data[o..o + bytes.len()].copy_from_slice(bytes);
     }
 
+    /// Flip one bit of the byte at `addr`: the SRAM soft-error injection
+    /// hook (ISSUE 6). Plain unprotected SRAM — no ECC stands between an
+    /// upset here and the consumer, which is exactly what the fault
+    /// campaigns measure. Zero-cost when unused: nothing else in the
+    /// load/store path changes.
+    pub fn flip_bit(&mut self, addr: u32, bit: u8) {
+        let o = self.off(addr);
+        self.data[o] ^= 1 << (bit & 7);
+    }
+
     pub fn read_bytes(&self, addr: u32, len: usize) -> &[u8] {
         let o = self.off(addr);
         &self.data[o..o + len]

@@ -53,7 +53,7 @@ impl Default for TcdmAlloc {
 }
 
 /// Uniform result of a kernel run (feeds the figure/table generators).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct KernelRun {
     pub name: String,
     pub stats: ClusterStats,

@@ -30,6 +30,10 @@
 //! * [`dnn`] — layer graph IR, MobileNetV2 / RepVGG topologies, the
 //!   DORY-style tiler and the four-stage double-buffered pipeline model.
 //! * [`runtime`] — PJRT bridge loading `artifacts/*.hlo.txt`.
+//! * [`faults`] — deterministic seeded fault-injection campaigns through
+//!   the real SECDED/tier models, with per-tier corrected / detected /
+//!   silent classification and fault-free-oracle divergence checks
+//!   (`vega faults`).
 //! * [`sweep`] — the sweep execution engine: memoized, parallel scenario
 //!   fan-out behind the reproduction suite (`vega repro --jobs N`), the
 //!   persistent on-disk simulation store shared across processes
@@ -55,6 +59,7 @@ pub mod common;
 pub mod coordinator;
 pub mod cwu;
 pub mod dnn;
+pub mod faults;
 pub mod hdc;
 pub mod hwce;
 pub mod isa;

@@ -15,6 +15,14 @@
 //!                           (cores × precision × DVFS) beyond the
 //!                           paper's tables; one simulation per cell,
 //!                           DVFS rows derived analytically
+//! vega faults [--kernel K] [--cores N] [--seeds a,b] [--rates r1,r2]
+//!             [--tiers mram,l2,tcdm] [--sleep-s S]
+//!             [--format csv|md|json] [--jobs N] [--stats]
+//!                           run a seeded bit-upset campaign grid
+//!                           (seeds × upset rates × tier mask) over one
+//!                           kernel and report SECDED coverage: per-tier
+//!                           corrected/detected/silent/masked counts and
+//!                           output divergence vs the fault-free oracle
 //! vega runtime              show the PJRT artifact registry
 //! vega golden <name>        run one artifact and cross-check the
 //!                           simulator's functional model against it
@@ -23,10 +31,11 @@
 //!                           report cycles / rates / contention
 //! ```
 //!
-//! `repro` and `sweep` run on a *persistent* engine: kernel simulations
-//! and DNN network reports land in the on-disk cache (`$VEGA_CACHE_DIR`,
-//! default `target/vega-cache`), so a re-invocation of the same grid or
-//! report serves everything from disk. `VEGA_CACHE=off|0|false|no`
+//! `repro`, `sweep` and `faults` run on a *persistent* engine: kernel
+//! simulations, DNN network reports and fault-campaign outcomes land in
+//! the on-disk cache (`$VEGA_CACHE_DIR`, default `target/vega-cache`),
+//! so a re-invocation of the same grid or report serves everything from
+//! disk. `VEGA_CACHE=off|0|false|no`
 //! (case-insensitive) disables persistence — see
 //! `sweep::persist::DiskStore::open_default`. (Hand-rolled argument
 //! parsing: clap is unavailable offline, DESIGN.md §5.)
@@ -45,6 +54,10 @@ fn usage() -> ! {
            sweep [--cores 1..9] [--precision int8,fp16,...]\n\
                  [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]\n\
                                 render a custom design-space grid\n\
+           faults [--kernel K] [--cores N] [--seeds a,b] [--rates r1,r2]\n\
+                  [--tiers mram,l2,tcdm] [--sleep-s S]\n\
+                  [--format csv|md|json] [--jobs N] [--stats]\n\
+                                seeded bit-upset campaigns through SECDED\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
@@ -115,6 +128,22 @@ fn main() {
                     "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {}",
                     cmd.spec.rows(),
                     fmt_disk(eng.disk_counters()),
+                );
+            }
+        }
+        Some("faults") => {
+            let cmd = vega::faults::FaultsCmd::parse(&args[1..]).unwrap_or_else(|e| {
+                eprintln!("vega faults: {e}");
+                std::process::exit(2);
+            });
+            let eng = SweepEngine::persistent(cmd.jobs);
+            print!("{}", vega::faults::cli::render(&eng, &cmd));
+            if cmd.stats {
+                let (h, m) = eng.fault_counters();
+                eprintln!(
+                    "faults stats: cells={} campaigns: {h} hits / {m} misses; disk(flt): {}",
+                    cmd.seeds.len() * cmd.rates.len(),
+                    fmt_disk(eng.disk_fault_counters()),
                 );
             }
         }

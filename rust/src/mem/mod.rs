@@ -13,7 +13,7 @@ pub mod hyperram;
 pub mod mram;
 
 pub use hyperram::HyperRam;
-pub use mram::Mram;
+pub use mram::{MemFault, Mram};
 
 use crate::common::Cycles;
 

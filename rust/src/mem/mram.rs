@@ -40,6 +40,29 @@ pub struct EccStats {
     pub detected: u64,
 }
 
+/// A typed fault raised by a memory tier (ISSUE 6): the controller's
+/// uncorrectable-error interrupt, surfaced to callers so a poisoned read
+/// is distinguishable from a clean one instead of silently handing back
+/// the corrupt word.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MemFault {
+    /// SECDED reported detected-uncorrectable (an even ≥2-flip pattern)
+    /// in at least one word of the request. `data` carries the
+    /// best-effort bytes (what the controller drives onto the bus while
+    /// raising the interrupt); `word_offsets` lists the byte offset of
+    /// each poisoned 64-bit word, relative to the start of the read.
+    Uncorrectable { data: Vec<u8>, word_offsets: Vec<usize> },
+}
+
+impl MemFault {
+    /// The best-effort payload, fault notwithstanding.
+    pub fn into_data(self) -> Vec<u8> {
+        match self {
+            MemFault::Uncorrectable { data, .. } => data,
+        }
+    }
+}
+
 /// The MRAM array + controller.
 pub struct Mram {
     /// Stored as ECC codewords per 64-bit word (16 bytes each for
@@ -82,9 +105,16 @@ impl Mram {
     /// decode (correcting injected single-bit upsets). Each 64-bit word
     /// is decoded once, as the controller does (§Perf: the earlier
     /// byte-granular path decoded every word up to eight times).
-    pub fn read(&mut self, offset: usize, len: usize) -> Vec<u8> {
+    ///
+    /// Returns `Err(MemFault::Uncorrectable)` if any word decoded as
+    /// detected-uncorrectable (ISSUE 6 satellite: previously the corrupt
+    /// word was handed back with only a counter bump). The error still
+    /// carries the full best-effort byte image plus the offsets of the
+    /// poisoned words, so fault campaigns can measure propagation.
+    pub fn read(&mut self, offset: usize, len: usize) -> Result<Vec<u8>, MemFault> {
         assert!(offset + len <= MRAM_SIZE, "MRAM read out of range");
         let mut out = Vec::with_capacity(len);
+        let mut poisoned: Vec<usize> = Vec::new();
         let mut addr = offset;
         while addr < offset + len {
             let (w, sh) = (addr / 8, addr % 8);
@@ -98,6 +128,7 @@ impl Mram {
                 }
                 EccResult::Detected(v) => {
                     self.ecc_stats.detected += 1;
+                    poisoned.push((w * 8).saturating_sub(offset));
                     v
                 }
             };
@@ -106,7 +137,11 @@ impl Mram {
             addr += take;
         }
         self.bytes_read += len as u64;
-        out
+        if poisoned.is_empty() {
+            Ok(out)
+        } else {
+            Err(MemFault::Uncorrectable { data: out, word_offsets: poisoned })
+        }
     }
 
     /// Inject a bit flip into the codeword holding byte `offset`
@@ -114,6 +149,13 @@ impl Mram {
     pub fn inject_bit_flip(&mut self, offset: usize, bit: u32) {
         let w = offset / 8;
         self.words[w] ^= 1u128 << (bit % 72);
+    }
+
+    /// Raw codeword holding byte `offset`, without decoding, counting or
+    /// scrubbing — the fault-campaign classifier peeks at staged upsets
+    /// before the architectural read consumes them.
+    pub fn codeword(&self, offset: usize) -> u128 {
+        self.words[offset / 8]
     }
 
     /// Non-volatile: state survives power-off (modelled as a no-op — the
@@ -156,7 +198,7 @@ mod tests {
         let mut m = Mram::new();
         let data: Vec<u8> = (0..=255).collect();
         m.write(13, &data);
-        assert_eq!(m.read(13, 256), data);
+        assert_eq!(m.read(13, 256).unwrap(), data);
         assert_eq!(m.ecc_stats, EccStats::default());
     }
 
@@ -165,11 +207,11 @@ mod tests {
         let mut m = Mram::new();
         m.write(0, &[0xAB; 8]);
         m.inject_bit_flip(0, 17);
-        assert_eq!(m.read(0, 8), vec![0xAB; 8]);
+        assert_eq!(m.read(0, 8).unwrap(), vec![0xAB; 8]);
         assert!(m.ecc_stats.corrected >= 1);
         // Scrubbed: a second read is clean.
         let before = m.ecc_stats.corrected;
-        assert_eq!(m.read(0, 8), vec![0xAB; 8]);
+        assert_eq!(m.read(0, 8).unwrap(), vec![0xAB; 8]);
         assert_eq!(m.ecc_stats.corrected, before);
     }
 
@@ -179,8 +221,24 @@ mod tests {
         m.write(0, &[0x55; 8]);
         m.inject_bit_flip(0, 3);
         m.inject_bit_flip(0, 40);
-        m.read(0, 8);
+        let MemFault::Uncorrectable { data, word_offsets } = m.read(0, 8).unwrap_err();
+        assert_eq!(word_offsets, vec![0], "the poisoned word is reported");
+        assert_eq!(data.len(), 8, "best-effort bytes still delivered");
         assert!(m.ecc_stats.detected >= 1);
+    }
+
+    /// A poisoned read names only the faulty words; neighbours come back
+    /// intact inside the best-effort image.
+    #[test]
+    fn poisoned_read_reports_only_faulty_words() {
+        let mut m = Mram::new();
+        m.write(0, &[0x11; 24]);
+        m.inject_bit_flip(8, 3); // word 1 gets a double flip
+        m.inject_bit_flip(8, 40);
+        let MemFault::Uncorrectable { data, word_offsets } = m.read(0, 24).unwrap_err();
+        assert_eq!(word_offsets, vec![8]);
+        assert_eq!(&data[0..8], &[0x11; 8]);
+        assert_eq!(&data[16..24], &[0x11; 8]);
     }
 
     #[test]
@@ -188,7 +246,7 @@ mod tests {
         let mut m = Mram::new();
         m.write(1000, b"warm boot image");
         m.power_cycle();
-        assert_eq!(m.read(1000, 15), b"warm boot image");
+        assert_eq!(m.read(1000, 15).unwrap(), b"warm boot image");
     }
 
     #[test]

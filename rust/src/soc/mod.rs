@@ -99,7 +99,7 @@ mod tests {
         let mut soc = VegaSoc::new();
         let weights: Vec<u8> = (0..64u8).collect();
         soc.mram.write(0, &weights);
-        let w = soc.mram.read(0, 64);
+        let w = soc.mram.read(0, 64).expect("clean MRAM read");
         soc.l2.mem.write_bytes(L2_BASE + 0x2000, &w);
         let w2 = soc.l2.mem.read_bytes(L2_BASE + 0x2000, 64).to_vec();
         soc.cluster.tcdm.mem.write_bytes(crate::cluster::TCDM_BASE, &w2);

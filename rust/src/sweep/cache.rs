@@ -18,9 +18,19 @@
 use std::collections::HashMap;
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use super::scenario::{SimKey, SimResult};
+
+/// Lock a mutex, recovering from poisoning (ISSUE 6): a `compute` that
+/// panicked while holding a slot lock leaves the slot `None` — nothing
+/// was cached — so the only correct recovery is to carry on and let the
+/// next lookup recompute. Without this, one panicking scenario would
+/// poison its memo slot and turn every later lookup of any key touching
+/// the same mutex into a second panic.
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
 
 /// Generic compute-once map with hit/miss counters (backs the scenario
 /// cache and the engine's network-report memo).
@@ -49,10 +59,10 @@ impl<K: Eq + Hash, V: Clone> OnceMap<K, V> {
             return compute();
         }
         let slot = {
-            let mut map = self.entries.lock().unwrap();
+            let mut map = lock_unpoisoned(&self.entries);
             Arc::clone(map.entry(key).or_insert_with(|| Arc::new(Mutex::new(None))))
         };
-        let mut guard = slot.lock().unwrap();
+        let mut guard = lock_unpoisoned(&slot);
         match &*guard {
             Some(cached) => {
                 self.hits.fetch_add(1, Ordering::Relaxed);
@@ -72,7 +82,7 @@ impl<K: Eq + Hash, V: Clone> OnceMap<K, V> {
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        lock_unpoisoned(&self.entries).len()
     }
 
     pub(crate) fn enabled(&self) -> bool {
@@ -170,6 +180,20 @@ mod tests {
         assert_eq!(sims, 2);
         assert_eq!(cache.counters(), (0, 2));
         assert!(cache.is_empty());
+    }
+
+    /// A panicking compute caches nothing and poisons nothing: the next
+    /// lookup of the same key recomputes, and the one after that hits.
+    #[test]
+    fn panicked_compute_poisons_nothing_and_recomputes() {
+        let m: OnceMap<u32, u32> = OnceMap::new(true);
+        let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            m.get_or_compute(1, || panic!("injected"))
+        }));
+        assert!(attempt.is_err());
+        assert_eq!(m.get_or_compute(1, || 7), 7, "recompute after the panic");
+        assert_eq!(m.get_or_compute(1, || 8), 7, "the recomputed value is cached");
+        assert_eq!(m.counters(), (1, 2), "panic attempt + recompute are misses");
     }
 
     #[test]

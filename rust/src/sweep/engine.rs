@@ -6,8 +6,15 @@
 //! order no matter which worker finishes when. Each worker thread owns one
 //! lazily-built [`SimArena`] (thread-local), reused across every scenario
 //! it drains — no per-scenario `Cluster`/L2 allocations.
+//!
+//! Fault isolation (ISSUE 6): every work item runs under
+//! `catch_unwind`, so one panicking scenario yields one structured
+//! [`SimError`] cell instead of tearing down the whole sweep. Errored
+//! cells are never written to any cache tier (the panic unwinds out of
+//! the memo's compute before a value exists to store).
 
 use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
 
@@ -16,7 +23,39 @@ use super::persist::DiskStore;
 use super::scenario::{Scenario, SimArena, SimResult};
 use crate::coordinator::CwuSummary;
 use crate::dnn::{run_network, Network, NetworkReport, PipelineConfig};
+use crate::faults::{run_campaign, Campaign, CampaignOutcome};
 use crate::kernels::KernelRun;
+
+/// One errored sweep cell: work item `index` panicked with `message`.
+///
+/// The replacement for the worker pool's old
+/// `expect("every work item produced a result")` — a panicking scenario
+/// now surfaces as data, every other cell completes normally, and
+/// nothing of the errored cell reaches a cache.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SimError {
+    /// Index of the failed item in the submitted work list.
+    pub index: usize,
+    /// The panic payload, stringified.
+    pub message: String,
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "work item {}: {}", self.index, self.message)
+    }
+}
+
+/// Stringify a panic payload (the two shapes `panic!` produces).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
 
 thread_local! {
     /// The calling thread's owned simulation arena (one per worker).
@@ -42,6 +81,7 @@ pub struct SweepEngine {
     nets: OnceMap<String, NetworkReport>,
     cwu: OnceMap<u64, CwuSummary>,
     hd: OnceMap<usize, f64>,
+    faults: OnceMap<String, CampaignOutcome>,
     disk: Option<DiskStore>,
 }
 
@@ -55,6 +95,7 @@ impl SweepEngine {
             nets: OnceMap::new(true),
             cwu: OnceMap::new(true),
             hd: OnceMap::new(true),
+            faults: OnceMap::new(true),
             disk: None,
         }
     }
@@ -73,6 +114,7 @@ impl SweepEngine {
             nets: OnceMap::new(false),
             cwu: OnceMap::new(false),
             hd: OnceMap::new(false),
+            faults: OnceMap::new(false),
             disk: None,
         }
     }
@@ -225,9 +267,67 @@ impl SweepEngine {
     }
 
     /// Drain a scenario list through the worker pool; `out[i]` corresponds
-    /// to `list[i]` regardless of completion order.
+    /// to `list[i]` regardless of completion order. A panicking scenario
+    /// aborts the call (re-raising the first failure); callers that need
+    /// to survive faults use [`SweepEngine::try_run_scenarios`].
     pub fn run_scenarios(&self, list: &[Scenario]) -> Vec<SimResult> {
+        self.try_run_scenarios(list)
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|e| panic!("scenario {}: {}", e.index, e.message)))
+            .collect()
+    }
+
+    /// As [`SweepEngine::run_scenarios`], but fault-isolated (ISSUE 6):
+    /// each cell is a `Result`, a panicking scenario yields its own
+    /// [`SimError`] while every other cell completes and matches a
+    /// fault-free run, and errored cells are never cached.
+    pub fn try_run_scenarios(&self, list: &[Scenario]) -> Vec<Result<SimResult, SimError>> {
         fan_out(self.jobs, list.len(), |i| self.result(list[i]))
+    }
+
+    /// Memoized fault-campaign outcome: in-memory memo first, then the
+    /// on-disk `.flt` tier (when persistent), then a live run. The
+    /// fault-free oracle goes through the ordinary [`SweepEngine::result`]
+    /// path — so it is cached and shared — but the *faulted* simulation
+    /// inside the campaign never touches the `.sim` tier: corrupted
+    /// results must not be mistakable for clean ones.
+    pub fn campaign(&self, c: &Campaign) -> CampaignOutcome {
+        let key = c.key();
+        let c = *c;
+        self.faults.get_or_compute(key.clone(), || {
+            if let Some(disk) = &self.disk {
+                if let Some(cached) = disk.load_fault(&key) {
+                    return cached;
+                }
+                let fresh = self.run_campaign_live(&c);
+                disk.store_fault(&key, &fresh);
+                return fresh;
+            }
+            self.run_campaign_live(&c)
+        })
+    }
+
+    fn run_campaign_live(&self, c: &Campaign) -> CampaignOutcome {
+        let oracle = self.result(c.scenario);
+        ARENA.with(|a| run_campaign(c, &oracle, &mut a.borrow_mut()))
+    }
+
+    /// Drain a campaign grid through the worker pool, fault-isolated:
+    /// `out[i]` corresponds to `grid[i]`, and a panicking campaign yields
+    /// a [`SimError`] cell instead of aborting the grid.
+    pub fn run_campaigns(&self, grid: &[Campaign]) -> Vec<Result<CampaignOutcome, SimError>> {
+        fan_out(self.jobs, grid.len(), |i| self.campaign(&grid[i]))
+    }
+
+    /// (hits, misses) of the fault-campaign memo.
+    pub fn fault_counters(&self) -> (u64, u64) {
+        self.faults.counters()
+    }
+
+    /// (hits, misses, writes) of the on-disk store's fault tier, or
+    /// `None` for a memory-only engine.
+    pub fn disk_fault_counters(&self) -> Option<(u64, u64, u64)> {
+        self.disk.as_ref().map(|d| d.fault_counters())
     }
 
     /// Render whole reproduction reports through the worker pool (ids as
@@ -238,6 +338,9 @@ impl SweepEngine {
     /// never spawn a nested per-report scenario pool.
     pub fn render_reports(&self, ids: &[&str]) -> Vec<Option<String>> {
         fan_out(self.jobs, ids.len(), |i| crate::bench::render(ids[i], self))
+            .into_iter()
+            .map(|r| r.unwrap_or_else(|e| panic!("report {}: {}", e.index, e.message)))
+            .collect()
     }
 }
 
@@ -249,16 +352,27 @@ impl Default for SweepEngine {
 
 /// Index-tagged fan-out of `n` work items over at most `jobs` scoped
 /// workers. Results are returned in index order.
-fn fan_out<T, F>(jobs: usize, n: usize, work: F) -> Vec<T>
+///
+/// Each item runs under `catch_unwind` (ISSUE 6): a panicking item
+/// resolves to `Err(SimError)` in its own slot — it can never poison an
+/// unrelated slot, and the worker that caught it carries on draining the
+/// queue. The old `expect("every work item produced a result")` is gone;
+/// an unfilled slot (a worker killed mid-item by a double panic) also
+/// degrades to a structured error instead of a crash.
+fn fan_out<T, F>(jobs: usize, n: usize, work: F) -> Vec<Result<T, SimError>>
 where
     T: Send + Sync,
     F: Fn(usize) -> T + Sync,
 {
+    let run = |i: usize| {
+        catch_unwind(AssertUnwindSafe(|| work(i)))
+            .map_err(|p| SimError { index: i, message: panic_message(p.as_ref()) })
+    };
     if jobs <= 1 || n <= 1 {
-        return (0..n).map(work).collect();
+        return (0..n).map(run).collect();
     }
     let next = AtomicUsize::new(0);
-    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+    let slots: Vec<OnceLock<Result<T, SimError>>> = (0..n).map(|_| OnceLock::new()).collect();
     std::thread::scope(|s| {
         for _ in 0..jobs.min(n) {
             s.spawn(|| loop {
@@ -266,14 +380,19 @@ where
                 if i >= n {
                     break;
                 }
-                let value = work(i);
+                let value = run(i);
                 let _ = slots[i].set(value);
             });
         }
     });
     slots
         .into_iter()
-        .map(|slot| slot.into_inner().expect("every work item produced a result"))
+        .enumerate()
+        .map(|(i, slot)| {
+            slot.into_inner().unwrap_or_else(|| {
+                Err(SimError { index: i, message: "worker produced no result".into() })
+            })
+        })
         .collect()
 }
 
@@ -284,8 +403,32 @@ mod tests {
 
     #[test]
     fn fan_out_preserves_index_order() {
-        let out = fan_out(4, 17, |i| i * i);
+        let out: Vec<usize> = fan_out(4, 17, |i| i * i).into_iter().map(|r| r.unwrap()).collect();
         assert_eq!(out, (0..17).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    /// ISSUE 6: a panicking item yields exactly its own `Err` slot — at
+    /// one worker and at many — while every other slot completes.
+    #[test]
+    fn fan_out_isolates_a_panicking_item_per_slot() {
+        for jobs in [1, 4] {
+            let out = fan_out(jobs, 5, |i| {
+                if i == 2 {
+                    panic!("boom {i}");
+                }
+                i * 10
+            });
+            assert_eq!(out.len(), 5, "jobs={jobs}");
+            for (i, cell) in out.iter().enumerate() {
+                if i == 2 {
+                    let e = cell.as_ref().unwrap_err();
+                    assert_eq!(e.index, 2);
+                    assert_eq!(e.message, "boom 2", "jobs={jobs}");
+                } else {
+                    assert_eq!(*cell.as_ref().unwrap(), i * 10, "jobs={jobs}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -309,11 +309,9 @@ pub fn operating_points(steps: usize) -> Vec<OperatingPoint> {
         .collect()
 }
 
-/// One rendered grid row (all values derived from the cell's cached
-/// simulation at one operating point).
-struct Row {
-    cores: usize,
-    precision: &'static str,
+/// The derived values of one ok row (one cached simulation at one
+/// operating point).
+struct Point {
     vdd: f64,
     f_mhz: f64,
     cycles: u64,
@@ -323,32 +321,65 @@ struct Row {
     fpu_pct: f64,
 }
 
+/// One rendered grid row: an operating point of an ok cell, or the
+/// status row of an errored cell (ISSUE 6 — a panicking scenario yields
+/// one `status` row and the rest of the grid still renders).
+struct Row {
+    cores: usize,
+    precision: &'static str,
+    point: Option<Point>,
+    status: String,
+}
+
+/// Keep a panic message one-cell-safe: commas, pipes and newlines would
+/// break the CSV/Markdown framing (shared with the `vega faults` grid).
+pub(crate) fn sanitize_cell(msg: &str) -> String {
+    msg.replace(['\n', '\r'], " ").replace([',', '|'], ";")
+}
+
 /// Render `spec` through `eng`: fan the distinct cells out across the
-/// engine's worker pool, then emit rows in deterministic grid order. The
-/// returned string ends in exactly one newline.
+/// engine's worker pool (fault-isolated — see [`Row`]), then emit rows
+/// in deterministic grid order. The returned string ends in exactly one
+/// newline.
 pub fn render(eng: &SweepEngine, spec: &GridSpec) -> String {
-    // Parallel prefetch of every distinct cell; rendering below then
-    // reads cache hits only.
-    eng.run_scenarios(&spec.scenarios());
+    // Fault-isolated parallel prefetch of every distinct cell; an
+    // errored cell becomes its own status row below instead of tearing
+    // the whole grid down.
+    let results = eng.try_run_scenarios(&spec.scenarios());
     let ops = operating_points(spec.dvfs_steps);
     let mut rows = Vec::with_capacity(spec.rows());
+    let mut cell = 0;
     for &cores in &spec.cores {
         for &p in &spec.precisions {
-            let kr = eng.kernel_run(p.scenario(cores));
-            for op in &ops {
-                let (gops, gops_per_w) = coordinator::efficiency(&kr, *op, 0.0);
-                rows.push(Row {
+            match &results[cell] {
+                Ok(res) => {
+                    let kr = &res.run;
+                    for op in &ops {
+                        let (gops, gops_per_w) = coordinator::efficiency(kr, *op, 0.0);
+                        rows.push(Row {
+                            cores,
+                            precision: p.name(),
+                            point: Some(Point {
+                                vdd: op.vdd,
+                                f_mhz: op.f_cl / 1e6,
+                                cycles: kr.stats.cycles,
+                                gops,
+                                gops_per_w,
+                                tcdm_pct: kr.stats.tcdm_conflict_rate * 100.0,
+                                fpu_pct: kr.stats.fpu_contention_rate * 100.0,
+                            }),
+                            status: "ok".into(),
+                        });
+                    }
+                }
+                Err(e) => rows.push(Row {
                     cores,
                     precision: p.name(),
-                    vdd: op.vdd,
-                    f_mhz: op.f_cl / 1e6,
-                    cycles: kr.stats.cycles,
-                    gops,
-                    gops_per_w,
-                    tcdm_pct: kr.stats.tcdm_conflict_rate * 100.0,
-                    fpu_pct: kr.stats.fpu_contention_rate * 100.0,
-                });
+                    point: None,
+                    status: sanitize_cell(&e.message),
+                }),
             }
+            cell += 1;
         }
     }
     match spec.format {
@@ -358,7 +389,7 @@ pub fn render(eng: &SweepEngine, spec: &GridSpec) -> String {
     }
 }
 
-const COLUMNS: [&str; 9] = [
+const COLUMNS: [&str; 10] = [
     "cores",
     "precision",
     "vdd_v",
@@ -368,21 +399,39 @@ const COLUMNS: [&str; 9] = [
     "gops_per_w",
     "tcdm_conflict_pct",
     "fpu_contention_pct",
+    "status",
 ];
 
 impl Row {
-    fn cells(&self) -> [String; 9] {
-        [
-            self.cores.to_string(),
-            self.precision.to_string(),
-            format!("{:.3}", self.vdd),
-            format!("{:.1}", self.f_mhz),
-            self.cycles.to_string(),
-            format!("{:.3}", self.gops),
-            format!("{:.1}", self.gops_per_w),
-            format!("{:.2}", self.tcdm_pct),
-            format!("{:.2}", self.fpu_pct),
-        ]
+    fn cells(&self) -> [String; 10] {
+        match &self.point {
+            Some(pt) => [
+                self.cores.to_string(),
+                self.precision.to_string(),
+                format!("{:.3}", pt.vdd),
+                format!("{:.1}", pt.f_mhz),
+                pt.cycles.to_string(),
+                format!("{:.3}", pt.gops),
+                format!("{:.1}", pt.gops_per_w),
+                format!("{:.2}", pt.tcdm_pct),
+                format!("{:.2}", pt.fpu_pct),
+                self.status.clone(),
+            ],
+            // Errored cell: coordinates + status only, numerics blank —
+            // unmistakable for a real measurement.
+            None => [
+                self.cores.to_string(),
+                self.precision.to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                String::new(),
+                self.status.clone(),
+            ],
+        }
     }
 }
 
@@ -416,21 +465,28 @@ fn render_json(spec: &GridSpec, rows: &[Row]) -> String {
         spec.dvfs_steps
     );
     for (i, r) in rows.iter().enumerate() {
-        out.push_str(&format!(
-            "    {{\"cores\": {}, \"precision\": \"{}\", \"vdd_v\": {:.3}, \"f_mhz\": {:.1}, \
-             \"cycles\": {}, \"gops\": {:.3}, \"gops_per_w\": {:.1}, \
-             \"tcdm_conflict_pct\": {:.2}, \"fpu_contention_pct\": {:.2}}}{}\n",
-            r.cores,
-            r.precision,
-            r.vdd,
-            r.f_mhz,
-            r.cycles,
-            r.gops,
-            r.gops_per_w,
-            r.tcdm_pct,
-            r.fpu_pct,
-            if i + 1 == rows.len() { "" } else { "," }
-        ));
+        let sep = if i + 1 == rows.len() { "" } else { "," };
+        match &r.point {
+            Some(pt) => out.push_str(&format!(
+                "    {{\"cores\": {}, \"precision\": \"{}\", \"vdd_v\": {:.3}, \"f_mhz\": {:.1}, \
+                 \"cycles\": {}, \"gops\": {:.3}, \"gops_per_w\": {:.1}, \
+                 \"tcdm_conflict_pct\": {:.2}, \"fpu_contention_pct\": {:.2}, \
+                 \"status\": \"ok\"}}{sep}\n",
+                r.cores,
+                r.precision,
+                pt.vdd,
+                pt.f_mhz,
+                pt.cycles,
+                pt.gops,
+                pt.gops_per_w,
+                pt.tcdm_pct,
+                pt.fpu_pct,
+            )),
+            None => out.push_str(&format!(
+                "    {{\"cores\": {}, \"precision\": \"{}\", \"status\": \"{}\"}}{sep}\n",
+                r.cores, r.precision, r.status,
+            )),
+        }
     }
     out.push_str("  ]\n}\n");
     out
@@ -539,6 +595,24 @@ mod tests {
         assert_eq!(cyc(lines[1]), cyc(lines[3]));
         let (_, misses) = eng.cache().counters();
         assert_eq!(misses, 2, "one simulation per (cores, precision) cell");
+    }
+
+    /// ISSUE 6: an errored cell renders coordinates + status with every
+    /// numeric column blank, and the message is framing-safe.
+    #[test]
+    fn errored_cells_render_as_status_rows() {
+        let r = Row {
+            cores: 3,
+            precision: "int8",
+            point: None,
+            status: sanitize_cell("boom, with | bars\nand a newline"),
+        };
+        let cells = r.cells();
+        assert_eq!(cells[0], "3");
+        assert_eq!(cells[1], "int8");
+        assert!(cells[2..9].iter().all(|c| c.is_empty()));
+        assert_eq!(cells[9], "boom; with ; bars and a newline");
+        assert_eq!(COLUMNS[9], "status");
     }
 
     #[test]

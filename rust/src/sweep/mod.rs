@@ -34,12 +34,21 @@
 //!   counts 1–9 × precisions × an arbitrarily fine DVFS ladder, rendered
 //!   as CSV/Markdown/JSON through the same cache and worker pool.
 //! * [`persist`] — the on-disk [`DiskStore`] (one versioned, checksummed
-//!   file per [`SimKey`] and per DNN network run) that lets persistent
-//!   engines — chiefly the CLI's — share simulations **and network
-//!   reports** across processes. Keys derive from the explicit byte
-//!   encodings ([`crate::isa::encode`], [`crate::dnn::encode`]), so the
-//!   store survives toolchain bumps and can be shared across machines;
-//!   the test suite's regression oracles deliberately stay memory-only.
+//!   file per [`SimKey`], per DNN network run, and per fault campaign)
+//!   that lets persistent engines — chiefly the CLI's — share
+//!   simulations, network reports **and campaign outcomes** across
+//!   processes. Keys derive from the explicit byte encodings
+//!   ([`crate::isa::encode`], [`crate::dnn::encode`]), so the store
+//!   survives toolchain bumps and can be shared across machines; the
+//!   test suite's regression oracles deliberately stay memory-only.
+//!
+//! Fault isolation (ISSUE 6): every work item the engine fans out runs
+//! under `catch_unwind`, so one panicking scenario (or campaign) yields
+//! a structured [`SimError`] cell — index plus panic message — while
+//! every other cell completes normally. [`SweepEngine::run_scenarios`]
+//! keeps the panicking behaviour for callers that want it;
+//! [`SweepEngine::try_run_scenarios`] and
+//! [`SweepEngine::run_campaigns`] surface the per-cell `Result`s.
 
 pub mod cache;
 pub mod engine;
@@ -48,6 +57,6 @@ pub mod persist;
 pub mod scenario;
 
 pub use cache::SimCache;
-pub use engine::{default_jobs, SweepEngine};
+pub use engine::{default_jobs, SimError, SweepEngine};
 pub use persist::DiskStore;
 pub use scenario::{Scenario, SimArena, SimKey, SimResult};

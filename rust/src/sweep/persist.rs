@@ -4,14 +4,20 @@
 //! [`crate::sweep::SweepEngine::persistent`] /
 //! [`crate::sweep::SweepEngine::global`].
 //!
-//! Two entry types share the directory and the entry format:
+//! Three entry types share the directory and the entry format:
 //!
 //! * **kernel entries** (`<fnv>.sim`): one [`SimResult`] per [`SimKey`]
 //!   — the cluster simulations behind tables/figures and `vega sweep`;
 //! * **network entries** (`<fnv>.net`): one
 //!   [`NetworkReport`](crate::dnn::NetworkReport) per canonical
 //!   [`crate::dnn::net_key`] — the DNN pipeline runs recurring across
-//!   Figs. 9–11, Tables VII/VIII and the ablations.
+//!   Figs. 9–11, Tables VII/VIII and the ablations;
+//! * **fault-campaign entries** (`<fnv>.flt`): one
+//!   [`CampaignOutcome`](crate::faults::CampaignOutcome) per
+//!   [`Campaign::key`](crate::faults::Campaign::key) string — the `vega
+//!   faults` grid cells. The key embeds
+//!   [`crate::faults::FAULT_MODEL_VERSION`], so a fault-model change
+//!   orphans old entries without touching [`STORE_VERSION`].
 //!
 //! The in-memory memos ([`crate::sweep::SimCache`] and the engine's
 //! network map) die with their engine, so every CLI invocation used to
@@ -76,8 +82,10 @@ use super::scenario::{SimKey, SimResult};
 use crate::cluster::ClusterStats;
 use crate::common::{ByteReader, ByteWriter};
 use crate::dnn::NetworkReport;
+use crate::faults::{CampaignOutcome, TierFaults};
 use crate::iss::stats::{ClassCounts, CoreStats};
 use crate::kernels::KernelRun;
+use crate::mem::mram::EccStats;
 
 /// On-disk layout version of one store entry. Bump when the serialized
 /// byte layout itself changes. Version 2: cache keys derive from the
@@ -95,6 +103,7 @@ pub const MODEL_EPOCH: u32 = 1;
 
 const SIM_MAGIC: &[u8; 8] = b"VEGASIMC";
 const NET_MAGIC: &[u8; 8] = b"VEGANETR";
+const FLT_MAGIC: &[u8; 8] = b"VEGAFLTR";
 
 /// Hit/miss/write counters of one entry tier.
 #[derive(Debug, Default)]
@@ -134,6 +143,7 @@ pub struct DiskStore {
     dir: PathBuf,
     sim: TierCounters,
     net: TierCounters,
+    flt: TierCounters,
     /// Per-process temp-file disambiguator (paired with the PID in the
     /// temp name; see `write_entry`).
     tmp_seq: AtomicU64,
@@ -148,6 +158,7 @@ impl DiskStore {
             dir,
             sim: TierCounters::default(),
             net: TierCounters::default(),
+            flt: TierCounters::default(),
             tmp_seq: AtomicU64::new(0),
         })
     }
@@ -194,6 +205,12 @@ impl DiskStore {
         self.net.snapshot()
     }
 
+    /// (hits, misses, writes) of the fault-campaign tier
+    /// ([`DiskStore::load_fault`] / [`DiskStore::store_fault`]).
+    pub fn fault_counters(&self) -> (u64, u64, u64) {
+        self.flt.snapshot()
+    }
+
     /// Look a kernel `key` up. Any read/format/checksum failure is a miss.
     pub fn load(&self, key: &SimKey) -> Option<SimResult> {
         let key_str = key_string(key);
@@ -235,6 +252,26 @@ impl DiskStore {
         }
     }
 
+    /// Look a fault-campaign `key` (a [`crate::faults::Campaign::key`]
+    /// string) up. Any read/format/checksum failure is a miss.
+    pub fn load_fault(&self, key: &str) -> Option<CampaignOutcome> {
+        let res = fs::read(self.path_for(key, "flt"))
+            .ok()
+            .and_then(|bytes| decode_entry(FLT_MAGIC, key, &bytes))
+            .and_then(|payload| decode_fault_payload(&payload));
+        self.flt.observe(res.is_some());
+        res
+    }
+
+    /// Write `outcome` under a [`crate::faults::Campaign::key`] string
+    /// (same temp-file + rename protocol as [`DiskStore::store`]).
+    pub fn store_fault(&self, key: &str, outcome: &CampaignOutcome) {
+        let bytes = encode_entry(FLT_MAGIC, key, &encode_fault_payload(outcome));
+        if self.write_entry(&self.path_for(key, "flt"), &bytes) {
+            self.flt.writes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
     /// Write `bytes` to `dest` atomically: a temp file named from the
     /// PID *and* a per-process sequence number (concurrent processes on
     /// one directory can never collide on the temp path; concurrent
@@ -266,8 +303,9 @@ impl DiskStore {
     }
 }
 
-/// Canonical textual form of a [`SimKey`] (file-name tag + in-file echo).
-fn key_string(key: &SimKey) -> String {
+/// Canonical textual form of a [`SimKey`] (file-name tag + in-file
+/// echo; also embedded in [`crate::faults::Campaign::key`] strings).
+pub(crate) fn key_string(key: &SimKey) -> String {
     format!(
         "{}|{}x{}x{}|{}|{}c|{:016x}",
         key.kernel, key.size.0, key.size.1, key.size.2, key.precision, key.cores, key.prog_hash
@@ -330,34 +368,32 @@ fn decode_core_stats(d: &mut ByteReader) -> Option<CoreStats> {
     })
 }
 
-fn encode_payload(r: &SimResult) -> Vec<u8> {
-    let mut e = ByteWriter::with_capacity(2048);
-    e.u64(r.outputs_digest);
-    e.str(&r.run.name);
-    e.u64(r.run.ops);
-    let s = &r.run.stats;
+/// Serialize a [`KernelRun`] minus its fault ledger (the `.sim` tier
+/// only ever stores fault-free runs, so the ledger is omitted there and
+/// reconstructed as all-zeros; the `.flt` tier re-attaches it).
+fn encode_run(e: &mut ByteWriter, run: &KernelRun) {
+    e.str(&run.name);
+    e.u64(run.ops);
+    let s = &run.stats;
     e.u64(s.cycles);
     e.f64(s.tcdm_conflict_rate);
     e.f64(s.fpu_contention_rate);
     e.u64(s.barrier_gated_cycles);
-    encode_core_stats(&mut e, &s.total);
+    encode_core_stats(e, &s.total);
     e.u32(s.per_core.len() as u32);
     for core in &s.per_core {
-        encode_core_stats(&mut e, core);
+        encode_core_stats(e, core);
     }
-    e.into_vec()
 }
 
-fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
-    let mut d = ByteReader::new(bytes);
-    let outputs_digest = d.u64()?;
+fn decode_run(d: &mut ByteReader) -> Option<KernelRun> {
     let name = d.str()?;
     let ops = d.u64()?;
     let cycles = d.u64()?;
     let tcdm_conflict_rate = d.f64()?;
     let fpu_contention_rate = d.f64()?;
     let barrier_gated_cycles = d.u64()?;
-    let total = decode_core_stats(&mut d)?;
+    let total = decode_core_stats(d)?;
     let n = d.u32()? as usize;
     // Per-core lists are bounded by the 9-core cluster; reject anything
     // larger outright rather than trusting a corrupt length prefix.
@@ -366,25 +402,105 @@ fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
     }
     let mut per_core = Vec::with_capacity(n);
     for _ in 0..n {
-        per_core.push(decode_core_stats(&mut d)?);
+        per_core.push(decode_core_stats(d)?);
     }
+    Some(KernelRun::new(
+        name,
+        ClusterStats {
+            cycles,
+            per_core,
+            total,
+            tcdm_conflict_rate,
+            fpu_contention_rate,
+            barrier_gated_cycles,
+            faults: Default::default(),
+        },
+        ops,
+    ))
+}
+
+fn encode_payload(r: &SimResult) -> Vec<u8> {
+    let mut e = ByteWriter::with_capacity(2048);
+    e.u64(r.outputs_digest);
+    encode_run(&mut e, &r.run);
+    e.into_vec()
+}
+
+fn decode_payload(bytes: &[u8]) -> Option<SimResult> {
+    let mut d = ByteReader::new(bytes);
+    let outputs_digest = d.u64()?;
+    let run = decode_run(&mut d)?;
     if !d.done() {
         return None;
     }
-    Some(SimResult {
-        run: KernelRun::new(
-            name,
-            ClusterStats {
-                cycles,
-                per_core,
-                total,
-                tcdm_conflict_rate,
-                fpu_contention_rate,
-                barrier_gated_cycles,
-            },
-            ops,
-        ),
-        outputs_digest,
+    Some(SimResult { run, outputs_digest })
+}
+
+fn encode_tier_faults(e: &mut ByteWriter, t: &TierFaults) {
+    for v in [t.flips, t.words, t.corrected, t.detected, t.silent, t.masked] {
+        e.u64(v);
+    }
+}
+
+fn decode_tier_faults(d: &mut ByteReader) -> Option<TierFaults> {
+    Some(TierFaults {
+        flips: d.u64()?,
+        words: d.u64()?,
+        corrected: d.u64()?,
+        detected: d.u64()?,
+        silent: d.u64()?,
+        masked: d.u64()?,
+    })
+}
+
+/// `.flt` payload: the faulted run, the per-tier classification ledger
+/// (written once — it is by construction identical to
+/// `run.stats.faults`, and both are rebuilt from the single copy), the
+/// MRAM controller counters, and the divergence verdict.
+fn encode_fault_payload(o: &CampaignOutcome) -> Vec<u8> {
+    let mut e = ByteWriter::with_capacity(2048);
+    encode_run(&mut e, &o.run);
+    for t in [&o.stats.mram, &o.stats.l2, &o.stats.tcdm] {
+        encode_tier_faults(&mut e, t);
+    }
+    e.u64(o.ecc.corrected);
+    e.u64(o.ecc.detected);
+    e.u64(o.poisoned_words);
+    e.u64(o.oracle_digest);
+    e.u64(o.faulted_digest);
+    e.u8(o.diverged as u8);
+    e.into_vec()
+}
+
+fn decode_fault_payload(bytes: &[u8]) -> Option<CampaignOutcome> {
+    let mut d = ByteReader::new(bytes);
+    let mut run = decode_run(&mut d)?;
+    let stats = crate::faults::FaultStats {
+        mram: decode_tier_faults(&mut d)?,
+        l2: decode_tier_faults(&mut d)?,
+        tcdm: decode_tier_faults(&mut d)?,
+    };
+    run.stats.faults = stats;
+    let ecc = EccStats { corrected: d.u64()?, detected: d.u64()? };
+    let poisoned_words = d.u64()?;
+    let oracle_digest = d.u64()?;
+    let faulted_digest = d.u64()?;
+    let diverged = match d.u8()? {
+        0 => false,
+        1 => true,
+        _ => return None,
+    };
+    if !d.done() {
+        return None;
+    }
+    Some(CampaignOutcome {
+        run,
+        stats,
+        ecc,
+        poisoned_words,
+        oracle_digest,
+        faulted_digest,
+        diverged,
     })
 }
 
@@ -474,6 +590,33 @@ mod tests {
         assert!(decode_for(&other, &bytes).is_none());
         // And under the other entry type's magic = miss.
         assert!(decode_entry(NET_MAGIC, &key_string(&key), &bytes).is_none());
+    }
+
+    #[test]
+    fn fault_payload_round_trips_bit_exactly() {
+        let (_, r) = sample();
+        let mut run = r.run.clone();
+        run.stats.faults.mram =
+            TierFaults { flips: 5, words: 4, corrected: 2, detected: 1, silent: 0, masked: 1 };
+        run.stats.faults.tcdm =
+            TierFaults { flips: 3, words: 3, corrected: 0, detected: 0, silent: 3, masked: 0 };
+        let out = CampaignOutcome {
+            stats: run.stats.faults,
+            ecc: EccStats { corrected: 2, detected: 1 },
+            poisoned_words: 1,
+            oracle_digest: r.outputs_digest,
+            faulted_digest: r.outputs_digest ^ 1,
+            diverged: true,
+            run,
+        };
+        let back = decode_fault_payload(&encode_fault_payload(&out)).unwrap();
+        assert_eq!(out, back);
+        // The single stored ledger is re-attached to the run on decode.
+        assert_eq!(back.run.stats.faults, back.stats);
+        // A non-boolean divergence byte is a corrupt entry, not `true`.
+        let mut bytes = encode_fault_payload(&out);
+        *bytes.last_mut().unwrap() = 2;
+        assert!(decode_fault_payload(&bytes).is_none());
     }
 
     #[test]

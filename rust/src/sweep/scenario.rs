@@ -250,10 +250,17 @@ impl Scenario {
     /// Simulate this scenario on `arena` (reset first; results are a pure
     /// function of the descriptor).
     pub fn simulate(&self, arena: &mut SimArena) -> SimResult {
-        arena.reset();
-        let (cl, l2) = (&mut arena.cluster, &mut arena.l2);
+        self.run_on(arena, &self.gen_inputs())
+    }
+
+    /// Generate this scenario's canonical input tensors from its fixed
+    /// seed. Split out of `simulate` (ISSUE 6) so fault campaigns can
+    /// serialize, corrupt and re-materialize the inputs while the RNG
+    /// streams — and therefore every digest and cached result — stay
+    /// bit-identical to the pre-split code.
+    pub(crate) fn gen_inputs(&self) -> Inputs {
         match self.canonical() {
-            Scenario::IntMatmul { w, cores } => {
+            Scenario::IntMatmul { w, .. } => {
                 let mut rng = Rng::new(0xF16_6);
                 let (m, n, k) = INT_MATMUL_DIMS;
                 let lim = match w {
@@ -261,43 +268,32 @@ impl Scenario {
                     IntWidth::I16 => 2047,
                     IntWidth::I32 => 1000,
                 };
-                let av: Vec<i32> =
-                    (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
-                let bv: Vec<i32> =
-                    (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
-                let (c, kr) = int_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
-                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                let a: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+                let b: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-lim, lim) as i32).collect();
+                Inputs::IntMatmul { a, b }
             }
-            Scenario::IntMatmulPadded { w, cores, pad_words } => {
+            Scenario::IntMatmulPadded { .. } => {
                 let mut rng = Rng::new(0xAB1);
                 let (m, n, k) = INT_MATMUL_DIMS;
-                let av: Vec<i32> =
-                    (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
-                let bv: Vec<i32> =
-                    (0..n * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
-                let (c, kr) =
-                    int_matmul::run_padded(cl, l2, &av, &bv, m, n, k, w, cores, pad_words);
-                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                let a: Vec<i32> = (0..m * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+                let b: Vec<i32> = (0..n * k).map(|_| rng.range_i64(-128, 127) as i32).collect();
+                Inputs::IntMatmul { a, b }
             }
-            Scenario::FpMatmul { w, cores } => {
+            Scenario::FpMatmul { .. } => {
                 let mut rng = Rng::new(0xF16_8);
                 let (m, n, k) = FP_MATMUL_DIMS;
-                let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
-                let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
-                let (c, kr) = fp_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
-                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                let a: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+                let b: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+                Inputs::FpMatmul { a, b }
             }
-            Scenario::FpMatmulFpu { w, cores, private_fpu } => {
+            Scenario::FpMatmulFpu { .. } => {
                 let mut rng = Rng::new(0xAB2);
                 let (m, n, k) = FPU_ABLATION_DIMS;
-                let av: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
-                let bv: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
-                cl.fpus.private_per_core = private_fpu;
-                let (c, kr) = fp_matmul::run(cl, l2, &av, &bv, m, n, k, w, cores);
-                cl.fpus.private_per_core = false;
-                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                let a: Vec<f32> = (0..m * k).map(|_| rng.f32_pm1()).collect();
+                let b: Vec<f32> = (0..n * k).map(|_| rng.f32_pm1()).collect();
+                Inputs::FpMatmul { a, b }
             }
-            Scenario::Nsaa { name, w } => {
+            Scenario::Nsaa { name, .. } => {
                 let mut rng = Rng::new(0x85AA ^ name.len() as u64);
                 match name {
                     "CONV" => {
@@ -305,46 +301,23 @@ impl Scenario {
                         let x: Vec<f32> =
                             (0..(h + 2) * (wd + 2)).map(|_| rng.f32_pm1()).collect();
                         let k: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
-                        let (c, kr) = fp_conv::run(cl, l2, &x, &k, h, wd, w, 8);
-                        SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                        Inputs::Conv { x, k }
                     }
-                    "DWT" => {
-                        let x: Vec<f32> = (0..DWT_N).map(|_| rng.f32_pm1()).collect();
-                        let (lo, hi, kr) = fp_filters::run_dwt(cl, l2, &x, w, 8);
-                        let mut d = OutDigest::new();
-                        d.f32s(&lo);
-                        d.f32s(&hi);
-                        SimResult { outputs_digest: d.finish(), run: kr }
-                    }
-                    "FFT" => {
-                        let x: Vec<(f32, f32)> =
-                            (0..FFT_N).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();
-                        let (c, kr) = fp_fft::run(cl, l2, &x, w, 8);
-                        let mut d = OutDigest::new();
-                        for (re, im) in &c {
-                            d.f32s(&[*re, *im]);
-                        }
-                        SimResult { outputs_digest: d.finish(), run: kr }
-                    }
+                    "DWT" => Inputs::Dwt { x: (0..DWT_N).map(|_| rng.f32_pm1()).collect() },
+                    "FFT" => Inputs::Fft {
+                        x: (0..FFT_N).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect(),
+                    },
                     "FIR" => {
                         let taps: Vec<f32> =
                             (0..fp_filters::FIR_TAPS).map(|_| rng.f32_pm1()).collect();
                         let x: Vec<f32> = (0..FIR_N + 16).map(|_| rng.f32_pm1()).collect();
-                        let (c, kr) = fp_filters::run_fir(cl, l2, &x, &taps, FIR_N, w, 8);
-                        SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                        Inputs::Fir { taps, x }
                     }
-                    "IIR" => {
-                        let b = fp_filters::Biquad::lowpass();
-                        let chans: Vec<Vec<f32>> = (0..IIR_CHANNELS)
+                    "IIR" => Inputs::Iir {
+                        chans: (0..IIR_CHANNELS)
                             .map(|_| (0..IIR_N).map(|_| rng.f32_pm1()).collect())
-                            .collect();
-                        let (c, kr) = fp_filters::run_iir(cl, l2, &chans, b, b, w);
-                        let mut d = OutDigest::new();
-                        for ch in &c {
-                            d.f32s(ch);
-                        }
-                        SimResult { outputs_digest: d.finish(), run: kr }
-                    }
+                            .collect(),
+                    },
                     "KMEANS" => {
                         let centroids: Vec<f32> = (0..fp_kmeans::K * fp_kmeans::D)
                             .map(|_| 2.0 * rng.f32_pm1())
@@ -352,22 +325,261 @@ impl Scenario {
                         let pts: Vec<f32> = (0..KMEANS_POINTS * fp_kmeans::D)
                             .map(|_| 2.0 * rng.f32_pm1())
                             .collect();
-                        let (c, kr) = fp_kmeans::run(cl, l2, &pts, &centroids, w, 8);
-                        SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                        Inputs::Kmeans { centroids, pts }
                     }
                     "SVM" => {
-                        let wv: Vec<f32> =
+                        let w: Vec<f32> =
                             (0..fp_svm::CLASSES * SVM_DIM).map(|_| rng.f32_pm1()).collect();
                         let b: Vec<f32> = (0..fp_svm::CLASSES).map(|_| rng.f32_pm1()).collect();
                         let pts: Vec<f32> =
                             (0..SVM_POINTS * SVM_DIM).map(|_| rng.f32_pm1()).collect();
-                        let (c, kr) = fp_svm::run(cl, l2, &pts, &wv, &b, SVM_DIM, w, 8);
-                        SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                        Inputs::Svm { w, b, pts }
                     }
                     other => panic!("unknown NSAA kernel {other}"),
                 }
             }
         }
+    }
+
+    /// Reconstruct this scenario's [`Inputs`] from a serialized image
+    /// (the inverse of [`Inputs::to_bytes`], using the scenario's
+    /// canonical shapes). Panics if `bytes` is not exactly the right
+    /// length — a campaign must never silently mis-slice a tensor.
+    pub(crate) fn with_bytes(&self, bytes: &[u8]) -> Inputs {
+        let mut r = ImageReader::new(bytes);
+        let inputs = match self.canonical() {
+            Scenario::IntMatmul { .. } | Scenario::IntMatmulPadded { .. } => {
+                let (m, n, k) = INT_MATMUL_DIMS;
+                Inputs::IntMatmul { a: r.i32s(m * k), b: r.i32s(n * k) }
+            }
+            Scenario::FpMatmul { .. } => {
+                let (m, n, k) = FP_MATMUL_DIMS;
+                Inputs::FpMatmul { a: r.f32s(m * k), b: r.f32s(n * k) }
+            }
+            Scenario::FpMatmulFpu { .. } => {
+                let (m, n, k) = FPU_ABLATION_DIMS;
+                Inputs::FpMatmul { a: r.f32s(m * k), b: r.f32s(n * k) }
+            }
+            Scenario::Nsaa { name, .. } => match name {
+                "CONV" => {
+                    let (h, wd) = CONV_HW;
+                    Inputs::Conv { x: r.f32s((h + 2) * (wd + 2)), k: r.f32s(9) }
+                }
+                "DWT" => Inputs::Dwt { x: r.f32s(DWT_N) },
+                "FFT" => Inputs::Fft { x: (0..FFT_N).map(|_| (r.f32(), r.f32())).collect() },
+                "FIR" => {
+                    Inputs::Fir { taps: r.f32s(fp_filters::FIR_TAPS), x: r.f32s(FIR_N + 16) }
+                }
+                "IIR" => {
+                    Inputs::Iir { chans: (0..IIR_CHANNELS).map(|_| r.f32s(IIR_N)).collect() }
+                }
+                "KMEANS" => Inputs::Kmeans {
+                    centroids: r.f32s(fp_kmeans::K * fp_kmeans::D),
+                    pts: r.f32s(KMEANS_POINTS * fp_kmeans::D),
+                },
+                "SVM" => Inputs::Svm {
+                    w: r.f32s(fp_svm::CLASSES * SVM_DIM),
+                    b: r.f32s(fp_svm::CLASSES),
+                    pts: r.f32s(SVM_POINTS * SVM_DIM),
+                },
+                other => panic!("unknown NSAA kernel {other}"),
+            },
+        };
+        r.done();
+        inputs
+    }
+
+    /// Run this scenario's kernel on `arena` with the given inputs
+    /// (reset first). `inputs` must match the scenario's shape —
+    /// [`Scenario::gen_inputs`] or [`Scenario::with_bytes`] output.
+    pub(crate) fn run_on(&self, arena: &mut SimArena, inputs: &Inputs) -> SimResult {
+        arena.reset();
+        let (cl, l2) = (&mut arena.cluster, &mut arena.l2);
+        match (self.canonical(), inputs) {
+            (Scenario::IntMatmul { w, cores }, Inputs::IntMatmul { a, b }) => {
+                let (m, n, k) = INT_MATMUL_DIMS;
+                let (c, kr) = int_matmul::run(cl, l2, a, b, m, n, k, w, cores);
+                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+            }
+            (
+                Scenario::IntMatmulPadded { w, cores, pad_words },
+                Inputs::IntMatmul { a, b },
+            ) => {
+                let (m, n, k) = INT_MATMUL_DIMS;
+                let (c, kr) = int_matmul::run_padded(cl, l2, a, b, m, n, k, w, cores, pad_words);
+                SimResult { outputs_digest: digest_i32s(&c), run: kr }
+            }
+            (Scenario::FpMatmul { w, cores }, Inputs::FpMatmul { a, b }) => {
+                let (m, n, k) = FP_MATMUL_DIMS;
+                let (c, kr) = fp_matmul::run(cl, l2, a, b, m, n, k, w, cores);
+                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+            }
+            (Scenario::FpMatmulFpu { w, cores, private_fpu }, Inputs::FpMatmul { a, b }) => {
+                let (m, n, k) = FPU_ABLATION_DIMS;
+                cl.fpus.private_per_core = private_fpu;
+                let (c, kr) = fp_matmul::run(cl, l2, a, b, m, n, k, w, cores);
+                cl.fpus.private_per_core = false;
+                SimResult { outputs_digest: digest_f32s(&c), run: kr }
+            }
+            (Scenario::Nsaa { name, w }, inp) => match (name, inp) {
+                ("CONV", Inputs::Conv { x, k }) => {
+                    let (h, wd) = CONV_HW;
+                    let (c, kr) = fp_conv::run(cl, l2, x, k, h, wd, w, 8);
+                    SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                }
+                ("DWT", Inputs::Dwt { x }) => {
+                    let (lo, hi, kr) = fp_filters::run_dwt(cl, l2, x, w, 8);
+                    let mut d = OutDigest::new();
+                    d.f32s(&lo);
+                    d.f32s(&hi);
+                    SimResult { outputs_digest: d.finish(), run: kr }
+                }
+                ("FFT", Inputs::Fft { x }) => {
+                    let (c, kr) = fp_fft::run(cl, l2, x, w, 8);
+                    let mut d = OutDigest::new();
+                    for (re, im) in &c {
+                        d.f32s(&[*re, *im]);
+                    }
+                    SimResult { outputs_digest: d.finish(), run: kr }
+                }
+                ("FIR", Inputs::Fir { taps, x }) => {
+                    let (c, kr) = fp_filters::run_fir(cl, l2, x, taps, FIR_N, w, 8);
+                    SimResult { outputs_digest: digest_f32s(&c), run: kr }
+                }
+                ("IIR", Inputs::Iir { chans }) => {
+                    let bq = fp_filters::Biquad::lowpass();
+                    let (c, kr) = fp_filters::run_iir(cl, l2, chans, bq, bq, w);
+                    let mut d = OutDigest::new();
+                    for ch in &c {
+                        d.f32s(ch);
+                    }
+                    SimResult { outputs_digest: d.finish(), run: kr }
+                }
+                ("KMEANS", Inputs::Kmeans { centroids, pts }) => {
+                    let (c, kr) = fp_kmeans::run(cl, l2, pts, centroids, w, 8);
+                    SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                }
+                ("SVM", Inputs::Svm { w: wv, b, pts }) => {
+                    let (c, kr) = fp_svm::run(cl, l2, pts, wv, b, SVM_DIM, w, 8);
+                    SimResult { outputs_digest: digest_i32s(&c), run: kr }
+                }
+                (other, _) => panic!("scenario/input shape mismatch for NSAA {other}"),
+            },
+            (s, _) => panic!("scenario/input shape mismatch for {s:?}"),
+        }
+    }
+}
+
+/// The canonical input tensors of one scenario, materialized (ISSUE 6).
+///
+/// Normal simulation generates these from the fixed seed and consumes
+/// them immediately; fault campaigns serialize them ([`Inputs::to_bytes`]),
+/// stage the bytes through a memory tier under injected upsets, and
+/// rebuild the (possibly corrupted) tensors with [`Scenario::with_bytes`].
+#[derive(Debug, Clone, PartialEq)]
+pub(crate) enum Inputs {
+    IntMatmul { a: Vec<i32>, b: Vec<i32> },
+    FpMatmul { a: Vec<f32>, b: Vec<f32> },
+    Conv { x: Vec<f32>, k: Vec<f32> },
+    Dwt { x: Vec<f32> },
+    Fft { x: Vec<(f32, f32)> },
+    Fir { taps: Vec<f32>, x: Vec<f32> },
+    Iir { chans: Vec<Vec<f32>> },
+    Kmeans { centroids: Vec<f32>, pts: Vec<f32> },
+    Svm { w: Vec<f32>, b: Vec<f32>, pts: Vec<f32> },
+}
+
+impl Inputs {
+    /// Serialize every tensor, in declaration order, as little-endian
+    /// 4-byte scalars (f32 via its IEEE bit pattern) — the byte image a
+    /// fault campaign stages through a memory tier.
+    pub(crate) fn to_bytes(&self) -> Vec<u8> {
+        fn i32s(out: &mut Vec<u8>, v: &[i32]) {
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        fn f32s(out: &mut Vec<u8>, v: &[f32]) {
+            for x in v {
+                out.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+        let mut out = Vec::new();
+        match self {
+            Inputs::IntMatmul { a, b } => {
+                i32s(&mut out, a);
+                i32s(&mut out, b);
+            }
+            Inputs::FpMatmul { a, b } => {
+                f32s(&mut out, a);
+                f32s(&mut out, b);
+            }
+            Inputs::Conv { x, k } => {
+                f32s(&mut out, x);
+                f32s(&mut out, k);
+            }
+            Inputs::Dwt { x } => f32s(&mut out, x),
+            Inputs::Fft { x } => {
+                for &(re, im) in x {
+                    f32s(&mut out, &[re, im]);
+                }
+            }
+            Inputs::Fir { taps, x } => {
+                f32s(&mut out, taps);
+                f32s(&mut out, x);
+            }
+            Inputs::Iir { chans } => {
+                for ch in chans {
+                    f32s(&mut out, ch);
+                }
+            }
+            Inputs::Kmeans { centroids, pts } => {
+                f32s(&mut out, centroids);
+                f32s(&mut out, pts);
+            }
+            Inputs::Svm { w, b, pts } => {
+                f32s(&mut out, w);
+                f32s(&mut out, b);
+                f32s(&mut out, pts);
+            }
+        }
+        out
+    }
+}
+
+/// Cursor over a serialized input image (strict: `done` asserts full
+/// consumption, so a shape drift can never silently truncate).
+struct ImageReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ImageReader<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn take4(&mut self) -> [u8; 4] {
+        let b: [u8; 4] =
+            self.bytes[self.pos..self.pos + 4].try_into().expect("4-byte scalar");
+        self.pos += 4;
+        b
+    }
+
+    fn f32(&mut self) -> f32 {
+        f32::from_bits(u32::from_le_bytes(self.take4()))
+    }
+
+    fn i32s(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| i32::from_le_bytes(self.take4())).collect()
+    }
+
+    fn f32s(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn done(self) {
+        assert_eq!(self.pos, self.bytes.len(), "input image length mismatch");
     }
 }
 
@@ -482,6 +694,37 @@ mod tests {
         assert_eq!(a.outputs_digest, b.outputs_digest);
         assert_eq!(a.run.stats, b.run.stats);
         assert_eq!(a.run.ops, b.run.ops);
+    }
+
+    /// The ISSUE 6 input split is transparent: serializing every
+    /// scenario's inputs and rebuilding them from bytes reproduces the
+    /// tensors exactly, and running on the rebuilt inputs matches
+    /// `simulate` digest-for-digest.
+    #[test]
+    fn inputs_round_trip_through_bytes_and_match_simulate() {
+        let scenarios = [
+            Scenario::IntMatmul { w: IntWidth::I16, cores: 2 },
+            Scenario::IntMatmulPadded { w: IntWidth::I8, cores: 2, pad_words: 1 },
+            Scenario::FpMatmul { w: FpWidth::F32, cores: 2 },
+            Scenario::FpMatmulFpu { w: FpWidth::F32, cores: 2, private_fpu: true },
+            Scenario::Nsaa { name: "CONV", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "DWT", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "FFT", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "FIR", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "IIR", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "KMEANS", w: FpWidth::F32 },
+            Scenario::Nsaa { name: "SVM", w: FpWidth::F32 },
+        ];
+        let mut arena = SimArena::new();
+        for s in scenarios {
+            let inputs = s.gen_inputs();
+            let rebuilt = s.with_bytes(&inputs.to_bytes());
+            assert_eq!(rebuilt, inputs, "{s:?}: byte round-trip must be exact");
+            let via_bytes = s.run_on(&mut arena, &rebuilt);
+            let direct = s.simulate(&mut arena);
+            assert_eq!(via_bytes.outputs_digest, direct.outputs_digest, "{s:?}");
+            assert_eq!(via_bytes.run.stats, direct.run.stats, "{s:?}");
+        }
     }
 
     #[test]

@@ -8,11 +8,17 @@
 //!   byte-identically on a second invocation with **every** simulation
 //!   served from disk (hit counts asserted);
 //! * corrupted, truncated or version-mismatched entries are misses that
-//!   fall back to re-simulation — never wrong data, never a panic.
+//!   fall back to re-simulation — never wrong data, never a panic;
+//! * a seeded single-byte corruption fuzzer (ISSUE 6) sweeps every frame
+//!   region of both the `.sim` and `.net` tiers: every mutation reads
+//!   back as a miss, every restore as a hit, with exact per-region and
+//!   per-tier counts.
 
 use std::fs;
 use std::path::PathBuf;
 
+use vega::common::Rng;
+use vega::dnn::{net_key, Layer, LayerKind, Network, PipelineConfig, StorePolicy};
 use vega::kernels::int_matmul::IntWidth;
 use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
 use vega::sweep::{DiskStore, Scenario, SweepEngine};
@@ -29,15 +35,20 @@ fn engine_at(dir: &PathBuf, jobs: usize) -> SweepEngine {
     SweepEngine::with_disk(jobs, DiskStore::at(dir).expect("store dir"))
 }
 
-/// The single `.sim` entry file of a store directory.
-fn only_entry(dir: &PathBuf) -> PathBuf {
+/// The single entry file with extension `ext` in a store directory.
+fn entry_with_ext(dir: &PathBuf, ext: &str) -> PathBuf {
     let mut entries: Vec<PathBuf> = fs::read_dir(dir)
         .unwrap()
         .map(|e| e.unwrap().path())
-        .filter(|p| p.extension().is_some_and(|x| x == "sim"))
+        .filter(|p| p.extension().is_some_and(|x| x == ext))
         .collect();
-    assert_eq!(entries.len(), 1, "expected exactly one cache entry in {dir:?}");
+    assert_eq!(entries.len(), 1, "expected exactly one .{ext} entry in {dir:?}");
     entries.pop().unwrap()
+}
+
+/// The single `.sim` entry file of a store directory.
+fn only_entry(dir: &PathBuf) -> PathBuf {
+    entry_with_ext(dir, "sim")
 }
 
 #[test]
@@ -119,6 +130,83 @@ fn version_mismatch_falls_back_to_resimulation() {
     let healed = engine_at(&dir, 1);
     healed.result(s);
     assert_eq!(healed.disk_counters(), Some((1, 0, 0)));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 6 satellite: the point corruption tests above, generalized into
+/// a seeded fuzzer. For each of the six frame regions — magic, version,
+/// epoch, key echo, payload (with its length prefix), checksum — apply
+/// four deterministic single-byte XOR mutations (offsets and values from
+/// the repo's own seeded [`Rng`]), on both a `.sim` and a `.net` entry.
+/// Every mutated entry must read back as a miss (never wrong data, never
+/// a panic), every restored entry as a hit, with exact per-region and
+/// per-tier counts.
+#[test]
+fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
+    let dir = store_dir("fuzz");
+    let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 2 };
+    let net = Network {
+        name: "fuzz-net".into(),
+        layers: vec![Layer {
+            name: "c".into(),
+            kind: LayerKind::Conv { k: 3, stride: 2, cin: 3, cout: 8 },
+            in_h: 16,
+            in_w: 16,
+        }],
+    };
+    let cfg = PipelineConfig::nominal_sw(StorePolicy::AllMram);
+
+    // One entry per tier, written through a persistent engine.
+    let writer = engine_at(&dir, 1);
+    let _ = writer.result(s);
+    let _ = writer.network_report(&net, cfg);
+    let sim_key = s.key();
+    let report_key = net_key(&net, &cfg);
+
+    let store = DiskStore::at(&dir).expect("store dir");
+    let mut rng = Rng::new(0xF022);
+    let mut mutations = 0u32;
+    for ext in ["sim", "net"] {
+        let path = entry_with_ext(&dir, ext);
+        let good = fs::read(&path).unwrap();
+        let key_len = u32::from_le_bytes(good[16..20].try_into().unwrap()) as usize;
+        let regions: [(usize, usize, &str); 6] = [
+            (0, 8, "magic"),
+            (8, 12, "version"),
+            (12, 16, "epoch"),
+            (16, 20 + key_len, "key"),
+            (20 + key_len, good.len() - 8, "payload"),
+            (good.len() - 8, good.len(), "checksum"),
+        ];
+        for (start, end, what) in regions {
+            let mut region_misses = 0u32;
+            for _ in 0..4 {
+                let off = start + rng.below((end - start) as u64) as usize;
+                let xor = 1 + rng.below(255) as u8;
+                let mut bad = good.clone();
+                bad[off] ^= xor;
+                fs::write(&path, &bad).unwrap();
+                let miss = match ext {
+                    "sim" => store.load(&sim_key).is_none(),
+                    _ => store.load_net(&report_key).is_none(),
+                };
+                assert!(miss, ".{ext}/{what}: byte {off} ^ {xor:#04x} must read as a miss");
+                region_misses += 1;
+                fs::write(&path, &good).unwrap();
+                let hit = match ext {
+                    "sim" => store.load(&sim_key).is_some(),
+                    _ => store.load_net(&report_key).is_some(),
+                };
+                assert!(hit, ".{ext}/{what}: restored entry must read back as a hit");
+            }
+            assert_eq!(region_misses, 4, ".{ext}/{what}: exactly four mutations");
+            mutations += region_misses;
+        }
+    }
+    assert_eq!(mutations, 48, "6 regions x 4 mutations x 2 tiers");
+    assert_eq!(store.counters(), (24, 24, 0), "sim tier: one hit + one miss per mutation");
+    assert_eq!(store.net_counters(), (24, 24, 0), "net tier: one hit + one miss per mutation");
 
     let _ = fs::remove_dir_all(&dir);
 }

@@ -4,12 +4,17 @@
 //!   `--jobs 8` — parallel fan-out may never change a paper number;
 //! * the [`SimCache`] simulates each distinct (kernel, problem size,
 //!   precision, core count, program hash) exactly once per engine — V/f
-//!   sweeps and cross-report recurrences are served from the cache.
+//!   sweeps and cross-report recurrences are served from the cache;
+//! * (ISSUE 6) a panicking scenario in a work list yields one structured
+//!   `SimError` cell at any `--jobs` value, while every other cell
+//!   completes, matches a fault-free run, and the errored cell never
+//!   pollutes the cache.
 
 use std::collections::HashSet;
 
 use vega::bench;
 use vega::kernels::fp_matmul::FpWidth;
+use vega::kernels::int_matmul::IntWidth;
 use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
 use vega::sweep::{Scenario, SimArena, SweepEngine};
 
@@ -174,6 +179,66 @@ fn cwu_and_hd_ablation_memoized_per_engine() {
     let (hd_hits, hd_misses) = eng.hd_counters();
     assert_eq!(hd_misses, 3, "one HD training per dimension (512/1024/2048)");
     assert_eq!(hd_hits, 3, "second ablation render must reuse all three");
+}
+
+/// ISSUE 6 acceptance: a deliberately panicking scenario in the middle
+/// of a work list yields exactly one `SimError` cell — carrying its
+/// index and panic message — while every other cell completes and
+/// matches a fresh fault-free run, at `--jobs 1` and `--jobs 8` alike.
+/// A second drain of the same list serves the good cells from the cache
+/// (+2 hits) without any re-simulation (+0 misses): the bad scenario
+/// panics before it can touch the cache, so it never pollutes it.
+#[test]
+fn panicking_scenario_isolated_at_jobs_1_and_8() {
+    let list = [
+        Scenario::IntMatmul { w: IntWidth::I8, cores: 2 },
+        Scenario::Nsaa { name: "BOGUS", w: FpWidth::F32 },
+        Scenario::Nsaa { name: "FIR", w: FpWidth::F32 },
+    ];
+    for jobs in [1, 8] {
+        let eng = SweepEngine::new(jobs);
+        let out = eng.try_run_scenarios(&list);
+        assert_eq!(out.len(), 3);
+
+        let err = out[1].as_ref().expect_err("BOGUS cell must error");
+        assert_eq!(err.index, 1, "jobs {jobs}: error carries the cell's index");
+        assert!(
+            err.message.contains("unknown NSAA kernel BOGUS"),
+            "jobs {jobs}: panic message surfaced, got: {}",
+            err.message
+        );
+
+        // The neighbours of the panicking cell match fault-free oracles.
+        for i in [0, 2] {
+            let got = out[i].as_ref().expect("good cell must complete");
+            let oracle = SweepEngine::serial().result(list[i]);
+            assert_eq!(got.outputs_digest, oracle.outputs_digest, "jobs {jobs}: cell {i}");
+            assert_eq!(got.run.stats, oracle.run.stats, "jobs {jobs}: cell {i}");
+        }
+
+        // Second drain: good cells hit the cache, the bad cell re-errors
+        // without ever registering as a miss (it panics inside `key()`,
+        // before the cache is consulted).
+        let (h0, m0) = eng.cache().counters();
+        let again = eng.try_run_scenarios(&list);
+        assert!(again[1].is_err(), "jobs {jobs}: bad cell errors again");
+        assert!(again[0].is_ok() && again[2].is_ok());
+        let (h1, m1) = eng.cache().counters();
+        assert_eq!(h1 - h0, 2, "jobs {jobs}: both good cells served from cache");
+        assert_eq!(m1 - m0, 0, "jobs {jobs}: errored cell never becomes a cache miss");
+    }
+}
+
+/// The strict path keeps its contract: `run_scenarios` panics with the
+/// failing cell's index and message when any cell errors.
+#[test]
+#[should_panic(expected = "scenario 1: unknown NSAA kernel BOGUS")]
+fn strict_run_scenarios_panics_with_cell_index() {
+    let list = [
+        Scenario::IntMatmul { w: IntWidth::I8, cores: 2 },
+        Scenario::Nsaa { name: "BOGUS", w: FpWidth::F32 },
+    ];
+    let _ = SweepEngine::serial().run_scenarios(&list);
 }
 
 /// The cached result is the simulation's result: spot-check one scenario

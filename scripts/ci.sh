@@ -12,7 +12,12 @@
 # cells) against serial runs byte-for-byte; the cache smokes run the same
 # sweep grid / fp8 grid / fig9 repro twice against a fresh on-disk store,
 # asserting the second run is served entirely from disk (kernel tier and
-# network-report tier respectively); the clippy gate fails on any
+# network-report tier respectively); the fault smokes replay a fixed-seed
+# `vega faults` campaign grid across worker counts, assert the SECDED
+# invariants structurally (status ok everywhere, zero silent corruptions,
+# classification covering every upset word), round-trip the `.flt` store
+# tier, and run the panic-isolation regression tests by name; the clippy
+# gate fails on any
 # non-allow-listed lint; and the key-stability gate runs the
 # golden-vector tests that pin the on-disk cache-key byte encoding (a
 # drift there silently orphans every persisted entry everywhere — it must
@@ -123,6 +128,49 @@ grep -q "disk(net): 0 hits / 1 misses / 1 writes" target/ci/fig9_cold.log \
 grep -q "disk(net): 1 hits / 0 misses / 0 writes" target/ci/fig9_warm.log \
     || { echo "FAIL: warm fig9 did not serve the NetworkReport from disk:"; cat target/ci/fig9_warm.log; exit 1; }
 echo "warm process served the fig9 NetworkReport from the on-disk cache"
+
+echo "== fault-injection smoke (vega faults: serial vs --jobs 2) =="
+# Fixed-seed MRAM retention campaign. The rates keep the expected flip
+# count per 64-bit word far below 3, so SECDED must correct or detect
+# every upset — the silent-corruption column is asserted exactly zero.
+FAULT_GRID=(--kernel matmul-f32 --cores 8 --seeds 7,8 --rates 1e-5,2e-5
+            --tiers mram --sleep-s 3600 --format csv)
+VEGA_CACHE=off ./target/release/vega faults "${FAULT_GRID[@]}" --jobs 1 > target/ci/faults_serial.csv
+VEGA_CACHE=off ./target/release/vega faults "${FAULT_GRID[@]}" --jobs 2 > target/ci/faults_jobs2.csv
+diff target/ci/faults_serial.csv target/ci/faults_jobs2.csv
+echo "parallel fault grid is byte-identical to serial"
+# Structural ECC invariants per data row (columns: 7 mram_flips,
+# 8 mram_words, 9 corrected, 10 detected, 11 silent, 12 masked,
+# last = status). No golden numbers: the identities must hold for any
+# seed, and a panicking cell would surface in the status column.
+awk -F, 'NR > 1 {
+    if ($NF != "ok")   { print "FAIL: errored campaign cell: " $0; exit 1 }
+    if ($7 + 0 < 1)    { print "FAIL: campaign injected no flips: " $0; exit 1 }
+    if ($11 + 0 != 0)  { print "FAIL: silent corruption through SECDED: " $0; exit 1 }
+    if ($9 + $10 + $11 + $12 != $8) {
+        print "FAIL: classification does not cover every upset word: " $0; exit 1
+    }
+}' target/ci/faults_serial.csv
+echo "every campaign cell ok: zero silent corruptions, every upset word classified"
+
+echo "== fault-campaign store smoke (cold vs warm process) =="
+rm -rf target/ci/flt-cache
+export VEGA_CACHE_DIR=target/ci/flt-cache
+./target/release/vega faults "${FAULT_GRID[@]}" --stats > target/ci/faults_cold.csv 2> target/ci/faults_cold.log
+./target/release/vega faults "${FAULT_GRID[@]}" --stats > target/ci/faults_warm.csv 2> target/ci/faults_warm.log
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
+diff target/ci/faults_cold.csv target/ci/faults_warm.csv
+grep -q "disk(flt): 0 hits / 4 misses / 4 writes" target/ci/faults_cold.log \
+    || { echo "FAIL: cold faults run did not populate the .flt store:"; cat target/ci/faults_cold.log; exit 1; }
+grep -q "disk(flt): 4 hits / 0 misses / 0 writes" target/ci/faults_warm.log \
+    || { echo "FAIL: warm faults run did not hit the .flt store:"; cat target/ci/faults_warm.log; exit 1; }
+echo "warm process served every campaign outcome from the .flt store tier"
+
+echo "== fault-isolation gate (panicking cell stays one SimError) =="
+# Run the isolation regressions first and by name (like the key-stability
+# gate): a broken catch_unwind path fails on its own line here instead of
+# drowning in the full suite below.
+cargo test -q --test sweep_determinism panic
 
 echo "== cargo test -q (fresh cache dir, defense in depth) =="
 # The regression oracles are memory-only by construction (paper_anchors'
