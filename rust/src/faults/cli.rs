@@ -12,8 +12,11 @@
 
 use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
-use crate::sweep::explore::{sanitize_cell, GridFormat};
-use crate::sweep::{default_jobs, Scenario, SweepEngine};
+use crate::sweep::explore::{
+    parse_merge, parse_ms, parse_retries, sanitize_cell, GridFormat, RenderedGrid,
+};
+use crate::sweep::journal::{self, GridSession, ShardSpec};
+use crate::sweep::{default_jobs, CellPolicy, Scenario, SweepEngine};
 
 use super::{Campaign, CampaignOutcome, FaultPlan, TierMask};
 
@@ -41,6 +44,17 @@ pub struct FaultsCmd {
     pub jobs: usize,
     /// Print memo/store counters to stderr after rendering (`--stats`).
     pub stats: bool,
+    /// Replay this grid's checkpoint journal and skip completed cells
+    /// (`--resume`).
+    pub resume: bool,
+    /// Own only one deterministic slice of the grid (`--shard I/N`).
+    pub shard: Option<ShardSpec>,
+    /// Reassemble N shard journals into the full serial-order report
+    /// (`--merge N`).
+    pub merge: Option<u32>,
+    /// Per-cell retry/timeout policy (`--retries`, `--backoff-ms`,
+    /// `--timeout-ms`).
+    pub policy: CellPolicy,
 }
 
 /// Resolve one `--kernel` token to its canonical label and scenario.
@@ -119,6 +133,10 @@ impl FaultsCmd {
         let mut format = GridFormat::Csv;
         let mut jobs = default_jobs();
         let mut stats = false;
+        let mut resume = false;
+        let mut shard = None;
+        let mut merge = None;
+        let mut policy = CellPolicy::default();
         let mut it = args.iter();
         while let Some(a) = it.next() {
             let mut value = |flag: &str| {
@@ -160,8 +178,21 @@ impl FaultsCmd {
                         .ok_or_else(|| format!("--jobs must be a positive integer, got '{v}'"))?;
                 }
                 "--stats" => stats = true,
+                "--resume" => resume = true,
+                "--shard" => shard = Some(ShardSpec::parse(value("--shard")?)?),
+                "--merge" => merge = Some(parse_merge(value("--merge")?)?),
+                "--retries" => policy.retries = parse_retries(value("--retries")?)?,
+                "--backoff-ms" => {
+                    policy.backoff_cap_ms = parse_ms("--backoff-ms", value("--backoff-ms")?)?
+                }
+                "--timeout-ms" => {
+                    policy.timeout_ms = Some(parse_ms("--timeout-ms", value("--timeout-ms")?)?)
+                }
                 other => return Err(format!("unknown flag '{other}'")),
             }
+        }
+        if merge.is_some() && (shard.is_some() || resume) {
+            return Err("--merge reassembles existing shard journals; it conflicts with --shard and --resume".into());
         }
         let (kernel, scenario) = parse_kernel(&kernel_tok, cores)?;
         Ok(FaultsCmd {
@@ -175,6 +206,10 @@ impl FaultsCmd {
             format,
             jobs,
             stats,
+            resume,
+            shard,
+            merge,
+            policy,
         })
     }
 
@@ -288,26 +323,66 @@ impl Row<'_> {
     }
 }
 
+/// The journal identity of a faults grid (ISSUE 7): kind, every
+/// parameter shaping the rendered bytes, and each campaign's versioned
+/// key in grid order. The campaign keys already embed
+/// [`crate::faults::FAULT_MODEL_VERSION`], so a fault-model bump orphans
+/// old journals along with old store entries.
+pub fn grid_key(cmd: &FaultsCmd) -> u64 {
+    let params = [
+        format!("kernel={}", cmd.kernel),
+        format!("cores={}", cmd.cores),
+        format!("sleep_s={:.1}", cmd.sleep_s),
+        format!("tiers={}", cmd.tiers.label()),
+        format!("format={}", cmd.format.name()),
+    ];
+    let params: Vec<&str> = params.iter().map(String::as_str).collect();
+    let ids: Vec<String> = cmd.campaigns().iter().map(Campaign::key).collect();
+    journal::grid_key("faults", &params, &ids)
+}
+
 /// Render `cmd`'s grid through `eng`. The returned string ends in
 /// exactly one newline and is byte-identical for any `--jobs`.
 pub fn render(eng: &SweepEngine, cmd: &FaultsCmd) -> String {
+    render_with(eng, cmd, &GridSession::off()).text
+}
+
+/// As [`render`], but through a [`GridSession`] (ISSUE 7): journaled
+/// prior cells replay, shard-unowned cells emit no rows, and the
+/// returned [`RenderedGrid`] carries the failed/skipped counts the
+/// CLI's exit code needs.
+pub fn render_with(eng: &SweepEngine, cmd: &FaultsCmd, session: &GridSession) -> RenderedGrid {
     let grid = cmd.campaigns();
-    let cells = eng.run_campaigns(&grid);
+    let cells = eng.run_campaigns_with(&grid, session);
+    let mut failed = 0;
+    let mut skipped = 0;
     let rows: Vec<Row> = grid
         .iter()
         .zip(cells)
-        .map(|(c, cell)| Row {
-            cmd,
-            seed: c.plan.seed,
-            rate: c.plan.mram_rate,
-            cell: cell.map_err(|e| e.message),
+        .filter_map(|(c, cell)| match cell {
+            None => {
+                skipped += 1;
+                None
+            }
+            Some(cell) => {
+                if cell.is_err() {
+                    failed += 1;
+                }
+                Some(Row {
+                    cmd,
+                    seed: c.plan.seed,
+                    rate: c.plan.mram_rate,
+                    cell: cell.map_err(|e| e.message),
+                })
+            }
         })
         .collect();
-    match cmd.format {
+    let text = match cmd.format {
         GridFormat::Csv => render_csv(&rows),
         GridFormat::Markdown => render_md(&rows),
         GridFormat::Json => render_json(cmd, &rows),
-    }
+    };
+    RenderedGrid { text, failed, skipped }
 }
 
 fn render_csv(rows: &[Row]) -> String {
@@ -432,5 +507,35 @@ mod tests {
         // Every data column is populated (no blank numerics on ok rows).
         assert_eq!(lines[1].split(',').count(), COLUMNS.len());
         assert!(lines[1].split(',').all(|c| !c.is_empty()));
+    }
+
+    /// ISSUE 7: the faults CLI grows the same resume/shard/merge/policy
+    /// surface as `vega sweep`, with the same merge conflicts.
+    #[test]
+    fn parse_handles_resume_shard_merge_and_policy() {
+        let cmd =
+            FaultsCmd::parse(&argv(&["--resume", "--shard", "1/2", "--timeout-ms", "0"])).unwrap();
+        assert!(cmd.resume);
+        assert_eq!(cmd.shard, Some(ShardSpec { index: 1, total: 2 }));
+        assert_eq!(cmd.policy.timeout_ms, Some(0));
+        assert!(FaultsCmd::parse(&argv(&["--merge", "2", "--resume"])).is_err());
+        assert!(FaultsCmd::parse(&argv(&["--shard", "0/2"])).is_err());
+    }
+
+    /// The journal key tracks every grid axis.
+    #[test]
+    fn faults_grid_key_tracks_every_axis() {
+        let base = argv(&["--kernel", "matmul-i8", "--seeds", "1,2", "--rates", "1e-5"]);
+        let k = grid_key(&FaultsCmd::parse(&base).unwrap());
+        assert_eq!(k, grid_key(&FaultsCmd::parse(&base).unwrap()), "deterministic");
+        for delta in [
+            argv(&["--kernel", "matmul-i16", "--seeds", "1,2", "--rates", "1e-5"]),
+            argv(&["--kernel", "matmul-i8", "--seeds", "1,3", "--rates", "1e-5"]),
+            argv(&["--kernel", "matmul-i8", "--seeds", "1,2", "--rates", "1e-4"]),
+            argv(&["--kernel", "matmul-i8", "--seeds", "1,2", "--rates", "1e-5", "--tiers", "mram"]),
+            argv(&["--kernel", "matmul-i8", "--seeds", "1,2", "--rates", "1e-5", "--format", "md"]),
+        ] {
+            assert_ne!(k, grid_key(&FaultsCmd::parse(&delta).unwrap()), "{delta:?}");
+        }
     }
 }

@@ -11,6 +11,8 @@
 //!                           (memory + both on-disk tiers) to stderr
 //! vega sweep [--cores 1..9] [--precision int8,fp16,...]
 //!            [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]
+//!            [--resume] [--shard I/N] [--merge N]
+//!            [--retries K] [--backoff-ms B] [--timeout-ms T]
 //!                           render a user-defined design-space grid
 //!                           (cores × precision × DVFS) beyond the
 //!                           paper's tables; one simulation per cell,
@@ -18,6 +20,8 @@
 //! vega faults [--kernel K] [--cores N] [--seeds a,b] [--rates r1,r2]
 //!             [--tiers mram,l2,tcdm] [--sleep-s S]
 //!             [--format csv|md|json] [--jobs N] [--stats]
+//!             [--resume] [--shard I/N] [--merge N]
+//!             [--retries K] [--backoff-ms B] [--timeout-ms T]
 //!                           run a seeded bit-upset campaign grid
 //!                           (seeds × upset rates × tier mask) over one
 //!                           kernel and report SECDED coverage: per-tier
@@ -39,10 +43,21 @@
 //! (case-insensitive) disables persistence — see
 //! `sweep::persist::DiskStore::open_default`. (Hand-rolled argument
 //! parsing: clap is unavailable offline, DESIGN.md §5.)
+//!
+//! Crash safety (ISSUE 7): every `sweep`/`faults` grid run journals one
+//! checksummed record per completed cell under `<cache-dir>/journals/`,
+//! keyed by the full grid; `--resume` replays the journal and skips
+//! completed cells (output byte-identical to an uninterrupted run),
+//! `--shard I/N` owns one deterministic slice of the grid, and
+//! `--merge N` reassembles the shard journals into the serial-order
+//! report. Grids always run to completion (keep-going semantics) but
+//! exit 3 when any cell ended in `error`/`timeout`, so CI cannot green
+//! a half-failed grid; exit 2 stays "usage error" and exit 1 "unknown
+//! id / environment failure".
 
 use vega::bench;
 use vega::runtime::{Runtime, Tensor};
-use vega::sweep::SweepEngine;
+use vega::sweep::{GridMode, GridSession, SweepEngine};
 
 fn usage() -> ! {
     eprintln!(
@@ -53,10 +68,14 @@ fn usage() -> ! {
                                 regenerate a paper table/figure\n\
            sweep [--cores 1..9] [--precision int8,fp16,...]\n\
                  [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]\n\
+                 [--resume] [--shard I/N] [--merge N]\n\
+                 [--retries K] [--backoff-ms B] [--timeout-ms T]\n\
                                 render a custom design-space grid\n\
            faults [--kernel K] [--cores N] [--seeds a,b] [--rates r1,r2]\n\
                   [--tiers mram,l2,tcdm] [--sleep-s S]\n\
                   [--format csv|md|json] [--jobs N] [--stats]\n\
+                  [--resume] [--shard I/N] [--merge N]\n\
+                  [--retries K] [--backoff-ms B] [--timeout-ms T]\n\
                                 seeded bit-upset campaigns through SECDED\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
@@ -107,11 +126,12 @@ fn main() {
             if stats {
                 let (sh, sm) = eng.cache().counters();
                 let (nh, nm) = eng.network_counters();
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
                 eprintln!(
                     "repro stats: sims: {sh} hits / {sm} misses; nets: {nh} hits / {nm} misses; \
                      disk(sim): {}; disk(net): {}",
-                    fmt_disk(eng.disk_counters()),
-                    fmt_disk(eng.disk_net_counters()),
+                    fmt_disk(eng.disk_counters(), we.0),
+                    fmt_disk(eng.disk_net_counters(), we.1),
                 );
             }
         }
@@ -120,32 +140,57 @@ fn main() {
                 eprintln!("vega sweep: {e}");
                 std::process::exit(2);
             });
-            let eng = SweepEngine::persistent(cmd.jobs);
-            print!("{}", vega::sweep::explore::render(&eng, &cmd.spec));
+            let mut eng = SweepEngine::persistent(cmd.jobs);
+            eng.set_cell_policy(cmd.policy);
+            let session = GridSession::open(
+                "sweep",
+                vega::sweep::explore::grid_key(&cmd.spec),
+                cmd.shard,
+                grid_mode(cmd.merge, cmd.resume),
+                &vega::sweep::journal::default_root(),
+            );
+            let grid = vega::sweep::explore::render_with(&eng, &cmd.spec, &session);
+            print!("{}", grid.text);
             if cmd.stats {
                 let (h, m) = eng.cache().counters();
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
                 eprintln!(
-                    "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {}",
+                    "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {}; journal: {}",
                     cmd.spec.rows(),
-                    fmt_disk(eng.disk_counters()),
+                    fmt_disk(eng.disk_counters(), we.0),
+                    fmt_journal(&session),
                 );
             }
+            exit_for_grid("sweep", &grid);
         }
         Some("faults") => {
             let cmd = vega::faults::FaultsCmd::parse(&args[1..]).unwrap_or_else(|e| {
                 eprintln!("vega faults: {e}");
                 std::process::exit(2);
             });
-            let eng = SweepEngine::persistent(cmd.jobs);
-            print!("{}", vega::faults::cli::render(&eng, &cmd));
+            let mut eng = SweepEngine::persistent(cmd.jobs);
+            eng.set_cell_policy(cmd.policy);
+            let session = GridSession::open(
+                "faults",
+                vega::faults::cli::grid_key(&cmd),
+                cmd.shard,
+                grid_mode(cmd.merge, cmd.resume),
+                &vega::sweep::journal::default_root(),
+            );
+            let grid = vega::faults::cli::render_with(&eng, &cmd, &session);
+            print!("{}", grid.text);
             if cmd.stats {
                 let (h, m) = eng.fault_counters();
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
                 eprintln!(
-                    "faults stats: cells={} campaigns: {h} hits / {m} misses; disk(flt): {}",
+                    "faults stats: cells={} campaigns: {h} hits / {m} misses; disk(flt): {}; \
+                     journal: {}",
                     cmd.seeds.len() * cmd.rates.len(),
-                    fmt_disk(eng.disk_fault_counters()),
+                    fmt_disk(eng.disk_fault_counters(), we.2),
+                    fmt_journal(&session),
                 );
             }
+            exit_for_grid("faults", &grid);
         }
         Some("runtime") => {
             let rt = Runtime::load(Runtime::default_dir()).unwrap_or_else(|e| {
@@ -189,11 +234,48 @@ fn main() {
     }
 }
 
-/// Render one disk-tier counter triple for the `--stats` lines.
-fn fmt_disk(counters: Option<(u64, u64, u64)>) -> String {
+/// Render one disk-tier counter triple (plus its write-error count) for
+/// the `--stats` lines.
+fn fmt_disk(counters: Option<(u64, u64, u64)>, write_errors: u64) -> String {
     match counters {
-        Some((h, m, w)) => format!("{h} hits / {m} misses / {w} writes"),
+        Some((h, m, w)) => {
+            format!("{h} hits / {m} misses / {w} writes / {write_errors} write-errors")
+        }
         None => "off".into(),
+    }
+}
+
+/// Render a grid session's journal counters for the `--stats` lines.
+fn fmt_journal(session: &GridSession) -> String {
+    format!(
+        "{} prior / {} recorded / {} write-errors",
+        session.prior_count(),
+        session.recorded(),
+        session.write_errors()
+    )
+}
+
+/// Map the CLI's `--merge`/`--resume` flags onto a journal mode (the
+/// parser already rejected conflicting combinations).
+fn grid_mode(merge: Option<u32>, resume: bool) -> GridMode {
+    match (merge, resume) {
+        (Some(n), _) => GridMode::Merge(n),
+        (None, true) => GridMode::Resume,
+        (None, false) => GridMode::Fresh,
+    }
+}
+
+/// Keep-going exit semantics (ISSUE 7): the grid always renders to
+/// completion, but a run whose cells include an `error`/`timeout` exits
+/// 3 so CI cannot green a half-failed grid.
+fn exit_for_grid(what: &str, grid: &vega::sweep::explore::RenderedGrid) {
+    if grid.failed > 0 {
+        eprintln!(
+            "vega {what}: {} cell(s) ended in error/timeout (grid completed; \
+             rerun without --resume to retry them)",
+            grid.failed
+        );
+        std::process::exit(3);
     }
 }
 

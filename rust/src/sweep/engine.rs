@@ -12,13 +12,27 @@
 //! [`SimError`] cell instead of tearing down the whole sweep. Errored
 //! cells are never written to any cache tier (the panic unwinds out of
 //! the memo's compute before a value exists to store).
+//!
+//! Crash-safety & policies (ISSUE 7): grid drains go through
+//! [`SweepEngine::run_scenarios_with`] / [`SweepEngine::run_campaigns_with`],
+//! which thread a [`GridSession`] (shard ownership + checkpoint journal,
+//! see [`super::journal`]) around every cell, and every cell executes
+//! under a [`CellPolicy`]: deterministic panics fail once and are never
+//! retried (retrying a deterministic model bug only wastes the grid's
+//! time), panics carrying the [`Transient`] marker get bounded retries
+//! with capped exponential backoff (the [`super::cache::OnceMap`] memo
+//! is retry-safe — a panicking compute caches nothing), and an optional
+//! per-cell wall-clock watchdog marks runaway cells
+//! [`FailKind::Timeout`] instead of hanging the grid.
 
 use std::cell::RefCell;
-use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::OnceLock;
+use std::sync::{mpsc, Once, OnceLock};
+use std::time::Duration;
 
 use super::cache::{OnceMap, SimCache};
+use super::journal::{CellStatus, GridSession};
 use super::persist::DiskStore;
 use super::scenario::{Scenario, SimArena, SimResult};
 use crate::coordinator::CwuSummary;
@@ -36,6 +50,9 @@ use crate::kernels::KernelRun;
 pub struct SimError {
     /// Index of the failed item in the submitted work list.
     pub index: usize,
+    /// Failure classification (drives the retry policy and the
+    /// journaled/rendered status).
+    pub kind: FailKind,
     /// The panic payload, stringified.
     pub message: String,
 }
@@ -44,6 +61,138 @@ impl std::fmt::Display for SimError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(f, "work item {}: {}", self.index, self.message)
     }
+}
+
+/// Why a cell failed — the classification behind the ISSUE 7 retry
+/// policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// An ordinary panic: a model bug or invalid input. Re-running the
+    /// same pure simulation re-raises the same panic, so these are
+    /// never retried (the PR 6 contract).
+    Deterministic,
+    /// A panic carrying the [`Transient`] marker — an environmental
+    /// failure (I/O hiccup, resource pressure) worth bounded retries
+    /// with capped backoff.
+    Transient,
+    /// The cell exceeded [`CellPolicy::timeout_ms`] and was abandoned
+    /// by the watchdog.
+    Timeout,
+}
+
+impl FailKind {
+    /// The journal status a terminal failure of this kind records.
+    pub fn status(self) -> CellStatus {
+        match self {
+            FailKind::Deterministic | FailKind::Transient => CellStatus::Error,
+            FailKind::Timeout => CellStatus::Timeout,
+        }
+    }
+}
+
+/// Panic-payload marker for *transient* failures: code on the cell path
+/// that hits a retryable environmental error raises it with
+/// `std::panic::panic_any(Transient("..".into()))`, and
+/// [`SweepEngine`]'s policy layer retries the cell (bounded, capped
+/// backoff) instead of failing it outright. An ordinary `panic!` stays
+/// deterministic and is never retried.
+pub struct Transient(pub String);
+
+/// Panic-payload marker raised by the watchdog when a cell overruns its
+/// wall-clock budget; classified as [`FailKind::Timeout`].
+struct CellTimeout {
+    ms: u64,
+}
+
+/// Per-cell execution policy: retry budget for [`Transient`] failures
+/// and an optional wall-clock watchdog.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CellPolicy {
+    /// Max *re*-tries of a transiently failing cell (attempts = 1 +
+    /// retries). Deterministic panics ignore this and fail on the
+    /// first attempt.
+    pub retries: u32,
+    /// Cap on the exponential backoff between retries (10 ms, 20 ms,
+    /// 40 ms, … clamped here; 0 disables sleeping entirely).
+    pub backoff_cap_ms: u64,
+    /// Wall-clock budget per cell simulation. `None` (the default)
+    /// trusts cells to terminate; `Some(ms)` runs each simulation under
+    /// a watchdog that abandons it after `ms` milliseconds and marks
+    /// the cell [`FailKind::Timeout`]. `Some(0)` times every simulated
+    /// cell out immediately (a deterministic CI aid for exercising the
+    /// timeout path).
+    pub timeout_ms: Option<u64>,
+}
+
+impl Default for CellPolicy {
+    fn default() -> Self {
+        CellPolicy { retries: 2, backoff_cap_ms: 250, timeout_ms: None }
+    }
+}
+
+/// Classify a caught panic payload into (kind, message).
+fn classify(payload: &(dyn std::any::Any + Send)) -> (FailKind, String) {
+    if let Some(t) = payload.downcast_ref::<Transient>() {
+        (FailKind::Transient, t.0.clone())
+    } else if let Some(t) = payload.downcast_ref::<CellTimeout>() {
+        (FailKind::Timeout, format!("timeout after {} ms", t.ms))
+    } else {
+        (FailKind::Deterministic, panic_message(payload))
+    }
+}
+
+/// Test/CI aid: `VEGA_CELL_DELAY_MS` sleeps this long before every cell
+/// attempt, widening the window the kill-and-resume integration test
+/// shoots at. Parsed once; zero-cost when unset.
+fn test_delay() {
+    static DELAY_MS: OnceLock<u64> = OnceLock::new();
+    let ms = *DELAY_MS.get_or_init(|| {
+        std::env::var("VEGA_CELL_DELAY_MS").ok().and_then(|s| s.parse().ok()).unwrap_or(0)
+    });
+    if ms > 0 {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
+/// Run `work` under a wall-clock watchdog: the value (or the panic) of
+/// `work` is forwarded if it finishes within `ms` milliseconds;
+/// otherwise the runaway worker thread is abandoned (detached — it can
+/// finish into the void) and a [`CellTimeout`] panic is raised on the
+/// calling thread for [`classify`] to pick up.
+fn with_watchdog<T: Send + 'static>(ms: u64, work: impl FnOnce() -> T + Send + 'static) -> T {
+    if ms == 0 {
+        std::panic::panic_any(CellTimeout { ms });
+    }
+    let (tx, rx) = mpsc::channel();
+    let handle = std::thread::spawn(move || {
+        let _ = tx.send(catch_unwind(AssertUnwindSafe(work)));
+    });
+    match rx.recv_timeout(Duration::from_millis(ms)) {
+        Ok(Ok(v)) => {
+            let _ = handle.join();
+            v
+        }
+        Ok(Err(p)) => {
+            let _ = handle.join();
+            resume_unwind(p)
+        }
+        // Timeout or a worker that died without sending: the cell is
+        // gone either way. The thread is deliberately not joined.
+        Err(_) => std::panic::panic_any(CellTimeout { ms }),
+    }
+}
+
+/// Warn once per process when a resumed cell's recomputed digest differs
+/// from its journaled one (a changed model/cache between runs — the
+/// recomputed result wins).
+fn warn_digest_mismatch_once(cell_id: &str) {
+    static WARN: Once = Once::new();
+    WARN.call_once(|| {
+        eprintln!(
+            "vega: journaled digest mismatch for cell {cell_id}; \
+             keeping the recomputed result (model or cache changed between runs)"
+        )
+    });
 }
 
 /// Stringify a panic payload (the two shapes `panic!` produces).
@@ -83,6 +232,7 @@ pub struct SweepEngine {
     hd: OnceMap<usize, f64>,
     faults: OnceMap<String, CampaignOutcome>,
     disk: Option<DiskStore>,
+    policy: CellPolicy,
 }
 
 impl SweepEngine {
@@ -97,6 +247,7 @@ impl SweepEngine {
             hd: OnceMap::new(true),
             faults: OnceMap::new(true),
             disk: None,
+            policy: CellPolicy::default(),
         }
     }
 
@@ -116,6 +267,7 @@ impl SweepEngine {
             hd: OnceMap::new(false),
             faults: OnceMap::new(false),
             disk: None,
+            policy: CellPolicy::default(),
         }
     }
 
@@ -156,6 +308,16 @@ impl SweepEngine {
         self.jobs
     }
 
+    /// Replace the per-cell retry/timeout policy (see [`CellPolicy`]).
+    pub fn set_cell_policy(&mut self, policy: CellPolicy) {
+        self.policy = policy;
+    }
+
+    /// The active per-cell retry/timeout policy.
+    pub fn cell_policy(&self) -> CellPolicy {
+        self.policy
+    }
+
     pub fn cache(&self) -> &SimCache {
         &self.cache
     }
@@ -174,12 +336,23 @@ impl SweepEngine {
                 if let Some(cached) = disk.load(&key) {
                     return cached;
                 }
-                let fresh = ARENA.with(|a| s.simulate(&mut a.borrow_mut()));
+                let fresh = self.simulate_cell(s);
                 disk.store(&key, &fresh);
                 return fresh;
             }
-            ARENA.with(|a| s.simulate(&mut a.borrow_mut()))
+            self.simulate_cell(s)
         })
+    }
+
+    /// Run one simulation under the policy's optional watchdog. The
+    /// watchdog needs a `'static` worker, so a watched simulation uses
+    /// a fresh arena on a disposable thread; the unwatched default path
+    /// keeps the thread-local arena reuse.
+    fn simulate_cell(&self, s: Scenario) -> SimResult {
+        match self.policy.timeout_ms {
+            Some(ms) => with_watchdog(ms, move || s.simulate(&mut SimArena::new())),
+            None => ARENA.with(|a| s.simulate(&mut a.borrow_mut())),
+        }
     }
 
     /// Memoized [`KernelRun`] of one scenario (what the table/figure
@@ -282,7 +455,33 @@ impl SweepEngine {
     /// [`SimError`] while every other cell completes and matches a
     /// fault-free run, and errored cells are never cached.
     pub fn try_run_scenarios(&self, list: &[Scenario]) -> Vec<Result<SimResult, SimError>> {
-        fan_out(self.jobs, list.len(), |i| self.result(list[i]))
+        self.run_scenarios_with(list, &GridSession::off())
+            .into_iter()
+            .map(|c| c.expect("an unsharded session owns every cell"))
+            .collect()
+    }
+
+    /// Drain a scenario grid through a [`GridSession`] (ISSUE 7):
+    /// `out[i]` is `None` when the session's shard does not own cell
+    /// `i`, and otherwise the cell's result — served from a journaled
+    /// prior record (done cells recompute through the cache tiers,
+    /// which a warm store turns into disk hits; failed cells replay
+    /// their journaled message verbatim) or executed live under the
+    /// engine's [`CellPolicy`] and journaled on completion. Cell IDs
+    /// are the stable content-addressed store key strings, so shard
+    /// ownership and journal identity are machine-portable.
+    pub fn run_scenarios_with(
+        &self,
+        list: &[Scenario],
+        session: &GridSession,
+    ) -> Vec<Option<Result<SimResult, SimError>>> {
+        self.run_cells(
+            list.len(),
+            session,
+            |i| super::persist::key_string(&list[i].canonical().key()),
+            |i| self.result(list[i]),
+            |r| r.outputs_digest,
+        )
     }
 
     /// Memoized fault-campaign outcome: in-memory memo first, then the
@@ -309,14 +508,137 @@ impl SweepEngine {
 
     fn run_campaign_live(&self, c: &Campaign) -> CampaignOutcome {
         let oracle = self.result(c.scenario);
-        ARENA.with(|a| run_campaign(c, &oracle, &mut a.borrow_mut()))
+        match self.policy.timeout_ms {
+            Some(ms) => {
+                let c = *c;
+                with_watchdog(ms, move || run_campaign(&c, &oracle, &mut SimArena::new()))
+            }
+            None => ARENA.with(|a| run_campaign(c, &oracle, &mut a.borrow_mut())),
+        }
     }
 
     /// Drain a campaign grid through the worker pool, fault-isolated:
     /// `out[i]` corresponds to `grid[i]`, and a panicking campaign yields
     /// a [`SimError`] cell instead of aborting the grid.
     pub fn run_campaigns(&self, grid: &[Campaign]) -> Vec<Result<CampaignOutcome, SimError>> {
-        fan_out(self.jobs, grid.len(), |i| self.campaign(&grid[i]))
+        self.run_campaigns_with(grid, &GridSession::off())
+            .into_iter()
+            .map(|c| c.expect("an unsharded session owns every cell"))
+            .collect()
+    }
+
+    /// Campaign-grid analogue of [`SweepEngine::run_scenarios_with`]:
+    /// shard-aware, journal-replaying, policy-driven. Cell IDs are the
+    /// campaigns' versioned [`Campaign::key`] strings.
+    pub fn run_campaigns_with(
+        &self,
+        grid: &[Campaign],
+        session: &GridSession,
+    ) -> Vec<Option<Result<CampaignOutcome, SimError>>> {
+        self.run_cells(
+            grid.len(),
+            session,
+            |i| grid[i].key(),
+            |i| self.campaign(&grid[i]),
+            |o| o.faulted_digest,
+        )
+    }
+
+    /// The shared cell driver behind both grid kinds: compute the
+    /// stable cell ID (a panicking ID — e.g. an unknown kernel name —
+    /// is itself a deterministic cell failure and is never journaled,
+    /// since no stable identity exists), apply shard ownership, consult
+    /// the session's replayed prior records, and otherwise execute
+    /// under the retry policy and journal the terminal state.
+    fn run_cells<T, I, C>(
+        &self,
+        n: usize,
+        session: &GridSession,
+        id_of: I,
+        compute: C,
+        digest_of: fn(&T) -> u64,
+    ) -> Vec<Option<Result<T, SimError>>>
+    where
+        T: Send + Sync,
+        I: Fn(usize) -> String + Sync,
+        C: Fn(usize) -> T + Sync,
+    {
+        let one = |i: usize| -> Option<Result<T, SimError>> {
+            let id = match catch_unwind(AssertUnwindSafe(|| id_of(i))) {
+                Ok(id) => id,
+                Err(p) => {
+                    let (_, message) = classify(p.as_ref());
+                    return Some(Err(SimError { index: i, kind: FailKind::Deterministic, message }));
+                }
+            };
+            if !session.owns(&id) {
+                return None;
+            }
+            if let Some(rec) = session.prior(&id) {
+                return Some(match rec.status {
+                    // A journaled done cell is recomputable through the
+                    // cache tiers (usually a disk hit); re-journaling it
+                    // would duplicate the record.
+                    CellStatus::Done => self.run_policied(i, || compute(i)).inspect(|v| {
+                        if digest_of(v) != rec.digest {
+                            warn_digest_mismatch_once(&id);
+                        }
+                    }),
+                    // Failed cells replay verbatim so a resumed report
+                    // is byte-identical; a fresh (non-resume) run is the
+                    // way to retry them.
+                    CellStatus::Error => Err(SimError {
+                        index: i,
+                        kind: FailKind::Deterministic,
+                        message: rec.message.clone(),
+                    }),
+                    CellStatus::Timeout => Err(SimError {
+                        index: i,
+                        kind: FailKind::Timeout,
+                        message: rec.message.clone(),
+                    }),
+                });
+            }
+            let out = self.run_policied(i, || compute(i));
+            match &out {
+                Ok(v) => session.record(&id, CellStatus::Done, digest_of(v), ""),
+                Err(e) => session.record(&id, e.kind.status(), 0, &e.message),
+            }
+            Some(out)
+        };
+        fan_out(self.jobs, n, one)
+            .into_iter()
+            .map(|cell| match cell {
+                Ok(inner) => inner,
+                Err(e) => Some(Err(e)),
+            })
+            .collect()
+    }
+
+    /// Execute one cell under the engine's [`CellPolicy`]: forward a
+    /// success, retry [`Transient`] panics up to the retry budget with
+    /// capped exponential backoff, and turn the terminal panic into a
+    /// classified [`SimError`].
+    fn run_policied<T>(&self, index: usize, work: impl Fn() -> T) -> Result<T, SimError> {
+        let mut attempt = 0u32;
+        loop {
+            test_delay();
+            match catch_unwind(AssertUnwindSafe(&work)) {
+                Ok(v) => return Ok(v),
+                Err(p) => {
+                    let (kind, message) = classify(p.as_ref());
+                    if kind == FailKind::Transient && attempt < self.policy.retries {
+                        attempt += 1;
+                        let backoff = (10u64 << (attempt - 1).min(16)).min(self.policy.backoff_cap_ms);
+                        if backoff > 0 {
+                            std::thread::sleep(Duration::from_millis(backoff));
+                        }
+                        continue;
+                    }
+                    return Err(SimError { index, kind, message });
+                }
+            }
+        }
     }
 
     /// (hits, misses) of the fault-campaign memo.
@@ -328,6 +650,14 @@ impl SweepEngine {
     /// `None` for a memory-only engine.
     pub fn disk_fault_counters(&self) -> Option<(u64, u64, u64)> {
         self.disk.as_ref().map(|d| d.fault_counters())
+    }
+
+    /// Failed entry writes per store tier — (sim, net, fault) — or
+    /// `None` for a memory-only engine. A full or read-only store
+    /// degrades to warn-once-and-continue-in-memory; these counters are
+    /// how `--stats` surfaces the damage (ISSUE 7 satellite).
+    pub fn disk_write_errors(&self) -> Option<(u64, u64, u64)> {
+        self.disk.as_ref().map(|d| d.write_error_counters())
     }
 
     /// Render whole reproduction reports through the worker pool (ids as
@@ -365,8 +695,10 @@ where
     F: Fn(usize) -> T + Sync,
 {
     let run = |i: usize| {
-        catch_unwind(AssertUnwindSafe(|| work(i)))
-            .map_err(|p| SimError { index: i, message: panic_message(p.as_ref()) })
+        catch_unwind(AssertUnwindSafe(|| work(i))).map_err(|p| {
+            let (kind, message) = classify(p.as_ref());
+            SimError { index: i, kind, message }
+        })
     };
     if jobs <= 1 || n <= 1 {
         return (0..n).map(run).collect();
@@ -390,7 +722,11 @@ where
         .enumerate()
         .map(|(i, slot)| {
             slot.into_inner().unwrap_or_else(|| {
-                Err(SimError { index: i, message: "worker produced no result".into() })
+                Err(SimError {
+                    index: i,
+                    kind: FailKind::Deterministic,
+                    message: "worker produced no result".into(),
+                })
             })
         })
         .collect()
@@ -456,5 +792,125 @@ mod tests {
             assert_eq!(a.outputs_digest, b.outputs_digest);
             assert_eq!(a.run.stats, b.run.stats);
         }
+    }
+
+    use crate::sweep::journal::ShardSpec;
+    use std::sync::atomic::AtomicU32;
+
+    fn policied_engine(policy: CellPolicy) -> SweepEngine {
+        let mut eng = SweepEngine::serial();
+        eng.set_cell_policy(policy);
+        eng
+    }
+
+    /// ISSUE 7: a `Transient` panic is retried (bounded) and the cell
+    /// succeeds once the environment recovers.
+    #[test]
+    fn transient_failures_retry_until_success() {
+        let eng = policied_engine(CellPolicy { retries: 3, backoff_cap_ms: 0, timeout_ms: None });
+        let attempts = AtomicU32::new(0);
+        let out = eng.run_policied(7, || {
+            if attempts.fetch_add(1, Ordering::Relaxed) < 2 {
+                std::panic::panic_any(Transient("flaky read".into()));
+            }
+            42
+        });
+        assert_eq!(out.unwrap(), 42);
+        assert_eq!(attempts.load(Ordering::Relaxed), 3, "two transient failures, one success");
+    }
+
+    /// The PR 6 contract survives the policy layer: an ordinary panic is
+    /// deterministic and fails on the first attempt, whatever the retry
+    /// budget says.
+    #[test]
+    fn deterministic_failures_are_never_retried() {
+        let eng = policied_engine(CellPolicy { retries: 5, backoff_cap_ms: 0, timeout_ms: None });
+        let attempts = AtomicU32::new(0);
+        let out: Result<u32, SimError> = eng.run_policied(3, || {
+            attempts.fetch_add(1, Ordering::Relaxed);
+            panic!("model bug");
+        });
+        let e = out.unwrap_err();
+        assert_eq!((e.index, e.kind), (3, FailKind::Deterministic));
+        assert_eq!(e.message, "model bug");
+        assert_eq!(attempts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn transient_failures_exhaust_the_retry_budget() {
+        let eng = policied_engine(CellPolicy { retries: 1, backoff_cap_ms: 0, timeout_ms: None });
+        let attempts = AtomicU32::new(0);
+        let out: Result<u32, SimError> = eng.run_policied(0, || {
+            attempts.fetch_add(1, Ordering::Relaxed);
+            std::panic::panic_any(Transient("still flaky".into()));
+        });
+        let e = out.unwrap_err();
+        assert_eq!(e.kind, FailKind::Transient);
+        assert_eq!(e.message, "still flaky");
+        assert_eq!(attempts.load(Ordering::Relaxed), 2, "1 attempt + 1 retry");
+    }
+
+    /// The watchdog abandons a runaway cell and classifies it `Timeout`.
+    #[test]
+    fn watchdog_marks_runaway_cells_timeout() {
+        let eng = SweepEngine::serial();
+        let out: Result<u32, SimError> = eng.run_policied(5, || {
+            with_watchdog(10, || {
+                std::thread::sleep(Duration::from_millis(300));
+                7u32
+            })
+        });
+        let e = out.unwrap_err();
+        assert_eq!((e.index, e.kind), (5, FailKind::Timeout));
+        assert!(e.message.contains("timeout after 10 ms"), "{}", e.message);
+    }
+
+    /// In-budget work passes its value (and its panics) straight through
+    /// the watchdog.
+    #[test]
+    fn watchdog_forwards_values_and_inner_panics() {
+        assert_eq!(with_watchdog(5_000, || 41 + 1), 42);
+        let caught = catch_unwind(|| with_watchdog(5_000, || panic!("inner boom"))).unwrap_err();
+        assert_eq!(panic_message(caught.as_ref()), "inner boom");
+    }
+
+    /// `--timeout-ms 0` end-to-end: every simulated cell times out
+    /// deterministically (the CI exit-code smoke relies on this).
+    #[test]
+    fn zero_timeout_times_out_every_cell() {
+        let mut eng = SweepEngine::serial();
+        eng.set_cell_policy(CellPolicy { timeout_ms: Some(0), ..CellPolicy::default() });
+        let out = eng.try_run_scenarios(&[Scenario::IntMatmul { w: IntWidth::I8, cores: 1 }]);
+        let e = out[0].as_ref().unwrap_err();
+        assert_eq!(e.kind, FailKind::Timeout);
+        assert!(e.message.contains("timeout after 0 ms"), "{}", e.message);
+    }
+
+    /// ISSUE 7 sharding: every cell of a grid is owned by exactly one
+    /// shard session, and the union of the shard drains equals the
+    /// unsharded drain.
+    #[test]
+    fn sharded_sessions_partition_a_grid_exactly() {
+        let list: Vec<Scenario> =
+            (1..=6usize).map(|c| Scenario::IntMatmul { w: IntWidth::I8, cores: c }).collect();
+        let eng = SweepEngine::new(2);
+        let full: Vec<SimResult> =
+            eng.try_run_scenarios(&list).into_iter().map(|r| r.unwrap()).collect();
+        let total = 3u32;
+        let mut owned = vec![0usize; list.len()];
+        for index in 1..=total {
+            let session = GridSession::with_shard(ShardSpec { index, total });
+            for (i, cell) in eng.run_scenarios_with(&list, &session).iter().enumerate() {
+                if let Some(r) = cell {
+                    owned[i] += 1;
+                    assert_eq!(
+                        r.as_ref().unwrap().outputs_digest,
+                        full[i].outputs_digest,
+                        "shard {index}/{total} cell {i}"
+                    );
+                }
+            }
+        }
+        assert_eq!(owned, vec![1; list.len()], "each cell owned by exactly one shard");
     }
 }

@@ -25,7 +25,8 @@ use crate::coordinator;
 use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
 use crate::power::tables::OperatingPoint;
-use crate::sweep::{default_jobs, Scenario, SweepEngine};
+use crate::sweep::journal::{self, GridSession, ShardSpec};
+use crate::sweep::{default_jobs, CellPolicy, Scenario, SweepEngine};
 
 /// A matmul precision of the exploration grid (the kernel library's
 /// supported data formats).
@@ -119,6 +120,16 @@ impl GridFormat {
             other => Err(format!("unknown format '{other}' (supported: csv,md,json)")),
         }
     }
+
+    /// Canonical token (fed into the grid's journal key — the format
+    /// shapes the output bytes, so it is part of the grid identity).
+    pub fn name(self) -> &'static str {
+        match self {
+            GridFormat::Csv => "csv",
+            GridFormat::Markdown => "md",
+            GridFormat::Json => "json",
+        }
+    }
 }
 
 /// A user-defined exploration grid: the cross product of core counts,
@@ -175,6 +186,17 @@ pub struct SweepCmd {
     pub jobs: usize,
     /// Print cache statistics to stderr after rendering (`--stats`).
     pub stats: bool,
+    /// Replay this grid's checkpoint journal and skip completed cells
+    /// (`--resume`).
+    pub resume: bool,
+    /// Own only one deterministic slice of the grid (`--shard I/N`).
+    pub shard: Option<ShardSpec>,
+    /// Reassemble N shard journals into the full serial-order report
+    /// (`--merge N`).
+    pub merge: Option<u32>,
+    /// Per-cell retry/timeout policy (`--retries`, `--backoff-ms`,
+    /// `--timeout-ms`).
+    pub policy: CellPolicy,
 }
 
 impl SweepCmd {
@@ -184,6 +206,10 @@ impl SweepCmd {
         let mut spec = GridSpec::default();
         let mut jobs = default_jobs();
         let mut stats = false;
+        let mut resume = false;
+        let mut shard = None;
+        let mut merge = None;
+        let mut policy = CellPolicy::default();
         let mut it = args.iter();
         while let Some(a) = it.next() {
             let mut value = |flag: &str| {
@@ -210,11 +236,43 @@ impl SweepCmd {
                         .ok_or_else(|| format!("--jobs must be a positive integer, got '{v}'"))?;
                 }
                 "--stats" => stats = true,
+                "--resume" => resume = true,
+                "--shard" => shard = Some(ShardSpec::parse(value("--shard")?)?),
+                "--merge" => merge = Some(parse_merge(value("--merge")?)?),
+                "--retries" => policy.retries = parse_retries(value("--retries")?)?,
+                "--backoff-ms" => policy.backoff_cap_ms = parse_ms("--backoff-ms", value("--backoff-ms")?)?,
+                "--timeout-ms" => policy.timeout_ms = Some(parse_ms("--timeout-ms", value("--timeout-ms")?)?),
                 other => return Err(format!("unknown flag '{other}'")),
             }
         }
-        Ok(SweepCmd { spec, jobs, stats })
+        if merge.is_some() && (shard.is_some() || resume) {
+            return Err("--merge reassembles existing shard journals; it conflicts with --shard and --resume".into());
+        }
+        Ok(SweepCmd { spec, jobs, stats, resume, shard, merge, policy })
     }
+}
+
+/// Parse a `--merge` shard count (shared with `vega faults`).
+pub(crate) fn parse_merge(v: &str) -> Result<u32, String> {
+    v.parse::<u32>()
+        .ok()
+        .filter(|&n| (1..=4096).contains(&n))
+        .ok_or_else(|| format!("--merge must be a shard count in 1..=4096, got '{v}'"))
+}
+
+/// Parse a `--retries` budget (shared with `vega faults`).
+pub(crate) fn parse_retries(v: &str) -> Result<u32, String> {
+    v.parse::<u32>()
+        .ok()
+        .filter(|&n| n <= 100)
+        .ok_or_else(|| format!("--retries must be 0..=100, got '{v}'"))
+}
+
+/// Parse a millisecond flag value (`--backoff-ms`, `--timeout-ms`; 0 is
+/// allowed — a zero backoff never sleeps, a zero timeout times every
+/// cell out deterministically).
+pub(crate) fn parse_ms(flag: &str, v: &str) -> Result<u64, String> {
+    v.parse::<u64>().map_err(|_| format!("{flag} must be a millisecond count, got '{v}'"))
 }
 
 /// Parse a `--cores` value: comma-separated core counts and/or inclusive
@@ -337,22 +395,60 @@ pub(crate) fn sanitize_cell(msg: &str) -> String {
     msg.replace(['\n', '\r'], " ").replace([',', '|'], ";")
 }
 
+/// The journal identity of a sweep grid (ISSUE 7): a versioned hash of
+/// the grid kind, every rendering parameter that shapes the output
+/// bytes, and the stable ID of every cell in grid order. Feeds
+/// [`journal::GridSession::open`] — two different grids can never share
+/// a journal.
+pub fn grid_key(spec: &GridSpec) -> u64 {
+    let dvfs = format!("dvfs={}", spec.dvfs_steps);
+    let format = format!("format={}", spec.format.name());
+    let ids: Vec<String> = spec
+        .scenarios()
+        .iter()
+        .map(|s| super::persist::key_string(&s.canonical().key()))
+        .collect();
+    journal::grid_key("sweep", &[&dvfs, &format], &ids)
+}
+
+/// A rendered grid plus the cell accounting the CLI's exit code and
+/// stats line need.
+pub struct RenderedGrid {
+    /// The rendered table (ends in exactly one newline).
+    pub text: String,
+    /// Cells that ended in `error`/`timeout` (renders still complete;
+    /// the CLI exits non-zero when this is > 0).
+    pub failed: usize,
+    /// Cells skipped because this session's shard does not own them.
+    pub skipped: usize,
+}
+
 /// Render `spec` through `eng`: fan the distinct cells out across the
 /// engine's worker pool (fault-isolated — see [`Row`]), then emit rows
 /// in deterministic grid order. The returned string ends in exactly one
 /// newline.
 pub fn render(eng: &SweepEngine, spec: &GridSpec) -> String {
+    render_with(eng, spec, &GridSession::off()).text
+}
+
+/// As [`render`], but through a [`GridSession`] (ISSUE 7): journaled
+/// prior cells replay, shard-unowned cells emit no rows at all, and the
+/// returned [`RenderedGrid`] carries the failed/skipped cell counts.
+pub fn render_with(eng: &SweepEngine, spec: &GridSpec, session: &GridSession) -> RenderedGrid {
     // Fault-isolated parallel prefetch of every distinct cell; an
     // errored cell becomes its own status row below instead of tearing
     // the whole grid down.
-    let results = eng.try_run_scenarios(&spec.scenarios());
+    let results = eng.run_scenarios_with(&spec.scenarios(), session);
     let ops = operating_points(spec.dvfs_steps);
     let mut rows = Vec::with_capacity(spec.rows());
+    let mut failed = 0;
+    let mut skipped = 0;
     let mut cell = 0;
     for &cores in &spec.cores {
         for &p in &spec.precisions {
             match &results[cell] {
-                Ok(res) => {
+                None => skipped += 1,
+                Some(Ok(res)) => {
                     let kr = &res.run;
                     for op in &ops {
                         let (gops, gops_per_w) = coordinator::efficiency(kr, *op, 0.0);
@@ -372,21 +468,25 @@ pub fn render(eng: &SweepEngine, spec: &GridSpec) -> String {
                         });
                     }
                 }
-                Err(e) => rows.push(Row {
-                    cores,
-                    precision: p.name(),
-                    point: None,
-                    status: sanitize_cell(&e.message),
-                }),
+                Some(Err(e)) => {
+                    failed += 1;
+                    rows.push(Row {
+                        cores,
+                        precision: p.name(),
+                        point: None,
+                        status: sanitize_cell(&e.message),
+                    });
+                }
             }
             cell += 1;
         }
     }
-    match spec.format {
+    let text = match spec.format {
         GridFormat::Csv => render_csv(&rows),
         GridFormat::Markdown => render_md(&rows),
         GridFormat::Json => render_json(spec, &rows),
-    }
+    };
+    RenderedGrid { text, failed, skipped }
 }
 
 const COLUMNS: [&str; 10] = [
@@ -573,6 +673,59 @@ mod tests {
         assert_eq!(cmd.spec.rows(), 9 * 2 * 4);
         assert!(SweepCmd::parse(&["--bogus".to_string()]).is_err());
         assert!(SweepCmd::parse(&["--cores".to_string()]).is_err());
+    }
+
+    /// ISSUE 7 flags: resume/shard/merge/policy parse, and merge
+    /// conflicts with the flags that *produce* journals.
+    #[test]
+    fn cmd_parse_handles_resume_shard_merge_and_policy() {
+        let args = |toks: &[&str]| -> Vec<String> { toks.iter().map(|s| s.to_string()).collect() };
+        let cmd = SweepCmd::parse(&args(&[
+            "--resume",
+            "--shard",
+            "2/4",
+            "--retries",
+            "0",
+            "--backoff-ms",
+            "0",
+            "--timeout-ms",
+            "5000",
+        ]))
+        .unwrap();
+        assert!(cmd.resume);
+        assert_eq!(cmd.shard, Some(ShardSpec { index: 2, total: 4 }));
+        assert_eq!(cmd.merge, None);
+        assert_eq!(
+            cmd.policy,
+            CellPolicy { retries: 0, backoff_cap_ms: 0, timeout_ms: Some(5000) }
+        );
+        let merged = SweepCmd::parse(&args(&["--merge", "2"])).unwrap();
+        assert_eq!(merged.merge, Some(2));
+        assert!(SweepCmd::parse(&args(&["--merge", "2", "--shard", "1/2"])).is_err());
+        assert!(SweepCmd::parse(&args(&["--merge", "2", "--resume"])).is_err());
+        assert!(SweepCmd::parse(&args(&["--shard", "3/2"])).is_err());
+        assert!(SweepCmd::parse(&args(&["--merge", "0"])).is_err());
+        assert!(SweepCmd::parse(&args(&["--timeout-ms", "soon"])).is_err());
+    }
+
+    /// The journal key tracks everything that shapes the rendered bytes.
+    #[test]
+    fn sweep_grid_key_tracks_cells_and_render_params() {
+        let base = GridSpec {
+            cores: vec![1, 2],
+            precisions: vec![Precision::Int8],
+            dvfs_steps: 2,
+            format: GridFormat::Csv,
+        };
+        let k = grid_key(&base);
+        assert_eq!(k, grid_key(&base.clone()), "deterministic");
+        assert_ne!(k, grid_key(&GridSpec { cores: vec![1, 3], ..base.clone() }));
+        assert_ne!(k, grid_key(&GridSpec { dvfs_steps: 3, ..base.clone() }));
+        assert_ne!(k, grid_key(&GridSpec { format: GridFormat::Json, ..base.clone() }));
+        assert_ne!(
+            k,
+            grid_key(&GridSpec { precisions: vec![Precision::Fp16], ..base.clone() })
+        );
     }
 
     #[test]

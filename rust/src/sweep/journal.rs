@@ -1,0 +1,755 @@
+//! Crash-safe checkpoint journal for sweep and fault grids (ISSUE 7).
+//!
+//! The paper's headline property is state retention across power cycles
+//! (1.7 µW MRAM-retentive sleep); this module gives the *host-side*
+//! campaign infrastructure the same property: a multi-hour grid survives
+//! a killed process without losing completed work. Three pieces:
+//!
+//! * **Per-grid journal** — an append-only file of checksummed records,
+//!   one per completed cell, under `<cache-root>/journals/`. The file is
+//!   keyed by a versioned byte encoding of the full grid ([`grid_key`],
+//!   built on [`crate::common::ByteWriter`] like every persisted key
+//!   since PR 4), so two different grids can never share a journal and a
+//!   stale journal is never misapplied. Replay ([`replay`]) is
+//!   **torn-tail-tolerant**: a half-written trailing record — the
+//!   expected state after `SIGKILL` mid-append — reads as "cell not
+//!   done", never as a corruption abort, and resuming truncates the torn
+//!   tail before appending so the file stays a valid record prefix.
+//! * **Deterministic sharding** ([`ShardSpec`]) — `--shard I/N`
+//!   partitions a grid by the FNV-1a hash of each cell's stable ID
+//!   (the same content-addressed key strings the [`super::persist`]
+//!   store files live under), so N independent processes own disjoint,
+//!   machine-independent slices. [`GridMode::Merge`] reassembles the
+//!   shard journals into the exact serial-order report.
+//! * **[`GridSession`]** — the handle the engine threads share: the
+//!   prior-record map consulted before computing a cell, the ownership
+//!   predicate, and the (mutex-serialised) append side. Everything is
+//!   best-effort: any journal I/O failure warns once, counts in
+//!   [`GridSession::write_errors`], disables journaling for the rest of
+//!   the run, and the grid completes in memory — a full or read-only
+//!   disk degrades, it never panics.
+//!
+//! ## Journal file format (version [`JOURNAL_VERSION`])
+//!
+//! ```text
+//! header   magic b"VEGAJRNL"              8 bytes
+//!          version  u32 LE                JOURNAL_VERSION
+//!          grid id  u32 LE len + UTF-8    "{kind}:{grid_key:016x}"
+//!          shard    u32 LE index, u32 LE total   (0, 0) = unsharded
+//! record*  len      u32 LE                payload byte length
+//!          payload  len bytes             see below
+//!          checksum u64 LE                FNV-1a of the payload bytes
+//! ```
+//!
+//! Record payload: `cell id` (u32-length-prefixed UTF-8), `status` (u8:
+//! 0 done, 1 error, 2 timeout), `digest` (u64 — the result's output
+//! digest for done cells, 0 otherwise), `message` (length-prefixed
+//! UTF-8 — empty for done cells, the verbatim failure message
+//! otherwise, so a resumed grid renders byte-identical status rows).
+//!
+//! Records are advisory, not authoritative: a done record only asserts
+//! "this cell completed and its result is (re)computable through the
+//! cache tiers". Losing a record (torn tail, missed append between the
+//! disk-store write and the journal append at kill time) costs at most
+//! one recomputation — which the [`super::persist::DiskStore`] usually
+//! turns into a disk hit anyway. That is why appends are flushed but not
+//! fsynced, and why replay prefers "not done" over any strict reading.
+
+use std::collections::HashMap;
+use std::fs;
+use std::hash::Hasher;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, Once};
+
+use crate::common::{ByteReader, ByteWriter, Fnv1a};
+
+/// Journal layout version: part of the header and of [`grid_key`], so a
+/// format change orphans old journals (they replay as empty) instead of
+/// misreading them.
+pub const JOURNAL_VERSION: u32 = 1;
+
+const JRN_MAGIC: &[u8; 8] = b"VEGAJRNL";
+
+/// Upper bound on one record's payload (a cell id plus a panic message);
+/// a larger length prefix is garbage, and replay stops there.
+const MAX_RECORD_LEN: usize = 1 << 20;
+
+/// Terminal state of one journaled cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellStatus {
+    /// The cell completed; its digest is journaled.
+    Done,
+    /// The cell failed deterministically (or exhausted its transient
+    /// retries); its message is journaled and replayed verbatim.
+    Error,
+    /// The cell exceeded its wall-clock budget.
+    Timeout,
+}
+
+impl CellStatus {
+    fn to_u8(self) -> u8 {
+        match self {
+            CellStatus::Done => 0,
+            CellStatus::Error => 1,
+            CellStatus::Timeout => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<CellStatus> {
+        match v {
+            0 => Some(CellStatus::Done),
+            1 => Some(CellStatus::Error),
+            2 => Some(CellStatus::Timeout),
+            _ => None,
+        }
+    }
+}
+
+/// One replayed journal record: a cell that reached a terminal state in
+/// a prior (or the current) run of the same grid.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CellRecord {
+    /// The cell's stable content-addressed ID (a
+    /// [`super::persist`] key string or a
+    /// [`crate::faults::Campaign::key`] string).
+    pub cell_id: String,
+    /// Terminal state.
+    pub status: CellStatus,
+    /// Output digest of a done cell (0 for error/timeout).
+    pub digest: u64,
+    /// Verbatim failure message of an error/timeout cell (empty for
+    /// done), replayed so resumed status rows are byte-identical.
+    pub message: String,
+}
+
+/// One slice of a sharded grid: `--shard I/N` (1-based `I`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// 1-based shard index.
+    pub index: u32,
+    /// Total shard count.
+    pub total: u32,
+}
+
+impl ShardSpec {
+    /// Parse an `I/N` token (`1 <= I <= N`).
+    pub fn parse(s: &str) -> Result<ShardSpec, String> {
+        let bad = || format!("--shard must be I/N with 1 <= I <= N, got '{s}'");
+        let (i, n) = s.trim().split_once('/').ok_or_else(bad)?;
+        let index: u32 = i.trim().parse().map_err(|_| bad())?;
+        let total: u32 = n.trim().parse().map_err(|_| bad())?;
+        if index == 0 || total == 0 || index > total {
+            return Err(bad());
+        }
+        Ok(ShardSpec { index, total })
+    }
+
+    /// Whether this shard owns `cell_id`. The partition is the FNV-1a
+    /// hash of the id modulo the shard count — a pure function of the
+    /// content-addressed id, so every process (on any machine) agrees on
+    /// the slices, and the N slices are disjoint and covering.
+    pub fn owns(&self, cell_id: &str) -> bool {
+        let mut h = Fnv1a::new();
+        h.write(cell_id.as_bytes());
+        (h.finish() % self.total as u64) as u32 == self.index - 1
+    }
+}
+
+impl std::fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.index, self.total)
+    }
+}
+
+/// The grid identity a journal is keyed by: an FNV-1a hash over the
+/// versioned byte encoding of the grid kind (`"sweep"` / `"faults"`),
+/// its scalar parameters, and every cell's stable ID in grid order. Any
+/// change to the grid — a core count, a precision, a seed, a format —
+/// changes the key and therefore selects a different journal file; a
+/// `--resume` can never skip cells of a *different* grid.
+pub fn grid_key(kind: &str, params: &[&str], cell_ids: &[String]) -> u64 {
+    let mut e = ByteWriter::with_capacity(64 + 32 * cell_ids.len());
+    e.u32(JOURNAL_VERSION);
+    e.str(kind);
+    e.u32(params.len() as u32);
+    for p in params {
+        e.str(p);
+    }
+    e.u32(cell_ids.len() as u32);
+    for id in cell_ids {
+        e.str(id);
+    }
+    let mut h = Fnv1a::new();
+    h.write(e.as_slice());
+    h.finish()
+}
+
+/// How a [`GridSession`] treats existing journal state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GridMode {
+    /// Truncate any prior journal and record from scratch (the default
+    /// CLI behaviour — every run journals, so any run can be resumed).
+    Fresh,
+    /// Replay the prior journal (torn tail truncated), skip replayed
+    /// cells, append the rest (`--resume`).
+    Resume,
+    /// Read-only union of the `N` shard journals (plus any unsharded
+    /// one) of the same grid: reassemble the full serial-order report
+    /// without recomputing journaled cells (`--merge N`).
+    Merge(u32),
+}
+
+/// Default journal root: the `journals/` subdirectory of the cache-dir
+/// resolution used by [`super::persist::DiskStore::open_default`]
+/// (`$VEGA_CACHE_DIR`, else `$CARGO_TARGET_DIR/vega-cache`, else
+/// `target/vega-cache`). Journaling is independent of `VEGA_CACHE=off`:
+/// with the store disabled, resumed done-cells recompute (simulations
+/// are pure, so the output is still byte-identical).
+pub fn default_root() -> PathBuf {
+    let dir = match std::env::var_os("VEGA_CACHE_DIR") {
+        Some(d) => PathBuf::from(d),
+        None => match std::env::var_os("CARGO_TARGET_DIR") {
+            Some(t) => Path::new(&t).join("vega-cache"),
+            None => PathBuf::from("target").join("vega-cache"),
+        },
+    };
+    dir.join("journals")
+}
+
+/// Journal file name for a grid key and optional shard: shards of one
+/// grid share a directory but never a file.
+fn file_name(key: u64, shard: Option<ShardSpec>) -> String {
+    match shard {
+        Some(s) => format!("j{key:016x}.s{}of{}.jnl", s.index, s.total),
+        None => format!("j{key:016x}.jnl"),
+    }
+}
+
+fn encode_header(grid_id: &str, shard: Option<ShardSpec>) -> Vec<u8> {
+    let mut e = ByteWriter::with_capacity(64);
+    e.bytes(JRN_MAGIC);
+    e.u32(JOURNAL_VERSION);
+    e.str(grid_id);
+    e.u32(shard.map_or(0, |s| s.index));
+    e.u32(shard.map_or(0, |s| s.total));
+    e.into_vec()
+}
+
+fn encode_record(rec: &CellRecord) -> Vec<u8> {
+    let mut p = ByteWriter::with_capacity(64 + rec.cell_id.len() + rec.message.len());
+    p.str(&rec.cell_id);
+    p.u8(rec.status.to_u8());
+    p.u64(rec.digest);
+    p.str(&rec.message);
+    let payload = p.into_vec();
+    let mut h = Fnv1a::new();
+    h.write(&payload);
+    let mut e = ByteWriter::with_capacity(payload.len() + 12);
+    e.u32(payload.len() as u32);
+    e.bytes(&payload);
+    e.u64(h.finish());
+    e.into_vec()
+}
+
+fn decode_record(payload: &[u8]) -> Option<CellRecord> {
+    let mut d = ByteReader::new(payload);
+    let cell_id = d.str()?;
+    let status = CellStatus::from_u8(d.u8()?)?;
+    let digest = d.u64()?;
+    let message = d.str()?;
+    if !d.done() {
+        return None;
+    }
+    Some(CellRecord { cell_id, status, digest, message })
+}
+
+/// Replay a journal's bytes against the expected grid identity and shard.
+///
+/// Returns `None` when the header does not match byte-for-byte (wrong
+/// magic, version, grid, or shard — the caller treats the file as
+/// belonging to something else and starts fresh). Otherwise returns the
+/// valid record prefix plus its end offset: replay *stops* at the first
+/// torn or garbage record (bad length, truncated frame, checksum or
+/// payload-shape mismatch) — trailing damage costs the records behind
+/// it, it never aborts the resume or corrupts a result.
+pub fn replay(bytes: &[u8], grid_id: &str, shard: Option<ShardSpec>) -> Option<(Vec<CellRecord>, usize)> {
+    let header = encode_header(grid_id, shard);
+    if bytes.len() < header.len() || bytes[..header.len()] != header[..] {
+        return None;
+    }
+    let mut off = header.len();
+    let mut out = Vec::new();
+    while bytes.len() - off >= 4 {
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        if len > MAX_RECORD_LEN {
+            break;
+        }
+        let end = off + 4 + len + 8;
+        if end > bytes.len() {
+            break;
+        }
+        let payload = &bytes[off + 4..off + 4 + len];
+        let checksum = u64::from_le_bytes(bytes[end - 8..end].try_into().unwrap());
+        let mut h = Fnv1a::new();
+        h.write(payload);
+        if h.finish() != checksum {
+            break;
+        }
+        let Some(rec) = decode_record(payload) else {
+            break;
+        };
+        out.push(rec);
+        off = end;
+    }
+    Some((out, off))
+}
+
+/// Warn exactly once per process that journaling degraded (the grid
+/// itself is unaffected — records are advisory).
+fn warn_journal_once(what: &str, path: &Path, err: &std::io::Error) {
+    static WARN: Once = Once::new();
+    WARN.call_once(|| {
+        eprintln!(
+            "vega: journal disabled ({what} failed at {}: {err}); \
+             the grid completes but this run cannot be resumed",
+            path.display()
+        )
+    });
+}
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// The per-grid execution session the engine's worker threads share:
+/// shard ownership, replayed prior records, and the append side of the
+/// journal. Obtained from [`GridSession::open`] (CLI runs),
+/// [`GridSession::with_shard`] (journal-less sharding), or
+/// [`GridSession::off`] (the library default: own everything, journal
+/// nothing — exactly the pre-ISSUE-7 behaviour).
+pub struct GridSession {
+    shard: Option<ShardSpec>,
+    prior: HashMap<String, CellRecord>,
+    file: Mutex<Option<fs::File>>,
+    recorded: AtomicU64,
+    write_errors: AtomicU64,
+}
+
+impl GridSession {
+    /// A session that owns every cell, replays nothing and journals
+    /// nothing.
+    pub fn off() -> GridSession {
+        GridSession {
+            shard: None,
+            prior: HashMap::new(),
+            file: Mutex::new(None),
+            recorded: AtomicU64::new(0),
+            write_errors: AtomicU64::new(0),
+        }
+    }
+
+    /// A journal-less sharded session: owns this shard's slice, replays
+    /// and records nothing (pure in-process partitioning, used by the
+    /// library-level shard tests).
+    pub fn with_shard(shard: ShardSpec) -> GridSession {
+        GridSession { shard: Some(shard), ..GridSession::off() }
+    }
+
+    /// Open the journal session for grid `key` of `kind` under `root`.
+    ///
+    /// * [`GridMode::Fresh`] — truncate any prior journal for this
+    ///   (grid, shard) and start recording.
+    /// * [`GridMode::Resume`] — replay the prior journal (truncating a
+    ///   torn tail so appends extend a valid prefix) and record the
+    ///   cells it didn't cover. A missing file, or one belonging to a
+    ///   different grid/shard/version, degrades to `Fresh`.
+    /// * [`GridMode::Merge`] — read-only union of the grid's shard
+    ///   journals (plus any unsharded journal); nothing is recorded.
+    ///
+    /// Every I/O failure is non-fatal: it warns once, counts in
+    /// [`GridSession::write_errors`], and leaves journaling off.
+    pub fn open(kind: &str, key: u64, shard: Option<ShardSpec>, mode: GridMode, root: &Path) -> GridSession {
+        let grid_id = format!("{kind}:{key:016x}");
+        let mut session = GridSession { shard, ..GridSession::off() };
+
+        if let GridMode::Merge(total) = mode {
+            session.shard = None;
+            for index in 1..=total {
+                let s = ShardSpec { index, total };
+                let path = root.join(file_name(key, Some(s)));
+                session.merge_file(&path, &grid_id, Some(s));
+            }
+            session.merge_file(&root.join(file_name(key, None)), &grid_id, None);
+            return session;
+        }
+
+        let path = root.join(file_name(key, shard));
+        if let Err(e) = fs::create_dir_all(root) {
+            warn_journal_once("creating the journal directory", root, &e);
+            session.write_errors.fetch_add(1, Ordering::Relaxed);
+            return session;
+        }
+
+        let mut valid_len = 0u64;
+        if mode == GridMode::Resume {
+            if let Ok(bytes) = fs::read(&path) {
+                match replay(&bytes, &grid_id, shard) {
+                    Some((records, len)) => {
+                        valid_len = len as u64;
+                        for rec in records {
+                            session.prior.insert(rec.cell_id.clone(), rec);
+                        }
+                    }
+                    None => eprintln!(
+                        "vega: journal at {} belongs to a different grid or version; \
+                         starting fresh",
+                        path.display()
+                    ),
+                }
+            }
+        }
+
+        let opened = if valid_len > 0 {
+            // Extend the replayed prefix: drop the torn tail, append.
+            fs::OpenOptions::new().write(true).open(&path).and_then(|mut f| {
+                f.set_len(valid_len)?;
+                f.seek(SeekFrom::End(0))?;
+                Ok(f)
+            })
+        } else {
+            // Fresh journal (also the resume-with-nothing-replayed path):
+            // truncate and rewrite the header.
+            fs::OpenOptions::new().create(true).write(true).truncate(true).open(&path).and_then(
+                |mut f| {
+                    f.write_all(&encode_header(&grid_id, shard))?;
+                    f.flush()?;
+                    Ok(f)
+                },
+            )
+        };
+        match opened {
+            Ok(f) => *session.file.get_mut().unwrap_or_else(std::sync::PoisonError::into_inner) = Some(f),
+            Err(e) => {
+                warn_journal_once("opening the journal", &path, &e);
+                session.write_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        session
+    }
+
+    /// Fold one shard journal into the prior map (merge mode). A missing
+    /// or foreign file is reported and skipped — its cells simply
+    /// recompute live through the cache tiers.
+    fn merge_file(&mut self, path: &Path, grid_id: &str, shard: Option<ShardSpec>) {
+        let Ok(bytes) = fs::read(path) else {
+            if shard.is_some() {
+                eprintln!(
+                    "vega: merge: no journal at {} (its cells recompute live)",
+                    path.display()
+                );
+            }
+            return;
+        };
+        match replay(&bytes, grid_id, shard) {
+            Some((records, _)) => {
+                for rec in records {
+                    self.prior.insert(rec.cell_id.clone(), rec);
+                }
+            }
+            None => eprintln!(
+                "vega: merge: journal at {} belongs to a different grid or version; skipped",
+                path.display()
+            ),
+        }
+    }
+
+    /// Whether this session's shard owns `cell_id` (always true when
+    /// unsharded).
+    pub fn owns(&self, cell_id: &str) -> bool {
+        self.shard.map_or(true, |s| s.owns(cell_id))
+    }
+
+    /// The replayed prior record of `cell_id`, if any.
+    pub fn prior(&self, cell_id: &str) -> Option<&CellRecord> {
+        self.prior.get(cell_id)
+    }
+
+    /// Number of prior records replayed at open.
+    pub fn prior_count(&self) -> u64 {
+        self.prior.len() as u64
+    }
+
+    /// Append one terminal-cell record (best-effort; flushed, not
+    /// fsynced — see the module docs on why records are advisory). Any
+    /// write failure warns once, counts, and disables further appends.
+    pub fn record(&self, cell_id: &str, status: CellStatus, digest: u64, message: &str) {
+        let mut guard = lock_unpoisoned(&self.file);
+        let Some(f) = guard.as_mut() else { return };
+        let rec = CellRecord {
+            cell_id: cell_id.to_string(),
+            status,
+            digest,
+            message: message.to_string(),
+        };
+        let bytes = encode_record(&rec);
+        match f.write_all(&bytes).and_then(|_| f.flush()) {
+            Ok(()) => {
+                self.recorded.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                warn_journal_once("appending a record", Path::new("<journal>"), &e);
+                self.write_errors.fetch_add(1, Ordering::Relaxed);
+                *guard = None;
+            }
+        }
+    }
+
+    /// Number of records appended by this session.
+    pub fn recorded(&self) -> u64 {
+        self.recorded.load(Ordering::Relaxed)
+    }
+
+    /// Number of journal I/O failures absorbed (warn-once, then counted
+    /// silently).
+    pub fn write_errors(&self) -> u64 {
+        self.write_errors.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    fn rec(id: &str, status: CellStatus, digest: u64, message: &str) -> CellRecord {
+        CellRecord { cell_id: id.into(), status, digest, message: message.into() }
+    }
+
+    fn sample_journal(grid_id: &str, shard: Option<ShardSpec>) -> (Vec<u8>, Vec<CellRecord>) {
+        let records = vec![
+            rec("cell-a", CellStatus::Done, 0xDEAD_BEEF, ""),
+            rec("cell-b", CellStatus::Error, 0, "unknown NSAA kernel BOGUS"),
+            rec("cell-c", CellStatus::Timeout, 0, "timeout after 5 ms"),
+        ];
+        let mut bytes = encode_header(grid_id, shard);
+        for r in &records {
+            bytes.extend_from_slice(&encode_record(r));
+        }
+        (bytes, records)
+    }
+
+    #[test]
+    fn shard_parse_accepts_i_of_n_and_rejects_malformed() {
+        assert_eq!(ShardSpec::parse("1/2").unwrap(), ShardSpec { index: 1, total: 2 });
+        assert_eq!(ShardSpec::parse(" 3/8 ").unwrap(), ShardSpec { index: 3, total: 8 });
+        assert_eq!(ShardSpec::parse("1/1").unwrap().to_string(), "1/1");
+        for bad in ["0/2", "3/2", "1/0", "x/2", "1/y", "12", "", "1/2/3"] {
+            assert!(ShardSpec::parse(bad).is_err(), "'{bad}' must be rejected");
+        }
+    }
+
+    /// The shard partition is disjoint and covering for any N: every id
+    /// is owned by exactly one of the N shards.
+    #[test]
+    fn shard_partition_is_disjoint_and_covering() {
+        let ids: Vec<String> = (0..100).map(|i| format!("matmul_i8|16x16x16|int8|{i}c|{i:016x}")).collect();
+        for total in [1u32, 2, 3, 7] {
+            for id in &ids {
+                let owners: Vec<u32> = (1..=total)
+                    .filter(|&index| ShardSpec { index, total }.owns(id))
+                    .collect();
+                assert_eq!(owners.len(), 1, "N={total}: '{id}' owned by {owners:?}");
+            }
+        }
+        // The partition actually splits (not everything on one shard).
+        let on_first = ids.iter().filter(|id| ShardSpec { index: 1, total: 2 }.owns(id)).count();
+        assert!(on_first > 0 && on_first < ids.len(), "1/2 owns {on_first}/100");
+    }
+
+    #[test]
+    fn grid_key_is_stable_and_sensitive_to_every_input() {
+        let ids = vec!["a".to_string(), "b".to_string()];
+        let k = grid_key("sweep", &["dvfs=4", "format=csv"], &ids);
+        assert_eq!(k, grid_key("sweep", &["dvfs=4", "format=csv"], &ids), "deterministic");
+        assert_ne!(k, grid_key("faults", &["dvfs=4", "format=csv"], &ids), "kind");
+        assert_ne!(k, grid_key("sweep", &["dvfs=5", "format=csv"], &ids), "params");
+        assert_ne!(k, grid_key("sweep", &["dvfs=4", "format=csv"], &ids[..1].to_vec()), "cells");
+        let swapped = vec!["b".to_string(), "a".to_string()];
+        assert_ne!(k, grid_key("sweep", &["dvfs=4", "format=csv"], &swapped), "cell order");
+    }
+
+    #[test]
+    fn replay_round_trips_and_rejects_foreign_headers() {
+        let (bytes, records) = sample_journal("sweep:00000000000000ab", None);
+        let (got, len) = replay(&bytes, "sweep:00000000000000ab", None).unwrap();
+        assert_eq!(got, records);
+        assert_eq!(len, bytes.len());
+        // Wrong grid, wrong shard, wrong version: not this journal.
+        assert!(replay(&bytes, "sweep:00000000000000ac", None).is_none());
+        assert!(replay(&bytes, "sweep:00000000000000ab", Some(ShardSpec { index: 1, total: 2 })).is_none());
+        let mut wrong_version = bytes.clone();
+        wrong_version[8] ^= 0xFF;
+        assert!(replay(&wrong_version, "sweep:00000000000000ab", None).is_none());
+    }
+
+    /// Torn-tail tolerance: every possible truncation point reads back
+    /// as a valid record *prefix* — never a parse abort — and the valid
+    /// length points at the end of that prefix.
+    #[test]
+    fn every_truncation_reads_as_a_record_prefix() {
+        let grid_id = "faults:0000000000000007";
+        let (bytes, records) = sample_journal(grid_id, None);
+        let header_len = encode_header(grid_id, None).len();
+        for cut in 0..bytes.len() {
+            let out = replay(&bytes[..cut], grid_id, None);
+            if cut < header_len {
+                assert!(out.is_none(), "cut {cut}: inside the header");
+                continue;
+            }
+            let (got, len) = out.expect("header intact");
+            assert!(len <= cut, "cut {cut}");
+            assert_eq!(got[..], records[..got.len()], "cut {cut}: must be a prefix");
+            // Everything up to `len` replays identically on the real file.
+            let (again, len2) = replay(&bytes[..len], grid_id, None).unwrap();
+            assert_eq!(again, got, "cut {cut}");
+            assert_eq!(len2, len, "cut {cut}");
+        }
+    }
+
+    /// Seeded single-byte corruption fuzz in the style of the PR 6 store
+    /// fuzzer: any flipped byte in the record region yields a prefix of
+    /// the true records (usually shorter), never a panic and never a
+    /// record that differs from the one actually written.
+    #[test]
+    fn seeded_garbage_fuzz_always_replays_a_true_prefix() {
+        let grid_id = "sweep:00000000000000ff";
+        let (bytes, records) = sample_journal(grid_id, None);
+        let header_len = encode_header(grid_id, None).len();
+        let mut rng = Rng::new(0x70C4);
+        for _ in 0..64 {
+            let off = header_len + rng.below((bytes.len() - header_len) as u64) as usize;
+            let xor = 1 + rng.below(255) as u8;
+            let mut bad = bytes.clone();
+            bad[off] ^= xor;
+            let (got, len) = replay(&bad, grid_id, None).expect("header untouched");
+            assert!(len <= bad.len());
+            // A mutated record can only be *dropped* (checksum/shape
+            // mismatch stops the replay) — anything replayed matches the
+            // original prefix byte-for-byte.
+            assert_eq!(got[..], records[..got.len()], "byte {off} ^ {xor:#04x}");
+            assert!(got.len() < records.len(), "byte {off} ^ {xor:#04x}: a flip must cost its record");
+        }
+        // Garbage *appended* after valid records costs nothing.
+        let mut trailing = bytes.clone();
+        trailing.extend_from_slice(&[0xFF; 13]);
+        let (got, len) = replay(&trailing, grid_id, None).unwrap();
+        assert_eq!(got, records);
+        assert_eq!(len, bytes.len(), "valid length excludes the garbage tail");
+    }
+
+    fn temp_root(case: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("vega-journal-test-{}-{case}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn session_fresh_record_resume_cycle() {
+        let root = temp_root("cycle");
+        let s = GridSession::open("sweep", 0xAB, None, GridMode::Fresh, &root);
+        assert_eq!((s.prior_count(), s.write_errors()), (0, 0));
+        s.record("cell-a", CellStatus::Done, 7, "");
+        s.record("cell-b", CellStatus::Error, 0, "boom");
+        assert_eq!(s.recorded(), 2);
+        drop(s);
+
+        let s = GridSession::open("sweep", 0xAB, None, GridMode::Resume, &root);
+        assert_eq!(s.prior_count(), 2);
+        assert_eq!(s.prior("cell-a").unwrap().digest, 7);
+        assert_eq!(s.prior("cell-b").unwrap().message, "boom");
+        assert!(s.prior("cell-c").is_none());
+        s.record("cell-c", CellStatus::Timeout, 0, "timeout after 1 ms");
+        drop(s);
+
+        // Appends extended the replayed prefix: all three survive.
+        let s = GridSession::open("sweep", 0xAB, None, GridMode::Resume, &root);
+        assert_eq!(s.prior_count(), 3);
+        // A different grid key never sees these records.
+        let other = GridSession::open("sweep", 0xAC, None, GridMode::Resume, &root);
+        assert_eq!(other.prior_count(), 0);
+        // Fresh mode truncates.
+        let fresh = GridSession::open("sweep", 0xAB, None, GridMode::Fresh, &root);
+        assert_eq!(fresh.prior_count(), 0);
+        drop(fresh);
+        let s = GridSession::open("sweep", 0xAB, None, GridMode::Resume, &root);
+        assert_eq!(s.prior_count(), 0, "fresh truncated the journal");
+
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn resume_truncates_a_torn_tail_and_appends_after_it() {
+        let root = temp_root("torn");
+        let s = GridSession::open("faults", 0x77, None, GridMode::Fresh, &root);
+        s.record("cell-a", CellStatus::Done, 1, "");
+        s.record("cell-b", CellStatus::Done, 2, "");
+        drop(s);
+        let path = root.join(file_name(0x77, None));
+        let bytes = fs::read(&path).unwrap();
+        fs::write(&path, &bytes[..bytes.len() - 7]).unwrap(); // tear the last record
+
+        let s = GridSession::open("faults", 0x77, None, GridMode::Resume, &root);
+        assert_eq!(s.prior_count(), 1, "the torn record reads as not-done");
+        s.record("cell-b", CellStatus::Done, 2, "");
+        s.record("cell-c", CellStatus::Done, 3, "");
+        drop(s);
+
+        let s = GridSession::open("faults", 0x77, None, GridMode::Resume, &root);
+        assert_eq!(s.prior_count(), 3, "appends extended the truncated prefix");
+
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn sharded_sessions_use_distinct_files_and_merge_unions_them() {
+        let root = temp_root("merge");
+        let s1 = ShardSpec { index: 1, total: 2 };
+        let s2 = ShardSpec { index: 2, total: 2 };
+        let a = GridSession::open("sweep", 0x5A, Some(s1), GridMode::Fresh, &root);
+        let b = GridSession::open("sweep", 0x5A, Some(s2), GridMode::Fresh, &root);
+        a.record("cell-a", CellStatus::Done, 1, "");
+        b.record("cell-b", CellStatus::Done, 2, "");
+        b.record("cell-c", CellStatus::Error, 0, "boom");
+        drop(a);
+        drop(b);
+
+        let merged = GridSession::open("sweep", 0x5A, None, GridMode::Merge(2), &root);
+        assert_eq!(merged.prior_count(), 3);
+        assert!(merged.owns("cell-a") && merged.owns("cell-b"), "merge owns everything");
+        merged.record("cell-d", CellStatus::Done, 4, "");
+        assert_eq!(merged.recorded(), 0, "merge sessions are read-only");
+
+        // Merging more shards than exist: the missing ones just warn.
+        let partial = GridSession::open("sweep", 0x5A, None, GridMode::Merge(3), &root);
+        assert_eq!(partial.prior_count(), 3);
+
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    /// Acceptance (c): an unusable journal root degrades to a counted
+    /// warning, never a panic, and the session still owns its cells.
+    #[test]
+    fn unusable_root_degrades_without_panicking() {
+        let root = temp_root("degraded");
+        fs::create_dir_all(root.parent().unwrap()).unwrap();
+        fs::write(&root, b"a file where the journal dir should be").unwrap();
+        let s = GridSession::open("sweep", 0x99, None, GridMode::Fresh, &root);
+        assert_eq!(s.write_errors(), 1);
+        assert!(s.owns("anything"));
+        s.record("cell-a", CellStatus::Done, 1, "");
+        assert_eq!(s.recorded(), 0, "journaling is off, the run continues");
+        let _ = fs::remove_file(&root);
+    }
+}

@@ -49,14 +49,33 @@
 //! keeps the panicking behaviour for callers that want it;
 //! [`SweepEngine::try_run_scenarios`] and
 //! [`SweepEngine::run_campaigns`] surface the per-cell `Result`s.
+//!
+//! Crash safety (ISSUE 7): the [`journal`] layer makes grids survive a
+//! killed process the way the paper's SoC survives a power cycle. Every
+//! CLI grid run appends one checksummed record per completed cell to an
+//! append-only per-grid journal (keyed by a versioned byte encoding of
+//! the full grid), `--resume` replays it — torn trailing records read
+//! as "not done", never as corruption — and serves completed cells
+//! through the cache tiers for output byte-identical to an
+//! uninterrupted run. `--shard I/N` partitions any grid by stable cell
+//! ID into N disjoint machine-portable slices, and `--merge N`
+//! reassembles the shard journals into the exact serial-order report —
+//! the `--jobs` byte-identity invariant, extended across process
+//! boundaries. On top, [`SweepEngine`] runs every cell under a
+//! [`CellPolicy`]: [`Transient`]-marked failures get bounded retries,
+//! deterministic panics fail once (PR 6 contract), and an optional
+//! watchdog turns runaway cells into `timeout` rows instead of hung
+//! grids.
 
 pub mod cache;
 pub mod engine;
 pub mod explore;
+pub mod journal;
 pub mod persist;
 pub mod scenario;
 
 pub use cache::SimCache;
-pub use engine::{default_jobs, SimError, SweepEngine};
+pub use engine::{default_jobs, CellPolicy, FailKind, SimError, SweepEngine, Transient};
+pub use journal::{CellRecord, CellStatus, GridMode, GridSession, ShardSpec};
 pub use persist::DiskStore;
 pub use scenario::{Scenario, SimArena, SimKey, SimResult};

@@ -105,12 +105,13 @@ const SIM_MAGIC: &[u8; 8] = b"VEGASIMC";
 const NET_MAGIC: &[u8; 8] = b"VEGANETR";
 const FLT_MAGIC: &[u8; 8] = b"VEGAFLTR";
 
-/// Hit/miss/write counters of one entry tier.
+/// Hit/miss/write/write-error counters of one entry tier.
 #[derive(Debug, Default)]
 struct TierCounters {
     hits: AtomicU64,
     misses: AtomicU64,
     writes: AtomicU64,
+    errors: AtomicU64,
 }
 
 impl TierCounters {
@@ -136,9 +137,12 @@ impl TierCounters {
 /// key, with independent hit/miss/write counters per tier.
 ///
 /// All methods are best-effort and lock-free: loads treat every failure
-/// mode as a miss, stores silently drop entries they cannot write (a
-/// read-only cache directory degrades to the in-memory-only behaviour,
-/// it never fails a simulation).
+/// mode as a miss, and stores drop entries they cannot write (a
+/// read-only or full cache directory degrades to the in-memory-only
+/// behaviour, it never fails a simulation). Dropped writes are *not*
+/// silent (ISSUE 7): the first failure warns on stderr, and every
+/// failure counts in the per-tier error counters surfaced by
+/// [`DiskStore::write_error_counters`] and the CLI's `--stats`.
 pub struct DiskStore {
     dir: PathBuf,
     sim: TierCounters,
@@ -211,6 +215,18 @@ impl DiskStore {
         self.flt.snapshot()
     }
 
+    /// Failed entry writes per tier — (sim, net, fault). Non-zero means
+    /// some results could not be persisted (read-only dir, full disk,
+    /// path collision) and the run continued in memory; the first
+    /// failure also warned on stderr.
+    pub fn write_error_counters(&self) -> (u64, u64, u64) {
+        (
+            self.sim.errors.load(Ordering::Relaxed),
+            self.net.errors.load(Ordering::Relaxed),
+            self.flt.errors.load(Ordering::Relaxed),
+        )
+    }
+
     /// Look a kernel `key` up. Any read/format/checksum failure is a miss.
     pub fn load(&self, key: &SimKey) -> Option<SimResult> {
         let key_str = key_string(key);
@@ -223,13 +239,12 @@ impl DiskStore {
     }
 
     /// Write `result` under `key` (atomic temp-file + rename;
-    /// best-effort — errors are swallowed, the entry is simply absent).
+    /// best-effort — a failed write warns once, counts in the tier's
+    /// error counter, and the entry is simply absent).
     pub fn store(&self, key: &SimKey, result: &SimResult) {
         let key_str = key_string(key);
         let bytes = encode_entry(SIM_MAGIC, &key_str, &encode_payload(result));
-        if self.write_entry(&self.path_for(&key_str, "sim"), &bytes) {
-            self.sim.writes.fetch_add(1, Ordering::Relaxed);
-        }
+        self.finish_write(&self.sim, &self.path_for(&key_str, "sim"), &bytes);
     }
 
     /// Look a network-report `key` (a [`crate::dnn::net_key`] string) up.
@@ -247,9 +262,7 @@ impl DiskStore {
     /// temp-file + rename protocol as [`DiskStore::store`]).
     pub fn store_net(&self, key: &str, report: &NetworkReport) {
         let bytes = encode_entry(NET_MAGIC, key, &crate::dnn::encode::encode_report(report));
-        if self.write_entry(&self.path_for(key, "net"), &bytes) {
-            self.net.writes.fetch_add(1, Ordering::Relaxed);
-        }
+        self.finish_write(&self.net, &self.path_for(key, "net"), &bytes);
     }
 
     /// Look a fault-campaign `key` (a [`crate::faults::Campaign::key`]
@@ -267,8 +280,21 @@ impl DiskStore {
     /// (same temp-file + rename protocol as [`DiskStore::store`]).
     pub fn store_fault(&self, key: &str, outcome: &CampaignOutcome) {
         let bytes = encode_entry(FLT_MAGIC, key, &encode_fault_payload(outcome));
-        if self.write_entry(&self.path_for(key, "flt"), &bytes) {
-            self.flt.writes.fetch_add(1, Ordering::Relaxed);
+        self.finish_write(&self.flt, &self.path_for(key, "flt"), &bytes);
+    }
+
+    /// Count a completed write attempt: a landed entry bumps the tier's
+    /// write counter; a failed one bumps its error counter and warns
+    /// once per process that the store degraded to memory-only.
+    fn finish_write(&self, tier: &TierCounters, dest: &Path, bytes: &[u8]) {
+        match self.write_entry(dest, bytes) {
+            Ok(()) => {
+                tier.writes.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) => {
+                tier.errors.fetch_add(1, Ordering::Relaxed);
+                warn_write_failure_once(dest, &e);
+            }
         }
     }
 
@@ -276,21 +302,20 @@ impl DiskStore {
     /// PID *and* a per-process sequence number (concurrent processes on
     /// one directory can never collide on the temp path; concurrent
     /// writes within a process get distinct sequence numbers), renamed
-    /// into place. Returns whether the entry landed.
-    fn write_entry(&self, dest: &Path, bytes: &[u8]) -> bool {
+    /// into place.
+    fn write_entry(&self, dest: &Path, bytes: &[u8]) -> io::Result<()> {
         let tmp = self.dir.join(format!(
             ".tmp-{}-{}",
             std::process::id(),
             self.tmp_seq.fetch_add(1, Ordering::Relaxed)
         ));
-        if fs::write(&tmp, bytes).is_ok() && fs::rename(&tmp, dest).is_ok() {
-            true
-        } else {
+        let out = fs::write(&tmp, bytes).and_then(|_| fs::rename(&tmp, dest));
+        if out.is_err() {
             // Drop the temp file whether the write or the rename failed —
             // names are never reused, so litter would accumulate forever.
             let _ = fs::remove_file(&tmp);
-            false
         }
+        out
     }
 
     /// File an entry lives in: an FNV-1a tag of the canonical key string
@@ -301,6 +326,20 @@ impl DiskStore {
         h.write(key_str.as_bytes());
         self.dir.join(format!("{:016x}.{ext}", h.finish()))
     }
+}
+
+/// Warn once per process that entry writes are failing; thereafter the
+/// per-tier error counters keep score silently.
+fn warn_write_failure_once(dest: &Path, err: &io::Error) {
+    use std::sync::Once;
+    static WARN: Once = Once::new();
+    WARN.call_once(|| {
+        eprintln!(
+            "vega: disk cache write failed at {} ({err}); \
+             continuing in memory (see --stats write-errors)",
+            dest.display()
+        )
+    });
 }
 
 /// Canonical textual form of a [`SimKey`] (file-name tag + in-file

@@ -12,7 +12,10 @@
 //! * a seeded single-byte corruption fuzzer (ISSUE 6) sweeps every frame
 //!   region of both the `.sim` and `.net` tiers: every mutation reads
 //!   back as a miss, every restore as a hit, with exact per-region and
-//!   per-tier counts.
+//!   per-tier counts;
+//! * (ISSUE 7) a store write that cannot land warns once, counts in
+//!   `disk_write_errors`, and the engine continues in memory with
+//!   correct results.
 
 use std::fs;
 use std::path::PathBuf;
@@ -207,6 +210,45 @@ fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
     assert_eq!(mutations, 48, "6 regions x 4 mutations x 2 tiers");
     assert_eq!(store.counters(), (24, 24, 0), "sim tier: one hit + one miss per mutation");
     assert_eq!(store.net_counters(), (24, 24, 0), "net tier: one hit + one miss per mutation");
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 7 satellite: a store write that cannot land degrades to
+/// continue-in-memory with the damage counted, never a panic and never
+/// a wrong result. The entry path is replaced by a *directory*, so the
+/// tmp-file rename fails under any uid (a read-only permission bit
+/// would be bypassed by root, which CI containers often run as).
+#[test]
+fn failed_entry_writes_are_counted_and_never_change_results() {
+    let dir = store_dir("write-error");
+    let s = Scenario::IntMatmul { w: IntWidth::I8, cores: 4 };
+    let baseline = engine_at(&dir, 1).result(s);
+
+    // Wedge the entry's destination: rename(tmp, dir) cannot succeed.
+    let path = only_entry(&dir);
+    fs::remove_file(&path).unwrap();
+    fs::create_dir(&path).unwrap();
+
+    let eng = engine_at(&dir, 1);
+    let recovered = eng.result(s);
+    assert_eq!(recovered.outputs_digest, baseline.outputs_digest, "the result is unharmed");
+    assert_eq!(recovered.run.stats, baseline.run.stats);
+    assert_eq!(
+        eng.disk_counters(),
+        Some((0, 1, 0)),
+        "the unreadable entry is a miss and the failed write never counts as a write"
+    );
+    assert_eq!(
+        eng.disk_write_errors(),
+        Some((1, 0, 0)),
+        "the failed sim-tier write is counted for --stats"
+    );
+
+    // The same engine keeps serving from memory afterwards.
+    let again = eng.result(s);
+    assert_eq!(again.outputs_digest, baseline.outputs_digest);
+    assert_eq!(eng.disk_write_errors(), Some((1, 0, 0)), "a memo hit retries nothing");
 
     let _ = fs::remove_dir_all(&dir);
 }

@@ -1,0 +1,347 @@
+//! Crash-safe resume acceptance (ISSUE 7), driven through the real
+//! binary (`CARGO_BIN_EXE_vega`) the way an operator would drive it:
+//!
+//! * a `SIGKILL`ed mid-grid sweep resumes with `--resume` to output
+//!   **byte-identical** to an uninterrupted run, with exact disk-store
+//!   and journal counters for the work completed before the kill;
+//! * a torn journal tail (the expected state after a kill mid-append)
+//!   reads as "cell not done" and costs exactly one recomputation;
+//!   trailing garbage after valid records costs nothing;
+//! * error/timeout cells exit 3 under keep-going semantics (the grid
+//!   still renders every row) and replay verbatim on `--resume`;
+//! * an unusable `VEGA_CACHE_DIR` (a regular file where the directory
+//!   should be) degrades both the store and the journal to counted
+//!   warnings — the run completes in memory, byte-identical to a
+//!   cache-off run, and never panics;
+//! * `--shard 1/2` + `--shard 2/2` render disjoint row sets whose
+//!   union is the serial grid, and `--merge 2` reassembles the exact
+//!   serial-order bytes from the shard journals.
+
+use std::collections::HashSet;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::{Command, Output, Stdio};
+use std::time::{Duration, Instant};
+
+use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
+use vega::sweep::journal;
+
+/// The acceptance grid: 9 cells (cores 1..=9 × int8), 2 DVFS rows each.
+const GRID: &[&str] = &[
+    "--cores", "1-9", "--precision", "int8", "--dvfs-steps", "2", "--format", "csv", "--jobs", "2",
+];
+const CELLS: u64 = 9;
+
+/// The in-process twin of [`GRID`], for computing the journal identity.
+fn grid_spec() -> GridSpec {
+    GridSpec {
+        cores: (1..=9).collect(),
+        precisions: vec![Precision::Int8],
+        dvfs_steps: 2,
+        format: GridFormat::Csv,
+    }
+}
+
+fn temp_dir(case: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("vega-resume-test-{}-{case}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A `vega` command with a hermetic cache environment: the store and
+/// journal both live under `cache`, and the variables the surrounding
+/// shell (e.g. ci.sh) may have set cannot leak in.
+fn vega(cache: &Path) -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_vega"));
+    c.env("VEGA_CACHE_DIR", cache).env_remove("VEGA_CACHE").env_remove("VEGA_CELL_DELAY_MS");
+    c
+}
+
+fn sweep(cache: &Path, extra: &[&str]) -> Output {
+    vega(cache).arg("sweep").args(GRID).args(extra).output().expect("run vega sweep")
+}
+
+fn stdout(o: &Output) -> String {
+    String::from_utf8(o.stdout.clone()).expect("utf-8 stdout")
+}
+
+fn stderr(o: &Output) -> String {
+    String::from_utf8(o.stderr.clone()).expect("utf-8 stderr")
+}
+
+/// Path of the (unsharded) journal file for [`GRID`] under `cache`.
+fn journal_path(cache: &Path) -> PathBuf {
+    let key = explore::grid_key(&grid_spec());
+    cache.join("journals").join(format!("j{key:016x}.jnl"))
+}
+
+/// Valid (checksummed, well-formed) records currently in the journal.
+fn journal_records(cache: &Path) -> u64 {
+    let key = explore::grid_key(&grid_spec());
+    let grid_id = format!("sweep:{key:016x}");
+    fs::read(journal_path(cache))
+        .ok()
+        .and_then(|bytes| journal::replay(&bytes, &grid_id, None))
+        .map_or(0, |(records, _)| records.len() as u64)
+}
+
+/// Completed `.sim` store entries under `cache` (entry writes are
+/// tmp-file + atomic rename, so a present `.sim` file is never torn).
+fn sim_entries(cache: &Path) -> u64 {
+    fs::read_dir(cache).map_or(0, |d| {
+        d.filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().is_some_and(|x| x == "sim"))
+            .count() as u64
+    })
+}
+
+/// The data rows (everything after the CSV header) of a rendered grid.
+fn data_rows(text: &str) -> HashSet<String> {
+    text.lines().skip(1).map(str::to_string).collect()
+}
+
+/// Acceptance (a): SIGKILL a sweep mid-grid, `--resume`, and get the
+/// bytes an uninterrupted run produces — with the pre-kill work served
+/// from the journal + store instead of recomputed, counted exactly.
+#[test]
+fn kill_mid_grid_then_resume_is_byte_identical_with_exact_counters() {
+    let ref_dir = temp_dir("kill-ref");
+    let reference = sweep(&ref_dir, &[]);
+    assert!(reference.status.success(), "reference run failed: {}", stderr(&reference));
+    let expected = stdout(&reference);
+    assert_eq!(expected.lines().count() as u64, 1 + CELLS * 2, "header + 2 DVFS rows per cell");
+
+    // The victim: per-cell delay widens the kill window to ~150 ms per
+    // cell, so the poll below reliably catches it mid-grid.
+    let dir = temp_dir("kill");
+    let mut child = vega(&dir)
+        .arg("sweep")
+        .args(GRID)
+        .env("VEGA_CELL_DELAY_MS", "150")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn victim");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while journal_records(&dir) < 2 && Instant::now() < deadline {
+        if child.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let _ = child.kill(); // SIGKILL on unix: no cleanup handler runs
+    let _ = child.wait();
+
+    let journaled = journal_records(&dir);
+    let persisted = sim_entries(&dir);
+    assert!(journaled >= 2, "child journaled only {journaled} cells before the kill");
+    assert!(
+        journaled <= persisted && persisted <= CELLS,
+        "a journal record implies a persisted entry (journaled {journaled}, persisted {persisted})"
+    );
+
+    // Resume: journaled cells replay (their recomputation is a disk
+    // hit), the rest run live and get journaled; the bytes match the
+    // uninterrupted run exactly.
+    let resumed = sweep(&dir, &["--resume", "--stats"]);
+    assert!(resumed.status.success(), "resume failed: {}", stderr(&resumed));
+    assert_eq!(stdout(&resumed), expected, "resumed output must be byte-identical");
+    let log = stderr(&resumed);
+    for needle in [
+        format!("sims: 0 hits / {CELLS} misses"),
+        format!(
+            "disk: {persisted} hits / {} misses / {} writes / 0 write-errors",
+            CELLS - persisted,
+            CELLS - persisted
+        ),
+        format!("journal: {journaled} prior / {} recorded / 0 write-errors", CELLS - journaled),
+    ] {
+        assert!(log.contains(&needle), "resume stats missing '{needle}':\n{log}");
+    }
+
+    // A second resume finds the whole grid journaled and on disk.
+    let again = sweep(&dir, &["--resume", "--stats"]);
+    assert!(again.status.success());
+    assert_eq!(stdout(&again), expected, "second resume must be byte-identical");
+    let log = stderr(&again);
+    for needle in [
+        format!("disk: {CELLS} hits / 0 misses / 0 writes / 0 write-errors"),
+        format!("journal: {CELLS} prior / 0 recorded / 0 write-errors"),
+    ] {
+        assert!(log.contains(&needle), "second-resume stats missing '{needle}':\n{log}");
+    }
+
+    let _ = fs::remove_dir_all(&ref_dir);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (a), adversarial half: a torn trailing record costs
+/// exactly its one cell (recomputed, re-journaled), and garbage
+/// *appended* to a valid journal costs nothing — both resumes render
+/// the exact bytes of the undamaged run.
+#[test]
+fn torn_tail_and_trailing_garbage_never_corrupt_a_resume() {
+    let dir = temp_dir("torn");
+    let full = sweep(&dir, &["--stats"]);
+    assert!(full.status.success(), "seed run failed: {}", stderr(&full));
+    let expected = stdout(&full);
+    assert!(stderr(&full).contains(&format!("journal: 0 prior / {CELLS} recorded")));
+
+    // Tear the last record the way SIGKILL mid-append does.
+    let path = journal_path(&dir);
+    let bytes = fs::read(&path).unwrap();
+    fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+    assert_eq!(journal_records(&dir), CELLS - 1, "the torn record reads as not-done");
+
+    let resumed = sweep(&dir, &["--resume", "--stats"]);
+    assert!(resumed.status.success());
+    assert_eq!(stdout(&resumed), expected, "torn-tail resume must be byte-identical");
+    let log = stderr(&resumed);
+    for needle in [
+        format!("journal: {} prior / 1 recorded / 0 write-errors", CELLS - 1),
+        format!("disk: {CELLS} hits / 0 misses / 0 writes"),
+    ] {
+        assert!(log.contains(&needle), "torn-tail stats missing '{needle}':\n{log}");
+    }
+
+    // The journal is whole again (the resume truncated the tear and
+    // re-appended the lost cell); garbage after it is ignored.
+    let mut bytes = fs::read(&path).unwrap();
+    bytes.extend_from_slice(&[0xFF; 13]);
+    fs::write(&path, &bytes).unwrap();
+    let resumed = sweep(&dir, &["--resume", "--stats"]);
+    assert!(resumed.status.success());
+    assert_eq!(stdout(&resumed), expected, "garbage-tail resume must be byte-identical");
+    assert!(
+        stderr(&resumed).contains(&format!("journal: {CELLS} prior / 0 recorded / 0 write-errors")),
+        "garbage tail must cost nothing:\n{}",
+        stderr(&resumed)
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Satellite (a): keep-going semantics. A grid whose cells end in
+/// error/timeout still renders every row, but the process exits 3 so CI
+/// cannot green a half-failed grid — and the failed cells are journaled,
+/// replaying their status rows verbatim on `--resume` (still exit 3).
+#[test]
+fn failed_cells_render_but_exit_3_and_replay_on_resume() {
+    let dir = temp_dir("exit3");
+    let out = sweep(&dir, &["--timeout-ms", "0"]);
+    assert_eq!(out.status.code(), Some(3), "failed cells must exit 3: {}", stderr(&out));
+    let text = stdout(&out);
+    assert_eq!(text.lines().count() as u64, 1 + CELLS, "one status row per timed-out cell");
+    assert!(text.contains("timeout after 0 ms"), "status rows carry the timeout:\n{text}");
+    assert!(
+        stderr(&out).contains(&format!("{CELLS} cell(s) ended in error/timeout")),
+        "stderr names the damage:\n{}",
+        stderr(&out)
+    );
+
+    let resumed = sweep(&dir, &["--resume", "--stats"]);
+    assert_eq!(resumed.status.code(), Some(3), "replayed failures still exit 3");
+    assert_eq!(stdout(&resumed), text, "replayed status rows must be byte-identical");
+    assert!(
+        stderr(&resumed).contains(&format!("journal: {CELLS} prior / 0 recorded")),
+        "failed cells replay from the journal:\n{}",
+        stderr(&resumed)
+    );
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (c): `VEGA_CACHE_DIR` pointing at a regular file (so
+/// neither the store directory nor the journal directory can exist)
+/// degrades to a completed in-memory run — byte-identical to a healthy
+/// run, warnings counted, never a panic. Works under any uid: opening
+/// a file as a directory fails even for root, where read-only
+/// permission bits do not.
+#[test]
+fn unusable_cache_dir_degrades_to_a_completed_in_memory_run() {
+    let ref_dir = temp_dir("degraded-ref");
+    let reference = sweep(&ref_dir, &[]);
+    assert!(reference.status.success());
+
+    let dir = temp_dir("degraded");
+    fs::create_dir_all(dir.parent().unwrap()).unwrap();
+    fs::write(&dir, b"a file where the cache dir should be").unwrap();
+    let out = sweep(&dir, &["--stats"]);
+    assert!(out.status.success(), "degraded run must complete: {}", stderr(&out));
+    assert_eq!(stdout(&out), stdout(&reference), "degraded run must be byte-identical");
+    let log = stderr(&out);
+    assert!(log.contains("disabled"), "store and journal warn once each:\n{log}");
+    for needle in ["disk: off", "journal: 0 prior / 0 recorded / 1 write-errors"] {
+        assert!(log.contains(needle), "degraded stats missing '{needle}':\n{log}");
+    }
+
+    let _ = fs::remove_dir_all(&ref_dir);
+    let _ = fs::remove_file(&dir);
+}
+
+/// Acceptance (b): two shards of the same grid render disjoint data-row
+/// sets whose union is the serial grid, and `--merge 2` over their
+/// journals (plus the shared store) reassembles the exact serial bytes.
+#[test]
+fn shards_partition_the_grid_and_merge_reassembles_serial_bytes() {
+    let ref_dir = temp_dir("shard-ref");
+    let reference = sweep(&ref_dir, &[]);
+    assert!(reference.status.success());
+    let expected = stdout(&reference);
+
+    let dir = temp_dir("shard");
+    let s1 = sweep(&dir, &["--shard", "1/2"]);
+    let s2 = sweep(&dir, &["--shard", "2/2"]);
+    assert!(s1.status.success() && s2.status.success());
+    let (r1, r2) = (data_rows(&stdout(&s1)), data_rows(&stdout(&s2)));
+    let all = data_rows(&expected);
+    assert!(r1.is_disjoint(&r2), "shard row sets must be disjoint");
+    assert_eq!(r1.len() + r2.len(), all.len(), "shards must cover the grid exactly");
+    assert_eq!(r1.union(&r2).cloned().collect::<HashSet<_>>(), all);
+
+    let merged = sweep(&dir, &["--merge", "2", "--stats"]);
+    assert!(merged.status.success(), "merge failed: {}", stderr(&merged));
+    assert_eq!(stdout(&merged), expected, "merge must reassemble the serial bytes");
+    let log = stderr(&merged);
+    for needle in [
+        format!("journal: {CELLS} prior / 0 recorded / 0 write-errors"),
+        format!("disk: {CELLS} hits / 0 misses / 0 writes"),
+    ] {
+        assert!(log.contains(&needle), "merge stats missing '{needle}':\n{log}");
+    }
+
+    // The parser rejects modes that contradict each other.
+    let bad = sweep(&dir, &["--merge", "2", "--resume"]);
+    assert_eq!(bad.status.code(), Some(2), "--merge with --resume is a usage error");
+
+    let _ = fs::remove_dir_all(&ref_dir);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// The fault grid resumes through the same machinery: a completed
+/// campaign grid replays entirely from its journal, with the `.flt`
+/// store tier serving every recomputation.
+#[test]
+fn faults_grid_resumes_from_its_journal() {
+    let dir = temp_dir("faults");
+    let args = [
+        "--kernel", "matmul-f32", "--cores", "8", "--seeds", "7,8", "--rates", "1e-5,2e-5",
+        "--tiers", "mram", "--sleep-s", "3600", "--format", "csv",
+    ];
+    let first = vega(&dir).arg("faults").args(args).output().expect("run vega faults");
+    assert!(first.status.success(), "faults run failed: {}", stderr(&first));
+
+    let resumed =
+        vega(&dir).arg("faults").args(args).args(["--resume", "--stats"]).output().unwrap();
+    assert!(resumed.status.success(), "faults resume failed: {}", stderr(&resumed));
+    assert_eq!(stdout(&resumed), stdout(&first), "resumed fault grid must be byte-identical");
+    let log = stderr(&resumed);
+    for needle in [
+        "journal: 4 prior / 0 recorded / 0 write-errors",
+        "disk(flt): 4 hits / 0 misses / 0 writes",
+    ] {
+        assert!(log.contains(needle), "faults resume stats missing '{needle}':\n{log}");
+    }
+
+    let _ = fs::remove_dir_all(&dir);
+}

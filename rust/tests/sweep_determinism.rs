@@ -8,7 +8,9 @@
 //! * (ISSUE 6) a panicking scenario in a work list yields one structured
 //!   `SimError` cell at any `--jobs` value, while every other cell
 //!   completes, matches a fault-free run, and the errored cell never
-//!   pollutes the cache.
+//!   pollutes the cache;
+//! * (ISSUE 7) sharded sessions render pairwise-disjoint row subsets
+//!   whose union is exactly the serial grid.
 
 use std::collections::HashSet;
 
@@ -16,7 +18,7 @@ use vega::bench;
 use vega::kernels::fp_matmul::FpWidth;
 use vega::kernels::int_matmul::IntWidth;
 use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
-use vega::sweep::{Scenario, SimArena, SweepEngine};
+use vega::sweep::{GridSession, Scenario, ShardSpec, SimArena, SweepEngine};
 
 /// (a) Byte-identical output for serial vs 8-way parallel engines, on the
 /// three report shapes the issue names: a figure with a V/f sweep, a
@@ -239,6 +241,46 @@ fn strict_run_scenarios_panics_with_cell_index() {
         Scenario::Nsaa { name: "BOGUS", w: FpWidth::F32 },
     ];
     let _ = SweepEngine::serial().run_scenarios(&list);
+}
+
+/// ISSUE 7: sharded rendering is a partition of the serial grid. Each
+/// shard's session renders a subset of the data rows (the cells its
+/// FNV-1a slice owns, every DVFS row of each), the shard row sets are
+/// pairwise disjoint, and their union is exactly the serial render —
+/// the `--jobs` byte-identity invariant extended across processes.
+#[test]
+fn sharded_renders_partition_the_serial_grid_exactly() {
+    let spec = GridSpec {
+        cores: (1..=9).collect(),
+        precisions: vec![Precision::Int8, Precision::Fp16],
+        dvfs_steps: 3,
+        format: GridFormat::Csv,
+    };
+    let serial = explore::render(&SweepEngine::new(1), &spec);
+    let all: HashSet<&str> = serial.lines().skip(1).collect();
+    assert_eq!(all.len(), spec.rows(), "one distinct data row per grid point");
+
+    let total = 3u32;
+    let mut union: HashSet<String> = HashSet::new();
+    let mut cells_owned = 0usize;
+    for index in 1..=total {
+        let session = GridSession::with_shard(ShardSpec { index, total });
+        let grid = explore::render_with(&SweepEngine::new(2), &spec, &session);
+        let rows: Vec<&str> = grid.text.lines().skip(1).collect();
+        assert_eq!(grid.failed, 0, "shard {index}/{total}: no cell may fail");
+        assert_eq!(
+            rows.len(),
+            (18 - grid.skipped) * spec.dvfs_steps,
+            "shard {index}/{total}: every owned cell renders all its DVFS rows"
+        );
+        cells_owned += 18 - grid.skipped;
+        for row in rows {
+            assert!(all.contains(row), "shard {index}/{total}: foreign row '{row}'");
+            assert!(union.insert(row.to_string()), "shard {index}/{total}: duplicate row '{row}'");
+        }
+    }
+    assert_eq!(cells_owned, 18, "the shards own each of the 18 cells exactly once");
+    assert_eq!(union.len(), all.len(), "the shard union is the serial grid");
 }
 
 /// The cached result is the simulation's result: spot-check one scenario

@@ -16,7 +16,12 @@
 # `vega faults` campaign grid across worker counts, assert the SECDED
 # invariants structurally (status ok everywhere, zero silent corruptions,
 # classification covering every upset word), round-trip the `.flt` store
-# tier, and run the panic-isolation regression tests by name; the clippy
+# tier, and run the panic-isolation regression tests by name; the
+# crash-safety smokes (ISSUE 7) resume a torn-journal grid
+# byte-identically, reassemble a --shard 1/2 + 2/2 pair via --merge into
+# the exact serial bytes, assert exit code 3 for grids with failed
+# cells, and drive the cache-degradation paths (unusable and read-only
+# store directories) to completed in-memory runs; the clippy
 # gate fails on any
 # non-allow-listed lint; and the key-stability gate runs the
 # golden-vector tests that pin the on-disk cache-key byte encoding (a
@@ -165,6 +170,96 @@ grep -q "disk(flt): 0 hits / 4 misses / 4 writes" target/ci/faults_cold.log \
 grep -q "disk(flt): 4 hits / 0 misses / 0 writes" target/ci/faults_warm.log \
     || { echo "FAIL: warm faults run did not hit the .flt store:"; cat target/ci/faults_warm.log; exit 1; }
 echo "warm process served every campaign outcome from the .flt store tier"
+
+echo "== resume smoke (torn journal tail, byte-identical --resume) =="
+# ISSUE 7 acceptance (a): complete the 4-cell grid, tear the journal's
+# trailing record the way SIGKILL mid-append does, and resume: the torn
+# cell reads as not-done (3 prior / 1 recorded), every recomputation is
+# a disk hit, and the bytes match the uninterrupted run exactly. (The
+# full kill-and-resume path — a real SIGKILLed child — runs in
+# tests/resume_kill.rs under `cargo test` below.)
+rm -rf target/ci/resume-cache
+export VEGA_CACHE_DIR=target/ci/resume-cache
+./target/release/vega sweep "${SWEEP_GRID[@]}" --stats > target/ci/resume_full.csv 2> target/ci/resume_full.log
+grep -q "journal: 0 prior / 4 recorded" target/ci/resume_full.log \
+    || { echo "FAIL: seed run did not journal its cells:"; cat target/ci/resume_full.log; exit 1; }
+truncate -s -7 target/ci/resume-cache/journals/*.jnl
+./target/release/vega sweep "${SWEEP_GRID[@]}" --resume --stats > target/ci/resume_resumed.csv 2> target/ci/resume_resumed.log
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
+diff target/ci/resume_full.csv target/ci/resume_resumed.csv
+grep -q "journal: 3 prior / 1 recorded" target/ci/resume_resumed.log \
+    || { echo "FAIL: torn tail did not cost exactly one record:"; cat target/ci/resume_resumed.log; exit 1; }
+grep -q "disk: 4 hits / 0 misses / 0 writes" target/ci/resume_resumed.log \
+    || { echo "FAIL: resume recomputed instead of hitting the store:"; cat target/ci/resume_resumed.log; exit 1; }
+echo "torn-tail resume is byte-identical with every cell served from disk"
+
+echo "== shard smoke (1/2 + 2/2 + --merge 2 vs serial) =="
+# ISSUE 7 acceptance (b): two shards over a shared store render disjoint
+# row sets covering the grid, and --merge reassembles the serial bytes.
+rm -rf target/ci/shard-cache
+export VEGA_CACHE_DIR=target/ci/shard-cache
+./target/release/vega sweep "${SWEEP_GRID[@]}" --shard 1/2 > target/ci/shard1.csv
+./target/release/vega sweep "${SWEEP_GRID[@]}" --shard 2/2 > target/ci/shard2.csv
+./target/release/vega sweep "${SWEEP_GRID[@]}" --merge 2 --stats > target/ci/shard_merged.csv 2> target/ci/shard_merged.log
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
+diff target/ci/shard_merged.csv target/ci/sweep_serial.csv
+{ tail -n +2 target/ci/shard1.csv; tail -n +2 target/ci/shard2.csv; } | sort > target/ci/shard_union.csv
+tail -n +2 target/ci/sweep_serial.csv | sort > target/ci/shard_expected.csv
+diff target/ci/shard_union.csv target/ci/shard_expected.csv
+grep -q "journal: 4 prior / 0 recorded" target/ci/shard_merged.log \
+    || { echo "FAIL: merge did not replay the shard journals:"; cat target/ci/shard_merged.log; exit 1; }
+echo "shard union equals the serial grid and --merge reassembles its bytes"
+
+echo "== exit-code smoke (failed cells exit 3, grid still renders) =="
+# ISSUE 7 satellite (a): keep-going semantics. --timeout-ms 0 times out
+# every cell deterministically; the grid renders a status row per cell
+# and the process exits 3 so CI cannot green a half-failed grid.
+rm -rf target/ci/exit3-cache
+rc=0
+VEGA_CACHE_DIR=target/ci/exit3-cache ./target/release/vega sweep "${SWEEP_GRID[@]}" --timeout-ms 0 \
+    > target/ci/exit3.csv 2> target/ci/exit3.log || rc=$?
+[ "$rc" -eq 3 ] || { echo "FAIL: expected exit 3, got $rc:"; cat target/ci/exit3.log; exit 1; }
+grep -q "timeout after 0 ms" target/ci/exit3.csv \
+    || { echo "FAIL: timed-out cells did not render status rows:"; cat target/ci/exit3.csv; exit 1; }
+grep -q "cell(s) ended in error/timeout" target/ci/exit3.log \
+    || { echo "FAIL: stderr did not name the damage:"; cat target/ci/exit3.log; exit 1; }
+echo "timed-out grid rendered every status row and exited 3"
+
+echo "== cache-degradation smoke (VEGA_CACHE_DIR is a regular file) =="
+# ISSUE 7 acceptance (c): an unusable cache dir degrades the store and
+# the journal to counted warnings; the run completes in memory with the
+# exact bytes of a cache-off run. A regular file fails under any uid
+# (read-only permission bits would be bypassed by root CI containers).
+DEGRADED_FILE=$(mktemp)
+if VEGA_CACHE_DIR="$DEGRADED_FILE" ./target/release/vega sweep "${SWEEP_GRID[@]}" --jobs 2 --stats \
+    > target/ci/degraded.csv 2> target/ci/degraded.log; then
+    diff target/ci/degraded.csv target/ci/sweep_serial.csv
+    grep -q "disabled" target/ci/degraded.log \
+        || { echo "FAIL: degraded run did not warn:"; cat target/ci/degraded.log; exit 1; }
+else
+    echo "FAIL: degraded run did not complete:"; cat target/ci/degraded.log; exit 1
+fi
+rm -f "$DEGRADED_FILE"
+echo "unusable cache dir degraded to a completed, byte-identical in-memory run"
+
+# Read-only store directory variant: skipped when the uid can write
+# through the permission bits anyway (root containers).
+mkdir -p target/ci/readonly-cache && chmod a-w target/ci/readonly-cache
+if touch target/ci/readonly-cache/probe 2>/dev/null; then
+    rm -f target/ci/readonly-cache/probe
+    echo "read-only-store smoke skipped (uid bypasses permission bits)"
+else
+    echo "== write-error smoke (read-only store directory) =="
+    VEGA_CACHE_DIR=target/ci/readonly-cache ./target/release/vega sweep "${FP8_GRID[@]}" --stats \
+        > target/ci/readonly.csv 2> target/ci/readonly.log
+    diff target/ci/readonly.csv target/ci/fp8_serial.csv
+    grep -q "disk: 0 hits / 2 misses / 0 writes / 2 write-errors" target/ci/readonly.log \
+        || { echo "FAIL: failed writes not counted:"; cat target/ci/readonly.log; exit 1; }
+    grep -q "disk cache write failed" target/ci/readonly.log \
+        || { echo "FAIL: failed writes did not warn:"; cat target/ci/readonly.log; exit 1; }
+    echo "read-only store degraded to counted write-errors with correct output"
+fi
+chmod u+w target/ci/readonly-cache
 
 echo "== fault-isolation gate (panicking cell stays one SimError) =="
 # Run the isolation regressions first and by name (like the key-stability
