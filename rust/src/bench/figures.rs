@@ -141,13 +141,15 @@ pub fn bootmodel() -> String {
     for wph in [1.0f64, 10.0, 100.0, 1_000.0, 10_000.0, 40_000.0] {
         let period = 3600.0 / wph;
         let p_ret =
-            power::Pmu::duty_cycled_power_w(active, sleep_ret, (10e-3_f64).min(period), period);
+            power::Pmu::duty_cycled_power_w(active, sleep_ret, (10e-3_f64).min(period), period)
+                .expect("active time clamped to the period");
         let p_mram = power::Pmu::duty_cycled_power_w(
             active,
             DeepSleep,
             (10e-3 + restore_s).min(period),
             period,
-        );
+        )
+        .expect("active time clamped to the period");
         t.row(&[
             format!("{wph:.0}"),
             si_power(p_ret),

@@ -14,6 +14,12 @@ pub use spi::{SpiMaster, SpiMode, SpiOp, SpiSensor};
 /// Area of the CWU macro (Table II / IV): 0.147 mm².
 pub const CWU_AREA_MM2: f64 = 0.147;
 
+/// The CWU clock of the cognitive sleep mode (Table I's 32 kHz
+/// configuration — the one behind the 1.7 µW §III figure). Shared by
+/// [`crate::power::PowerMode::CognitiveSleep`] and the lifecycle
+/// engine's classification-latency model so the two can never drift.
+pub const SLEEP_CLK_HZ: f64 = 32_000.0;
+
 /// The assembled always-on pipeline.
 pub struct Cwu {
     pub spi: Option<SpiMaster>,

@@ -58,7 +58,8 @@ pub struct FaultsCmd {
 }
 
 /// Resolve one `--kernel` token to its canonical label and scenario.
-fn parse_kernel(tok: &str, cores: usize) -> Result<(&'static str, Scenario), String> {
+/// `pub(crate)`: the lifecycle CLI accepts the same kernel tokens.
+pub(crate) fn parse_kernel(tok: &str, cores: usize) -> Result<(&'static str, Scenario), String> {
     let t = tok.trim();
     match t.to_ascii_lowercase().as_str() {
         "matmul-i8" => return Ok(("matmul-i8", Scenario::IntMatmul { w: IntWidth::I8, cores })),

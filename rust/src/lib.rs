@@ -34,6 +34,10 @@
 //!   the real SECDED/tier models, with per-tier corrected / detected /
 //!   silent classification and fault-free-oracle divergence checks
 //!   (`vega faults`).
+//! * [`lifecycle`] — the trace-driven device-lifecycle engine: seeded
+//!   sensor-event traces replayed through Fig. 7's sleep↔wake state
+//!   machine, reporting battery lifetime, false-wake rate and per-state
+//!   energy (`vega lifecycle`).
 //! * [`sweep`] — the sweep execution engine: memoized, parallel scenario
 //!   fan-out behind the reproduction suite (`vega repro --jobs N`), the
 //!   persistent on-disk simulation store shared across processes
@@ -65,6 +69,7 @@ pub mod hwce;
 pub mod isa;
 pub mod iss;
 pub mod kernels;
+pub mod lifecycle;
 pub mod mem;
 pub mod power;
 pub mod runtime;

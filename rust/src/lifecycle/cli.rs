@@ -1,0 +1,650 @@
+//! The `vega lifecycle` subcommand: sweep a deployment grid — event
+//! rate × duty policy × sleep mode × boot path — over one seeded trace
+//! and kernel, and render battery-lifetime / false-wake / per-state
+//! energy figures as CSV, Markdown or JSON.
+//!
+//! Grid cells fan out across the engine's worker pool, memoize through
+//! the persistent `.lfc` store tier, and render in deterministic grid
+//! order (rate-major, then duty, sleep, boot) — byte-identical for any
+//! `--jobs`, like every other renderer in the crate. The full ISSUE 7
+//! surface rides along: `--resume` replays the grid journal, `--shard
+//! I/N` slices it, `--merge N` reassembles, and a panicking cell
+//! renders as its own `status` column error while the rest completes.
+
+use crate::sweep::explore::{
+    parse_merge, parse_ms, parse_retries, sanitize_cell, GridFormat, RenderedGrid,
+};
+use crate::sweep::journal::{self, GridSession, ShardSpec};
+use crate::sweep::{default_jobs, CellPolicy, Scenario, SweepEngine};
+
+use super::sim::{BootKind, DutyPolicy, LifecycleReport, LifecycleScenario, SleepKind};
+use super::trace::TraceSpec;
+
+/// Cap on λ = rate × duration: the trace is expanded in memory, one
+/// event at a time, and 5 M events is already a ~decade at 1 Hz.
+const MAX_EXPECTED_EVENTS: f64 = 5e6;
+
+/// Largest restorable image: the full 1600 kB of L2.
+const MAX_IMAGE_KB: u64 = 1600;
+
+/// A parsed `vega lifecycle` invocation.
+#[derive(Debug, Clone)]
+pub struct LifecycleCmd {
+    /// The true-event workload (canonical CLI token, for report labels).
+    pub kernel: &'static str,
+    /// The scenario every true wake-up of the grid runs.
+    pub scenario: Scenario,
+    /// Active cores (matmul kernels only; NSAA kernels pin 8).
+    pub cores: usize,
+    /// Trace seed (`--seed`; one trace per rate, shared across policies).
+    pub seed: u64,
+    /// Simulated deployment length in seconds (`--duration-s`).
+    pub duration_s: f64,
+    /// True-positive fraction of the trace (`--true-fraction`).
+    pub true_fraction: f64,
+    /// Event-rate ladder in events/s (`--rates`, grid-major axis).
+    pub rates: Vec<f64>,
+    /// Duty policies (`--duty eager,linger`).
+    pub duties: Vec<DutyPolicy>,
+    /// Sleep modes (`--sleep cognitive,retentive`).
+    pub sleeps: Vec<SleepKind>,
+    /// Boot paths (`--boot l2,mram`, grid-minor axis).
+    pub boots: Vec<BootKind>,
+    /// Application image in kB (`--image-kb`): restored from MRAM on
+    /// the mram path, held retentive on the l2 path.
+    pub image_kb: u64,
+    /// Battery budget for the lifetime column (`--battery-mah`).
+    pub battery_mah: f64,
+    /// MRAM retention-upset rate for the optional fault campaign
+    /// (`--upset-rate`, upsets per Mbit per hour of sleep; 0 = off).
+    pub upset_rate: f64,
+    /// Output renderer (`--format csv|md|json`).
+    pub format: GridFormat,
+    /// Worker count (`--jobs`, default `VEGA_JOBS`/all cores).
+    pub jobs: usize,
+    /// Print memo/store counters to stderr after rendering (`--stats`).
+    pub stats: bool,
+    /// Replay this grid's checkpoint journal (`--resume`).
+    pub resume: bool,
+    /// Own only one deterministic slice of the grid (`--shard I/N`).
+    pub shard: Option<ShardSpec>,
+    /// Reassemble N shard journals (`--merge N`).
+    pub merge: Option<u32>,
+    /// Per-cell retry/timeout policy (`--retries`, `--backoff-ms`,
+    /// `--timeout-ms`).
+    pub policy: CellPolicy,
+}
+
+fn parse_rates(s: &str) -> Result<Vec<f64>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        let r = tok
+            .parse::<f64>()
+            .ok()
+            .filter(|r| r.is_finite() && *r >= 0.0)
+            .ok_or_else(|| format!("bad rate '{tok}' (must be finite events/s, >= 0)"))?;
+        out.push(r);
+    }
+    if out.is_empty() {
+        return Err("--rates selected no rates".into());
+    }
+    Ok(out)
+}
+
+fn parse_duties(s: &str) -> Result<Vec<DutyPolicy>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(match tok.to_ascii_lowercase().as_str() {
+            "eager" => DutyPolicy::Eager,
+            "linger" => DutyPolicy::Linger,
+            other => return Err(format!("unknown duty policy '{other}' (eager|linger)")),
+        });
+    }
+    if out.is_empty() {
+        return Err("--duty selected no policies".into());
+    }
+    Ok(out)
+}
+
+fn parse_sleeps(s: &str) -> Result<Vec<SleepKind>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(match tok.to_ascii_lowercase().as_str() {
+            "cognitive" => SleepKind::Cognitive,
+            "retentive" => SleepKind::Retentive,
+            other => return Err(format!("unknown sleep mode '{other}' (cognitive|retentive)")),
+        });
+    }
+    if out.is_empty() {
+        return Err("--sleep selected no modes".into());
+    }
+    Ok(out)
+}
+
+fn parse_boots(s: &str) -> Result<Vec<BootKind>, String> {
+    let mut out = Vec::new();
+    for tok in s.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+        out.push(match tok.to_ascii_lowercase().as_str() {
+            "l2" => BootKind::WarmL2,
+            "mram" => BootKind::MramRestore,
+            other => return Err(format!("unknown boot path '{other}' (l2|mram)")),
+        });
+    }
+    if out.is_empty() {
+        return Err("--boot selected no paths".into());
+    }
+    Ok(out)
+}
+
+impl LifecycleCmd {
+    /// Parse the arguments following `vega lifecycle`. Unknown flags and
+    /// malformed values are errors.
+    pub fn parse(args: &[String]) -> Result<LifecycleCmd, String> {
+        let mut kernel_tok = "matmul-i8".to_string();
+        let mut cores = 8usize;
+        let mut seed = 1u64;
+        let mut duration_s = 86_400.0f64;
+        let mut true_fraction = 0.5f64;
+        let mut rates = vec![0.01, 0.1, 1.0];
+        let mut duties = vec![DutyPolicy::Eager];
+        let mut sleeps = vec![SleepKind::Cognitive, SleepKind::Retentive];
+        let mut boots = vec![BootKind::WarmL2, BootKind::MramRestore];
+        let mut image_kb = 256u64;
+        let mut battery_mah = 225.0f64;
+        let mut upset_rate = 0.0f64;
+        let mut format = GridFormat::Csv;
+        let mut jobs = default_jobs();
+        let mut stats = false;
+        let mut resume = false;
+        let mut shard = None;
+        let mut merge = None;
+        let mut policy = CellPolicy::default();
+        let mut it = args.iter();
+        while let Some(a) = it.next() {
+            let mut value = |flag: &str| {
+                it.next().map(String::as_str).ok_or_else(|| format!("{flag} needs a value"))
+            };
+            match a.as_str() {
+                "--kernel" => kernel_tok = value("--kernel")?.to_string(),
+                "--cores" => {
+                    let v = value("--cores")?;
+                    cores = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| (1..=crate::cluster::N_CORES).contains(&n))
+                        .ok_or_else(|| {
+                            format!("--cores must be 1..={}, got '{v}'", crate::cluster::N_CORES)
+                        })?;
+                }
+                "--seed" => {
+                    let v = value("--seed")?;
+                    seed = v.parse::<u64>().map_err(|_| format!("bad seed '{v}'"))?;
+                }
+                "--duration-s" => {
+                    let v = value("--duration-s")?;
+                    duration_s = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|d| d.is_finite() && *d > 0.0 && *d <= 1e8)
+                        .ok_or_else(|| {
+                            format!("--duration-s must be in (0, 1e8] seconds, got '{v}'")
+                        })?;
+                }
+                "--true-fraction" => {
+                    let v = value("--true-fraction")?;
+                    true_fraction = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|f| (0.0..=1.0).contains(f))
+                        .ok_or_else(|| format!("--true-fraction must be in [0, 1], got '{v}'"))?;
+                }
+                "--rates" => rates = parse_rates(value("--rates")?)?,
+                "--duty" => duties = parse_duties(value("--duty")?)?,
+                "--sleep" => sleeps = parse_sleeps(value("--sleep")?)?,
+                "--boot" => boots = parse_boots(value("--boot")?)?,
+                "--image-kb" => {
+                    let v = value("--image-kb")?;
+                    image_kb = v
+                        .parse::<u64>()
+                        .ok()
+                        .filter(|&k| k <= MAX_IMAGE_KB)
+                        .ok_or_else(|| {
+                            format!("--image-kb must be 0..={MAX_IMAGE_KB}, got '{v}'")
+                        })?;
+                }
+                "--battery-mah" => {
+                    let v = value("--battery-mah")?;
+                    battery_mah = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|b| b.is_finite() && *b > 0.0)
+                        .ok_or_else(|| format!("--battery-mah must be positive, got '{v}'"))?;
+                }
+                "--upset-rate" => {
+                    let v = value("--upset-rate")?;
+                    upset_rate = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|r| r.is_finite() && *r >= 0.0)
+                        .ok_or_else(|| format!("--upset-rate must be >= 0, got '{v}'"))?;
+                }
+                "--format" => format = GridFormat::parse(value("--format")?)?,
+                "--jobs" => {
+                    let v = value("--jobs")?;
+                    jobs = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&n| n > 0)
+                        .ok_or_else(|| format!("--jobs must be a positive integer, got '{v}'"))?;
+                }
+                "--stats" => stats = true,
+                "--resume" => resume = true,
+                "--shard" => shard = Some(ShardSpec::parse(value("--shard")?)?),
+                "--merge" => merge = Some(parse_merge(value("--merge")?)?),
+                "--retries" => policy.retries = parse_retries(value("--retries")?)?,
+                "--backoff-ms" => {
+                    policy.backoff_cap_ms = parse_ms("--backoff-ms", value("--backoff-ms")?)?
+                }
+                "--timeout-ms" => {
+                    policy.timeout_ms = Some(parse_ms("--timeout-ms", value("--timeout-ms")?)?)
+                }
+                other => return Err(format!("unknown flag '{other}'")),
+            }
+        }
+        if merge.is_some() && (shard.is_some() || resume) {
+            return Err("--merge reassembles existing shard journals; it conflicts with --shard and --resume".into());
+        }
+        for &r in &rates {
+            if r * duration_s > MAX_EXPECTED_EVENTS {
+                return Err(format!(
+                    "rate {r} events/s over {duration_s} s expands to > {MAX_EXPECTED_EVENTS:e} \
+                     events; shorten --duration-s or lower --rates"
+                ));
+            }
+        }
+        let (kernel, scenario) = crate::faults::cli::parse_kernel(&kernel_tok, cores)?;
+        Ok(LifecycleCmd {
+            kernel,
+            scenario,
+            cores,
+            seed,
+            duration_s,
+            true_fraction,
+            rates,
+            duties,
+            sleeps,
+            boots,
+            image_kb,
+            battery_mah,
+            upset_rate,
+            format,
+            jobs,
+            stats,
+            resume,
+            shard,
+            merge,
+            policy,
+        })
+    }
+
+    /// The grid's cells in render order: rate-major, then duty, sleep,
+    /// boot. Every cell of one rate replays the identical trace — the
+    /// policies are compared against the same stimulus.
+    pub fn cells(&self) -> Vec<LifecycleScenario> {
+        let mut v = Vec::with_capacity(
+            self.rates.len() * self.duties.len() * self.sleeps.len() * self.boots.len(),
+        );
+        for &rate_hz in &self.rates {
+            for &duty in &self.duties {
+                for &sleep in &self.sleeps {
+                    for &boot in &self.boots {
+                        v.push(LifecycleScenario {
+                            scenario: self.scenario,
+                            trace: TraceSpec {
+                                seed: self.seed,
+                                duration_s: self.duration_s,
+                                rate_hz,
+                                true_fraction: self.true_fraction,
+                            },
+                            sleep,
+                            boot,
+                            duty,
+                            image_bytes: self.image_kb * 1024,
+                            battery_mah: self.battery_mah,
+                            upset_rate: self.upset_rate,
+                        });
+                    }
+                }
+            }
+        }
+        v
+    }
+}
+
+const COLUMNS: [&str; 24] = [
+    "kernel",
+    "cores",
+    "seed",
+    "rate",
+    "sleep",
+    "boot",
+    "duty",
+    "events",
+    "true_wakes",
+    "false_wakes",
+    "absorbed",
+    "boots",
+    "mram_restores",
+    "sleep_s",
+    "classify_s",
+    "active_s",
+    "avg_power_uw",
+    "energy_per_event_uj",
+    "false_wake_rate",
+    "battery_hours",
+    "cwu_accuracy",
+    "mram_silent",
+    "diverged",
+    "status",
+];
+
+/// One rendered grid row: the cell's coordinates plus either its report
+/// or the cell's structured error.
+struct Row<'a> {
+    cmd: &'a LifecycleCmd,
+    lc: LifecycleScenario,
+    cell: Result<LifecycleReport, String>,
+}
+
+impl Row<'_> {
+    fn cells(&self) -> [String; 24] {
+        let mut out: [String; 24] = Default::default();
+        out[0] = self.cmd.kernel.to_string();
+        out[1] = self.cmd.cores.to_string();
+        out[2] = self.cmd.seed.to_string();
+        out[3] = format!("{:e}", self.lc.trace.rate_hz);
+        out[4] = self.lc.sleep.label().to_string();
+        out[5] = self.lc.boot.label().to_string();
+        out[6] = self.lc.duty.label().to_string();
+        match &self.cell {
+            Ok(r) => {
+                for (i, v) in [
+                    r.events,
+                    r.true_wakes,
+                    r.false_wakes,
+                    r.absorbed_events,
+                    r.boots,
+                    r.mram_restores,
+                ]
+                .into_iter()
+                .enumerate()
+                {
+                    out[7 + i] = v.to_string();
+                }
+                out[13] = format!("{:.3}", r.sleep_s);
+                out[14] = format!("{:.3}", r.classify_s);
+                out[15] = format!("{:.6}", r.wake_s + r.triage_s + r.infer_s);
+                out[16] = format!("{:.3}", r.avg_power_w * 1e6);
+                out[17] = format!("{:.3}", r.energy_per_event_j * 1e6);
+                out[18] = format!("{:.4}", r.false_wake_rate);
+                out[19] = format!("{:.1}", r.battery_hours);
+                out[20] = format!("{:.3}", r.cwu_accuracy);
+                out[21] = r.mram_silent.to_string();
+                out[22] = if r.diverged { "1" } else { "0" }.to_string();
+                out[23] = "ok".to_string();
+            }
+            // Errored cell: coordinates + status only, numerics blank —
+            // unmistakable for an all-asleep row.
+            Err(msg) => out[23] = sanitize_cell(msg),
+        }
+        out
+    }
+}
+
+/// The journal identity of a lifecycle grid: kind, the parameters that
+/// shape the rendered bytes, and each cell's versioned key in grid
+/// order. The cell keys embed [`super::LIFECYCLE_MODEL_VERSION`] plus
+/// every deployment axis, so a model bump orphans old journals along
+/// with old `.lfc` entries.
+pub fn grid_key(cmd: &LifecycleCmd) -> u64 {
+    let params = [
+        format!("kernel={}", cmd.kernel),
+        format!("cores={}", cmd.cores),
+        format!("format={}", cmd.format.name()),
+    ];
+    let params: Vec<&str> = params.iter().map(String::as_str).collect();
+    let ids: Vec<String> = cmd.cells().iter().map(LifecycleScenario::key).collect();
+    journal::grid_key("lifecycle", &params, &ids)
+}
+
+/// Render `cmd`'s grid through `eng`. The returned string ends in
+/// exactly one newline and is byte-identical for any `--jobs`.
+pub fn render(eng: &SweepEngine, cmd: &LifecycleCmd) -> String {
+    render_with(eng, cmd, &GridSession::off()).text
+}
+
+/// As [`render`], but through a [`GridSession`]: journaled prior cells
+/// replay, shard-unowned cells emit no rows, and the returned
+/// [`RenderedGrid`] carries the failed/skipped counts the CLI's exit
+/// code needs.
+pub fn render_with(eng: &SweepEngine, cmd: &LifecycleCmd, session: &GridSession) -> RenderedGrid {
+    let grid = cmd.cells();
+    let cells = eng.run_lifecycles_with(&grid, session);
+    let mut failed = 0;
+    let mut skipped = 0;
+    let rows: Vec<Row> = grid
+        .iter()
+        .zip(cells)
+        .filter_map(|(lc, cell)| match cell {
+            None => {
+                skipped += 1;
+                None
+            }
+            Some(cell) => {
+                if cell.is_err() {
+                    failed += 1;
+                }
+                Some(Row { cmd, lc: *lc, cell: cell.map_err(|e| e.message) })
+            }
+        })
+        .collect();
+    let text = match cmd.format {
+        GridFormat::Csv => render_csv(&rows),
+        GridFormat::Markdown => render_md(&rows),
+        GridFormat::Json => render_json(cmd, &rows),
+    };
+    RenderedGrid { text, failed, skipped }
+}
+
+fn render_csv(rows: &[Row]) -> String {
+    let mut out = COLUMNS.join(",");
+    out.push('\n');
+    for r in rows {
+        out.push_str(&r.cells().join(","));
+        out.push('\n');
+    }
+    out
+}
+
+fn render_md(rows: &[Row]) -> String {
+    let mut out = format!("| {} |\n", COLUMNS.join(" | "));
+    out.push_str(&format!("|{}\n", "---:|".repeat(COLUMNS.len())));
+    for r in rows {
+        out.push_str(&format!("| {} |\n", r.cells().join(" | ")));
+    }
+    out
+}
+
+fn render_json(cmd: &LifecycleCmd, rows: &[Row]) -> String {
+    let rates: Vec<String> = cmd.rates.iter().map(|r| format!("{r:e}")).collect();
+    let mut out = format!(
+        "{{\n  \"grid\": {{\"kernel\": \"{}\", \"cores\": {}, \"seed\": {}, \
+         \"duration_s\": {:.1}, \"rates\": [{}]}},\n  \"rows\": [\n",
+        cmd.kernel,
+        cmd.cores,
+        cmd.seed,
+        cmd.duration_s,
+        rates.join(", ")
+    );
+    for (i, r) in rows.iter().enumerate() {
+        let cells = r.cells();
+        out.push_str(&format!(
+            "    {{\"rate\": {}, \"sleep\": \"{}\", \"boot\": \"{}\", \"duty\": \"{}\", ",
+            cells[3], cells[4], cells[5], cells[6]
+        ));
+        match &r.cell {
+            Ok(r) => {
+                for (name, cell) in COLUMNS.iter().zip(cells.iter()).skip(7).take(14) {
+                    out.push_str(&format!("\"{name}\": {cell}, "));
+                }
+                out.push_str(&format!(
+                    "\"mram_silent\": {}, \"diverged\": {}, \"status\": \"ok\"}}",
+                    r.mram_silent,
+                    if r.diverged { "true" } else { "false" }
+                ));
+            }
+            Err(_) => out.push_str(&format!("\"status\": \"{}\"}}", cells[23])),
+        }
+        out.push_str(if i + 1 == rows.len() { "\n" } else { ",\n" });
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::fp_matmul::FpWidth;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_round_trips_the_acceptance_invocation() {
+        let cmd = LifecycleCmd::parse(&argv(&[
+            "--kernel",
+            "matmul-f32",
+            "--cores",
+            "8",
+            "--seed",
+            "7",
+            "--duration-s",
+            "86400",
+            "--true-fraction",
+            "0.3",
+            "--rates",
+            "0.01,0.1",
+            "--duty",
+            "eager,linger",
+            "--sleep",
+            "cognitive,retentive",
+            "--boot",
+            "l2,mram",
+            "--image-kb",
+            "512",
+            "--battery-mah",
+            "100",
+            "--format",
+            "csv",
+        ]))
+        .unwrap();
+        assert_eq!(cmd.kernel, "matmul-f32");
+        assert_eq!(cmd.scenario, Scenario::FpMatmul { w: FpWidth::F32, cores: 8 });
+        assert_eq!(cmd.rates, vec![0.01, 0.1]);
+        assert_eq!(cmd.image_kb, 512);
+        assert_eq!(cmd.cells().len(), 16, "2 rates x 2 duties x 2 sleeps x 2 boots");
+        // Rate-major order; boot is the minor axis.
+        let cells = cmd.cells();
+        assert_eq!(cells[0].trace.rate_hz, 0.01);
+        assert_eq!(cells[0].boot, BootKind::WarmL2);
+        assert_eq!(cells[1].boot, BootKind::MramRestore);
+        assert_eq!(cells[8].trace.rate_hz, 0.1);
+        assert!(LifecycleCmd::parse(&argv(&["--kernel", "bogus"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--duration-s", "0"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--duration-s", "nan"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--true-fraction", "1.5"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--rates", "-1"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--duty", "lazy"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--sleep", "rem"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--boot", "cold"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--image-kb", "2048"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--cores", "10"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--frobnicate"])).is_err());
+        // λ guard: 10 events/s for 1e7 s would expand 1e8 events.
+        assert!(LifecycleCmd::parse(&argv(&["--duration-s", "1e7", "--rates", "10"])).is_err());
+    }
+
+    #[test]
+    fn csv_grid_renders_and_balances_wake_counts() {
+        let cmd = LifecycleCmd::parse(&argv(&[
+            "--kernel",
+            "matmul-i8",
+            "--cores",
+            "2",
+            "--seed",
+            "3",
+            "--duration-s",
+            "600",
+            "--rates",
+            "0.05",
+            "--sleep",
+            "retentive",
+            "--boot",
+            "l2,mram",
+        ]))
+        .unwrap();
+        let eng = SweepEngine::serial();
+        let out = render(&eng, &cmd);
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 1 + 2);
+        assert_eq!(lines[0], COLUMNS.join(","));
+        for line in &lines[1..] {
+            assert!(line.starts_with("matmul-i8,2,3,5e-2,retentive,"));
+            assert!(line.ends_with(",ok"));
+            assert_eq!(line.split(',').count(), COLUMNS.len());
+            assert!(line.split(',').all(|c| !c.is_empty()));
+            // The CI invariant, asserted at the source: true + false == events.
+            let f: Vec<&str> = line.split(',').collect();
+            let events: u64 = f[7].parse().unwrap();
+            let tw: u64 = f[8].parse().unwrap();
+            let fw: u64 = f[9].parse().unwrap();
+            assert_eq!(tw + fw, events);
+        }
+    }
+
+    #[test]
+    fn parse_handles_resume_shard_merge_and_policy() {
+        let cmd = LifecycleCmd::parse(&argv(&["--resume", "--shard", "1/2", "--timeout-ms", "0"]))
+            .unwrap();
+        assert!(cmd.resume);
+        assert_eq!(cmd.shard, Some(ShardSpec { index: 1, total: 2 }));
+        assert_eq!(cmd.policy.timeout_ms, Some(0));
+        assert!(LifecycleCmd::parse(&argv(&["--merge", "2", "--resume"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--merge", "2", "--shard", "0/2"])).is_err());
+        assert!(LifecycleCmd::parse(&argv(&["--shard", "0/2"])).is_err());
+    }
+
+    #[test]
+    fn lifecycle_grid_key_tracks_every_axis() {
+        let base = argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600"]);
+        let k = grid_key(&LifecycleCmd::parse(&base).unwrap());
+        assert_eq!(k, grid_key(&LifecycleCmd::parse(&base).unwrap()), "deterministic");
+        for delta in [
+            argv(&["--kernel", "matmul-i16", "--rates", "0.1", "--duration-s", "600"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.2", "--duration-s", "600"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "601"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--seed", "2"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--duty", "linger"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--sleep", "cognitive"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--boot", "l2"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--image-kb", "128"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--battery-mah", "100"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--upset-rate", "1e-4"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--format", "md"]),
+            argv(&["--kernel", "matmul-i8", "--rates", "0.1", "--duration-s", "600", "--true-fraction", "0.4"]),
+        ] {
+            assert_ne!(k, grid_key(&LifecycleCmd::parse(&delta).unwrap()), "{delta:?}");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! The device-lifecycle engine: Fig. 7's sleep↔wake duty cycle driven
+//! by a seeded sensor-event trace, end to end (§II-A/§II-B/§III).
+//!
+//! The paper's headline IoT claim is not a kernel number — it is a
+//! *deployment* number: a 1.7 µW cognitive sleep mode whose CWU absorbs
+//! false sensor events autonomously, MRAM-retentive state so wake-up
+//! restores instead of reboots, and a cluster that bursts through the
+//! real inference before the SoC drops back to sleep. This module
+//! closes that loop over simulated days:
+//!
+//! * [`trace`] — seeded, replayable sensor-event traces
+//!   ([`TraceSpec`] → time-ordered [`SensorEvent`] list).
+//! * [`sim`] — the state machine itself ([`run_lifecycle`]): sleep →
+//!   CWU classify → false-wake absorb / true-wake [`crate::power::Pmu`]
+//!   boot → triage → cluster inference → sleep, accumulating per-state
+//!   time and energy into a [`LifecycleReport`] (battery lifetime,
+//!   false-wake rate, energy per event), with an optional MRAM
+//!   retention-upset campaign scaled by the actual sleep time.
+//! * [`cli`] — the `vega lifecycle` grid renderer (rate × duty × sleep
+//!   × boot), with the full `--jobs`/`--resume`/`--shard`/`--merge`
+//!   crash-safety surface and the persistent `.lfc` store tier behind
+//!   it.
+//!
+//! Everything is a pure function of the descriptors: one
+//! [`LifecycleScenario`] yields one byte-exact [`LifecycleReport`] at
+//! any parallelism, which is what the determinism suite
+//! (`tests/lifecycle.rs`) pins.
+
+pub mod cli;
+pub mod sim;
+pub mod trace;
+
+pub use cli::{grid_key, render, render_with, LifecycleCmd};
+pub use sim::{
+    decode_report, encode_report, run_lifecycle, BootKind, DutyPolicy, LifecycleReport,
+    LifecycleScenario, SleepKind, BATTERY_V, LIFECYCLE_MODEL_VERSION, LINGER_S, TRIAGE_CYCLES,
+};
+pub use trace::{SensorEvent, TraceSpec};

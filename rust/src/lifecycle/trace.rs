@@ -1,0 +1,153 @@
+//! Seeded sensor-event traces: the stimulus side of the lifecycle
+//! engine.
+//!
+//! A [`TraceSpec`] describes a trace as *rates* — a mean event rate over
+//! a duration, and a true-positive fraction — and expands it, via the
+//! repo's own xorshift [`Rng`], into an exact time-ordered
+//! [`SensorEvent`] list. The discipline is [`crate::faults::FaultPlan`]'s
+//! flip-list expansion verbatim: the expected count λ = rate × duration
+//! rounds stochastically (⌊λ⌋ plus one Bernoulli draw on the fraction),
+//! every event draws its arrival time and truth label from the same
+//! salted stream, and the list sorts by arrival time — so the whole
+//! trace is replayable from the seed alone, on any machine, at any
+//! `--jobs`, and its parameters serialize bit-exactly into the
+//! lifecycle cache key.
+
+use crate::common::Rng;
+
+/// Salt XORed into the trace seed so the event stream is independent of
+/// any fault-plan stream derived from the same campaign seed
+/// (`b"EVNT"` as a little-endian u32, the `faults::plan` convention).
+const SALT_EVENTS: u64 = 0x4556_4E54;
+
+/// One sensor event of a trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SensorEvent {
+    /// Arrival time in seconds from trace start, in `[0, duration_s)`.
+    pub at_s: f64,
+    /// Whether the event is a true positive (worth a cluster inference)
+    /// or a false positive (noise the wake-up path must absorb).
+    pub is_true: bool,
+}
+
+/// A seeded sensor-event trace, described by rates and expanded on
+/// demand ([`TraceSpec::expand`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceSpec {
+    /// Expansion seed — the whole trace derives from it.
+    pub seed: u64,
+    /// Simulated wall-clock duration in seconds.
+    pub duration_s: f64,
+    /// Mean sensor-event rate in events per second.
+    pub rate_hz: f64,
+    /// Probability that an event is a true positive, in `[0, 1]`.
+    pub true_fraction: f64,
+}
+
+impl TraceSpec {
+    /// Expand the spec into its exact, time-ordered event list.
+    pub fn expand(&self) -> Vec<SensorEvent> {
+        let mut rng = Rng::new(self.seed ^ SALT_EVENTS);
+        let lambda = (self.rate_hz * self.duration_s).max(0.0);
+        let count = lambda as u64 + u64::from(rng.f64() < lambda.fract());
+        let mut events: Vec<SensorEvent> = (0..count)
+            .map(|_| SensorEvent {
+                at_s: rng.f64() * self.duration_s,
+                is_true: rng.f64() < self.true_fraction,
+            })
+            .collect();
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).expect("finite event times"));
+        events
+    }
+
+    /// Bit-exact parameter fragment for the lifecycle cache key (the
+    /// [`crate::faults::FaultPlan::key_fragment`] discipline: every f64
+    /// as its `to_bits` hex, so no formatting ambiguity ever aliases two
+    /// different traces).
+    pub fn key_fragment(&self) -> String {
+        format!(
+            "seed={:016x}|dur={:016x}|rate={:016x}|tp={:016x}",
+            self.seed,
+            self.duration_s.to_bits(),
+            self.rate_hz.to_bits(),
+            self.true_fraction.to_bits()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TraceSpec {
+        TraceSpec { seed: 7, duration_s: 3600.0, rate_hz: 0.05, true_fraction: 0.3 }
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let a = spec().expand();
+        let b = spec().expand();
+        assert_eq!(a, b, "same seed, same trace — bit-exact");
+        assert!(!a.is_empty());
+        let c = TraceSpec { seed: 8, ..spec() }.expand();
+        assert_ne!(a, c, "a different seed draws a different trace");
+    }
+
+    #[test]
+    fn events_stay_in_bounds_and_time_ordered() {
+        let events = spec().expand();
+        for w in events.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "events sort by arrival time");
+        }
+        for e in &events {
+            assert!(e.at_s >= 0.0 && e.at_s < 3600.0, "event at {} out of range", e.at_s);
+        }
+    }
+
+    #[test]
+    fn count_is_floor_or_ceil_of_lambda() {
+        // λ = 0.05/s × 3600 s = 180 exactly; fractional λ rounds to one
+        // of its two neighbours, per seed.
+        assert_eq!(spec().expand().len(), 180);
+        for seed in 0..32 {
+            let s = TraceSpec { seed, duration_s: 100.0, rate_hz: 0.125, true_fraction: 0.5 };
+            let n = s.expand().len();
+            assert!(n == 12 || n == 13, "λ=12.5 must expand to 12 or 13, got {n}");
+        }
+    }
+
+    #[test]
+    fn true_fraction_shapes_the_label_mix() {
+        let all_false =
+            TraceSpec { seed: 3, duration_s: 1e4, rate_hz: 0.1, true_fraction: 0.0 }.expand();
+        assert!(all_false.iter().all(|e| !e.is_true));
+        let all_true =
+            TraceSpec { seed: 3, duration_s: 1e4, rate_hz: 0.1, true_fraction: 1.0 }.expand();
+        assert!(all_true.iter().all(|e| e.is_true));
+        let mixed =
+            TraceSpec { seed: 3, duration_s: 1e4, rate_hz: 0.1, true_fraction: 0.5 }.expand();
+        let trues = mixed.iter().filter(|e| e.is_true).count();
+        assert!(trues > 0 && trues < mixed.len(), "a 0.5 mix has both labels");
+    }
+
+    #[test]
+    fn empty_trace_expands_to_no_events() {
+        let s = TraceSpec { seed: 1, duration_s: 10.0, rate_hz: 0.0, true_fraction: 0.5 };
+        assert!(s.expand().is_empty());
+    }
+
+    #[test]
+    fn key_fragment_is_bit_exact() {
+        let s = spec();
+        assert_eq!(
+            s.key_fragment(),
+            format!(
+                "seed=0000000000000007|dur={:016x}|rate={:016x}|tp={:016x}",
+                3600.0f64.to_bits(),
+                0.05f64.to_bits(),
+                0.3f64.to_bits()
+            )
+        );
+        assert_ne!(s.key_fragment(), TraceSpec { rate_hz: 0.051, ..s }.key_fragment());
+    }
+}

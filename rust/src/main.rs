@@ -27,6 +27,18 @@
 //!                           kernel and report SECDED coverage: per-tier
 //!                           corrected/detected/silent/masked counts and
 //!                           output divergence vs the fault-free oracle
+//! vega lifecycle [--kernel K] [--cores N] [--seed S] [--duration-s D]
+//!                [--true-fraction F] [--rates r1,r2] [--duty eager,linger]
+//!                [--sleep cognitive,retentive] [--boot l2,mram]
+//!                [--image-kb KB] [--battery-mah MAH] [--upset-rate R]
+//!                [--format csv|md|json] [--jobs N] [--stats]
+//!                [--resume] [--shard I/N] [--merge N]
+//!                [--retries K] [--backoff-ms B] [--timeout-ms T]
+//!                           replay a seeded sensor-event trace through
+//!                           Fig. 7's sleep↔wake state machine over a
+//!                           rate × duty × sleep × boot grid and report
+//!                           battery lifetime, false-wake rate and
+//!                           per-state energy per cell
 //! vega runtime              show the PJRT artifact registry
 //! vega golden <name>        run one artifact and cross-check the
 //!                           simulator's functional model against it
@@ -35,18 +47,20 @@
 //!                           report cycles / rates / contention
 //! ```
 //!
-//! `repro`, `sweep` and `faults` run on a *persistent* engine: kernel
-//! simulations, DNN network reports and fault-campaign outcomes land in
-//! the on-disk cache (`$VEGA_CACHE_DIR`, default `target/vega-cache`),
-//! so a re-invocation of the same grid or report serves everything from
-//! disk. `VEGA_CACHE=off|0|false|no`
+//! `repro`, `sweep`, `faults` and `lifecycle` run on a *persistent*
+//! engine: kernel simulations, DNN network reports, fault-campaign
+//! outcomes and lifecycle reports land in the on-disk cache
+//! (`$VEGA_CACHE_DIR`, default `target/vega-cache`), so a re-invocation
+//! of the same grid or report serves everything from disk.
+//! `VEGA_CACHE=off|0|false|no`
 //! (case-insensitive) disables persistence — see
 //! `sweep::persist::DiskStore::open_default`. (Hand-rolled argument
 //! parsing: clap is unavailable offline, DESIGN.md §5.)
 //!
-//! Crash safety (ISSUE 7): every `sweep`/`faults` grid run journals one
-//! checksummed record per completed cell under `<cache-dir>/journals/`,
-//! keyed by the full grid; `--resume` replays the journal and skips
+//! Crash safety (ISSUE 7): every `sweep`/`faults`/`lifecycle` grid run
+//! journals one checksummed record per completed cell under
+//! `<cache-dir>/journals/`, keyed by the full grid; `--resume` replays
+//! the journal and skips
 //! completed cells (output byte-identical to an uninterrupted run),
 //! `--shard I/N` owns one deterministic slice of the grid, and
 //! `--merge N` reassembles the shard journals into the serial-order
@@ -77,6 +91,15 @@ fn usage() -> ! {
                   [--resume] [--shard I/N] [--merge N]\n\
                   [--retries K] [--backoff-ms B] [--timeout-ms T]\n\
                                 seeded bit-upset campaigns through SECDED\n\
+           lifecycle [--kernel K] [--cores N] [--seed S] [--duration-s D]\n\
+                     [--true-fraction F] [--rates r1,r2]\n\
+                     [--duty eager,linger] [--sleep cognitive,retentive]\n\
+                     [--boot l2,mram] [--image-kb KB] [--battery-mah MAH]\n\
+                     [--upset-rate R] [--format csv|md|json] [--jobs N]\n\
+                     [--stats] [--resume] [--shard I/N] [--merge N]\n\
+                     [--retries K] [--backoff-ms B] [--timeout-ms T]\n\
+                                trace-driven sleep<->wake duty cycling:\n\
+                                battery lifetime / false-wake rate grid\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
@@ -126,7 +149,7 @@ fn main() {
             if stats {
                 let (sh, sm) = eng.cache().counters();
                 let (nh, nm) = eng.network_counters();
-                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0, 0));
                 eprintln!(
                     "repro stats: sims: {sh} hits / {sm} misses; nets: {nh} hits / {nm} misses; \
                      disk(sim): {}; disk(net): {}",
@@ -153,7 +176,7 @@ fn main() {
             print!("{}", grid.text);
             if cmd.stats {
                 let (h, m) = eng.cache().counters();
-                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0, 0));
                 eprintln!(
                     "sweep stats: rows={} sims: {h} hits / {m} misses; disk: {}; journal: {}",
                     cmd.spec.rows(),
@@ -181,7 +204,7 @@ fn main() {
             print!("{}", grid.text);
             if cmd.stats {
                 let (h, m) = eng.fault_counters();
-                let we = eng.disk_write_errors().unwrap_or((0, 0, 0));
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0, 0));
                 eprintln!(
                     "faults stats: cells={} campaigns: {h} hits / {m} misses; disk(flt): {}; \
                      journal: {}",
@@ -191,6 +214,35 @@ fn main() {
                 );
             }
             exit_for_grid("faults", &grid);
+        }
+        Some("lifecycle") => {
+            let cmd = vega::lifecycle::LifecycleCmd::parse(&args[1..]).unwrap_or_else(|e| {
+                eprintln!("vega lifecycle: {e}");
+                std::process::exit(2);
+            });
+            let mut eng = SweepEngine::persistent(cmd.jobs);
+            eng.set_cell_policy(cmd.policy);
+            let session = GridSession::open(
+                "lifecycle",
+                vega::lifecycle::grid_key(&cmd),
+                cmd.shard,
+                grid_mode(cmd.merge, cmd.resume),
+                &vega::sweep::journal::default_root(),
+            );
+            let grid = vega::lifecycle::render_with(&eng, &cmd, &session);
+            print!("{}", grid.text);
+            if cmd.stats {
+                let (h, m) = eng.lifecycle_counters();
+                let we = eng.disk_write_errors().unwrap_or((0, 0, 0, 0));
+                eprintln!(
+                    "lifecycle stats: cells={} reports: {h} hits / {m} misses; disk(lfc): {}; \
+                     journal: {}",
+                    cmd.rates.len() * cmd.duties.len() * cmd.sleeps.len() * cmd.boots.len(),
+                    fmt_disk(eng.disk_lifecycle_counters(), we.3),
+                    fmt_journal(&session),
+                );
+            }
+            exit_for_grid("lifecycle", &grid);
         }
         Some("runtime") => {
             let rt = Runtime::load(Runtime::default_dir()).unwrap_or_else(|e| {

@@ -11,7 +11,7 @@
 pub mod pmu;
 pub mod tables;
 
-pub use pmu::{Pmu, PowerMode, WakeSource};
+pub use pmu::{BootPath, LifecycleError, Pmu, PowerMode, WakeSource};
 pub use tables::{OperatingPoint, HV, LV, NOM};
 
 /// Cluster-domain power at operating point `op`.

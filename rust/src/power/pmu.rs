@@ -43,6 +43,17 @@ pub enum PowerMode {
 }
 
 impl PowerMode {
+    /// Short stable label (error messages, lifecycle reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PowerMode::DeepSleep => "deep-sleep",
+            PowerMode::CognitiveSleep { .. } => "cognitive-sleep",
+            PowerMode::RetentiveSleep { .. } => "retentive-sleep",
+            PowerMode::SocActive { .. } => "soc-active",
+            PowerMode::ClusterActive { .. } => "cluster-active",
+        }
+    }
+
     /// Total chip power in this mode.
     pub fn power_w(&self) -> f64 {
         use super::tables::DEEP_SLEEP_W;
@@ -50,7 +61,7 @@ impl PowerMode {
             PowerMode::DeepSleep => DEEP_SLEEP_W,
             PowerMode::CognitiveSleep { retentive_l2_bytes } => {
                 // 1.7 µW base (§III) + retention.
-                super::cwu_power_w(32e3, super::tables::CWU_REF_DUTY, false)
+                super::cwu_power_w(crate::cwu::SLEEP_CLK_HZ, super::tables::CWU_REF_DUTY, false)
                     + super::retention_power_w(retentive_l2_bytes)
             }
             PowerMode::RetentiveSleep { retentive_l2_bytes } => {
@@ -64,6 +75,42 @@ impl PowerMode {
         }
     }
 }
+
+/// A malformed sleep↔wake trajectory, as a typed error instead of a
+/// panic: a grid cell driving the PMU through a bad trace renders as one
+/// structured `status=error` row under the sweep engine's per-cell
+/// `catch_unwind` contract, and library callers get a `Result` they can
+/// match on rather than an `assert!` they must pre-validate against.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LifecycleError {
+    /// [`Pmu::wake`] called while the SoC or cluster domain is already
+    /// up — wake events are only meaningful from a sleep mode.
+    WakeFromActive { mode: &'static str },
+    /// [`Pmu::duty_cycled_power_w`] asked for more active time than the
+    /// period contains.
+    ActiveExceedsPeriod { active_s: f64, period_s: f64 },
+    /// A non-finite or negative duration reached the PMU.
+    MalformedTrace { what: String },
+}
+
+impl std::fmt::Display for LifecycleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LifecycleError::WakeFromActive { mode } => {
+                write!(f, "lifecycle error: wake from an active mode ({mode})")
+            }
+            LifecycleError::ActiveExceedsPeriod { active_s, period_s } => write!(
+                f,
+                "lifecycle error: active time {active_s} s exceeds period {period_s} s"
+            ),
+            LifecycleError::MalformedTrace { what } => {
+                write!(f, "lifecycle error: malformed trace ({what})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LifecycleError {}
 
 /// Boot strategy after wake-up.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -97,7 +144,9 @@ impl Pmu {
     }
 
     /// Handle a wake event: transition to SoC-active and return the
-    /// wake-up latency in seconds at `op`.
+    /// wake-up latency in seconds at `op`. Waking an already-active
+    /// domain is a [`LifecycleError`], not a panic: a malformed trace in
+    /// a lifecycle grid must fail its own cell, nothing more.
     pub fn wake(
         &mut self,
         source: WakeSource,
@@ -105,11 +154,10 @@ impl Pmu {
         op: OperatingPoint,
         boot: BootPath,
         mram: &dyn BulkChannel,
-    ) -> f64 {
-        assert!(
-            !matches!(self.mode, PowerMode::SocActive { .. } | PowerMode::ClusterActive { .. }),
-            "wake from an active mode"
-        );
+    ) -> Result<f64, LifecycleError> {
+        if matches!(self.mode, PowerMode::SocActive { .. } | PowerMode::ClusterActive { .. }) {
+            return Err(LifecycleError::WakeFromActive { mode: self.mode.name() });
+        }
         self.wake_log.push((source, at_seconds));
         let switch = self.domain_switch_cycles as f64 / op.f_soc;
         let boot_t = match boot {
@@ -119,7 +167,7 @@ impl Pmu {
             }
         };
         self.mode = PowerMode::SocActive { op, fc_util: 0.5 };
-        switch + boot_t
+        Ok(switch + boot_t)
     }
 
     /// Average power of a duty-cycled deployment: `active_s` seconds in
@@ -130,9 +178,16 @@ impl Pmu {
         sleep: PowerMode,
         active_s: f64,
         period_s: f64,
-    ) -> f64 {
-        assert!(active_s <= period_s);
-        (active.power_w() * active_s + sleep.power_w() * (period_s - active_s)) / period_s
+    ) -> Result<f64, LifecycleError> {
+        if !(active_s.is_finite() && period_s.is_finite()) || active_s < 0.0 || period_s <= 0.0 {
+            return Err(LifecycleError::MalformedTrace {
+                what: format!("duty cycle active_s={active_s} period_s={period_s}"),
+            });
+        }
+        if active_s > period_s {
+            return Err(LifecycleError::ActiveExceedsPeriod { active_s, period_s });
+        }
+        Ok((active.power_w() * active_s + sleep.power_w() * (period_s - active_s)) / period_s)
     }
 }
 
@@ -172,16 +227,18 @@ mod tests {
         let mram = Mram::new();
         let mut pmu = Pmu::new();
         pmu.enter(PowerMode::CognitiveSleep { retentive_l2_bytes: 0 });
-        let t_mram = pmu.wake(
-            WakeSource::Cognitive,
-            1.0,
-            NOM,
-            BootPath::WarmFromMram { image_bytes: 256 * 1024 },
-            &mram,
-        );
+        let t_mram = pmu
+            .wake(
+                WakeSource::Cognitive,
+                1.0,
+                NOM,
+                BootPath::WarmFromMram { image_bytes: 256 * 1024 },
+                &mram,
+            )
+            .unwrap();
         let mut pmu2 = Pmu::new();
         pmu2.enter(PowerMode::RetentiveSleep { retentive_l2_bytes: 256 * 1024 });
-        let t_l2 = pmu2.wake(WakeSource::Rtc, 1.0, NOM, BootPath::WarmFromL2, &mram);
+        let t_l2 = pmu2.wake(WakeSource::Rtc, 1.0, NOM, BootPath::WarmFromL2, &mram).unwrap();
         assert!(t_mram > t_l2);
         // 256 kB at 300 MB/s ≈ 0.9 ms.
         assert!(t_mram > 0.6e-3 && t_mram < 2e-3, "t = {t_mram}");
@@ -198,25 +255,41 @@ mod tests {
         let sleep_ret = PowerMode::RetentiveSleep { retentive_l2_bytes: 1600 * 1024 };
         let sleep_mram = PowerMode::DeepSleep;
         // One 10 ms activation per 10 min.
-        let p_ret = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 600.0);
+        let p_ret = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 600.0).unwrap();
         // MRAM path: add the restore time as extra active time.
-        let p_mram = Pmu::duty_cycled_power_w(active, sleep_mram, 10e-3 + 8e-3, 600.0);
+        let p_mram = Pmu::duty_cycled_power_w(active, sleep_mram, 10e-3 + 8e-3, 600.0).unwrap();
         assert!(p_mram < p_ret, "mram {p_mram} vs ret {p_ret}");
 
         // At a high duty cycle (4 activations/s) the per-wake MRAM
         // restore energy exceeds the standing retention power: retention
         // wins. (Crossover ≈ 2.7 wakes/s for a 256 kB image at NOM.)
-        let p_ret_hi = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 0.25);
-        let p_mram_hi = Pmu::duty_cycled_power_w(active, sleep_mram, 18e-3, 0.25);
+        let p_ret_hi = Pmu::duty_cycled_power_w(active, sleep_ret, 10e-3, 0.25).unwrap();
+        let p_mram_hi = Pmu::duty_cycled_power_w(active, sleep_mram, 18e-3, 0.25).unwrap();
         assert!(p_ret_hi < p_mram_hi, "ret {p_ret_hi} vs mram {p_mram_hi}");
     }
 
     #[test]
-    #[should_panic]
     fn cannot_wake_from_active() {
         let mram = Mram::new();
         let mut pmu = Pmu::new();
         pmu.enter(PowerMode::SocActive { op: NOM, fc_util: 0.5 });
-        pmu.wake(WakeSource::Rtc, 0.0, NOM, BootPath::WarmFromL2, &mram);
+        let err = pmu.wake(WakeSource::Rtc, 0.0, NOM, BootPath::WarmFromL2, &mram).unwrap_err();
+        assert_eq!(err, LifecycleError::WakeFromActive { mode: "soc-active" });
+        assert!(err.to_string().contains("wake from an active mode"));
+        assert!(pmu.wake_log.is_empty(), "a refused wake is not logged");
+    }
+
+    #[test]
+    fn duty_cycle_rejects_malformed_intervals() {
+        let active = PowerMode::SocActive { op: NOM, fc_util: 0.5 };
+        let sleep = PowerMode::DeepSleep;
+        assert_eq!(
+            Pmu::duty_cycled_power_w(active, sleep, 2.0, 1.0),
+            Err(LifecycleError::ActiveExceedsPeriod { active_s: 2.0, period_s: 1.0 })
+        );
+        assert!(Pmu::duty_cycled_power_w(active, sleep, -1.0, 10.0).is_err());
+        assert!(Pmu::duty_cycled_power_w(active, sleep, 0.0, 0.0).is_err());
+        assert!(Pmu::duty_cycled_power_w(active, sleep, f64::NAN, 10.0).is_err());
+        assert!(Pmu::duty_cycled_power_w(active, sleep, 1.0, f64::INFINITY).is_err());
     }
 }

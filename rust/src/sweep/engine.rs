@@ -14,7 +14,8 @@
 //! the memo's compute before a value exists to store).
 //!
 //! Crash-safety & policies (ISSUE 7): grid drains go through
-//! [`SweepEngine::run_scenarios_with`] / [`SweepEngine::run_campaigns_with`],
+//! [`SweepEngine::run_scenarios_with`] / [`SweepEngine::run_campaigns_with`]
+//! / [`SweepEngine::run_lifecycles_with`],
 //! which thread a [`GridSession`] (shard ownership + checkpoint journal,
 //! see [`super::journal`]) around every cell, and every cell executes
 //! under a [`CellPolicy`]: deterministic panics fail once and are never
@@ -37,8 +38,9 @@ use super::persist::DiskStore;
 use super::scenario::{Scenario, SimArena, SimResult};
 use crate::coordinator::CwuSummary;
 use crate::dnn::{run_network, Network, NetworkReport, PipelineConfig};
-use crate::faults::{run_campaign, Campaign, CampaignOutcome};
+use crate::faults::{run_campaign, Campaign, CampaignOutcome, FaultPlan, TierMask};
 use crate::kernels::KernelRun;
+use crate::lifecycle::{run_lifecycle, LifecycleReport, LifecycleScenario, SleepKind};
 
 /// One errored sweep cell: work item `index` panicked with `message`.
 ///
@@ -231,6 +233,7 @@ pub struct SweepEngine {
     cwu: OnceMap<u64, CwuSummary>,
     hd: OnceMap<usize, f64>,
     faults: OnceMap<String, CampaignOutcome>,
+    lifecycles: OnceMap<String, LifecycleReport>,
     disk: Option<DiskStore>,
     policy: CellPolicy,
 }
@@ -246,6 +249,7 @@ impl SweepEngine {
             cwu: OnceMap::new(true),
             hd: OnceMap::new(true),
             faults: OnceMap::new(true),
+            lifecycles: OnceMap::new(true),
             disk: None,
             policy: CellPolicy::default(),
         }
@@ -266,6 +270,7 @@ impl SweepEngine {
             cwu: OnceMap::new(false),
             hd: OnceMap::new(false),
             faults: OnceMap::new(false),
+            lifecycles: OnceMap::new(false),
             disk: None,
             policy: CellPolicy::default(),
         }
@@ -544,6 +549,82 @@ impl SweepEngine {
         )
     }
 
+    /// Memoized lifecycle report: in-memory memo first, then the
+    /// on-disk `.lfc` tier (when persistent), then a live trace replay.
+    /// The true-event inference inside goes through the ordinary
+    /// [`SweepEngine::result`] path (cached, shared across cells), and a
+    /// cognitive cell pulls the memoized CWU reference summary — so a
+    /// whole `vega lifecycle` grid simulates its kernel exactly once.
+    pub fn lifecycle(&self, lc: &LifecycleScenario) -> LifecycleReport {
+        let key = lc.key();
+        let lc = *lc;
+        self.lifecycles.get_or_compute(key.clone(), || {
+            if let Some(disk) = &self.disk {
+                if let Some(cached) = disk.load_lifecycle(&key) {
+                    return cached;
+                }
+                let fresh = self.run_lifecycle_live(&lc);
+                disk.store_lifecycle(&key, &fresh);
+                return fresh;
+            }
+            self.run_lifecycle_live(&lc)
+        })
+    }
+
+    fn run_lifecycle_live(&self, lc: &LifecycleScenario) -> LifecycleReport {
+        let inference = self.result(lc.scenario);
+        let cwu = (lc.sleep == SleepKind::Cognitive)
+            .then(|| self.cwu_summary(crate::cwu::SLEEP_CLK_HZ));
+        let mut report = run_lifecycle(lc, &inference, cwu.as_ref());
+        if lc.upset_rate > 0.0 {
+            // PR 6 retention-upset campaign, scaled by the deployment's
+            // *actual* accumulated sleep time (not a nominal figure).
+            let campaign = Campaign {
+                scenario: lc.scenario,
+                plan: FaultPlan {
+                    seed: lc.trace.seed,
+                    sleep_s: report.sleep_s,
+                    mram_rate: lc.upset_rate,
+                    sram_rate: 0.0,
+                    tiers: TierMask { mram: true, l2: false, tcdm: false },
+                },
+            };
+            report.attach_faults(&self.campaign(&campaign));
+        }
+        report
+    }
+
+    /// Drain a lifecycle grid through the worker pool, fault-isolated:
+    /// `out[i]` corresponds to `grid[i]`, and a panicking cell yields a
+    /// [`SimError`] instead of aborting the grid.
+    pub fn run_lifecycles(
+        &self,
+        grid: &[LifecycleScenario],
+    ) -> Vec<Result<LifecycleReport, SimError>> {
+        self.run_lifecycles_with(grid, &GridSession::off())
+            .into_iter()
+            .map(|c| c.expect("an unsharded session owns every cell"))
+            .collect()
+    }
+
+    /// Lifecycle-grid analogue of [`SweepEngine::run_campaigns_with`]:
+    /// shard-aware, journal-replaying, policy-driven. Cell IDs are the
+    /// cells' versioned [`LifecycleScenario::key`] strings; replay
+    /// integrity uses [`LifecycleReport::digest`].
+    pub fn run_lifecycles_with(
+        &self,
+        grid: &[LifecycleScenario],
+        session: &GridSession,
+    ) -> Vec<Option<Result<LifecycleReport, SimError>>> {
+        self.run_cells(
+            grid.len(),
+            session,
+            |i| grid[i].key(),
+            |i| self.lifecycle(&grid[i]),
+            |r| r.digest(),
+        )
+    }
+
     /// The shared cell driver behind both grid kinds: compute the
     /// stable cell ID (a panicking ID — e.g. an unknown kernel name —
     /// is itself a deterministic cell failure and is never journaled,
@@ -652,11 +733,23 @@ impl SweepEngine {
         self.disk.as_ref().map(|d| d.fault_counters())
     }
 
-    /// Failed entry writes per store tier — (sim, net, fault) — or
-    /// `None` for a memory-only engine. A full or read-only store
-    /// degrades to warn-once-and-continue-in-memory; these counters are
-    /// how `--stats` surfaces the damage (ISSUE 7 satellite).
-    pub fn disk_write_errors(&self) -> Option<(u64, u64, u64)> {
+    /// (hits, misses) of the lifecycle memo.
+    pub fn lifecycle_counters(&self) -> (u64, u64) {
+        self.lifecycles.counters()
+    }
+
+    /// (hits, misses, writes) of the on-disk store's lifecycle tier, or
+    /// `None` for a memory-only engine.
+    pub fn disk_lifecycle_counters(&self) -> Option<(u64, u64, u64)> {
+        self.disk.as_ref().map(|d| d.lifecycle_counters())
+    }
+
+    /// Failed entry writes per store tier — (sim, net, fault,
+    /// lifecycle) — or `None` for a memory-only engine. A full or
+    /// read-only store degrades to warn-once-and-continue-in-memory;
+    /// these counters are how `--stats` surfaces the damage (ISSUE 7
+    /// satellite).
+    pub fn disk_write_errors(&self) -> Option<(u64, u64, u64, u64)> {
         self.disk.as_ref().map(|d| d.write_error_counters())
     }
 

@@ -164,7 +164,8 @@ impl std::fmt::Display for ShardSpec {
 }
 
 /// The grid identity a journal is keyed by: an FNV-1a hash over the
-/// versioned byte encoding of the grid kind (`"sweep"` / `"faults"`),
+/// versioned byte encoding of the grid kind (`"sweep"` / `"faults"` /
+/// `"lifecycle"`),
 /// its scalar parameters, and every cell's stable ID in grid order. Any
 /// change to the grid — a core count, a precision, a seed, a format —
 /// changes the key and therefore selects a different journal file; a

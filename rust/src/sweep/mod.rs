@@ -34,10 +34,10 @@
 //!   counts 1–9 × precisions × an arbitrarily fine DVFS ladder, rendered
 //!   as CSV/Markdown/JSON through the same cache and worker pool.
 //! * [`persist`] — the on-disk [`DiskStore`] (one versioned, checksummed
-//!   file per [`SimKey`], per DNN network run, and per fault campaign)
-//!   that lets persistent engines — chiefly the CLI's — share
-//!   simulations, network reports **and campaign outcomes** across
-//!   processes. Keys derive from the explicit byte encodings
+//!   file per [`SimKey`], per DNN network run, per fault campaign and
+//!   per lifecycle report) that lets persistent engines — chiefly the
+//!   CLI's — share simulations, network reports, campaign outcomes
+//!   **and lifecycle reports** across processes. Keys derive from the explicit byte encodings
 //!   ([`crate::isa::encode`], [`crate::dnn::encode`]), so the store
 //!   survives toolchain bumps and can be shared across machines; the
 //!   test suite's regression oracles deliberately stay memory-only.

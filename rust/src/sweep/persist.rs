@@ -17,7 +17,12 @@
 //!   [`Campaign::key`](crate::faults::Campaign::key) string — the `vega
 //!   faults` grid cells. The key embeds
 //!   [`crate::faults::FAULT_MODEL_VERSION`], so a fault-model change
-//!   orphans old entries without touching [`STORE_VERSION`].
+//!   orphans old entries without touching [`STORE_VERSION`];
+//! * **lifecycle entries** (`<fnv>.lfc`): one
+//!   [`LifecycleReport`](crate::lifecycle::LifecycleReport) per
+//!   [`LifecycleScenario::key`](crate::lifecycle::LifecycleScenario::key)
+//!   string — the `vega lifecycle` grid cells. The key embeds
+//!   [`crate::lifecycle::LIFECYCLE_MODEL_VERSION`] the same way.
 //!
 //! The in-memory memos ([`crate::sweep::SimCache`] and the engine's
 //! network map) die with their engine, so every CLI invocation used to
@@ -104,6 +109,7 @@ pub const MODEL_EPOCH: u32 = 1;
 const SIM_MAGIC: &[u8; 8] = b"VEGASIMC";
 const NET_MAGIC: &[u8; 8] = b"VEGANETR";
 const FLT_MAGIC: &[u8; 8] = b"VEGAFLTR";
+const LFC_MAGIC: &[u8; 8] = b"VEGALFCR";
 
 /// Hit/miss/write/write-error counters of one entry tier.
 #[derive(Debug, Default)]
@@ -148,6 +154,7 @@ pub struct DiskStore {
     sim: TierCounters,
     net: TierCounters,
     flt: TierCounters,
+    lfc: TierCounters,
     /// Per-process temp-file disambiguator (paired with the PID in the
     /// temp name; see `write_entry`).
     tmp_seq: AtomicU64,
@@ -163,6 +170,7 @@ impl DiskStore {
             sim: TierCounters::default(),
             net: TierCounters::default(),
             flt: TierCounters::default(),
+            lfc: TierCounters::default(),
             tmp_seq: AtomicU64::new(0),
         })
     }
@@ -215,15 +223,22 @@ impl DiskStore {
         self.flt.snapshot()
     }
 
-    /// Failed entry writes per tier — (sim, net, fault). Non-zero means
-    /// some results could not be persisted (read-only dir, full disk,
-    /// path collision) and the run continued in memory; the first
-    /// failure also warned on stderr.
-    pub fn write_error_counters(&self) -> (u64, u64, u64) {
+    /// (hits, misses, writes) of the lifecycle tier
+    /// ([`DiskStore::load_lifecycle`] / [`DiskStore::store_lifecycle`]).
+    pub fn lifecycle_counters(&self) -> (u64, u64, u64) {
+        self.lfc.snapshot()
+    }
+
+    /// Failed entry writes per tier — (sim, net, fault, lifecycle).
+    /// Non-zero means some results could not be persisted (read-only
+    /// dir, full disk, path collision) and the run continued in memory;
+    /// the first failure also warned on stderr.
+    pub fn write_error_counters(&self) -> (u64, u64, u64, u64) {
         (
             self.sim.errors.load(Ordering::Relaxed),
             self.net.errors.load(Ordering::Relaxed),
             self.flt.errors.load(Ordering::Relaxed),
+            self.lfc.errors.load(Ordering::Relaxed),
         )
     }
 
@@ -281,6 +296,26 @@ impl DiskStore {
     pub fn store_fault(&self, key: &str, outcome: &CampaignOutcome) {
         let bytes = encode_entry(FLT_MAGIC, key, &encode_fault_payload(outcome));
         self.finish_write(&self.flt, &self.path_for(key, "flt"), &bytes);
+    }
+
+    /// Look a lifecycle `key` (a
+    /// [`crate::lifecycle::LifecycleScenario::key`] string) up. Any
+    /// read/format/checksum failure is a miss.
+    pub fn load_lifecycle(&self, key: &str) -> Option<crate::lifecycle::LifecycleReport> {
+        let res = fs::read(self.path_for(key, "lfc"))
+            .ok()
+            .and_then(|bytes| decode_entry(LFC_MAGIC, key, &bytes))
+            .and_then(|payload| crate::lifecycle::decode_report(&payload));
+        self.lfc.observe(res.is_some());
+        res
+    }
+
+    /// Write `report` under a
+    /// [`crate::lifecycle::LifecycleScenario::key`] string (same
+    /// temp-file + rename protocol as [`DiskStore::store`]).
+    pub fn store_lifecycle(&self, key: &str, report: &crate::lifecycle::LifecycleReport) {
+        let bytes = encode_entry(LFC_MAGIC, key, &crate::lifecycle::encode_report(report));
+        self.finish_write(&self.lfc, &self.path_for(key, "lfc"), &bytes);
     }
 
     /// Count a completed write attempt: a landed entry bumps the tier's
@@ -656,6 +691,27 @@ mod tests {
         let mut bytes = encode_fault_payload(&out);
         *bytes.last_mut().unwrap() = 2;
         assert!(decode_fault_payload(&bytes).is_none());
+    }
+
+    #[test]
+    fn lifecycle_entries_frame_under_their_own_magic() {
+        let report = crate::lifecycle::LifecycleReport {
+            events: 7,
+            true_wakes: 4,
+            false_wakes: 3,
+            boots: 4,
+            total_s: 600.0,
+            sleep_s: 599.0,
+            diverged: true,
+            ..Default::default()
+        };
+        let key = "lifecycle-v1|test-key";
+        let bytes = encode_entry(LFC_MAGIC, key, &crate::lifecycle::encode_report(&report));
+        let payload = decode_entry(LFC_MAGIC, key, &bytes).unwrap();
+        assert_eq!(crate::lifecycle::decode_report(&payload).unwrap(), report);
+        // Wrong key echo or another tier's magic = miss.
+        assert!(decode_entry(LFC_MAGIC, "lifecycle-v1|other", &bytes).is_none());
+        assert!(decode_entry(FLT_MAGIC, key, &bytes).is_none());
     }
 
     #[test]

@@ -56,13 +56,15 @@ fn emg_wakeup_accuracy_and_pmu_handoff() {
     assert!(false_pos <= 2, "false positives {false_pos}/45");
 
     // A wake event drives the PMU out of cognitive sleep.
-    let latency = pmu.wake(
-        WakeSource::Cognitive,
-        1.0,
-        power::NOM,
-        BootPath::WarmFromL2,
-        &mram,
-    );
+    let latency = pmu
+        .wake(
+            WakeSource::Cognitive,
+            1.0,
+            power::NOM,
+            BootPath::WarmFromL2,
+            &mram,
+        )
+        .expect("wake from cognitive sleep");
     assert!(latency < 1e-4, "warm-boot latency = {latency}");
     assert!(matches!(pmu.mode, PowerMode::SocActive { .. }));
 }
@@ -148,8 +150,8 @@ fn cognitive_wakeup_saves_system_power() {
     let sleep_thr = PowerMode::RetentiveSleep { retentive_l2_bytes: 128 * 1024 };
     // 1 true event/hour, 100 ms of active processing per wake.
     // HDC: ~1 false positive per true event. Threshold: ~20.
-    let p_hdc = power::Pmu::duty_cycled_power_w(active, sleep_hdc, 2.0 * 0.1, 3600.0);
-    let p_thr = power::Pmu::duty_cycled_power_w(active, sleep_thr, 21.0 * 0.1, 3600.0);
+    let p_hdc = power::Pmu::duty_cycled_power_w(active, sleep_hdc, 2.0 * 0.1, 3600.0).unwrap();
+    let p_thr = power::Pmu::duty_cycled_power_w(active, sleep_thr, 21.0 * 0.1, 3600.0).unwrap();
     assert!(p_hdc < p_thr, "hdc {p_hdc} vs threshold {p_thr}");
     assert!(p_hdc < 50e-6, "average power = {p_hdc}");
 }

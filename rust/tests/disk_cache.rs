@@ -10,7 +10,7 @@
 //! * corrupted, truncated or version-mismatched entries are misses that
 //!   fall back to re-simulation — never wrong data, never a panic;
 //! * a seeded single-byte corruption fuzzer (ISSUE 6) sweeps every frame
-//!   region of both the `.sim` and `.net` tiers: every mutation reads
+//!   region of the `.sim`, `.net` and `.lfc` tiers: every mutation reads
 //!   back as a miss, every restore as a hit, with exact per-region and
 //!   per-tier counts;
 //! * (ISSUE 7) a store write that cannot land warns once, counts in
@@ -23,6 +23,7 @@ use std::path::PathBuf;
 use vega::common::Rng;
 use vega::dnn::{net_key, Layer, LayerKind, Network, PipelineConfig, StorePolicy};
 use vega::kernels::int_matmul::IntWidth;
+use vega::lifecycle::{BootKind, DutyPolicy, LifecycleScenario, SleepKind, TraceSpec};
 use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
 use vega::sweep::{DiskStore, Scenario, SweepEngine};
 
@@ -141,10 +142,10 @@ fn version_mismatch_falls_back_to_resimulation() {
 /// a seeded fuzzer. For each of the six frame regions — magic, version,
 /// epoch, key echo, payload (with its length prefix), checksum — apply
 /// four deterministic single-byte XOR mutations (offsets and values from
-/// the repo's own seeded [`Rng`]), on both a `.sim` and a `.net` entry.
-/// Every mutated entry must read back as a miss (never wrong data, never
-/// a panic), every restored entry as a hit, with exact per-region and
-/// per-tier counts.
+/// the repo's own seeded [`Rng`]), on a `.sim`, a `.net` and a `.lfc`
+/// entry. Every mutated entry must read back as a miss (never wrong
+/// data, never a panic), every restored entry as a hit, with exact
+/// per-region and per-tier counts.
 #[test]
 fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
     let dir = store_dir("fuzz");
@@ -160,17 +161,31 @@ fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
     };
     let cfg = PipelineConfig::nominal_sw(StorePolicy::AllMram);
 
-    // One entry per tier, written through a persistent engine.
+    // One entry per tier, written through a persistent engine. The
+    // lifecycle scenario reuses `s` as its true-event workload, so its
+    // inference is a memo hit and the only new entry is the `.lfc` one.
+    let lc = LifecycleScenario {
+        scenario: s,
+        trace: TraceSpec { seed: 2, duration_s: 60.0, rate_hz: 0.1, true_fraction: 0.5 },
+        sleep: SleepKind::Retentive,
+        boot: BootKind::MramRestore,
+        duty: DutyPolicy::Eager,
+        image_bytes: 64 * 1024,
+        battery_mah: 225.0,
+        upset_rate: 0.0,
+    };
     let writer = engine_at(&dir, 1);
     let _ = writer.result(s);
     let _ = writer.network_report(&net, cfg);
+    let _ = writer.lifecycle(&lc);
     let sim_key = s.key();
     let report_key = net_key(&net, &cfg);
+    let lfc_key = lc.key();
 
     let store = DiskStore::at(&dir).expect("store dir");
     let mut rng = Rng::new(0xF022);
     let mut mutations = 0u32;
-    for ext in ["sim", "net"] {
+    for ext in ["sim", "net", "lfc"] {
         let path = entry_with_ext(&dir, ext);
         let good = fs::read(&path).unwrap();
         let key_len = u32::from_le_bytes(good[16..20].try_into().unwrap()) as usize;
@@ -192,14 +207,16 @@ fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
                 fs::write(&path, &bad).unwrap();
                 let miss = match ext {
                     "sim" => store.load(&sim_key).is_none(),
-                    _ => store.load_net(&report_key).is_none(),
+                    "net" => store.load_net(&report_key).is_none(),
+                    _ => store.load_lifecycle(&lfc_key).is_none(),
                 };
                 assert!(miss, ".{ext}/{what}: byte {off} ^ {xor:#04x} must read as a miss");
                 region_misses += 1;
                 fs::write(&path, &good).unwrap();
                 let hit = match ext {
                     "sim" => store.load(&sim_key).is_some(),
-                    _ => store.load_net(&report_key).is_some(),
+                    "net" => store.load_net(&report_key).is_some(),
+                    _ => store.load_lifecycle(&lfc_key).is_some(),
                 };
                 assert!(hit, ".{ext}/{what}: restored entry must read back as a hit");
             }
@@ -207,9 +224,14 @@ fn seeded_fuzzer_every_single_byte_mutation_reads_as_a_miss() {
             mutations += region_misses;
         }
     }
-    assert_eq!(mutations, 48, "6 regions x 4 mutations x 2 tiers");
+    assert_eq!(mutations, 72, "6 regions x 4 mutations x 3 tiers");
     assert_eq!(store.counters(), (24, 24, 0), "sim tier: one hit + one miss per mutation");
     assert_eq!(store.net_counters(), (24, 24, 0), "net tier: one hit + one miss per mutation");
+    assert_eq!(
+        store.lifecycle_counters(),
+        (24, 24, 0),
+        "lfc tier: one hit + one miss per mutation"
+    );
 
     let _ = fs::remove_dir_all(&dir);
 }
@@ -241,14 +263,14 @@ fn failed_entry_writes_are_counted_and_never_change_results() {
     );
     assert_eq!(
         eng.disk_write_errors(),
-        Some((1, 0, 0)),
+        Some((1, 0, 0, 0)),
         "the failed sim-tier write is counted for --stats"
     );
 
     // The same engine keeps serving from memory afterwards.
     let again = eng.result(s);
     assert_eq!(again.outputs_digest, baseline.outputs_digest);
-    assert_eq!(eng.disk_write_errors(), Some((1, 0, 0)), "a memo hit retries nothing");
+    assert_eq!(eng.disk_write_errors(), Some((1, 0, 0, 0)), "a memo hit retries nothing");
 
     let _ = fs::remove_dir_all(&dir);
 }

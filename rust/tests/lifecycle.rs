@@ -1,0 +1,331 @@
+//! Lifecycle-engine acceptance (ISSUE 8): determinism, the `.lfc` store
+//! tier, the paper's cognitive-sleep regime, and the byte-level goldens
+//! that pin the `.lfc` wire format.
+//!
+//! * the fixed-seed grid renders **byte-identically** at `--jobs 1` and
+//!   `--jobs 8` (the crate-wide determinism invariant, extended to the
+//!   lifecycle renderer);
+//! * a 24 h cognitive trace lands in the paper's 1.7 µW-base power
+//!   regime, and every {cognitive, retentive} × {l2, mram} combination
+//!   reports a populated battery lifetime and false-wake rate;
+//! * the `.lfc` disk tier serves a warm engine entirely from disk, with
+//!   exact cold/warm hit/miss/write counters;
+//! * golden byte vectors: the 225-byte report encoding against
+//!   hand-assembled bit patterns, the versioned cache-key strings
+//!   against literal fragments, and the crate's FNV-1a against its
+//!   published reference vectors — so the on-disk format can never
+//!   drift silently.
+
+use std::fs;
+use std::hash::Hasher;
+use std::path::{Path, PathBuf};
+
+use vega::common::Fnv1a;
+use vega::kernels::int_matmul::IntWidth;
+use vega::lifecycle::{
+    self, decode_report, encode_report, BootKind, DutyPolicy, LifecycleCmd, LifecycleReport,
+    LifecycleScenario, SleepKind, TraceSpec,
+};
+use vega::sweep::{DiskStore, Scenario, SweepEngine};
+
+fn argv(args: &[&str]) -> Vec<String> {
+    args.iter().map(|s| s.to_string()).collect()
+}
+
+fn store_dir(case: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("vega-lifecycle-test-{}-{case}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    dir
+}
+
+fn engine_at(dir: &Path, jobs: usize) -> SweepEngine {
+    SweepEngine::with_disk(jobs, DiskStore::at(dir).expect("store dir"))
+}
+
+/// The fixed-seed acceptance grid: 2 rates × 2 duties × 2 sleeps ×
+/// 2 boots = 16 cells over one 600 s trace per rate.
+fn acceptance_cmd() -> LifecycleCmd {
+    LifecycleCmd::parse(&argv(&[
+        "--kernel",
+        "matmul-i8",
+        "--cores",
+        "2",
+        "--seed",
+        "1",
+        "--duration-s",
+        "600",
+        "--rates",
+        "0.05,0.2",
+        "--duty",
+        "eager,linger",
+        "--sleep",
+        "cognitive,retentive",
+        "--boot",
+        "l2,mram",
+        "--format",
+        "csv",
+    ]))
+    .unwrap()
+}
+
+/// Determinism: the same grid renders byte-identically serial and at
+/// `--jobs 8`, and every ok row holds the `true + false == events`
+/// invariant the CI smoke greps for.
+#[test]
+fn grid_renders_byte_identically_at_any_jobs() {
+    let cmd = acceptance_cmd();
+    let serial = lifecycle::render(&SweepEngine::new(1), &cmd);
+    let parallel = lifecycle::render(&SweepEngine::new(8), &cmd);
+    assert_eq!(serial, parallel, "lifecycle grid must be --jobs invariant");
+
+    let lines: Vec<&str> = serial.lines().collect();
+    assert_eq!(lines.len(), 1 + 16, "header + one row per cell");
+    for line in &lines[1..] {
+        assert!(line.ends_with(",ok"), "all cells succeed: {line}");
+        let f: Vec<&str> = line.split(',').collect();
+        let events: u64 = f[7].parse().unwrap();
+        let tw: u64 = f[8].parse().unwrap();
+        let fw: u64 = f[9].parse().unwrap();
+        assert_eq!(tw + fw, events, "every event is exactly one of true/false: {line}");
+    }
+}
+
+/// The paper regime (§III): a 24 h cognitive-sleep deployment with an
+/// MRAM boot image — no retention, the CWU absorbing the false half of
+/// a sparse event stream — averages within the 1.7 µW-base envelope,
+/// and the battery projection lands where the arithmetic says.
+#[test]
+fn cognitive_24h_trace_stays_in_the_1_7uw_regime() {
+    let eng = SweepEngine::serial();
+    let base = LifecycleScenario {
+        scenario: Scenario::IntMatmul { w: IntWidth::I8, cores: 8 },
+        trace: TraceSpec { seed: 1, duration_s: 86_400.0, rate_hz: 1e-3, true_fraction: 0.5 },
+        sleep: SleepKind::Cognitive,
+        boot: BootKind::MramRestore,
+        duty: DutyPolicy::Eager,
+        image_bytes: 256 * 1024,
+        battery_mah: 225.0,
+        upset_rate: 0.0,
+    };
+    let r = eng.lifecycle(&base);
+    assert!(r.events > 50, "a day at 1 mHz carries ~86 events, got {}", r.events);
+    assert!(
+        (1.6e-6..=2.5e-6).contains(&r.avg_power_w),
+        "24 h cognitive average {} W escaped the 1.7 µW-base regime",
+        r.avg_power_w
+    );
+    assert_eq!(r.absorbed_events, r.false_wakes, "cognitive sleep absorbs every false event");
+    assert_eq!(r.boots, r.true_wakes, "and boots only on true ones");
+    assert!(r.false_wake_rate > 0.2 && r.false_wake_rate < 0.8, "{}", r.false_wake_rate);
+    assert!(r.cwu_accuracy > 0.5, "live CWU summary feeds the report");
+    // 225 mAh × 3 V ≈ 0.675 Wh at ~1.7 µW ⇒ a multi-decade projection.
+    assert!(
+        r.battery_hours > 200_000.0 && r.battery_hours < 600_000.0,
+        "battery projection {} h",
+        r.battery_hours
+    );
+
+    // Every sleep × boot combination reports populated deployment
+    // figures (the acceptance matrix).
+    for sleep in [SleepKind::Cognitive, SleepKind::Retentive] {
+        for boot in [BootKind::WarmL2, BootKind::MramRestore] {
+            let r = eng.lifecycle(&LifecycleScenario { sleep, boot, ..base });
+            assert!(r.battery_hours > 0.0, "{sleep:?}/{boot:?} lifetime unpopulated");
+            assert!(r.avg_power_w > 0.0 && r.total_j > 0.0);
+            assert!((0.0..=1.0).contains(&r.false_wake_rate));
+            assert_eq!(r.true_wakes + r.false_wakes, r.events);
+        }
+    }
+}
+
+/// The `.lfc` disk tier: a cold engine misses and persists every cell,
+/// a warm engine on the same directory serves every report from disk —
+/// byte-identical render, exact counters on both sides.
+#[test]
+fn lfc_tier_cold_then_warm_counters_are_exact() {
+    let dir = store_dir("cold-warm");
+    let cmd = LifecycleCmd::parse(&argv(&[
+        "--kernel",
+        "matmul-i8",
+        "--cores",
+        "2",
+        "--seed",
+        "3",
+        "--duration-s",
+        "600",
+        "--rates",
+        "0.05,0.2",
+        "--duty",
+        "eager,linger",
+        "--sleep",
+        "retentive",
+        "--boot",
+        "l2,mram",
+    ]))
+    .unwrap();
+    let cells = 8u64; // 2 rates x 2 duties x 1 sleep x 2 boots
+
+    let cold = engine_at(&dir, 2);
+    let first = lifecycle::render(&cold, &cmd);
+    assert_eq!(
+        cold.disk_lifecycle_counters(),
+        Some((0, cells, cells)),
+        "cold: every cell is a disk miss and a write"
+    );
+    assert_eq!(cold.lifecycle_counters(), (0, cells), "cold memo: one miss per cell");
+    let on_disk = fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.path().extension().is_some_and(|x| x == "lfc"))
+        .count() as u64;
+    assert_eq!(on_disk, cells, "one .lfc entry per cell");
+
+    let warm = engine_at(&dir, 1);
+    let second = lifecycle::render(&warm, &cmd);
+    assert_eq!(first, second, "warm render must be byte-identical to the cold one");
+    assert_eq!(
+        warm.disk_lifecycle_counters(),
+        Some((cells, 0, 0)),
+        "warm: every report served from disk, nothing rewritten"
+    );
+
+    // A repeat of a cell on the warm engine is an in-memory hit.
+    let _ = warm.lifecycle(&cmd.cells()[0]);
+    assert_eq!(warm.lifecycle_counters(), (1, cells));
+
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// Golden bytes (satellite 4): the 225-byte report encoding, assembled
+/// by hand from literal little-endian words and IEEE-754 bit patterns —
+/// independent of the codec under test. Any change to field order,
+/// width or count lands here before it can corrupt a `.lfc` store.
+#[test]
+fn report_encoding_matches_the_golden_bytes() {
+    // Synthetic report: every f64 chosen for a hand-checkable bit
+    // pattern (powers of two and short dyadics); energies sum to 7.5.
+    let r = LifecycleReport {
+        events: 7,
+        true_wakes: 4,
+        false_wakes: 3,
+        absorbed_events: 2,
+        boots: 5,
+        mram_restores: 5,
+        total_s: 86_400.0,
+        sleep_s: 600.0,
+        classify_s: 3.0,
+        wake_s: 2.0,
+        triage_s: 1.0,
+        infer_s: 0.5,
+        sleep_j: 1.0,
+        classify_j: 0.75,
+        wake_j: 0.5,
+        triage_j: 0.25,
+        infer_j: 2.0,
+        restore_j: 3.0,
+        total_j: 7.5,
+        avg_power_w: 0.25,
+        energy_per_event_j: 0.5,
+        false_wake_rate: 0.75,
+        battery_hours: 1024.0,
+        cwu_accuracy: 0.5,
+        mram_flips: 11,
+        mram_corrected: 9,
+        mram_detected: 2,
+        mram_silent: 0,
+        diverged: true,
+    };
+    let mut want = Vec::with_capacity(225);
+    for v in [7u64, 4, 3, 2, 5, 5] {
+        want.extend_from_slice(&v.to_le_bytes());
+    }
+    for bits in [
+        0x40F5_1800_0000_0000_u64, // 86400.0  total_s
+        0x4082_C000_0000_0000,     // 600.0    sleep_s
+        0x4008_0000_0000_0000,     // 3.0      classify_s
+        0x4000_0000_0000_0000,     // 2.0      wake_s
+        0x3FF0_0000_0000_0000,     // 1.0      triage_s
+        0x3FE0_0000_0000_0000,     // 0.5      infer_s
+        0x3FF0_0000_0000_0000,     // 1.0      sleep_j
+        0x3FE8_0000_0000_0000,     // 0.75     classify_j
+        0x3FE0_0000_0000_0000,     // 0.5      wake_j
+        0x3FD0_0000_0000_0000,     // 0.25     triage_j
+        0x4000_0000_0000_0000,     // 2.0      infer_j
+        0x4008_0000_0000_0000,     // 3.0      restore_j
+        0x401E_0000_0000_0000,     // 7.5      total_j
+        0x3FD0_0000_0000_0000,     // 0.25     avg_power_w
+        0x3FE0_0000_0000_0000,     // 0.5      energy_per_event_j
+        0x3FE8_0000_0000_0000,     // 0.75     false_wake_rate
+        0x4090_0000_0000_0000,     // 1024.0   battery_hours
+        0x3FE0_0000_0000_0000,     // 0.5      cwu_accuracy
+    ] {
+        want.extend_from_slice(&bits.to_le_bytes());
+    }
+    for v in [11u64, 9, 2, 0] {
+        want.extend_from_slice(&v.to_le_bytes());
+    }
+    want.push(1); // diverged = true
+    assert_eq!(want.len(), 225, "6 + 18 + 4 words x 8 bytes, + 1 bool byte");
+
+    let got = encode_report(&r);
+    assert_eq!(got, want, "encoding drifted from the golden bytes");
+    assert_eq!(decode_report(&want), Some(r), "golden bytes decode to the source report");
+
+    // The digest is FNV-1a over exactly these bytes.
+    let mut h = Fnv1a::new();
+    h.write(&want);
+    assert_eq!(r.digest(), h.finish());
+}
+
+/// Golden key strings: the trace fragment and the scenario key rendered
+/// against hard-coded literals (seed hex, `to_bits` hex of every f64,
+/// the versioned prefix, and every axis label). The cache key IS the
+/// disk format's identity — pin it character-for-character.
+#[test]
+fn cache_keys_match_their_golden_strings() {
+    let trace = TraceSpec { seed: 1, duration_s: 86_400.0, rate_hz: 0.5, true_fraction: 0.5 };
+    assert_eq!(
+        trace.key_fragment(),
+        "seed=0000000000000001|dur=40f5180000000000|rate=3fe0000000000000|tp=3fe0000000000000"
+    );
+
+    let lc = LifecycleScenario {
+        scenario: Scenario::IntMatmul { w: IntWidth::I8, cores: 8 },
+        trace,
+        sleep: SleepKind::Cognitive,
+        boot: BootKind::WarmL2,
+        duty: DutyPolicy::Eager,
+        image_bytes: 256 * 1024,
+        battery_mah: 225.0,
+        upset_rate: 0.0,
+    };
+    let k = lc.key();
+    assert!(k.starts_with("lifecycle-v1|matmul_i8|"), "versioned prefix + kernel id: {k}");
+    assert!(
+        k.contains("|seed=0000000000000001|dur=40f5180000000000|rate=3fe0000000000000|tp=3fe0000000000000|"),
+        "trace fragment embedded verbatim: {k}"
+    );
+    assert!(
+        k.ends_with(
+            "|sleep=cognitive|boot=l2|duty=eager|img=262144|mah=406c200000000000|ur=0000000000000000"
+        ),
+        "axis suffix: {k}"
+    );
+}
+
+/// The crate's single pinned hash, against the published FNV-1a 64-bit
+/// reference vectors — the anchor under every store path name, journal
+/// key and report digest.
+#[test]
+fn fnv1a_matches_the_published_reference_vectors() {
+    for (input, want) in [
+        ("", 0xcbf2_9ce4_8422_2325_u64),
+        ("a", 0xaf63_dc4c_8601_ec8c),
+        ("foobar", 0x8594_4171_f739_67e8),
+    ] {
+        let mut h = Fnv1a::new();
+        h.write(input.as_bytes());
+        assert_eq!(h.finish(), want, "FNV-1a(\"{input}\")");
+    }
+}

@@ -1,0 +1,170 @@
+//! Paper anchors for the sleep/wake power model (§II-A, §III, Fig. 7,
+//! Tables I/III/VIII) — the foundation the lifecycle engine integrates
+//! over. Each test pins one identity the lifecycle reports depend on:
+//! the 1.7 µW cognitive-sleep base, the 1.2 µW deep-sleep floor, the
+//! 16 kB retention-cut ladder, the duty-cycle lifetime equation's
+//! endpoints, and the wake-latency decomposition (domain switch + MRAM
+//! restore). If one of these drifts, every battery-lifetime number in
+//! `tests/lifecycle.rs` drifts with it — anchor here, at the source.
+
+use vega::common::rel_err;
+use vega::cwu::SLEEP_CLK_HZ;
+use vega::mem::{BulkChannel, Mram};
+use vega::power::tables::{
+    CWU_REF_DUTY, DEEP_SLEEP_W, RETENTION_FIRST_CUT_W, RETENTION_PER_CUT_W,
+};
+use vega::power::{
+    cwu_power_w, retention_power_w, BootPath, LifecycleError, Pmu, PowerMode, WakeSource, HV, NOM,
+};
+use vega::soc::l2::RETENTION_CUT_BYTES;
+
+/// §III: "1.7 µW cognitive sleep" — the CognitiveSleep base power (no
+/// retained L2) is the CWU at its 32 kHz sleep clock and reference duty,
+/// pads excluded, and it lands in the paper's quoted regime.
+#[test]
+fn cognitive_sleep_base_is_the_paper_1_7_uw() {
+    let base = PowerMode::CognitiveSleep { retentive_l2_bytes: 0 }.power_w();
+    assert_eq!(base, cwu_power_w(SLEEP_CLK_HZ, CWU_REF_DUTY, false));
+    assert!((1.6e-6..=1.8e-6).contains(&base), "base = {base}");
+
+    // Table I cross-check: folding the SPI pads back in at 32 kHz gives
+    // the measured 2.97 µW total.
+    let with_pads = cwu_power_w(SLEEP_CLK_HZ, CWU_REF_DUTY, true);
+    assert!(rel_err(with_pads, 2.97e-6) < 0.01, "with pads = {with_pads}");
+
+    // The datapath term scales with measured duty but saturates at 3× the
+    // reference workload (the model's stated clamp): any duty past the
+    // clamp yields the identical power.
+    let saturated = cwu_power_w(SLEEP_CLK_HZ, CWU_REF_DUTY * 10.0, false);
+    assert_eq!(saturated, cwu_power_w(SLEEP_CLK_HZ, 1.0, false));
+    assert!(saturated > base);
+}
+
+/// Table III floor: deep sleep is exactly the calibrated 1.2 µW constant
+/// (PMU + RTC + POR), nothing else.
+#[test]
+fn deep_sleep_is_the_1_2_uw_floor() {
+    assert_eq!(PowerMode::DeepSleep.power_w(), DEEP_SLEEP_W);
+    assert_eq!(DEEP_SLEEP_W, 1.2e-6);
+}
+
+/// Table VIII: L2 retention is paid per 16 kB cut — zero bytes cost
+/// nothing, one byte costs a whole first cut, and each further started
+/// cut adds the per-cut increment.
+#[test]
+fn retention_tracks_the_16_kb_cut_ladder() {
+    assert_eq!(retention_power_w(0), 0.0);
+    assert_eq!(retention_power_w(1), RETENTION_FIRST_CUT_W);
+    assert_eq!(retention_power_w(RETENTION_CUT_BYTES), RETENTION_FIRST_CUT_W);
+    assert_eq!(
+        retention_power_w(RETENTION_CUT_BYTES + 1),
+        RETENTION_FIRST_CUT_W + RETENTION_PER_CUT_W
+    );
+    // 1.6 MB = 100 cuts.
+    assert_eq!(
+        retention_power_w(100 * RETENTION_CUT_BYTES),
+        RETENTION_FIRST_CUT_W + 99.0 * RETENTION_PER_CUT_W
+    );
+
+    // Table VIII quotes the cognitive + retention range "2.8–123.7 µW
+    // (16 kB–1.6 MB s.r.)" — both endpoints must emerge.
+    let lo = PowerMode::CognitiveSleep { retentive_l2_bytes: RETENTION_CUT_BYTES }.power_w();
+    let hi = PowerMode::CognitiveSleep { retentive_l2_bytes: 100 * RETENTION_CUT_BYTES }.power_w();
+    assert!(rel_err(lo, 2.8e-6) < 0.01, "16 kB endpoint = {lo}");
+    assert!(rel_err(hi, 123.7e-6) < 0.01, "1.6 MB endpoint = {hi}");
+}
+
+/// Fig. 7: retentive sleep (no CWU) is the deep-sleep floor plus the
+/// retention ladder — an exact identity at every image size.
+#[test]
+fn retentive_sleep_is_deep_sleep_plus_retention() {
+    for bytes in [0, RETENTION_CUT_BYTES, 256 * 1024, 100 * RETENTION_CUT_BYTES] {
+        assert_eq!(
+            PowerMode::RetentiveSleep { retentive_l2_bytes: bytes }.power_w(),
+            DEEP_SLEEP_W + retention_power_w(bytes),
+            "bytes = {bytes}"
+        );
+    }
+}
+
+/// §II-B's lifetime equation: the duty-cycled average interpolates
+/// linearly between the sleep power (active_s = 0) and the active power
+/// (active_s = period_s), and is monotone in the active time between.
+#[test]
+fn duty_cycle_endpoints_and_monotonicity() {
+    let active = PowerMode::SocActive { op: NOM, fc_util: 1.0 };
+    let sleep = PowerMode::CognitiveSleep { retentive_l2_bytes: 0 };
+    let period = 600.0;
+
+    let idle = Pmu::duty_cycled_power_w(active, sleep, 0.0, period).unwrap();
+    assert!(rel_err(idle, sleep.power_w()) < 1e-12, "idle = {idle}");
+    let busy = Pmu::duty_cycled_power_w(active, sleep, period, period).unwrap();
+    assert!(rel_err(busy, active.power_w()) < 1e-12, "busy = {busy}");
+
+    let mut last = idle;
+    for active_s in [1e-3, 10e-3, 1.0, 60.0, 599.0] {
+        let p = Pmu::duty_cycled_power_w(active, sleep, active_s, period).unwrap();
+        assert!(p > last, "not monotone at active_s = {active_s}");
+        last = p;
+    }
+    assert!(last < busy);
+}
+
+/// §III wake-up: latency decomposes exactly into the 2000-cycle domain
+/// switch plus (for the MRAM path) the timed image restore — the same
+/// two terms the lifecycle engine charges per boot.
+#[test]
+fn wake_latency_decomposes_into_switch_plus_restore() {
+    let mram = Mram::new();
+
+    let mut pmu = Pmu::new();
+    pmu.enter(PowerMode::RetentiveSleep { retentive_l2_bytes: 256 * 1024 });
+    let t_l2 = pmu.wake(WakeSource::Rtc, 0.0, NOM, BootPath::WarmFromL2, &mram).unwrap();
+    assert_eq!(t_l2, 2_000.0 / NOM.f_soc);
+    assert_eq!(pmu.mode, PowerMode::SocActive { op: NOM, fc_util: 0.5 });
+
+    let image_bytes = 256 * 1024;
+    let mut pmu = Pmu::new();
+    pmu.enter(PowerMode::CognitiveSleep { retentive_l2_bytes: 0 });
+    let t_mram = pmu
+        .wake(WakeSource::Cognitive, 0.0, NOM, BootPath::WarmFromMram { image_bytes }, &mram)
+        .unwrap();
+    let restore = mram.transfer_cycles(image_bytes, NOM.f_soc, false) as f64 / NOM.f_soc;
+    assert_eq!(t_mram, 2_000.0 / NOM.f_soc + restore);
+    // 256 kB at the Table VI 300 MB/s sustained rate ≈ 0.87 ms.
+    assert!(rel_err(restore, 256.0 * 1024.0 / 300e6) < 0.05, "restore = {restore}");
+
+    // The switch term scales with f_soc: HV boots faster than NOM.
+    let mut pmu = Pmu::new();
+    pmu.enter(PowerMode::DeepSleep);
+    let t_hv = pmu.wake(WakeSource::ExternalPad, 0.0, HV, BootPath::WarmFromL2, &mram).unwrap();
+    assert!(t_hv < t_l2);
+}
+
+/// The typed `LifecycleError` surface (ISSUE 8 satellite): every
+/// malformed trajectory is a matchable variant whose Display carries the
+/// stable "lifecycle error:" prefix the CLI rows surface.
+#[test]
+fn lifecycle_errors_are_typed_and_displayable() {
+    let mram = Mram::new();
+    let mut pmu = Pmu::new();
+    pmu.enter(PowerMode::ClusterActive {
+        op: NOM,
+        fc_util: 0.3,
+        core_util: 1.0,
+        hwce_active: 0.0,
+    });
+    let err = pmu.wake(WakeSource::Rtc, 0.0, NOM, BootPath::WarmFromL2, &mram).unwrap_err();
+    assert_eq!(err, LifecycleError::WakeFromActive { mode: "cluster-active" });
+    assert_eq!(err.to_string(), "lifecycle error: wake from an active mode (cluster-active)");
+
+    let active = PowerMode::SocActive { op: NOM, fc_util: 0.5 };
+    let err = Pmu::duty_cycled_power_w(active, PowerMode::DeepSleep, 2.0, 1.0).unwrap_err();
+    assert_eq!(err, LifecycleError::ActiveExceedsPeriod { active_s: 2.0, period_s: 1.0 });
+    assert_eq!(err.to_string(), "lifecycle error: active time 2 s exceeds period 1 s");
+
+    let err =
+        Pmu::duty_cycled_power_w(active, PowerMode::DeepSleep, f64::NAN, 1.0).unwrap_err();
+    assert!(matches!(err, LifecycleError::MalformedTrace { .. }));
+    assert!(err.to_string().starts_with("lifecycle error: malformed trace ("));
+}

@@ -15,7 +15,11 @@
 //!   cache-off run, and never panics;
 //! * `--shard 1/2` + `--shard 2/2` render disjoint row sets whose
 //!   union is the serial grid, and `--merge 2` reassembles the exact
-//!   serial-order bytes from the shard journals.
+//!   serial-order bytes from the shard journals;
+//! * the `faults` and `lifecycle` grids resume through the same
+//!   machinery — a SIGKILLed lifecycle grid (ISSUE 8) resumes
+//!   byte-identically with its pre-kill cells served from the journal
+//!   and the `.lfc` store tier.
 
 use std::collections::HashSet;
 use std::fs;
@@ -23,6 +27,7 @@ use std::path::{Path, PathBuf};
 use std::process::{Command, Output, Stdio};
 use std::time::{Duration, Instant};
 
+use vega::lifecycle::{self, LifecycleCmd};
 use vega::sweep::explore::{self, GridFormat, GridSpec, Precision};
 use vega::sweep::journal;
 
@@ -313,6 +318,102 @@ fn shards_partition_the_grid_and_merge_reassembles_serial_bytes() {
     // The parser rejects modes that contradict each other.
     let bad = sweep(&dir, &["--merge", "2", "--resume"]);
     assert_eq!(bad.status.code(), Some(2), "--merge with --resume is a usage error");
+
+    let _ = fs::remove_dir_all(&ref_dir);
+    let _ = fs::remove_dir_all(&dir);
+}
+
+/// ISSUE 8 acceptance: the lifecycle grid survives a mid-grid SIGKILL
+/// the way the sweep does — `--resume` renders the exact bytes of an
+/// uninterrupted run, pre-kill cells served from the journal + the
+/// `.lfc` store tier, counted exactly.
+#[test]
+fn lifecycle_kill_mid_grid_then_resume_is_byte_identical() {
+    const LC_GRID: &[&str] = &[
+        "--kernel", "matmul-i8", "--cores", "2", "--seed", "1", "--duration-s", "600",
+        "--rates", "0.05,0.2", "--duty", "eager", "--sleep", "cognitive,retentive",
+        "--boot", "l2,mram", "--format", "csv", "--jobs", "2",
+    ];
+    const LC_CELLS: u64 = 8; // 2 rates x 1 duty x 2 sleeps x 2 boots
+
+    let lc_journal_records = |cache: &Path| -> u64 {
+        let args: Vec<String> = LC_GRID.iter().map(|s| s.to_string()).collect();
+        let key = lifecycle::grid_key(&LifecycleCmd::parse(&args).expect("grid args parse"));
+        let grid_id = format!("lifecycle:{key:016x}");
+        fs::read(cache.join("journals").join(format!("j{key:016x}.jnl")))
+            .ok()
+            .and_then(|bytes| journal::replay(&bytes, &grid_id, None))
+            .map_or(0, |(records, _)| records.len() as u64)
+    };
+    let lfc_entries = |cache: &Path| -> u64 {
+        fs::read_dir(cache).map_or(0, |d| {
+            d.filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().is_some_and(|x| x == "lfc"))
+                .count() as u64
+        })
+    };
+    let run = |cache: &Path, extra: &[&str]| -> Output {
+        vega(cache).arg("lifecycle").args(LC_GRID).args(extra).output().expect("run vega lifecycle")
+    };
+
+    let ref_dir = temp_dir("lc-kill-ref");
+    let reference = run(&ref_dir, &[]);
+    assert!(reference.status.success(), "reference run failed: {}", stderr(&reference));
+    let expected = stdout(&reference);
+    assert_eq!(expected.lines().count() as u64, 1 + LC_CELLS, "header + one row per cell");
+
+    let dir = temp_dir("lc-kill");
+    let mut child = vega(&dir)
+        .arg("lifecycle")
+        .args(LC_GRID)
+        .env("VEGA_CELL_DELAY_MS", "150")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn victim");
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while lc_journal_records(&dir) < 2 && Instant::now() < deadline {
+        if child.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let _ = child.kill();
+    let _ = child.wait();
+
+    let journaled = lc_journal_records(&dir);
+    let persisted = lfc_entries(&dir);
+    assert!(journaled >= 2, "child journaled only {journaled} cells before the kill");
+    assert!(
+        journaled <= persisted && persisted <= LC_CELLS,
+        "a journal record implies a persisted .lfc entry (journaled {journaled}, persisted {persisted})"
+    );
+
+    let resumed = run(&dir, &["--resume", "--stats"]);
+    assert!(resumed.status.success(), "resume failed: {}", stderr(&resumed));
+    assert_eq!(stdout(&resumed), expected, "resumed output must be byte-identical");
+    let log = stderr(&resumed);
+    for needle in [
+        format!(
+            "disk(lfc): {persisted} hits / {} misses / {} writes / 0 write-errors",
+            LC_CELLS - persisted,
+            LC_CELLS - persisted
+        ),
+        format!("journal: {journaled} prior / {} recorded / 0 write-errors", LC_CELLS - journaled),
+    ] {
+        assert!(log.contains(&needle), "resume stats missing '{needle}':\n{log}");
+    }
+
+    let again = run(&dir, &["--resume", "--stats"]);
+    assert!(again.status.success());
+    assert_eq!(stdout(&again), expected, "second resume must be byte-identical");
+    let log = stderr(&again);
+    for needle in [
+        format!("disk(lfc): {LC_CELLS} hits / 0 misses / 0 writes / 0 write-errors"),
+        format!("journal: {LC_CELLS} prior / 0 recorded / 0 write-errors"),
+    ] {
+        assert!(log.contains(&needle), "second-resume stats missing '{needle}':\n{log}");
+    }
 
     let _ = fs::remove_dir_all(&ref_dir);
     let _ = fs::remove_dir_all(&dir);

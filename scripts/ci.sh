@@ -17,7 +17,11 @@
 # invariants structurally (status ok everywhere, zero silent corruptions,
 # classification covering every upset word), round-trip the `.flt` store
 # tier, and run the panic-isolation regression tests by name; the
-# crash-safety smokes (ISSUE 7) resume a torn-journal grid
+# lifecycle smokes (ISSUE 8) replay a fixed-seed `vega lifecycle`
+# deployment grid across worker counts, assert the trace invariants
+# structurally (status ok, true + false wakes partition the events,
+# battery projections populated) and round-trip the `.lfc` store tier;
+# the crash-safety smokes (ISSUE 7) resume a torn-journal grid
 # byte-identically, reassemble a --shard 1/2 + 2/2 pair via --merge into
 # the exact serial bytes, assert exit code 3 for grids with failed
 # cells, and drive the cache-degradation paths (unusable and read-only
@@ -170,6 +174,40 @@ grep -q "disk(flt): 0 hits / 4 misses / 4 writes" target/ci/faults_cold.log \
 grep -q "disk(flt): 4 hits / 0 misses / 0 writes" target/ci/faults_warm.log \
     || { echo "FAIL: warm faults run did not hit the .flt store:"; cat target/ci/faults_warm.log; exit 1; }
 echo "warm process served every campaign outcome from the .flt store tier"
+
+echo "== lifecycle smoke (vega lifecycle: serial vs --jobs 2) =="
+# ISSUE 8: fixed-seed deployment grid — 2 event rates × {cognitive,
+# retentive} sleep × {l2, mram} boot over a 600 s trace. Structural
+# invariants per row: status ok, every event classified exactly once
+# (true_wakes + false_wakes == events), and a populated battery
+# projection — no golden numbers, the identities hold for any seed.
+LIFECYCLE_GRID=(--kernel matmul-i8 --cores 2 --seed 1 --duration-s 600 --rates 0.05,0.2
+                --duty eager --sleep cognitive,retentive --boot l2,mram --format csv)
+VEGA_CACHE=off ./target/release/vega lifecycle "${LIFECYCLE_GRID[@]}" --jobs 1 > target/ci/lifecycle_serial.csv
+VEGA_CACHE=off ./target/release/vega lifecycle "${LIFECYCLE_GRID[@]}" --jobs 2 > target/ci/lifecycle_jobs2.csv
+diff target/ci/lifecycle_serial.csv target/ci/lifecycle_jobs2.csv
+echo "parallel lifecycle grid is byte-identical to serial"
+# Columns: 8 events, 9 true_wakes, 10 false_wakes, 20 battery_hours,
+# last = status.
+awk -F, 'NR > 1 {
+    if ($NF != "ok")      { print "FAIL: errored lifecycle cell: " $0; exit 1 }
+    if ($9 + $10 != $8)   { print "FAIL: event not classified exactly once: " $0; exit 1 }
+    if ($20 + 0 <= 0)     { print "FAIL: battery projection unpopulated: " $0; exit 1 }
+}' target/ci/lifecycle_serial.csv
+echo "every lifecycle cell ok: events partition into true/false, lifetimes populated"
+
+echo "== lifecycle store smoke (cold vs warm process) =="
+rm -rf target/ci/lfc-cache
+export VEGA_CACHE_DIR=target/ci/lfc-cache
+./target/release/vega lifecycle "${LIFECYCLE_GRID[@]}" --stats > target/ci/lifecycle_cold.csv 2> target/ci/lifecycle_cold.log
+./target/release/vega lifecycle "${LIFECYCLE_GRID[@]}" --stats > target/ci/lifecycle_warm.csv 2> target/ci/lifecycle_warm.log
+export VEGA_CACHE_DIR="$CI_RUN_CACHE"
+diff target/ci/lifecycle_cold.csv target/ci/lifecycle_warm.csv
+grep -q "disk(lfc): 0 hits / 8 misses / 8 writes" target/ci/lifecycle_cold.log \
+    || { echo "FAIL: cold lifecycle run did not populate the .lfc store:"; cat target/ci/lifecycle_cold.log; exit 1; }
+grep -q "disk(lfc): 8 hits / 0 misses / 0 writes" target/ci/lifecycle_warm.log \
+    || { echo "FAIL: warm lifecycle run did not hit the .lfc store:"; cat target/ci/lifecycle_warm.log; exit 1; }
+echo "warm process served every lifecycle report from the .lfc store tier"
 
 echo "== resume smoke (torn journal tail, byte-identical --resume) =="
 # ISSUE 7 acceptance (a): complete the 4-cell grid, tear the journal's
