@@ -265,7 +265,7 @@ impl Cluster {
             let mut parked = 0usize;
             let mut min_busy = u64::MAX;
             let mut can_issue = false;
-            for c in self.cores[..n_active].iter() {
+            for c in &self.cores[..n_active] {
                 match c.state {
                     CoreState::Halted => n_halted += 1,
                     CoreState::AtBarrier => parked += 1,
@@ -294,7 +294,7 @@ impl Cluster {
                 // would be parked and the barrier would release instead).
                 debug_assert!(min_busy != u64::MAX);
                 let delta = min_busy.min(max_cycles - self.cycle);
-                for c in self.cores[..n_active].iter_mut() {
+                for c in &mut self.cores[..n_active] {
                     if c.state != CoreState::Halted {
                         c.skip_stall_cycles(delta);
                     }
@@ -334,7 +334,7 @@ impl Cluster {
 
             // Event unit: release the barrier when every running core waits.
             if self.event_unit.tick(waiting, running) {
-                for c in self.cores[..n_active].iter_mut() {
+                for c in &mut self.cores[..n_active] {
                     if c.state == CoreState::AtBarrier {
                         c.release_barrier();
                     }
@@ -444,7 +444,7 @@ impl Cluster {
                 .filter(|c| c.state == CoreState::AtBarrier)
                 .count();
             if self.event_unit.tick(waiting, running) {
-                for c in self.cores[..n_active].iter_mut() {
+                for c in &mut self.cores[..n_active] {
                     if c.state == CoreState::AtBarrier {
                         c.release_barrier();
                     }

@@ -228,6 +228,14 @@ fn intern_op_name(s: &str) -> Option<&'static str> {
     OP_NAMES.iter().find(|&&n| n == s).copied()
 }
 
+/// Whether `s` names an operating point the decoder can intern — the
+/// static-verifier side of the [`OP_NAMES`] completeness contract
+/// (`isa::analyze` asserts the table covers every `power::tables`
+/// constant, so a new operating point cannot silently decode as a miss).
+pub fn is_interned_op_name(s: &str) -> bool {
+    intern_op_name(s).is_some()
+}
+
 fn encode_op(w: &mut ByteWriter, op: &OperatingPoint) {
     w.str(op.name);
     w.f64(op.vdd);

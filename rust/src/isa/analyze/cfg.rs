@@ -1,0 +1,498 @@
+//! Basic-block CFG over a symbolic [`Program`], with hardware-loop
+//! edges, reachability, dominators and loop classification.
+//!
+//! Control flow in the guest ISA comes from five places: two-way
+//! branches, direct jumps (`jal`), indirect jumps (`jalr` — never
+//! emitted by the kernel builders, reported as unresolvable), `halt`,
+//! and the two zero-overhead hardware-loop channels. The hardware loops
+//! are the subtle part: `lp.setup lp, count, end` marks the body
+//! `[setup+1, end)`, and the *retire* of the instruction at `end - 1`
+//! either falls out to `end` or loops back to `setup + 1`
+//! ([`crate::iss::core`]'s `finish_retire`). The CFG models that as two
+//! successors of `end - 1`, which over-approximates every dynamic
+//! iteration pattern including nested loops sharing an end pc.
+//!
+//! Branches are always treated as two-way (both successors), so
+//! reachability over-approximates: a block reported unreachable is
+//! unreachable on *every* execution — which is what lets
+//! [`super::report::FindingKind::UnreachableBlock`] carry `Error`
+//! severity without false positives on data-dependent guards.
+
+use crate::isa::inst::{Inst, LoopCount};
+use crate::isa::Program;
+
+use super::report::{AnalysisReport, FindingKind, Severity};
+
+/// A maximal straight-line run of instructions `[start, end)`.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub start: usize,
+    pub end: usize,
+    /// Successor block ids.
+    pub succs: Vec<usize>,
+    /// Predecessor block ids.
+    pub preds: Vec<usize>,
+}
+
+/// One loop in the program (hardware loop or branch back-edge).
+#[derive(Debug, Clone)]
+pub struct LoopInfo {
+    /// Header block id (the block control re-enters each iteration).
+    pub head: usize,
+    /// First pc of the loop body.
+    pub body_start: usize,
+    /// One past the last body pc (hw loops: the `body_end` target).
+    pub body_end: usize,
+    /// `lp.setup` pc for hardware loops, `None` for branch loops.
+    pub setup_pc: Option<usize>,
+    /// Static trip count, when derivable (immediate count, or a
+    /// register count const-propagated by [`super::memcheck`]).
+    pub trip: Option<u32>,
+    /// Body contains no control flow: a superblock candidate.
+    pub straight_line: bool,
+}
+
+/// The control-flow graph plus derived structure.
+pub struct Cfg {
+    pub blocks: Vec<Block>,
+    /// pc -> block id.
+    pub block_of: Vec<usize>,
+    /// Per-block: is there a path from the entry block?
+    pub reachable: Vec<bool>,
+    pub loops: Vec<LoopInfo>,
+}
+
+impl Cfg {
+    /// Is the instruction at `pc` in a reachable block?
+    pub fn pc_reachable(&self, pc: usize) -> bool {
+        self.reachable[self.block_of[pc]]
+    }
+
+    /// Build the CFG and emit structural findings (unreachable blocks,
+    /// indirect jumps, irreducible retreating edges, superblock
+    /// candidates) into `report`.
+    pub fn build(prog: &Program, report: &mut AnalysisReport) -> Cfg {
+        let n = prog.insts.len();
+        assert!(n > 0, "cannot analyze an empty program");
+
+        // -- pc-level successors ----------------------------------------
+        let mut succs: Vec<Vec<usize>> = Vec::with_capacity(n);
+        for (pc, inst) in prog.insts.iter().enumerate() {
+            let s = match *inst {
+                Inst::Branch { target, .. } => vec![pc + 1, target],
+                Inst::Jal { target, .. } => vec![target],
+                Inst::Jalr { .. } => {
+                    report.push(
+                        Severity::Warning,
+                        FindingKind::IndirectJump,
+                        Some(pc),
+                        "jalr target is run-time-computed; control flow past it is unmodeled",
+                    );
+                    vec![]
+                }
+                Inst::Halt => vec![],
+                Inst::LpSetup { count, body_end, .. } => match count {
+                    LoopCount::Imm(0) => vec![body_end],
+                    LoopCount::Imm(_) => vec![pc + 1],
+                    LoopCount::Reg(_) => vec![pc + 1, body_end],
+                },
+                _ => vec![pc + 1],
+            };
+            succs.push(s);
+        }
+        // Hardware-loop back edges: the retire at `end - 1` may return
+        // to the body start. Applies on the fall-through path only, so
+        // instructions that always jump (jal/jalr/halt) don't get one.
+        for (pc, inst) in prog.insts.iter().enumerate() {
+            if let Inst::LpSetup { body_end, .. } = *inst {
+                let body_start = pc + 1;
+                if body_end > body_start && body_end <= n {
+                    let last = body_end - 1;
+                    if !matches!(
+                        prog.insts[last],
+                        Inst::Jal { .. } | Inst::Jalr { .. } | Inst::Halt
+                    ) && !succs[last].contains(&body_start)
+                    {
+                        succs[last].push(body_start);
+                    }
+                }
+            }
+        }
+        // Drop fall-offs past the program end (a well-formed program
+        // ends in halt; the assembler's finish() enforces bounds).
+        for s in &mut succs {
+            s.retain(|&t| t < n);
+        }
+
+        // -- leaders and blocks -----------------------------------------
+        let mut leader = vec![false; n];
+        leader[0] = true;
+        for (pc, s) in succs.iter().enumerate() {
+            if !(s.len() == 1 && s[0] == pc + 1) {
+                // Terminator: successors start blocks, and so does the
+                // textual next instruction.
+                for &t in s {
+                    leader[t] = true;
+                }
+                if pc + 1 < n {
+                    leader[pc + 1] = true;
+                }
+            }
+        }
+        let starts: Vec<usize> = (0..n).filter(|&pc| leader[pc]).collect();
+        let mut block_of = vec![0usize; n];
+        let mut blocks: Vec<Block> = Vec::with_capacity(starts.len());
+        for (b, &start) in starts.iter().enumerate() {
+            let end = starts.get(b + 1).copied().unwrap_or(n);
+            for pc in start..end {
+                block_of[pc] = b;
+            }
+            blocks.push(Block { start, end, succs: Vec::new(), preds: Vec::new() });
+        }
+        for b in 0..blocks.len() {
+            let last = blocks[b].end - 1;
+            let mut bs: Vec<usize> = succs[last].iter().map(|&t| block_of[t]).collect();
+            bs.sort_unstable();
+            bs.dedup();
+            for &t in &bs {
+                blocks[t].preds.push(b);
+            }
+            blocks[b].succs = bs;
+        }
+
+        // -- reachability ------------------------------------------------
+        let mut reachable = vec![false; blocks.len()];
+        let mut stack = vec![0usize];
+        while let Some(b) = stack.pop() {
+            if reachable[b] {
+                continue;
+            }
+            reachable[b] = true;
+            stack.extend(blocks[b].succs.iter().copied());
+        }
+        for (b, blk) in blocks.iter().enumerate() {
+            if !reachable[b] {
+                report.push(
+                    Severity::Error,
+                    FindingKind::UnreachableBlock,
+                    Some(blk.start),
+                    format!("block [{}..{}) is unreachable from entry", blk.start, blk.end),
+                );
+            }
+        }
+
+        // -- dominators (Cooper-Harvey-Kennedy on reachable blocks) ------
+        let rpo = reverse_postorder(&blocks, &reachable);
+        let mut rpo_index = vec![usize::MAX; blocks.len()];
+        for (i, &b) in rpo.iter().enumerate() {
+            rpo_index[b] = i;
+        }
+        let idom = dominators(&blocks, &rpo, &rpo_index);
+
+        // -- loops -------------------------------------------------------
+        let mut cfg = Cfg { blocks, block_of, reachable, loops: Vec::new() };
+        for &u in &rpo {
+            for &v in &cfg.blocks[u].succs.clone() {
+                if rpo_index[v] == usize::MAX || rpo_index[v] > rpo_index[u] {
+                    continue; // unreachable target or forward edge
+                }
+                // Retreating edge u -> v.
+                if dominates(v, u, &idom, &rpo_index) {
+                    // Natural loop (non-hw back edges get a LoopInfo too
+                    // so n_loops reflects every cycle in the graph).
+                    let head = v;
+                    let body_start = cfg.blocks[head].start;
+                    let body_end = cfg.blocks[u].end;
+                    if !cfg.loops.iter().any(|l| l.head == head && l.body_end == body_end) {
+                        cfg.loops.push(LoopInfo {
+                            head,
+                            body_start,
+                            body_end,
+                            setup_pc: None,
+                            trip: None,
+                            straight_line: false,
+                        });
+                    }
+                } else {
+                    report.push(
+                        Severity::Warning,
+                        FindingKind::IrreducibleLoop,
+                        Some(cfg.blocks[u].end - 1),
+                        format!(
+                            "retreating edge to pc {} whose block does not dominate it \
+                             (multi-entry loop)",
+                            cfg.blocks[v].start
+                        ),
+                    );
+                }
+            }
+        }
+        // Hardware loops: refine the matching LoopInfo (or add one) with
+        // the setup pc, immediate trip bound and straight-line shape.
+        for (pc, inst) in prog.insts.iter().enumerate() {
+            let Inst::LpSetup { count, body_end, .. } = *inst else {
+                continue;
+            };
+            if !cfg.pc_reachable(pc) || body_end <= pc + 1 {
+                continue;
+            }
+            let body_start = pc + 1;
+            let trip = match count {
+                LoopCount::Imm(t) => Some(t),
+                LoopCount::Reg(_) => None,
+            };
+            let straight_line = (body_start..body_end).all(|p| {
+                !matches!(
+                    prog.insts[p],
+                    Inst::Branch { .. }
+                        | Inst::Jal { .. }
+                        | Inst::Jalr { .. }
+                        | Inst::LpSetup { .. }
+                        | Inst::Barrier
+                        | Inst::Halt
+                )
+            });
+            let head = cfg.block_of[body_start];
+            if let Some(l) = cfg
+                .loops
+                .iter_mut()
+                .find(|l| l.head == head && l.setup_pc.is_none())
+            {
+                l.setup_pc = Some(pc);
+                l.body_start = body_start;
+                l.body_end = body_end;
+                l.trip = trip;
+                l.straight_line = straight_line;
+            } else {
+                cfg.loops.push(LoopInfo {
+                    head,
+                    body_start,
+                    body_end,
+                    setup_pc: Some(pc),
+                    trip,
+                    straight_line,
+                });
+            }
+        }
+        cfg.loops.sort_by_key(|l| (l.body_start, l.body_end));
+        cfg
+    }
+}
+
+fn reverse_postorder(blocks: &[Block], reachable: &[bool]) -> Vec<usize> {
+    let mut order = Vec::with_capacity(blocks.len());
+    let mut state = vec![0u8; blocks.len()]; // 0 unvisited, 1 open, 2 done
+    let mut stack: Vec<(usize, usize)> = vec![(0, 0)];
+    state[0] = 1;
+    while let Some(&mut (b, ref mut i)) = stack.last_mut() {
+        if *i < blocks[b].succs.len() {
+            let s = blocks[b].succs[*i];
+            *i += 1;
+            if reachable[s] && state[s] == 0 {
+                state[s] = 1;
+                stack.push((s, 0));
+            }
+        } else {
+            state[b] = 2;
+            order.push(b);
+            stack.pop();
+        }
+    }
+    order.reverse();
+    order
+}
+
+/// Immediate dominators over the reachable subgraph, indexed by block id
+/// (`idom[entry] == entry`; unreachable blocks stay `usize::MAX`).
+fn dominators(blocks: &[Block], rpo: &[usize], rpo_index: &[usize]) -> Vec<usize> {
+    let mut idom = vec![usize::MAX; blocks.len()];
+    if rpo.is_empty() {
+        return idom;
+    }
+    let entry = rpo[0];
+    idom[entry] = entry;
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for &b in rpo.iter().skip(1) {
+            let mut new_idom = usize::MAX;
+            for &p in &blocks[b].preds {
+                if idom[p] == usize::MAX {
+                    continue; // pred not yet processed / unreachable
+                }
+                new_idom = if new_idom == usize::MAX {
+                    p
+                } else {
+                    intersect(new_idom, p, &idom, rpo_index)
+                };
+            }
+            if new_idom != usize::MAX && idom[b] != new_idom {
+                idom[b] = new_idom;
+                changed = true;
+            }
+        }
+    }
+    idom
+}
+
+fn intersect(mut a: usize, mut b: usize, idom: &[usize], rpo_index: &[usize]) -> usize {
+    while a != b {
+        while rpo_index[a] > rpo_index[b] {
+            a = idom[a];
+        }
+        while rpo_index[b] > rpo_index[a] {
+            b = idom[b];
+        }
+    }
+    a
+}
+
+/// Does block `a` dominate block `b`?
+fn dominates(a: usize, b: usize, idom: &[usize], rpo_index: &[usize]) -> bool {
+    if idom[a] == usize::MAX || idom[b] == usize::MAX {
+        return false;
+    }
+    let mut x = b;
+    loop {
+        if x == a {
+            return true;
+        }
+        if idom[x] == x {
+            return false; // reached entry
+        }
+        // idom strictly decreases rpo index, so this terminates.
+        debug_assert!(rpo_index[idom[x]] < rpo_index[x]);
+        x = idom[x];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, T0};
+
+    fn build(prog: &Program) -> (Cfg, AnalysisReport) {
+        let mut r = AnalysisReport::new(&prog.name, prog.insts.len());
+        let cfg = Cfg::build(prog, &mut r);
+        (cfg, r)
+    }
+
+    #[test]
+    fn straight_line_is_one_block() {
+        let mut a = Asm::new("t");
+        a.li(A0, 1);
+        a.addi(A0, A0, 1);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, r) = build(&p);
+        assert_eq!(cfg.blocks.len(), 1);
+        assert!(cfg.reachable[0]);
+        assert_eq!(r.findings.len(), 0);
+    }
+
+    #[test]
+    fn branch_splits_blocks_both_ways() {
+        let mut a = Asm::new("t");
+        let skip = a.label();
+        a.li(A0, 0);
+        a.beq(A0, 0, skip);
+        a.li(A1, 1); // fall-through arm
+        a.bind(skip);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, _) = build(&p);
+        // [li, beq], [li], [halt]
+        assert_eq!(cfg.blocks.len(), 3);
+        assert_eq!(cfg.blocks[0].succs, vec![1, 2]);
+        assert!(cfg.reachable.iter().all(|&r| r));
+    }
+
+    #[test]
+    fn code_after_jump_is_unreachable_error() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.j(end);
+        a.li(A0, 1); // dead
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, r) = build(&p);
+        assert!(!cfg.pc_reachable(1));
+        assert!(r.has_error(FindingKind::UnreachableBlock));
+    }
+
+    #[test]
+    fn hw_loop_gets_back_edge_and_superblock_shape() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.lp_setup_imm(0, 10, end);
+        a.addi(A0, A0, 1);
+        a.mac(A1, A0, A0);
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, r) = build(&p);
+        assert_eq!(cfg.loops.len(), 1);
+        let l = &cfg.loops[0];
+        assert_eq!(l.setup_pc, Some(0));
+        assert_eq!(l.trip, Some(10));
+        assert!(l.straight_line);
+        assert_eq!((l.body_start, l.body_end), (1, 3));
+        // Body block loops to itself and exits to the halt block.
+        let body = cfg.block_of[1];
+        assert!(cfg.blocks[body].succs.contains(&body));
+        assert_eq!(r.error_count(), 0);
+    }
+
+    #[test]
+    fn branch_loop_is_reducible_natural_loop() {
+        let mut a = Asm::new("t");
+        let head = a.label();
+        a.li(T0, 10);
+        a.bind(head);
+        a.addi(T0, T0, -1);
+        a.bne(T0, 0, head);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, r) = build(&p);
+        assert_eq!(cfg.loops.len(), 1);
+        assert_eq!(cfg.loops[0].setup_pc, None);
+        assert!(!r.findings.iter().any(|f| f.kind == FindingKind::IrreducibleLoop));
+        assert_eq!(r.error_count(), 0);
+    }
+
+    #[test]
+    fn jalr_reports_indirect_jump() {
+        use crate::isa::Inst;
+        let mut a = Asm::new("t");
+        a.li(RA_SCRATCH, 3);
+        a.halt();
+        a.halt();
+        let mut p = a.finish().unwrap();
+        p.insts[1] = Inst::Jalr { rd: 0, rs1: RA_SCRATCH };
+        let (_, r) = build(&p);
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::IndirectJump));
+    }
+
+    const RA_SCRATCH: u8 = 5;
+
+    #[test]
+    fn nested_loops_shared_end() {
+        let mut a = Asm::new("t");
+        let end1 = a.label();
+        let end0 = a.label();
+        a.lp_setup_imm(1, 5, end1);
+        a.lp_setup_imm(0, 3, end0);
+        a.addi(A0, A0, 1);
+        a.bind(end0);
+        a.addi(A1, A1, 1);
+        a.bind(end1);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (cfg, r) = build(&p);
+        assert_eq!(cfg.loops.len(), 2);
+        assert!(cfg.loops.iter().any(|l| l.trip == Some(3)));
+        assert!(cfg.loops.iter().any(|l| l.trip == Some(5)));
+        assert_eq!(r.error_count(), 0);
+    }
+}

@@ -1,0 +1,348 @@
+//! Register dataflow: definite assignment and liveness over the CFG.
+//!
+//! Four checks, all on 32-bit register bitmasks (bit `r` = register
+//! `x{r}`), iterated to fixpoint over the reachable blocks of the
+//! [`Cfg`]:
+//!
+//! * **uninit-read** (`Error`) — a reachable instruction reads a
+//!   register that *no* reachable instruction defines and the entry
+//!   state does not initialize. Wrong on every execution.
+//! * **maybe-uninit-read** (`Warning`) — forward definite-assignment
+//!   (meet = intersection): the register is defined somewhere, but some
+//!   path from entry reaches the read without passing a definition.
+//! * **dead-reg-write** (`Warning`) — backward may-liveness: the
+//!   written value can never be read on any path. Warning, not error:
+//!   the kmeans/svm argmin loops end with a conditional-select `mv`
+//!   whose final iteration is genuinely (and harmlessly) dead.
+//! * **write-to-zero** (`Warning`) — a computation into hardwired x0
+//!   (`jal`/`jalr` with `rd = x0` are the idiomatic discard and exempt).
+//!
+//! [`defs`] and [`mnemonic`] are deliberately wildcard-free matches
+//! over [`Inst`]: adding a variant without deciding its analyzer
+//! behavior is a compile error (the exhaustiveness-guard satellite).
+
+use crate::isa::inst::Inst;
+use crate::isa::{Program, Reg};
+
+use super::cfg::Cfg;
+use super::report::{AnalysisReport, FindingKind, Severity};
+
+/// Registers *written* by this instruction, including side-effect defs
+/// the ISS applies outside the primary destination: post-increment
+/// loads/stores bump `rs1` after the access.
+///
+/// Exhaustive on purpose — no wildcard arm. A new [`Inst`] variant
+/// fails to compile until its def set is stated here.
+pub fn defs(inst: &Inst) -> [Option<Reg>; 2] {
+    match *inst {
+        Inst::Alu { rd, .. }
+        | Inst::AluImm { rd, .. }
+        | Inst::Li { rd, .. }
+        | Inst::Mac { rd, .. }
+        | Inst::Msu { rd, .. }
+        | Inst::Simd { rd, .. }
+        | Inst::Fp { rd, .. }
+        | Inst::Jal { rd, .. }
+        | Inst::Jalr { rd, .. } => [Some(rd), None],
+        Inst::Load { rd, rs1, post_inc, .. } => {
+            [Some(rd), if post_inc { Some(rs1) } else { None }]
+        }
+        Inst::Store { rs1, post_inc, .. } => [if post_inc { Some(rs1) } else { None }, None],
+        Inst::Branch { .. } | Inst::LpSetup { .. } | Inst::Barrier | Inst::Halt | Inst::Nop => {
+            [None, None]
+        }
+    }
+}
+
+/// Stable mnemonic per variant — the analyzer-side name table.
+/// Exhaustive on purpose (see [`defs`]).
+pub fn mnemonic(inst: &Inst) -> &'static str {
+    match inst {
+        Inst::Alu { .. } => "alu",
+        Inst::AluImm { .. } => "alui",
+        Inst::Li { .. } => "li",
+        Inst::Load { .. } => "load",
+        Inst::Store { .. } => "store",
+        Inst::Branch { .. } => "branch",
+        Inst::Jal { .. } => "jal",
+        Inst::Jalr { .. } => "jalr",
+        Inst::Mac { .. } => "mac",
+        Inst::Msu { .. } => "msu",
+        Inst::Simd { .. } => "simd",
+        Inst::LpSetup { .. } => "lp.setup",
+        Inst::Fp { .. } => "fp",
+        Inst::Barrier => "barrier",
+        Inst::Halt => "halt",
+        Inst::Nop => "nop",
+    }
+}
+
+fn def_bits(inst: &Inst) -> u32 {
+    let mut m = 0u32;
+    for d in defs(inst).into_iter().flatten() {
+        m |= 1 << d;
+    }
+    m & !1 // x0 is hardwired; writes to it do not define anything
+}
+
+fn use_bits(inst: &Inst) -> u32 {
+    let mut m = 0u32;
+    for s in inst.srcs().into_iter().flatten() {
+        m |= 1 << s;
+    }
+    m
+}
+
+fn rname(r: Reg) -> String {
+    format!("x{r}")
+}
+
+/// Run all register-dataflow checks. `entry_mask` holds the registers
+/// the launch state initializes (bit 0 / x0 is implied).
+pub fn run(prog: &Program, cfg: &Cfg, entry_mask: u32, report: &mut AnalysisReport) {
+    let entry_mask = entry_mask | 1;
+    let nb = cfg.blocks.len();
+
+    // -- global may-def over reachable code ------------------------------
+    let mut may_def = 0u32;
+    for (pc, inst) in prog.insts.iter().enumerate() {
+        if cfg.pc_reachable(pc) {
+            may_def |= def_bits(inst);
+        }
+    }
+    report.may_def_mask = may_def;
+    let ever_defined = may_def | entry_mask;
+
+    // uninit-read: a read outside everything any path could define.
+    for (pc, inst) in prog.insts.iter().enumerate() {
+        if !cfg.pc_reachable(pc) {
+            continue;
+        }
+        let undef = use_bits(inst) & !ever_defined;
+        for r in 0..32u8 {
+            if undef & (1 << r) != 0 {
+                report.push(
+                    Severity::Error,
+                    FindingKind::UninitRead,
+                    Some(pc),
+                    format!(
+                        "{} reads {}, which no instruction writes and entry does not set",
+                        mnemonic(inst),
+                        rname(r)
+                    ),
+                );
+            }
+        }
+    }
+
+    // -- forward definite assignment (meet = intersection) ---------------
+    let block_def: Vec<u32> = cfg
+        .blocks
+        .iter()
+        .map(|b| (b.start..b.end).map(|pc| def_bits(&prog.insts[pc])).fold(0, |a, m| a | m))
+        .collect();
+    let mut din = vec![u32::MAX; nb];
+    din[0] = entry_mask;
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for b in 0..nb {
+            if !cfg.reachable[b] {
+                continue;
+            }
+            let mut inb = if b == 0 { entry_mask } else { u32::MAX };
+            for &p in &cfg.blocks[b].preds {
+                if cfg.reachable[p] {
+                    inb &= din[p] | block_def[p];
+                }
+            }
+            if inb != din[b] {
+                din[b] = inb;
+                changed = true;
+            }
+        }
+    }
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        if !cfg.reachable[b] {
+            continue;
+        }
+        let mut cur = din[b];
+        for pc in blk.start..blk.end {
+            let inst = &prog.insts[pc];
+            // Only registers that *are* defined somewhere — otherwise the
+            // uninit-read Error above already covers them.
+            let maybe = use_bits(inst) & !cur & ever_defined;
+            for r in 0..32u8 {
+                if maybe & (1 << r) != 0 {
+                    report.push(
+                        Severity::Warning,
+                        FindingKind::MaybeUninitRead,
+                        Some(pc),
+                        format!(
+                            "{} reads {}, which is not assigned on every path from entry",
+                            mnemonic(inst),
+                            rname(r)
+                        ),
+                    );
+                }
+            }
+            cur |= def_bits(inst);
+        }
+    }
+
+    // -- backward may-liveness -------------------------------------------
+    // use[b] = upward-exposed uses; kill[b] = defined-before-used.
+    let mut b_use = vec![0u32; nb];
+    let mut b_kill = vec![0u32; nb];
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        let (mut u, mut k) = (0u32, 0u32);
+        for pc in blk.start..blk.end {
+            let inst = &prog.insts[pc];
+            u |= use_bits(inst) & !k;
+            k |= def_bits(inst);
+        }
+        b_use[b] = u;
+        b_kill[b] = k;
+    }
+    let mut lout = vec![0u32; nb];
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for b in (0..nb).rev() {
+            let mut o = 0u32;
+            for &s in &cfg.blocks[b].succs {
+                o |= b_use[s] | (lout[s] & !b_kill[s]);
+            }
+            if o != lout[b] {
+                lout[b] = o;
+                changed = true;
+            }
+        }
+    }
+    for (b, blk) in cfg.blocks.iter().enumerate() {
+        if !cfg.reachable[b] {
+            continue;
+        }
+        let mut live = lout[b];
+        for pc in (blk.start..blk.end).rev() {
+            let inst = &prog.insts[pc];
+            if let Some(rd) = inst.dst() {
+                if rd == 0 {
+                    if !matches!(inst, Inst::Jal { .. } | Inst::Jalr { .. }) {
+                        report.push(
+                            Severity::Warning,
+                            FindingKind::WriteToZero,
+                            Some(pc),
+                            format!("{} writes x0, which is hardwired zero", mnemonic(inst)),
+                        );
+                    }
+                } else if live & (1 << rd) == 0
+                    && !matches!(inst, Inst::Jal { .. } | Inst::Jalr { .. })
+                {
+                    report.push(
+                        Severity::Warning,
+                        FindingKind::DeadRegWrite,
+                        Some(pc),
+                        format!(
+                            "{} writes {}, but no path reads it back",
+                            mnemonic(inst),
+                            rname(rd)
+                        ),
+                    );
+                }
+            }
+            live &= !def_bits(inst);
+            live |= use_bits(inst);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, T0, T1};
+
+    fn analyze_with(prog: &Program, entry: u32) -> AnalysisReport {
+        let mut r = AnalysisReport::new(&prog.name, prog.insts.len());
+        let cfg = Cfg::build(prog, &mut r);
+        run(prog, &cfg, entry, &mut r);
+        r
+    }
+
+    #[test]
+    fn defs_cover_post_increment_pointer() {
+        use crate::isa::inst::MemSize;
+        let ld = Inst::Load { size: MemSize::W, rd: 10, rs1: 11, imm: 4, post_inc: true };
+        assert_eq!(defs(&ld), [Some(10), Some(11)]);
+        let st = Inst::Store { size: MemSize::W, rs2: 10, rs1: 11, imm: 4, post_inc: true };
+        assert_eq!(defs(&st), [Some(11), None]);
+        let st2 = Inst::Store { size: MemSize::W, rs2: 10, rs1: 11, imm: 4, post_inc: false };
+        assert_eq!(defs(&st2), [None, None]);
+    }
+
+    #[test]
+    fn uninit_read_is_error() {
+        let mut a = Asm::new("t");
+        a.add(A0, T0, T1); // T0/T1 never written, not in entry
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze_with(&p, 0);
+        assert!(r.has_error(FindingKind::UninitRead));
+        assert_eq!(r.findings.iter().filter(|f| f.kind == FindingKind::UninitRead).count(), 2);
+    }
+
+    #[test]
+    fn entry_regs_are_initialized() {
+        let mut a = Asm::new("t");
+        a.add(A1, A0, A0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze_with(&p, 1 << A0);
+        assert!(!r.has_error(FindingKind::UninitRead));
+    }
+
+    #[test]
+    fn branch_defined_register_warns_maybe_uninit() {
+        let mut a = Asm::new("t");
+        let skip = a.label();
+        a.beq(A0, 0, skip); // A0 from entry
+        a.li(T0, 7); // only on fall-through
+        a.bind(skip);
+        a.add(A1, T0, A0); // T0 unset when branch taken
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze_with(&p, 1 << A0);
+        assert!(!r.has_error(FindingKind::UninitRead));
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::MaybeUninitRead));
+    }
+
+    #[test]
+    fn dead_write_and_write_to_zero_warn() {
+        let mut a = Asm::new("t");
+        a.li(T0, 1); // never read
+        a.li(0, 9); // x0
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze_with(&p, 0);
+        assert_eq!(r.error_count(), 0);
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::DeadRegWrite));
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::WriteToZero));
+    }
+
+    #[test]
+    fn loop_carried_accumulator_is_live() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(T0, 0);
+        a.lp_setup_imm(0, 8, end);
+        a.addi(T0, T0, 3); // live across the hw-loop back edge
+        a.bind(end);
+        a.add(A0, T0, T0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze_with(&p, 0);
+        assert!(!r.findings.iter().any(|f| {
+            f.kind == FindingKind::DeadRegWrite && f.pc == Some(2)
+        }));
+    }
+}

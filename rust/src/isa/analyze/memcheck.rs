@@ -1,0 +1,460 @@
+//! Constant propagation and static memory-access checking against the
+//! SoC memory map.
+//!
+//! A Kildall worklist runs a flat constant lattice (`Top` / known `u32`)
+//! over the reachable blocks of the [`Cfg`], transferring through the
+//! *live executor* ([`crate::iss::exec::alu`] is total, so folding an
+//! ALU op can never disagree with what the ISS computes). Every memory
+//! access whose address resolves to a constant is then checked against
+//! the memory map the fabrics actually decode:
+//!
+//! * TCDM: `[TCDM_BASE, TCDM_BASE + TCDM_SIZE)`, 16 word-interleaved
+//!   banks ([`crate::cluster::tcdm`]);
+//! * L2: `[L2_BASE, L2_BASE + L2_SIZE)` ([`crate::soc::l2`]);
+//! * MRAM is *not* core-addressable (it DMAs images into L2/TCDM), so
+//!   no guest access may land there.
+//!
+//! Out-of-range or element-misaligned constant accesses are `Error`s:
+//! the address holds on every execution, so the program faults on every
+//! execution. Resolved accesses are recorded as [`MemFact`]s for the
+//! static-vs-dynamic oracle; run-time-computed addresses are counted
+//! into one `Info` finding and left to the oracle's traced run.
+//! Also found here: block-local dead stores (same constant address and
+//! width stored twice with no possible intervening read — `Error`) and
+//! register-count hardware-loop trip bounds for the superblock report.
+
+use std::collections::HashMap;
+
+use crate::cluster::tcdm::{TCDM_BANKS, TCDM_BASE, TCDM_SIZE};
+use crate::isa::inst::Inst;
+use crate::isa::predecode::DecodedKind;
+use crate::isa::{Program, Reg};
+use crate::iss::exec;
+use crate::soc::l2::{L2_BASE, L2_SIZE};
+
+use super::cfg::Cfg;
+use super::report::{AnalysisReport, FindingKind, MemFact, Severity};
+
+/// Flat constant lattice: unknown, or one proven 32-bit value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Val {
+    Top,
+    C(u32),
+}
+
+impl Val {
+    fn join(self, other: Val) -> Val {
+        match (self, other) {
+            (Val::C(a), Val::C(b)) if a == b => Val::C(a),
+            _ => Val::Top,
+        }
+    }
+}
+
+/// One abstract register file. x0 stays `C(0)` by construction.
+type Env = [Val; 32];
+
+fn set(env: &mut Env, r: Reg, v: Val) {
+    if r != 0 {
+        env[r as usize] = v;
+    }
+}
+
+/// Abstract transfer of one instruction, mirroring `Core::exec_local` /
+/// the retire paths. Anything not provably constant becomes `Top`.
+fn transfer(env: &mut Env, inst: &Inst) {
+    match *inst {
+        Inst::Alu { op, rd, rs1, rs2 } => {
+            let v = match (env[rs1 as usize], env[rs2 as usize]) {
+                // exec::alu is total (div-by-zero and overflow defined),
+                // so folding through it is unconditionally safe.
+                (Val::C(a), Val::C(b)) => Val::C(exec::alu(op, a, b)),
+                _ => Val::Top,
+            };
+            set(env, rd, v);
+        }
+        Inst::AluImm { op, rd, rs1, imm } => {
+            let v = match env[rs1 as usize] {
+                Val::C(a) => Val::C(exec::alu(op, a, imm as u32)),
+                Val::Top => Val::Top,
+            };
+            set(env, rd, v);
+        }
+        Inst::Li { rd, imm } => set(env, rd, Val::C(imm as u32)),
+        Inst::Load { rd, rs1, imm, post_inc, .. } => {
+            set(env, rd, Val::Top);
+            if post_inc {
+                let v = match env[rs1 as usize] {
+                    Val::C(a) => Val::C(a.wrapping_add(imm as u32)),
+                    Val::Top => Val::Top,
+                };
+                set(env, rs1, v);
+            }
+        }
+        Inst::Store { rs1, imm, post_inc, .. } => {
+            if post_inc {
+                let v = match env[rs1 as usize] {
+                    Val::C(a) => Val::C(a.wrapping_add(imm as u32)),
+                    Val::Top => Val::Top,
+                };
+                set(env, rs1, v);
+            }
+        }
+        // Link values and data-dependent results: sound as unknown.
+        Inst::Jal { rd, .. } | Inst::Jalr { rd, .. } => set(env, rd, Val::Top),
+        Inst::Mac { rd, .. }
+        | Inst::Msu { rd, .. }
+        | Inst::Simd { rd, .. }
+        | Inst::Fp { rd, .. } => set(env, rd, Val::Top),
+        Inst::Branch { .. } | Inst::LpSetup { .. } | Inst::Barrier | Inst::Halt | Inst::Nop => {}
+    }
+}
+
+fn region_name(addr: u32) -> Option<&'static str> {
+    let tcdm_end = TCDM_BASE + TCDM_SIZE as u32;
+    let l2_end = L2_BASE + L2_SIZE as u32;
+    if (TCDM_BASE..tcdm_end).contains(&addr) {
+        Some("TCDM")
+    } else if (L2_BASE..l2_end).contains(&addr) {
+        Some("L2")
+    } else {
+        None
+    }
+}
+
+/// Does `[addr, addr + bytes)` sit entirely inside one mapped region?
+fn in_bounds(addr: u32, bytes: u32) -> bool {
+    // `addr` is inside the region, so the end sums cannot overflow.
+    match region_name(addr) {
+        Some("TCDM") => addr + bytes <= TCDM_BASE + TCDM_SIZE as u32,
+        Some("L2") => addr + bytes <= L2_BASE + L2_SIZE as u32,
+        _ => false,
+    }
+}
+
+/// Are `[a, a+ab)` and `[b, b+bb)` disjoint? (u64 math: an out-of-bounds
+/// constant near `u32::MAX` still lands in the dead-store map.)
+fn disjoint(a: u32, ab: u32, b: u32, bb: u32) -> bool {
+    u64::from(a) + u64::from(ab) <= u64::from(b) || u64::from(b) + u64::from(bb) <= u64::from(a)
+}
+
+/// Run constant propagation + memory checks. `entry` is the launch
+/// register state (everything else starts `Top` — *not* zero, so every
+/// resolved address is entry-state-implied and holds on all executions).
+///
+/// Returns the register-count hardware loops whose trip count resolved:
+/// `setup_pc -> trip`.
+pub fn run(
+    prog: &Program,
+    cfg: &Cfg,
+    entry: &[(Reg, u32)],
+    report: &mut AnalysisReport,
+) -> HashMap<usize, u32> {
+    let nb = cfg.blocks.len();
+    let mut entry_env: Env = [Val::Top; 32];
+    entry_env[0] = Val::C(0);
+    for &(r, v) in entry {
+        set(&mut entry_env, r, Val::C(v));
+    }
+
+    // -- fixpoint: block-entry environments ------------------------------
+    let mut ins: Vec<Option<Env>> = vec![None; nb];
+    ins[0] = Some(entry_env);
+    let mut work = vec![0usize];
+    while let Some(b) = work.pop() {
+        let mut env = ins[b].expect("worklist block without IN env");
+        for pc in cfg.blocks[b].start..cfg.blocks[b].end {
+            transfer(&mut env, &prog.insts[pc]);
+        }
+        for &s in &cfg.blocks[b].succs {
+            let changed = match ins[s] {
+                None => {
+                    ins[s] = Some(env);
+                    true
+                }
+                Some(cur) => {
+                    let mut joined = cur;
+                    for (j, v) in joined.iter_mut().enumerate() {
+                        *v = v.join(env[j]);
+                    }
+                    if joined != cur {
+                        ins[s] = Some(joined);
+                        true
+                    } else {
+                        false
+                    }
+                }
+            };
+            if changed {
+                work.push(s);
+            }
+        }
+    }
+
+    // -- final pass: check each reachable access once --------------------
+    let pre = prog.predecode();
+    let mut trips: HashMap<usize, u32> = HashMap::new();
+    let mut unresolved = 0usize;
+    for b in 0..nb {
+        let Some(mut env) = ins[b] else { continue };
+        // (addr, bytes) -> pc of the last store nothing could have read.
+        let mut last_store: HashMap<(u32, u32), usize> = HashMap::new();
+        for pc in cfg.blocks[b].start..cfg.blocks[b].end {
+            let inst = &prog.insts[pc];
+            if let Inst::LpSetup { count: crate::isa::inst::LoopCount::Reg(r), .. } = *inst {
+                if let Val::C(n) = env[r as usize] {
+                    trips.insert(pc, n);
+                }
+            }
+            // Single wildcard-free dispatch over the predecoded kind: a
+            // new DecodedKind must state its memory behavior here.
+            match pre.recs[pc].kind {
+                DecodedKind::Mem { write, size, rs1, imm, post_inc, .. } => {
+                    let addr = if post_inc {
+                        env[rs1 as usize]
+                    } else {
+                        match env[rs1 as usize] {
+                            Val::C(a) => Val::C(a.wrapping_add(imm as u32)),
+                            Val::Top => Val::Top,
+                        }
+                    };
+                    match addr {
+                        Val::C(a) => {
+                            let bytes = size.bytes();
+                            if !in_bounds(a, bytes) {
+                                report.push(
+                                    Severity::Error,
+                                    FindingKind::OutOfBounds,
+                                    Some(pc),
+                                    format!(
+                                        "{} of {bytes} B at {a:#010x} is outside TCDM \
+                                         [{TCDM_BASE:#010x}, {:#010x}) and L2 \
+                                         [{L2_BASE:#010x}, {:#010x}) (MRAM is not \
+                                         core-addressable)",
+                                        if write { "store" } else { "load" },
+                                        TCDM_BASE + TCDM_SIZE as u32,
+                                        L2_BASE + L2_SIZE as u32,
+                                    ),
+                                );
+                            }
+                            if a % bytes != 0 {
+                                report.push(
+                                    Severity::Error,
+                                    FindingKind::Misaligned,
+                                    Some(pc),
+                                    format!(
+                                        "{} address {a:#010x} is not {bytes}-byte aligned",
+                                        if write { "store" } else { "load" },
+                                    ),
+                                );
+                            }
+                            report.resolved_mem[pc] = Some(MemFact { addr: a, bytes, write });
+                            if region_name(a) == Some("TCDM") {
+                                let bank = ((a - TCDM_BASE) >> 2) as usize % TCDM_BANKS;
+                                report.tcdm_bank_mask |= 1 << bank;
+                            }
+                            if write {
+                                if let Some(&dead_pc) = last_store.get(&(a, bytes)) {
+                                    report.push(
+                                        Severity::Error,
+                                        FindingKind::DeadStore,
+                                        Some(dead_pc),
+                                        format!(
+                                            "store to {a:#010x} ({bytes} B) is overwritten \
+                                             at pc {pc} with no possible read in between",
+                                        ),
+                                    );
+                                }
+                                // A differently-shaped overlap only partially
+                                // survives — drop it without reporting.
+                                last_store.retain(|&(sa, sb), _| disjoint(sa, sb, a, bytes));
+                                last_store.insert((a, bytes), pc);
+                            } else {
+                                last_store.retain(|&(sa, sb), _| disjoint(sa, sb, a, bytes));
+                            }
+                        }
+                        Val::Top => {
+                            unresolved += 1;
+                            // Unknown address may alias anything.
+                            last_store.clear();
+                        }
+                    }
+                }
+                // Another core may observe TCDM around a barrier.
+                DecodedKind::Barrier => last_store.clear(),
+                DecodedKind::Fp { .. } | DecodedKind::Halt | DecodedKind::Local => {}
+            }
+            transfer(&mut env, inst);
+        }
+    }
+    if unresolved > 0 {
+        report.push(
+            Severity::Info,
+            FindingKind::UnresolvedAccess,
+            None,
+            format!(
+                "{unresolved} access site(s) have run-time-computed addresses; \
+                 the dynamic oracle checks them against the traced ISS"
+            ),
+        );
+    }
+    trips
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, T0, T1};
+
+    fn analyze(prog: &Program, entry: &[(Reg, u32)]) -> (AnalysisReport, HashMap<usize, u32>) {
+        let mut r = AnalysisReport::new(&prog.name, prog.insts.len());
+        let cfg = Cfg::build(prog, &mut r);
+        let trips = run(prog, &cfg, entry, &mut r);
+        (r, trips)
+    }
+
+    #[test]
+    fn resolved_tcdm_access_is_clean_and_recorded() {
+        let mut a = Asm::new("t");
+        a.li(A0, TCDM_BASE as i32);
+        a.lw(T0, A0, 8);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert_eq!(r.error_count(), 0);
+        assert_eq!(
+            r.resolved_mem[1],
+            Some(MemFact { addr: TCDM_BASE + 8, bytes: 4, write: false })
+        );
+        assert_eq!(r.tcdm_bank_mask, 1 << 2); // word 2 -> bank 2
+    }
+
+    #[test]
+    fn out_of_bounds_constant_address_is_error() {
+        let mut a = Asm::new("t");
+        a.li(A0, (TCDM_BASE + TCDM_SIZE as u32) as i32);
+        a.lw(T0, A0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert!(r.has_error(FindingKind::OutOfBounds));
+    }
+
+    #[test]
+    fn misaligned_word_load_is_error() {
+        let mut a = Asm::new("t");
+        a.li(A0, (TCDM_BASE + 2) as i32);
+        a.lw(T0, A0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert!(r.has_error(FindingKind::Misaligned));
+        // A halfword access at the same address is fine.
+        let mut a = Asm::new("t");
+        a.li(A0, (TCDM_BASE + 2) as i32);
+        a.lh(T0, A0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert_eq!(r.error_count(), 0);
+    }
+
+    #[test]
+    fn double_store_same_address_is_dead_store() {
+        let mut a = Asm::new("t");
+        a.li(A0, TCDM_BASE as i32);
+        a.li(T0, 1);
+        a.li(T1, 2);
+        a.sw(T0, A0, 0);
+        a.sw(T1, A0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert!(r.has_error(FindingKind::DeadStore));
+        let f = r.findings.iter().find(|f| f.kind == FindingKind::DeadStore).unwrap();
+        assert_eq!(f.pc, Some(3)); // the overwritten store
+    }
+
+    #[test]
+    fn intervening_load_keeps_store_alive() {
+        let mut a = Asm::new("t");
+        a.li(A0, TCDM_BASE as i32);
+        a.li(T0, 1);
+        a.sw(T0, A0, 0);
+        a.lw(T1, A0, 0);
+        a.sw(T1, A0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert!(!r.has_error(FindingKind::DeadStore));
+    }
+
+    #[test]
+    fn entry_state_resolves_addresses() {
+        let mut a = Asm::new("t");
+        a.lw(T0, A0, 4);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[(A0, TCDM_BASE)]);
+        assert_eq!(r.error_count(), 0);
+        assert_eq!(
+            r.resolved_mem[0],
+            Some(MemFact { addr: TCDM_BASE + 4, bytes: 4, write: false })
+        );
+        // Without the entry fact the address is unresolved, not an error.
+        let (r, _) = analyze(&p, &[]);
+        assert!(r.resolved_mem[0].is_none());
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::UnresolvedAccess));
+    }
+
+    #[test]
+    fn loop_varying_pointer_goes_top() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(A0, TCDM_BASE as i32);
+        a.lp_setup_imm(0, 4, end);
+        a.lw_pi(T0, A0, 4); // A0 varies across iterations
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        // Joined env makes the pointer Top: unresolved, no false error.
+        assert_eq!(r.error_count(), 0);
+        assert!(r.resolved_mem[2].is_none());
+    }
+
+    #[test]
+    fn register_trip_count_resolves() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(T0, 12);
+        a.lp_setup(0, T0, end);
+        a.addi(A0, A0, 1);
+        a.bind(end);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (_, trips) = analyze(&p, &[(A0, 0)]);
+        assert_eq!(trips.get(&1), Some(&12));
+    }
+
+    #[test]
+    fn exec_alu_folding_matches_executor() {
+        use crate::isa::inst::AluOp;
+        // Spot-check the totality contract memcheck relies on.
+        assert_eq!(exec::alu(AluOp::Div, 5, 0), u32::MAX);
+        assert_eq!(exec::alu(AluOp::Rem, 5, 0), 5);
+        let mut a = Asm::new("t");
+        a.li(A0, TCDM_BASE as i32);
+        a.addi(A0, A0, 64);
+        a.slli(T0, A0, 0);
+        a.lw(T1, T0, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, _) = analyze(&p, &[]);
+        assert_eq!(
+            r.resolved_mem[3],
+            Some(MemFact { addr: TCDM_BASE + 64, bytes: 4, write: false })
+        );
+        assert_eq!(r.error_count(), 0);
+    }
+}

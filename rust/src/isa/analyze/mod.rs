@@ -1,0 +1,172 @@
+//! ISA-level static verifier: CFG + dataflow over guest programs.
+//!
+//! `vega verify` runs this over every shipped kernel/bench program (see
+//! [`crate::sweep::scenario::verify_targets`]) and fails on any
+//! [`Severity::Error`] finding. The pipeline:
+//!
+//! 1. [`cfg`] — basic-block CFG with hardware-loop back edges,
+//!    reachability, dominators, loop records;
+//! 2. [`dataflow`] — register definite-assignment and liveness
+//!    (uninit reads, dead writes);
+//! 3. [`memcheck`] — constant propagation through the live executor and
+//!    memory-map/alignment/dead-store checks, producing the
+//!    [`MemFact`]s the static-vs-dynamic oracle replays against the
+//!    traced ISS ([`crate::iss::trace`]).
+//!
+//! Everything lands in one severity-sorted [`AnalysisReport`] per
+//! (program, entry state). The CFG/loop output (straight-line hardware
+//! loops with static trip bounds) is the direct feedstock for the
+//! ROADMAP superblock/trace-execution item.
+
+pub mod cfg;
+pub mod dataflow;
+pub mod memcheck;
+pub mod report;
+
+pub use cfg::{Block, Cfg, LoopInfo};
+pub use report::{AnalysisReport, Finding, FindingKind, MemFact, Severity};
+
+use crate::isa::{Program, Reg};
+
+/// Analyze `prog` under the launch register state `entry`
+/// (`(register, value)` pairs, exactly what the kernel drivers pass to
+/// the ISS). Returns the severity-sorted report.
+pub fn analyze(prog: &Program, entry: &[(Reg, u32)]) -> AnalysisReport {
+    analyze_full(prog, entry).0
+}
+
+/// [`analyze`], additionally returning the [`Cfg`] (with loop trip
+/// counts upgraded by constant propagation) for consumers that want the
+/// structure itself — the superblock work feeds on this.
+pub fn analyze_full(prog: &Program, entry: &[(Reg, u32)]) -> (AnalysisReport, Cfg) {
+    let mut report = AnalysisReport::new(&prog.name, prog.insts.len());
+    let mut cfg = Cfg::build(prog, &mut report);
+
+    let mut entry_mask = 0u32;
+    for &(r, _) in entry {
+        entry_mask |= 1 << r;
+    }
+    dataflow::run(prog, &cfg, entry_mask, &mut report);
+    let trips = memcheck::run(prog, &cfg, entry, &mut report);
+
+    // Upgrade register-count hardware loops whose trip constant-folded,
+    // then surface straight-line loops as superblock candidates.
+    for l in &mut cfg.loops {
+        if let (Some(setup), None) = (l.setup_pc, l.trip) {
+            l.trip = trips.get(&setup).copied();
+        }
+        if l.straight_line {
+            let trip = match l.trip {
+                Some(t) => format!("static trip count {t}"),
+                None => "run-time trip count".to_string(),
+            };
+            report.push(
+                Severity::Info,
+                FindingKind::SuperblockCandidate,
+                Some(l.body_start),
+                format!(
+                    "straight-line hardware-loop body [{}..{}), {trip}: \
+                     replayable as a superblock",
+                    l.body_start, l.body_end
+                ),
+            );
+        }
+    }
+
+    report.n_blocks = cfg.blocks.len();
+    report.n_loops = cfg.loops.len();
+    for pc in 0..prog.insts.len() {
+        report.reachable_pcs[pc] = cfg.pc_reachable(pc);
+    }
+    report.sort();
+    (report, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{Asm, A0, A1, T0};
+
+    #[test]
+    fn full_pipeline_on_clean_loop_kernel() {
+        use crate::cluster::tcdm::TCDM_BASE;
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(A1, TCDM_BASE as i32);
+        a.li(T0, 0);
+        a.lp_setup_imm(0, 16, end);
+        a.lw_pi(A0, A1, 4);
+        a.mac(T0, A0, A0);
+        a.bind(end);
+        a.li(A1, (TCDM_BASE + 256) as i32);
+        a.sw(T0, A1, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, cfg) = analyze_full(&p, &[]);
+        assert_eq!(r.error_count(), 0, "clean kernel:\n{}", r.render());
+        assert_eq!(r.n_loops, 1);
+        assert_eq!(cfg.loops[0].trip, Some(16));
+        assert!(cfg.loops[0].straight_line);
+        assert!(r.findings.iter().any(|f| f.kind == FindingKind::SuperblockCandidate));
+        assert!(r.reachable_pcs.iter().all(|&x| x));
+        // mac defines T0, lw_pi defines A0 and bumps A1, li defines both.
+        assert_eq!(r.may_def_mask & (1 << A0 | 1 << A1 | 1 << T0), (1 << A0 | 1 << A1 | 1 << T0));
+    }
+
+    #[test]
+    fn register_trip_count_upgrades_loop_info() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.li(T0, 7);
+        a.lp_setup(0, T0, end);
+        a.addi(A0, A0, 1);
+        a.bind(end);
+        a.sw(A0, A1, 0);
+        a.halt();
+        let p = a.finish().unwrap();
+        let (r, cfg) = analyze_full(&p, &[(A0, 0), (A1, crate::cluster::tcdm::TCDM_BASE)]);
+        assert_eq!(cfg.loops[0].trip, Some(7));
+        let sb = r
+            .findings
+            .iter()
+            .find(|f| f.kind == FindingKind::SuperblockCandidate)
+            .expect("superblock info");
+        assert!(sb.message.contains("static trip count 7"), "{}", sb.message);
+    }
+
+    #[test]
+    fn op_name_table_covers_every_operating_point() {
+        // The exhaustiveness contract runs both ways: `analyze/` matches
+        // every `Inst` variant without wildcards (compile-time), and the
+        // persisted-report name table must intern every operating-point
+        // constant plus the DVFS-ladder sentinel (runtime, asserted here
+        // from the analyzer side so the verifier PR owns the guard).
+        use crate::power::tables::{DNN, HV, LV, NOM};
+        for op in [LV, NOM, HV, DNN] {
+            assert!(
+                crate::dnn::encode::is_interned_op_name(op.name),
+                "OP_NAMES missing operating point {:?}",
+                op.name
+            );
+        }
+        assert!(crate::dnn::encode::is_interned_op_name("sweep"));
+        assert!(!crate::dnn::encode::is_interned_op_name("no-such-point"));
+    }
+
+    #[test]
+    fn report_is_sorted_most_severe_first() {
+        let mut a = Asm::new("t");
+        let end = a.label();
+        a.j(end);
+        a.li(A0, 1); // unreachable (Error)
+        a.bind(end);
+        a.li(A1, 2); // dead write (Warning)
+        a.halt();
+        let p = a.finish().unwrap();
+        let r = analyze(&p, &[]);
+        assert!(r.error_count() >= 1);
+        for w in r.findings.windows(2) {
+            assert!(w[0].severity >= w[1].severity);
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Typed diagnostics and the severity-ranked [`AnalysisReport`].
+//!
+//! Every check in the verifier ([`cfg`](super::cfg),
+//! [`dataflow`](super::dataflow), [`memcheck`](super::memcheck)) funnels
+//! into one report per (program, entry state): a list of [`Finding`]s
+//! ordered most-severe-first plus the analyzer-proven facts the
+//! static-vs-dynamic oracle tests replay against the live ISS
+//! ([`crate::iss::trace`]). `vega verify` exits non-zero iff any report
+//! carries an [`Severity::Error`] finding.
+
+use std::fmt;
+
+/// How bad a finding is. Ordered: `Info < Warning < Error`.
+///
+/// * `Error` — the program is wrong on every execution consistent with
+///   the entry state (read of a register no instruction ever writes, a
+///   constant-address access outside the SoC memory map or misaligned
+///   for its element size, a proven-dead memory store, statically
+///   unreachable code). `vega verify` fails the program.
+/// * `Warning` — suspicious but not provably wrong on all paths
+///   (possibly-uninitialized read on *some* path, a register write no
+///   path reads, indirect jumps the CFG cannot resolve).
+/// * `Info` — analysis facts worth surfacing (superblock candidates
+///   with trip bounds, counts of run-time-computed addresses left to
+///   the dynamic oracle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Severity {
+    Info,
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Severity::Info => "info",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The closed set of diagnostic classes the verifier emits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FindingKind {
+    /// Read of a register no reachable instruction ever writes and the
+    /// entry state does not initialize (Error).
+    UninitRead,
+    /// Read of a register that is written somewhere, but not on every
+    /// path from entry (Warning).
+    MaybeUninitRead,
+    /// Register write that no path ever reads back (Warning — the
+    /// conditional-select idiom in the kmeans/svm argmin loops makes
+    /// genuinely-dead final writes on purpose).
+    DeadRegWrite,
+    /// Computation into x0, which is hardwired zero (Warning; `jal
+    /// x0`/`jalr x0` are the idiomatic discard and exempt).
+    WriteToZero,
+    /// Two stores to the same constant (address, size) in one basic
+    /// block with nothing in between that could read it (Error).
+    DeadStore,
+    /// Constant-address access outside every core-addressable region
+    /// of the SoC map, or crossing a region's end (Error).
+    OutOfBounds,
+    /// Constant address not aligned to the access element size (Error).
+    Misaligned,
+    /// Basic block no path from entry reaches (Error).
+    UnreachableBlock,
+    /// `jalr`: a CFG edge the analyzer cannot resolve (Warning).
+    IndirectJump,
+    /// Retreating CFG edge whose target does not dominate its source —
+    /// a loop with multiple entries (Warning).
+    IrreducibleLoop,
+    /// Straight-line hardware-loop body: replayable as a superblock
+    /// (Info, with a static trip bound when derivable — ROADMAP
+    /// feedstock).
+    SuperblockCandidate,
+    /// Count of accesses whose addresses are run-time-computed; these
+    /// are checked dynamically by the oracle tests (Info).
+    UnresolvedAccess,
+}
+
+impl FindingKind {
+    /// Stable lowercase name (rendered, and matched by golden tests).
+    pub fn name(self) -> &'static str {
+        match self {
+            FindingKind::UninitRead => "uninit-read",
+            FindingKind::MaybeUninitRead => "maybe-uninit-read",
+            FindingKind::DeadRegWrite => "dead-reg-write",
+            FindingKind::WriteToZero => "write-to-zero",
+            FindingKind::DeadStore => "dead-store",
+            FindingKind::OutOfBounds => "out-of-bounds",
+            FindingKind::Misaligned => "misaligned",
+            FindingKind::UnreachableBlock => "unreachable-block",
+            FindingKind::IndirectJump => "indirect-jump",
+            FindingKind::IrreducibleLoop => "irreducible-loop",
+            FindingKind::SuperblockCandidate => "superblock-candidate",
+            FindingKind::UnresolvedAccess => "unresolved-access",
+        }
+    }
+}
+
+/// One diagnostic, anchored to an instruction where that makes sense.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub severity: Severity,
+    pub kind: FindingKind,
+    /// Instruction index (the ISS pc), when the finding is local.
+    pub pc: Option<usize>,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.pc {
+            Some(pc) => {
+                write!(f, "{}[{}] pc {}: {}", self.severity, self.kind.name(), pc, self.message)
+            }
+            None => write!(f, "{}[{}]: {}", self.severity, self.kind.name(), self.message),
+        }
+    }
+}
+
+/// A memory access whose address the analyzer proved constant for the
+/// given entry state: it holds on *every* dynamic execution of that pc,
+/// which is exactly what the oracle tests assert against the traced ISS.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemFact {
+    pub addr: u32,
+    pub bytes: u32,
+    pub write: bool,
+}
+
+/// The verifier's result for one program under one entry state.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    /// Program name (from the assembler).
+    pub program: String,
+    /// Diagnostics, most severe first ([`AnalysisReport::sort`]).
+    pub findings: Vec<Finding>,
+    /// Basic blocks in the CFG.
+    pub n_blocks: usize,
+    /// Loops (hardware loops + branch back-edges).
+    pub n_loops: usize,
+    /// Per-pc: does any path from entry reach this instruction's block?
+    /// (Oracle: every dynamically executed pc must be reachable.)
+    pub reachable_pcs: Vec<bool>,
+    /// Registers any reachable instruction may write, as an x0..x31
+    /// bitmask with bit 0 clear. (Oracle: the traced register-write set
+    /// must be a subset.)
+    pub may_def_mask: u32,
+    /// Per-pc proven-constant memory accesses. (Oracle: the traced
+    /// address set at such a pc must be exactly `{addr}`.)
+    pub resolved_mem: Vec<Option<MemFact>>,
+    /// TCDM banks (16, word-interleaved) touched by resolved accesses.
+    pub tcdm_bank_mask: u16,
+}
+
+impl AnalysisReport {
+    pub fn new(program: &str, prog_len: usize) -> Self {
+        Self {
+            program: program.to_string(),
+            findings: Vec::new(),
+            n_blocks: 0,
+            n_loops: 0,
+            reachable_pcs: vec![false; prog_len],
+            may_def_mask: 0,
+            resolved_mem: vec![None; prog_len],
+            tcdm_bank_mask: 0,
+        }
+    }
+
+    pub fn push(
+        &mut self,
+        severity: Severity,
+        kind: FindingKind,
+        pc: Option<usize>,
+        message: impl Into<String>,
+    ) {
+        self.findings.push(Finding { severity, kind, pc, message: message.into() });
+    }
+
+    /// Order findings most-severe-first, then by pc, then by kind name
+    /// (deterministic render for golden tests).
+    pub fn sort(&mut self) {
+        self.findings.sort_by(|a, b| {
+            b.severity
+                .cmp(&a.severity)
+                .then(a.pc.cmp(&b.pc))
+                .then(a.kind.name().cmp(b.kind.name()))
+                .then(a.message.cmp(&b.message))
+        });
+    }
+
+    pub fn count(&self, s: Severity) -> usize {
+        self.findings.iter().filter(|f| f.severity == s).count()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.count(Severity::Error)
+    }
+
+    /// Does the report contain a finding of `kind` at `Error` severity?
+    pub fn has_error(&self, kind: FindingKind) -> bool {
+        self.findings.iter().any(|f| f.severity == Severity::Error && f.kind == kind)
+    }
+
+    /// Human-readable render (one line per finding plus a summary).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let resolved = self.resolved_mem.iter().filter(|m| m.is_some()).count();
+        out.push_str(&format!(
+            "{}: {} blocks, {} loops, {} resolved accesses, banks {:04x}\n",
+            self.program, self.n_blocks, self.n_loops, resolved, self.tcdm_bank_mask
+        ));
+        for f in &self.findings {
+            out.push_str(&format!("  {f}\n"));
+        }
+        out.push_str(&format!(
+            "  {} error(s), {} warning(s), {} info\n",
+            self.error_count(),
+            self.count(Severity::Warning),
+            self.count(Severity::Info)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_sorts() {
+        assert!(Severity::Error > Severity::Warning);
+        assert!(Severity::Warning > Severity::Info);
+        let mut r = AnalysisReport::new("t", 4);
+        r.push(Severity::Info, FindingKind::SuperblockCandidate, Some(1), "a");
+        r.push(Severity::Error, FindingKind::UninitRead, Some(3), "b");
+        r.push(Severity::Warning, FindingKind::DeadRegWrite, Some(0), "c");
+        r.sort();
+        assert_eq!(r.findings[0].kind, FindingKind::UninitRead);
+        assert_eq!(r.findings[2].kind, FindingKind::SuperblockCandidate);
+        assert_eq!(r.error_count(), 1);
+        assert!(r.has_error(FindingKind::UninitRead));
+        assert!(!r.has_error(FindingKind::DeadRegWrite));
+    }
+
+    #[test]
+    fn render_names_are_stable() {
+        // Golden tests grep these names; renames are a breaking change.
+        assert_eq!(FindingKind::UninitRead.name(), "uninit-read");
+        assert_eq!(FindingKind::OutOfBounds.name(), "out-of-bounds");
+        assert_eq!(FindingKind::Misaligned.name(), "misaligned");
+        assert_eq!(FindingKind::UnreachableBlock.name(), "unreachable-block");
+        assert_eq!(FindingKind::DeadStore.name(), "dead-store");
+    }
+}

@@ -362,7 +362,14 @@ impl Inst {
             | Inst::Simd { rd, .. }
             | Inst::Fp { rd, .. } => Some(rd),
             Inst::Jal { rd, .. } | Inst::Jalr { rd, .. } => Some(rd),
-            _ => None,
+            // No wildcard: a new variant must state its destination here
+            // (and get handlers in isa/analyze — see analyze::dataflow).
+            Inst::Store { .. }
+            | Inst::Branch { .. }
+            | Inst::LpSetup { .. }
+            | Inst::Barrier
+            | Inst::Halt
+            | Inst::Nop => None,
         }
     }
 }

@@ -17,11 +17,13 @@
 //! paper: "the architecture design maps integer and FP registers on a
 //! single register file" (§IV-A).
 
+pub mod analyze;
 pub mod asm;
 pub mod encode;
 pub mod inst;
 pub mod predecode;
 
+pub use analyze::{analyze, AnalysisReport};
 pub use asm::{Asm, Label, Program};
 pub use encode::ISA_ENCODING_VERSION;
 pub use inst::{

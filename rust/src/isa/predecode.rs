@@ -60,7 +60,19 @@ impl Decoded {
             },
             Inst::Barrier => DecodedKind::Barrier,
             Inst::Halt => DecodedKind::Halt,
-            _ => DecodedKind::Local,
+            // No wildcard: a new variant must choose its dispatch kind
+            // explicitly (and get analyze/ handlers) or fail to compile.
+            Inst::Alu { .. }
+            | Inst::AluImm { .. }
+            | Inst::Li { .. }
+            | Inst::Branch { .. }
+            | Inst::Jal { .. }
+            | Inst::Jalr { .. }
+            | Inst::Mac { .. }
+            | Inst::Msu { .. }
+            | Inst::Simd { .. }
+            | Inst::LpSetup { .. }
+            | Inst::Nop => DecodedKind::Local,
         };
         let mut src_mask = 0u32;
         for s in inst.srcs().into_iter().flatten() {

@@ -12,9 +12,11 @@ pub mod core;
 pub mod exec;
 pub mod softfloat;
 pub mod stats;
+pub mod trace;
 
 pub use self::core::{Core, CoreState, Intent, MemReq};
 pub use stats::CoreStats;
+pub use trace::{run_single_traced, ExecTrace, PcTouch};
 
 use crate::isa::MemSize;
 

@@ -1,0 +1,238 @@
+//! Instrumented single-core execution for the static-vs-dynamic oracle.
+//!
+//! [`run_single_traced`] mirrors [`run_single_regs`] cycle for cycle —
+//! same two-phase protocol, same clamped stall skipping — while
+//! recording the facts the static verifier ([`crate::isa::analyze`])
+//! claims to prove:
+//!
+//! * which pcs ever issue (must be a subset of the analyzer's reachable
+//!   set);
+//! * per-pc memory touch summaries (count, bytes, address range, and
+//!   whether every access hit one single address — which is exactly the
+//!   shape of a [`crate::isa::analyze::MemFact`]);
+//! * which registers change value (must be a subset of the analyzer's
+//!   may-def mask).
+//!
+//! The mirroring is load-bearing: the oracle tests
+//! (`tests/verify_static.rs`) only mean something if the traced run *is*
+//! the production run plus observation. The one intended difference is
+//! bookkeeping around the loop body; every [`Core`] call matches
+//! [`run_single_regs`] call for call.
+
+use crate::isa::{Program, Reg};
+
+use super::core::{run_single_regs, Core, Intent};
+use super::stats::CoreStats;
+use super::Memory;
+
+/// Summary of every memory access a single pc performed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PcTouch {
+    /// Accesses performed (loop iterations included).
+    pub count: u64,
+    /// Total bytes moved (`count × element size`).
+    pub bytes: u64,
+    /// Smallest / largest start address seen.
+    pub min_addr: u32,
+    pub max_addr: u32,
+    pub write: bool,
+    /// `Some(addr)` iff every access hit exactly `addr` — the dynamic
+    /// counterpart of a statically resolved constant address.
+    pub uniform: Option<u32>,
+}
+
+/// Everything one traced run observed.
+#[derive(Debug, Clone)]
+pub struct ExecTrace {
+    pub stats: CoreStats,
+    pub regs: [u32; 32],
+    /// Per-pc: did this instruction ever issue?
+    pub executed: Vec<bool>,
+    /// Per-pc memory touch summary (None: pc never accessed memory).
+    pub mem: Vec<Option<PcTouch>>,
+    /// Bitmask of registers whose value changed during the run (bit 0
+    /// never set: x0 is hardwired).
+    pub regs_written: u32,
+}
+
+impl ExecTrace {
+    /// Total loaded/stored bytes across all pcs (cross-checked against
+    /// the core's own `bytes_loaded`/`bytes_stored` counters).
+    pub fn touched_bytes(&self) -> (u64, u64) {
+        let mut loaded = 0;
+        let mut stored = 0;
+        for t in self.mem.iter().flatten() {
+            if t.write {
+                stored += t.bytes;
+            } else {
+                loaded += t.bytes;
+            }
+        }
+        (loaded, stored)
+    }
+}
+
+/// As [`run_single_regs`], returning the full [`ExecTrace`].
+///
+/// Panics if `max_cycles` elapses without `Halt`, like the production
+/// runner.
+pub fn run_single_traced(
+    prog: &Program,
+    mem: &mut dyn Memory,
+    init: &[(Reg, u32)],
+    max_cycles: u64,
+) -> ExecTrace {
+    let n = prog.insts.len();
+    let mut core = Core::new(0);
+    core.reset(n);
+    for &(r, v) in init {
+        core.set_reg(r, v);
+    }
+    let pre = prog.predecode();
+    let mut warm = vec![false; n];
+
+    let mut executed = vec![false; n];
+    let mut touches: Vec<Option<PcTouch>> = vec![None; n];
+    let mut regs_written = 0u32;
+
+    while !core.halted() {
+        assert!(
+            core.stats.cycles < max_cycles,
+            "program {} exceeded {max_cycles} cycles",
+            prog.name
+        );
+        let pc = core.pc;
+        let before = core.regs;
+        let intent = core.begin_cycle(prog, &pre, &mut warm);
+        match intent {
+            Intent::Mem(req) => {
+                let bytes = u64::from(req.size.bytes());
+                let t = touches[pc].get_or_insert(PcTouch {
+                    count: 0,
+                    bytes: 0,
+                    min_addr: req.addr,
+                    max_addr: req.addr,
+                    write: req.write,
+                    uniform: Some(req.addr),
+                });
+                t.count += 1;
+                t.bytes += bytes;
+                t.min_addr = t.min_addr.min(req.addr);
+                t.max_addr = t.max_addr.max(req.addr);
+                if t.uniform != Some(req.addr) {
+                    t.uniform = None;
+                }
+                executed[pc] = true;
+                core.retire_mem(&pre, mem);
+            }
+            Intent::Fp { .. } => {
+                executed[pc] = true;
+                core.retire_fp(&pre);
+            }
+            Intent::Barrier => {
+                executed[pc] = true;
+                core.release_barrier();
+            }
+            Intent::Stalled => {
+                // Identical clamped drain to run_single_regs.
+                let b = core.busy_cycles().min(max_cycles.saturating_sub(core.stats.cycles));
+                if b > 0 {
+                    core.skip_stall_cycles(b);
+                }
+            }
+            Intent::Retired | Intent::Halted => {
+                executed[pc] = true;
+            }
+        }
+        for r in 1..32 {
+            if core.regs[r] != before[r] {
+                regs_written |= 1 << r;
+            }
+        }
+    }
+
+    ExecTrace { stats: core.stats.clone(), regs: core.regs, executed, mem: touches, regs_written }
+}
+
+/// Debug-harness sanity check: the traced run must be bit-identical to
+/// the production runner on stats and the final register file.
+pub fn assert_trace_matches(
+    prog: &Program,
+    mem_a: &mut dyn Memory,
+    mem_b: &mut dyn Memory,
+    init: &[(Reg, u32)],
+    max_cycles: u64,
+) -> ExecTrace {
+    let trace = run_single_traced(prog, mem_a, init, max_cycles);
+    let (stats, regs) = run_single_regs(prog, mem_b, init, max_cycles);
+    assert_eq!(trace.stats, stats, "traced stats diverge on {}", prog.name);
+    assert_eq!(trace.regs, regs, "traced regfile diverges on {}", prog.name);
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::iss::FlatMem;
+    use crate::isa::{Asm, A0, A1, T0};
+
+    #[test]
+    fn trace_is_production_run_plus_observation() {
+        // Loops, loads, stores, fp, a branch: every intent arm exercised.
+        let mut a = Asm::new("t");
+        let end = a.label();
+        let skip = a.label();
+        a.li(A0, 0);
+        a.lp_setup_imm(0, 4, end);
+        a.lw_pi(T0, A1, 4);
+        a.mac(A0, T0, T0);
+        a.bind(end);
+        a.fdiv_s(T0, A0, A0);
+        a.beq(A0, 0, skip);
+        a.sw(A0, A1, 0);
+        a.bind(skip);
+        a.halt();
+        let p = a.finish().unwrap();
+        let mut m1 = FlatMem::new(0, 256);
+        let mut m2 = FlatMem::new(0, 256);
+        m1.write_i32s(0, &[1, 2, 3, 4]);
+        m2.write_i32s(0, &[1, 2, 3, 4]);
+        let trace = assert_trace_matches(&p, &mut m1, &mut m2, &[(A1, 0)], 100_000);
+        assert_eq!(m1.data, m2.data, "traced memory diverges");
+
+        // The load at pc 2 ran 4 times over 4 distinct addresses.
+        let t = trace.mem[2].expect("load touch");
+        assert_eq!(t.count, 4);
+        assert_eq!(t.bytes, 16);
+        assert_eq!((t.min_addr, t.max_addr), (0, 12));
+        assert_eq!(t.uniform, None);
+        assert!(!t.write);
+        // The store at pc 6 ran once at one address.
+        let s = trace.mem[6].expect("store touch");
+        assert_eq!((s.count, s.uniform, s.write), (1, Some(0), true));
+        assert_eq!(trace.touched_bytes(), (16, 4));
+        assert_eq!(trace.stats.bytes_loaded, 16);
+        assert_eq!(trace.stats.bytes_stored, 4);
+
+        assert!(trace.executed.iter().all(|&x| x), "every pc issues here");
+        // A0 (mac), A1 (post-inc), T0 (load + fdiv) all changed.
+        assert_eq!(trace.regs_written & (1 << A0 | 1 << A1 | 1 << T0), 1 << A0 | 1 << A1 | 1 << T0);
+        assert_eq!(trace.regs_written & 1, 0, "x0 never changes");
+    }
+
+    #[test]
+    fn skipped_branch_arm_is_not_executed() {
+        let mut a = Asm::new("t");
+        let skip = a.label();
+        a.li(A0, 0);
+        a.beq(A0, 0, skip); // always taken
+        a.li(A1, 7); // never issues
+        a.bind(skip);
+        a.halt();
+        let p = a.finish().unwrap();
+        let mut m = FlatMem::new(0, 64);
+        let trace = run_single_traced(&p, &mut m, &[], 10_000);
+        assert!(!trace.executed[2]);
+        assert_eq!(trace.regs_written & (1 << A1), 0);
+    }
+}

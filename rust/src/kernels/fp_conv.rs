@@ -275,6 +275,37 @@ pub fn run(
     (out, KernelRun::new(prog.name.clone(), stats, flops))
 }
 
+/// Static-verification target mirroring [`run`]'s layout and registers.
+pub fn verify_target(h: usize, w: usize, fw: FpWidth, n_cores: usize) -> super::VerifyTarget {
+    let prog = build(h, w, fw);
+    let esz = match fw {
+        FpWidth::F32 => 4,
+        FpWidth::F16x2 => 2,
+        FpWidth::F8x4 => unreachable!("rejected by build()"),
+    };
+    let istride = in_stride(w + 2, esz) as usize;
+    let mut alloc = TcdmAlloc::new();
+    let in_base = alloc.alloc((h + 2) * istride);
+    let out_base = alloc.alloc(h * w * 4);
+    let tap_base = alloc.alloc(16 * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            vec![
+                (A0, id as u32),
+                (A1, n_cores as u32),
+                (A2, in_base),
+                (A3, out_base),
+                (A4, tap_base),
+                (A5, h as u32),
+                (A6, w as u32),
+                (A7, 0),
+            ]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

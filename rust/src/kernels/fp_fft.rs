@@ -114,7 +114,7 @@ pub fn build(n: usize, n_cores: usize, fw: FpWidth) -> Program {
 
 /// One butterfly with unit stride (post-inc by element size).
 fn emit_butterfly(a: &mut Asm, fw: FpWidth, csz: i32, twstride: i32) {
-    emit_butterfly_strided(a, fw, csz, twstride)
+    emit_butterfly_strided(a, fw, csz, twstride);
 }
 
 /// Butterfly with configurable pointer strides.
@@ -279,6 +279,20 @@ pub fn run(
     // 10 real FLOPs per butterfly, N/2·log2(N) butterflies.
     let flops = 10 * (n as u64 / 2) * n.trailing_zeros() as u64;
     (out, KernelRun::new(prog.name.clone(), stats, flops))
+}
+
+/// Static-verification target mirroring [`run`]'s layout and registers.
+pub fn verify_target(n: usize, fw: FpWidth, n_cores: usize) -> super::VerifyTarget {
+    let prog = build(n, n_cores, fw);
+    let csz = if fw == FpWidth::F32 { 8 } else { 4 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(n * csz + 16);
+    let tw_base = alloc.alloc(n / 2 * 8 + 16);
+    let entry = (0..n_cores)
+        .map(|id| vec![(A0, id as u32), (A1, n_cores as u32), (A2, x_base), (A3, tw_base)])
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
 }
 
 #[cfg(test)]

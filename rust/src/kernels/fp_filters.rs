@@ -542,6 +542,108 @@ pub fn run_dwt(
     (ap, de, KernelRun::new(prog.name.clone(), stats, flops))
 }
 
+/// Static-verification target mirroring [`run_fir`]'s layout. `x_len`
+/// is the driver's input length (it sizes `x_base`, so it shifts every
+/// downstream buffer address).
+pub fn verify_target_fir(
+    x_len: usize,
+    n_out: usize,
+    fw: FpWidth,
+    n_cores: usize,
+) -> super::VerifyTarget {
+    assert!(x_len >= n_out + FIR_TAPS - 1 + 3);
+    let chunk = n_out / n_cores;
+    require(chunk % 4 == 0, "fir", "chunk % 4 == 0");
+    let prog = match fw {
+        FpWidth::F32 => build_fir_f32(),
+        FpWidth::F16x2 => build_fir_f16(),
+        FpWidth::F8x4 => panic!("fir: no fp8 variant (fp8 is matmul-only)"),
+    };
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(x_len * esz + 16);
+    let y_base = alloc.alloc(n_out * esz + 16);
+    let tap_base = alloc.alloc(16 * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            let off = (id * chunk * esz) as u32;
+            vec![(A2, x_base + off), (A3, y_base + off), (A4, tap_base), (A5, chunk as u32)]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
+/// Static-verification target mirroring [`run_iir`]'s layout for
+/// `channels` input channels of `n` samples each.
+pub fn verify_target_iir(channels: usize, n: usize, fw: FpWidth) -> super::VerifyTarget {
+    let prog = match fw {
+        FpWidth::F32 => build_iir_f32(),
+        FpWidth::F16x2 => build_iir_f16(),
+        FpWidth::F8x4 => panic!("iir: no fp8 variant (fp8 is matmul-only)"),
+    };
+    let lanes = if fw == FpWidth::F32 { 1 } else { 2 };
+    let n_cores = channels / lanes;
+    assert!(n_cores >= 1 && n_cores <= 8);
+    let mut alloc = TcdmAlloc::new();
+    let per = n * 4;
+    let x_base = alloc.alloc(channels * per);
+    let y_base = alloc.alloc(channels * per);
+    let c_base = alloc.alloc(10 * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            let off = (id * per) as u32;
+            vec![(A2, x_base + off), (A3, y_base + off), (A4, c_base), (A5, n as u32)]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
+/// Static-verification target mirroring [`run_dwt`]'s layout for an
+/// input of `x_len` samples.
+pub fn verify_target_dwt(x_len: usize, fw: FpWidth, n_cores: usize) -> super::VerifyTarget {
+    let n_pairs = x_len / 2;
+    let chunk = n_pairs / n_cores;
+    require(chunk >= 2 && chunk % 2 == 0, "dwt", "pairs/core even and >= 2");
+    let prog = match fw {
+        FpWidth::F32 => build_dwt_f32(),
+        FpWidth::F16x2 => build_dwt_f16(),
+        FpWidth::F8x4 => panic!("dwt: no fp8 variant (fp8 is matmul-only)"),
+    };
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let x_base = alloc.alloc(x_len * esz + 16);
+    let a_base = alloc.alloc(n_pairs * esz + 16);
+    let d_base = alloc.alloc(n_pairs * esz + 16);
+    let c = std::f32::consts::FRAC_1_SQRT_2;
+    let entry = (0..n_cores)
+        .map(|id| {
+            let xo = (id * chunk * 2 * esz) as u32;
+            let oo = (id * chunk * esz) as u32;
+            let mut regs = vec![
+                (A2, x_base + xo),
+                (A3, a_base + oo),
+                (A4, d_base + oo),
+                (A5, chunk as u32),
+            ];
+            match fw {
+                FpWidth::F32 => regs.push((A6, c.to_bits())),
+                FpWidth::F16x2 => {
+                    let h = f32_to_f16(c) as u32;
+                    let hn = f32_to_f16(-c) as u32;
+                    regs.push((A6, (h << 16) | h));
+                    regs.push((A7, (hn << 16) | h));
+                }
+                FpWidth::F8x4 => unreachable!("rejected above"),
+            }
+            regs
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -188,6 +188,39 @@ pub fn run(
     (labels, KernelRun::new(prog.name.clone(), stats, flops))
 }
 
+/// Static-verification target mirroring [`run`]'s layout and registers.
+pub fn verify_target(n_points: usize, fw: FpWidth, n_cores: usize) -> super::VerifyTarget {
+    let chunk = n_points / n_cores;
+    require(chunk >= 1, "kmeans", "points >= cores");
+    require(n_points % n_cores == 0, "kmeans", "points divisible by cores");
+    let prog = match fw {
+        FpWidth::F32 => build_f32(),
+        FpWidth::F16x2 => build_f16(),
+        FpWidth::F8x4 => panic!("fp_kmeans: no fp8 variant (fp8 is matmul-only)"),
+    };
+    let psz = match fw {
+        FpWidth::F32 => D * 4,
+        FpWidth::F16x2 => D * 2,
+        FpWidth::F8x4 => unreachable!("rejected above"),
+    };
+    let mut alloc = TcdmAlloc::new();
+    let p_base = alloc.alloc(n_points * psz + 16);
+    let l_base = alloc.alloc(n_points * 4);
+    let c_base = alloc.alloc(K * D * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            vec![
+                (A2, p_base + (id * chunk * psz) as u32),
+                (A3, l_base + (id * chunk * 4) as u32),
+                (A4, c_base),
+                (A5, chunk as u32),
+            ]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -233,6 +233,43 @@ pub fn run(
     (c, KernelRun::new(prog.name.clone(), stats, flops))
 }
 
+/// Static-verification target mirroring [`run`]'s layout and registers.
+pub fn verify_target(
+    m: usize,
+    n: usize,
+    k: usize,
+    w: FpWidth,
+    n_cores: usize,
+) -> super::VerifyTarget {
+    let prog = build(m, n, k, w);
+    let esz = match w {
+        FpWidth::F32 => 4,
+        FpWidth::F16x2 => 2,
+        FpWidth::F8x4 => 1,
+    };
+    let stride = k * esz + 4;
+    let mut alloc = TcdmAlloc::new();
+    let a_base = alloc.alloc(m * stride);
+    let b_base = alloc.alloc(n * stride);
+    let c_base = alloc.alloc(m * n * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            vec![
+                (A0, id as u32),
+                (A1, n_cores as u32),
+                (A2, a_base),
+                (A3, b_base),
+                (A4, c_base),
+                (A5, m as u32),
+                (A6, n as u32),
+                (A7, k as u32),
+            ]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -166,6 +166,31 @@ pub fn run(
     (labels, KernelRun::new(prog.name.clone(), stats, flops))
 }
 
+/// Static-verification target mirroring [`run`]'s layout and registers.
+pub fn verify_target(n_points: usize, d: usize, fw: FpWidth, n_cores: usize) -> super::VerifyTarget {
+    require(n_points % n_cores == 0, "svm", "points divisible by cores");
+    let chunk = n_points / n_cores;
+    let prog = build(d, fw);
+    let esz = if fw == FpWidth::F32 { 4 } else { 2 };
+    let mut alloc = TcdmAlloc::new();
+    let p_base = alloc.alloc(n_points * d * esz + 16);
+    let l_base = alloc.alloc(n_points * 4);
+    let w_base = alloc.alloc(CLASSES * d * esz + CLASSES * 4 + 16);
+    let entry = (0..n_cores)
+        .map(|id| {
+            vec![
+                (A2, p_base + (id * chunk * d * esz) as u32),
+                (A3, l_base + (id * chunk * 4) as u32),
+                (A4, w_base),
+                (A5, chunk as u32),
+                (A6, d as u32),
+            ]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -271,6 +271,39 @@ pub fn run_padded(
     (c, KernelRun::new(name, stats, ops))
 }
 
+/// Static-verification target: the same program and per-core launch
+/// registers [`run`] uses (pad 1), with no data or simulation.
+pub fn verify_target(
+    m: usize,
+    n: usize,
+    k: usize,
+    w: IntWidth,
+    n_cores: usize,
+) -> super::VerifyTarget {
+    let prog = build(m, n, k, w);
+    let stride = k * w.bytes() + 4;
+    let mut alloc = TcdmAlloc::new();
+    let a_base = alloc.alloc(m * stride);
+    let b_base = alloc.alloc(n * stride);
+    let c_base = alloc.alloc(m * n * 4);
+    let entry = (0..n_cores)
+        .map(|id| {
+            vec![
+                (A0, id as u32),
+                (A1, n_cores as u32),
+                (A2, a_base),
+                (A3, b_base),
+                (A4, c_base),
+                (A5, m as u32),
+                (A6, n as u32),
+                (A7, k as u32),
+            ]
+        })
+        .collect();
+    let name = prog.name.clone();
+    super::VerifyTarget { name, prog, n_cores, entry }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -17,7 +17,8 @@ pub mod fp_svm;
 pub mod int_matmul;
 
 use crate::cluster::{ClusterStats, TCDM_BASE, TCDM_SIZE};
-use crate::isa::Program;
+use crate::isa::analyze::{self, AnalysisReport};
+use crate::isa::{Program, Reg};
 
 /// Simple bump allocator over the 128 kB TCDM for kernel buffers.
 pub struct TcdmAlloc {
@@ -86,6 +87,39 @@ impl KernelRun {
             return 0.0;
         }
         self.stats.total.by_class.fp as f64 / self.stats.total.retired as f64
+    }
+}
+
+/// A (program, launch state) pair the static verifier can analyze
+/// without running anything: exactly the program and per-core entry
+/// registers the kernel driver would hand to the cluster.
+///
+/// Each kernel module exposes a `verify_target` constructor that
+/// replicates its `run()` buffer layout (same `TcdmAlloc` calls, same
+/// register file), so `vega verify` checks what actually ships.
+pub struct VerifyTarget {
+    pub name: String,
+    pub prog: Program,
+    pub n_cores: usize,
+    /// Per-core launch register state (`entry[core_id]`).
+    pub entry: Vec<Vec<(Reg, u32)>>,
+}
+
+impl VerifyTarget {
+    /// Analyze the program under one core's entry state.
+    pub fn analyze_core(&self, core: usize) -> AnalysisReport {
+        analyze::analyze(&self.prog, &self.entry[core])
+    }
+
+    /// Analyze under every core's entry state (the SPMD program is one,
+    /// but constant propagation sees each core's registers).
+    pub fn analyze_all(&self) -> Vec<AnalysisReport> {
+        (0..self.n_cores).map(|c| self.analyze_core(c)).collect()
+    }
+
+    /// Error-severity findings summed over all cores.
+    pub fn error_count(&self) -> usize {
+        self.analyze_all().iter().map(AnalysisReport::error_count).sum()
     }
 }
 

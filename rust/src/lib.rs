@@ -49,6 +49,11 @@
 //! `README.md` is the newcomer entry point; `ARCHITECTURE.md` maps the
 //! sweep/exploration subsystem across modules.
 
+// The whole simulator is safe Rust by construction (guest memory is
+// Vec-backed, no FFI outside the gated PJRT bridge) — enforce it so a
+// future accelerator model can't quietly reach for raw pointers.
+#![forbid(unsafe_code)]
+
 // missing_docs triage (ISSUE 3 rustdoc pass): the exploration-facing
 // surface (`sweep`, `bench`, `coordinator`, `cwu`, `kernels`) carries
 // full doc comments and `scripts/ci.sh` gates `cargo doc` warnings

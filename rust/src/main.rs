@@ -39,6 +39,13 @@
 //!                           rate × duty × sleep × boot grid and report
 //!                           battery lifetime, false-wake rate and
 //!                           per-state energy per cell
+//! vega verify [kernel|all]  statically analyze every shipped kernel
+//!                           program (CFG, reaching definitions, memory
+//!                           map bounds/alignment, loop shape) and exit
+//!                           non-zero on any error-severity finding;
+//!                           a kernel name substring narrows the run and
+//!                           also prints the info-level notes
+//!                           (superblock candidates, trip counts)
 //! vega runtime              show the PJRT artifact registry
 //! vega golden <name>        run one artifact and cross-check the
 //!                           simulator's functional model against it
@@ -100,6 +107,9 @@ fn usage() -> ! {
                      [--retries K] [--backoff-ms B] [--timeout-ms T]\n\
                                 trace-driven sleep<->wake duty cycling:\n\
                                 battery lifetime / false-wake rate grid\n\
+           verify [kernel|all]  static CFG/dataflow/memory-map analysis\n\
+                                over every shipped kernel program; exits\n\
+                                non-zero on error-severity findings\n\
            runtime              show the PJRT artifact registry\n\
            golden <artifact>    cross-check simulator vs PJRT artifact\n\
            sim <kernel> [--cores N] [--size S]\n\
@@ -244,6 +254,13 @@ fn main() {
             }
             exit_for_grid("lifecycle", &grid);
         }
+        Some("verify") => {
+            let which = args.get(1).map(String::as_str).unwrap_or("all");
+            if which.starts_with('-') || args.len() > 2 {
+                usage();
+            }
+            run_verify(which);
+        }
         Some("runtime") => {
             let rt = Runtime::load(Runtime::default_dir()).unwrap_or_else(|e| {
                 eprintln!("failed to load artifacts (run `make artifacts`): {e}");
@@ -328,6 +345,66 @@ fn exit_for_grid(what: &str, grid: &vega::sweep::explore::RenderedGrid) {
             grid.failed
         );
         std::process::exit(3);
+    }
+}
+
+/// `vega verify`: run the static verifier (ISSUE 9) over the canonical
+/// kernel suite — one analysis per (program, core entry state) — and
+/// exit 1 if any error-severity finding survives.
+///
+/// All cores of a target run the same program, so the per-target header
+/// reports core 0's CFG shape; findings are deduplicated across cores
+/// (core-dependent entry pointers can resolve to different addresses,
+/// so distinct diagnostics per core are possible and all shown).
+fn run_verify(which: &str) {
+    use std::collections::BTreeSet;
+    use vega::isa::analyze::Severity;
+
+    let all = vega::sweep::verify_targets();
+    let (targets, show_info): (Vec<_>, bool) = if which == "all" {
+        (all, false)
+    } else {
+        let sel: Vec<_> = all.into_iter().filter(|t| t.name.contains(which)).collect();
+        if sel.is_empty() {
+            eprintln!("vega verify: no kernel program matches '{which}' (try `vega verify all`)");
+            std::process::exit(1);
+        }
+        (sel, true)
+    };
+    let mut total_errors = 0usize;
+    for t in &targets {
+        let reports = t.analyze_all();
+        let (mut errors, mut warnings, mut notes) = (0, 0, 0);
+        for r in &reports {
+            errors += r.count(Severity::Error);
+            warnings += r.count(Severity::Warning);
+            notes += r.count(Severity::Info);
+        }
+        println!(
+            "{:<16} {} cores  {:>3} insts  {:>2} blocks  {} loops  \
+             {errors} errors  {warnings} warnings  {notes} notes",
+            t.name,
+            t.n_cores,
+            t.prog.insts.len(),
+            reports[0].n_blocks,
+            reports[0].n_loops,
+        );
+        let mut shown = BTreeSet::new();
+        for (core, r) in reports.iter().enumerate() {
+            for f in &r.findings {
+                if f.severity == Severity::Info && !show_info {
+                    continue;
+                }
+                if shown.insert(f.to_string()) {
+                    println!("    core {core}: {f}");
+                }
+            }
+        }
+        total_errors += errors;
+    }
+    println!("verify: {} program(s), {total_errors} error-severity finding(s)", targets.len());
+    if total_errors > 0 {
+        std::process::exit(1);
     }
 }
 

@@ -78,4 +78,4 @@ pub use cache::SimCache;
 pub use engine::{default_jobs, CellPolicy, FailKind, SimError, SweepEngine, Transient};
 pub use journal::{CellRecord, CellStatus, GridMode, GridSession, ShardSpec};
 pub use persist::DiskStore;
-pub use scenario::{Scenario, SimArena, SimKey, SimResult};
+pub use scenario::{verify_targets, Scenario, SimArena, SimKey, SimResult};

@@ -26,6 +26,7 @@ use crate::kernels::fp_matmul::FpWidth;
 use crate::kernels::int_matmul::IntWidth;
 use crate::kernels::{
     fp_conv, fp_fft, fp_filters, fp_kmeans, fp_matmul, fp_svm, int_matmul, KernelRun,
+    VerifyTarget,
 };
 
 /// One worker's owned simulation state: a cluster fabric plus its L2 view,
@@ -641,9 +642,54 @@ fn digest_f32s(v: &[f32]) -> u64 {
     d.finish()
 }
 
+/// Every shipped kernel program at its canonical sweep dimensions,
+/// packaged for static verification (`vega verify`): the assembled
+/// [`Program`] plus each core's entry-register state, mirroring the
+/// allocation layout the corresponding `run()` driver would set up.
+///
+/// Covers the full matmul family (three int and three fp precisions)
+/// and every NSAA kernel at F32 and F16x2 — the same canonical sizes
+/// [`Scenario`] simulates, so a static finding here is a finding about
+/// a program the sweep actually executes.
+pub fn verify_targets() -> Vec<VerifyTarget> {
+    let mut out = Vec::new();
+    let (im, in_, ik) = INT_MATMUL_DIMS;
+    for w in [IntWidth::I8, IntWidth::I16, IntWidth::I32] {
+        out.push(int_matmul::verify_target(im, in_, ik, w, 8));
+    }
+    let (fm, fn_, fk) = FP_MATMUL_DIMS;
+    for w in [FpWidth::F32, FpWidth::F16x2, FpWidth::F8x4] {
+        out.push(fp_matmul::verify_target(fm, fn_, fk, w, 8));
+    }
+    for w in [FpWidth::F32, FpWidth::F16x2] {
+        out.push(fp_conv::verify_target(CONV_HW.0, CONV_HW.1, w, 8));
+        out.push(fp_filters::verify_target_dwt(DWT_N, w, 8));
+        out.push(fp_fft::verify_target(FFT_N, w, 8));
+        out.push(fp_filters::verify_target_fir(FIR_N + 16, FIR_N, w, 8));
+        out.push(fp_filters::verify_target_iir(IIR_CHANNELS, IIR_N, w));
+        out.push(fp_kmeans::verify_target(KMEANS_POINTS, w, 8));
+        out.push(fp_svm::verify_target(SVM_POINTS, SVM_DIM, w, 8));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn verify_targets_cover_the_canonical_suite() {
+        let ts = verify_targets();
+        // 3 int matmul + 3 fp matmul + 7 NSAA kernels × 2 precisions.
+        assert_eq!(ts.len(), 20);
+        let names: std::collections::BTreeSet<&str> =
+            ts.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names.len(), ts.len(), "target names must be unique");
+        for t in &ts {
+            assert_eq!(t.entry.len(), t.n_cores, "{}: one entry state per core", t.name);
+            assert!(!t.prog.insts.is_empty(), "{}: empty program", t.name);
+        }
+    }
 
     #[test]
     fn matmul_row_canonicalises_to_fp_matmul() {

@@ -67,6 +67,20 @@ echo "== cargo doc --no-deps (warnings fatal) =="
 # cannot gate; the bin is a thin CLI over the documented library.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
 
+echo "== static-verifier gate (vega verify all + analyzer goldens) =="
+# ISSUE 9: every shipped kernel program must pass CFG/dataflow/memory-map
+# analysis with zero error-severity findings (exit 0), and each seeded
+# defect class must keep producing its golden diagnostic. The goldens run
+# first and by name so an analyzer regression fails on its own line; the
+# oracle layer (static claims vs the traced ISS) runs under the full
+# `cargo test -q` below.
+mkdir -p target/ci
+./target/release/vega verify all > target/ci/verify_all.txt \
+    || { echo "FAIL: vega verify all found error-severity findings:"; cat target/ci/verify_all.txt; exit 1; }
+grep -q "0 error-severity finding(s)" target/ci/verify_all.txt \
+    || { echo "FAIL: verify summary missing/unclean:"; cat target/ci/verify_all.txt; exit 1; }
+cargo test -q --test verify_static golden
+
 echo "== key-stability gate (golden byte/hash vectors) =="
 # These run again under the full `cargo test -q` below; running them
 # first and by name makes a key-encoding drift fail loudly on its own
