@@ -17,7 +17,7 @@ use vega::dnn::{self, PipelineConfig, StorePolicy};
 use vega::hwce::{conv3x3, Precision};
 use vega::iss::FlatMem;
 use vega::kernels::int_matmul::{self, IntWidth};
-use vega::kernels::{fp_fft, fp_matmul::FpWidth};
+use vega::kernels::{fp_conv, fp_fft, fp_matmul::FpWidth};
 use vega::mem::ecc;
 
 fn main() {
@@ -50,6 +50,67 @@ fn main() {
             .cycles
     });
     cl.scheduler = SchedulerMode::CycleSkip;
+
+    // L3 hot path #1b: superblock trace replay on vs off, same kernel.
+    // Single-core runs so the replayer engages on every hot loop (with
+    // several cores running, windows only open while the other cores are
+    // parked at a barrier). The `superblock_speedup_*` metrics below land
+    // in BENCH_hotpath.json's `metrics` object for cross-PR tracking.
+    cl.superblocks = true;
+    b.run("iss_matmul_64x64x64_1core_sb", 10, || {
+        cl.reset();
+        l2.reset();
+        int_matmul::run(&mut cl, &mut l2, &av, &bv, 64, 64, 64, IntWidth::I8, 1)
+            .1
+            .stats
+            .cycles
+    });
+    cl.superblocks = false;
+    b.run("iss_matmul_64x64x64_1core_nosb", 10, || {
+        cl.reset();
+        l2.reset();
+        int_matmul::run(&mut cl, &mut l2, &av, &bv, 64, 64, 64, IntWidth::I8, 1)
+            .1
+            .stats
+            .cycles
+    });
+
+    let ch = 16usize;
+    let cw = 16usize;
+    let cx: Vec<f32> = (0..(ch + 2) * (cw + 2)).map(|_| rng.f32_pm1()).collect();
+    let ck: Vec<f32> = (0..9).map(|_| rng.f32_pm1()).collect();
+    cl.superblocks = true;
+    b.run("iss_conv3x3_16x16_1core_sb", 10, || {
+        cl.reset();
+        l2.reset();
+        fp_conv::run(&mut cl, &mut l2, &cx, &ck, ch, cw, FpWidth::F32, 1).1.stats.cycles
+    });
+    cl.superblocks = false;
+    b.run("iss_conv3x3_16x16_1core_nosb", 10, || {
+        cl.reset();
+        l2.reset();
+        fp_conv::run(&mut cl, &mut l2, &cx, &ck, ch, cw, FpWidth::F32, 1).1.stats.cycles
+    });
+    cl.superblocks = vega::iss::superblock::env_default();
+
+    for (metric, on, off) in [
+        (
+            "superblock_speedup_matmul_1core",
+            "iss_matmul_64x64x64_1core_sb",
+            "iss_matmul_64x64x64_1core_nosb",
+        ),
+        (
+            "superblock_speedup_conv_1core",
+            "iss_conv3x3_16x16_1core_sb",
+            "iss_conv3x3_16x16_1core_nosb",
+        ),
+    ] {
+        if let (Some(sb), Some(nosb)) = (b.min_ms(on), b.min_ms(off)) {
+            if sb > 0.0 {
+                b.metric(metric, nosb / sb);
+            }
+        }
+    }
 
     // L3 hot path #2: FFT (barrier-heavy, FP-heavy).
     let x: Vec<(f32, f32)> = (0..256).map(|_| (rng.f32_pm1(), rng.f32_pm1())).collect();

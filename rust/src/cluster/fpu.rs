@@ -129,6 +129,35 @@ impl FpuFabric {
         true
     }
 
+    /// Cycle at which the shared DIV-SQRT unit becomes free (read by the
+    /// superblock replay entry check).
+    pub(crate) fn divsqrt_free_at(&self) -> u64 {
+        self.divsqrt_free_at
+    }
+
+    /// Commit the issue bookkeeping of a superblock replay window for a
+    /// single uncontended core: `issues` granted FP issues by `core`,
+    /// `pipelined` true when any of them went through the per-FPU
+    /// round-robin (which then ends at `core + 1` — the same value after
+    /// every grant, so one batched update matches the per-cycle path),
+    /// and `divsqrt_free_at` the unit's busy horizon after the window's
+    /// last DIV-SQRT issue (`None` when the window issued none).
+    pub(crate) fn replay_commit(
+        &mut self,
+        issues: u64,
+        pipelined: bool,
+        core: usize,
+        divsqrt_free_at: Option<u64>,
+    ) {
+        self.issues += issues;
+        if pipelined && !self.private_per_core {
+            self.rr[fpu_of_core(core)] = core + 1;
+        }
+        if let Some(t) = divsqrt_free_at {
+            self.divsqrt_free_at = t;
+        }
+    }
+
     /// Fraction of FP issues that were delayed by sharing.
     pub fn contention_rate(&self) -> f64 {
         let total = self.issues + self.conflicts;

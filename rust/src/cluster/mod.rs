@@ -29,8 +29,9 @@ pub const L2_BASE: u32 = 0x1C00_0000;
 pub const L2_SIZE: usize = (1536 + 64) * 1024;
 
 /// Extra cycles for a cluster-side access that misses TCDM and crosses
-/// the dual-clock FIFO + SoC interconnect into L2.
-const CLUSTER_TO_L2_LATENCY: u64 = 8;
+/// the dual-clock FIFO + SoC interconnect into L2 (`pub(crate)`: the
+/// superblock replay profile charges the same constant).
+pub(crate) const CLUSTER_TO_L2_LATENCY: u64 = 8;
 
 /// Combined cluster-visible memory: TCDM + L2 window.
 pub struct ClusterMemView<'a> {
@@ -113,6 +114,12 @@ pub struct Cluster {
     pub event_unit: EventUnit,
     /// Scheduler selection (equivalence tests and ablations flip this).
     pub scheduler: SchedulerMode,
+    /// Superblock replay (§Perf, hot-path layer 3): batch-execute
+    /// straight-line hardware-loop bodies when a single core owns the
+    /// cluster. Defaults to [`crate::iss::superblock::env_default`]
+    /// (`VEGA_SUPERBLOCKS=off` disables); equivalence tests and the
+    /// hotpath bench flip it per run.
+    pub superblocks: bool,
     cycle: u64,
     /// Shared-L1.5 warm bitmap, reused across runs (no per-run alloc).
     warm: Vec<bool>,
@@ -127,6 +134,7 @@ impl Cluster {
             dma: ClusterDma::new(),
             event_unit: EventUnit::new(N_CORES),
             scheduler: SchedulerMode::CycleSkip,
+            superblocks: crate::iss::superblock::env_default(),
             cycle: 0,
             warm: Vec::new(),
         }
@@ -138,11 +146,13 @@ impl Cluster {
     /// kernel invocation reuse one instead). Restores the default FPU
     /// fabric configuration — unlike the per-run [`FpuFabric::reset`],
     /// which deliberately preserves the ablation switch across a single
-    /// driver's set-flag-then-run sequence. The `scheduler` selection is
-    /// deliberately *not* restored: the hotpath bench flips it between
-    /// timed runs that each call `reset()`. Callers needing a fully
-    /// default cluster (the sweep arena, whose cache key has no scheduler
-    /// component) pin `scheduler` themselves.
+    /// driver's set-flag-then-run sequence. The `scheduler` selection and
+    /// the `superblocks` switch are deliberately *not* restored: the
+    /// hotpath bench and the equivalence tests flip them between timed
+    /// runs that each call `reset()`. Callers needing a fully default
+    /// cluster (the sweep arena, whose cache key has neither a scheduler
+    /// nor a superblock component — both are bit-identical by the
+    /// equivalence suite) pin them themselves.
     pub fn reset(&mut self) {
         self.tcdm.reset();
         self.fpus.reset();
@@ -264,21 +274,24 @@ impl Cluster {
             let mut n_halted = 0usize;
             let mut parked = 0usize;
             let mut min_busy = u64::MAX;
-            let mut can_issue = false;
-            for c in &self.cores[..n_active] {
+            let mut n_issuable = 0usize;
+            let mut issuable = 0usize;
+            for (i, c) in self.cores[..n_active].iter().enumerate() {
                 match c.state {
                     CoreState::Halted => n_halted += 1,
                     CoreState::AtBarrier => parked += 1,
                     CoreState::Ready => {
                         let b = c.busy_cycles();
                         if b == 0 {
-                            can_issue = true;
+                            n_issuable += 1;
+                            issuable = i;
                         } else if b < min_busy {
                             min_busy = b;
                         }
                     }
                 }
             }
+            let can_issue = n_issuable > 0;
             if n_halted == n_active {
                 break;
             }
@@ -287,6 +300,37 @@ impl Cluster {
                 "cluster run of {} exceeded {max_cycles} cycles",
                 prog.name
             );
+
+            // Superblock replay (hot-path layer 3): when exactly one core
+            // can issue and every other active core is halted or parked
+            // at a barrier that cannot release (the sole runner keeps it
+            // from releasing), that core faces no arbitration — a
+            // predecoded straight-line loop body can be replayed as one
+            // batched effect. `try_replay` re-checks the dynamic entry
+            // conditions and returns the cycles the window consumed;
+            // parked cores and the event unit then age exactly as the
+            // skip path below ages them. Bit-identity with the
+            // interpreter is asserted in tests/scheduler_equivalence.rs.
+            if self.superblocks && n_issuable == 1 && min_busy == u64::MAX {
+                if let Some(w) = crate::iss::superblock::try_replay(
+                    &pre,
+                    &mut self.cores[issuable],
+                    &mut self.tcdm,
+                    l2,
+                    &mut self.fpus,
+                    self.cycle,
+                    max_cycles,
+                ) {
+                    for (i, c) in self.cores[..n_active].iter_mut().enumerate() {
+                        if i != issuable && c.state != CoreState::Halted {
+                            c.skip_stall_cycles(w);
+                        }
+                    }
+                    self.event_unit.skip(parked, w);
+                    self.cycle += w;
+                    continue;
+                }
+            }
 
             if !can_issue && parked < n_active - n_halted {
                 // Nothing can happen until the shortest busy counter

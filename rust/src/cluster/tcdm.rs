@@ -113,6 +113,22 @@ impl Tcdm {
         mask
     }
 
+    /// Commit the arbitration bookkeeping of a superblock replay window:
+    /// `grants` uncontended accesses by `winner` touching the banks in
+    /// `banks` (a bank bitmask). With a single requester every access is
+    /// granted and each grant leaves `rr[bank] = winner + 1` — the same
+    /// value no matter how many times or in what order, so one batched
+    /// update is bit-identical to the per-cycle path.
+    pub(crate) fn replay_commit(&mut self, grants: u64, banks: u16, winner: usize) {
+        self.grants += grants;
+        let mut m = banks;
+        while m != 0 {
+            let b = m.trailing_zeros() as usize;
+            m &= m - 1;
+            self.rr[b] = winner + 1;
+        }
+    }
+
     /// Flip one bit of the byte at `addr` (absolute, TCDM-mapped): the
     /// L1 soft-error injection hook (ISSUE 6). TCDM banks carry no ECC,
     /// so an upset lands directly in the data the cores consume.

@@ -241,17 +241,11 @@ impl Cfg {
                 LoopCount::Imm(t) => Some(t),
                 LoopCount::Reg(_) => None,
             };
-            let straight_line = (body_start..body_end).all(|p| {
-                !matches!(
-                    prog.insts[p],
-                    Inst::Branch { .. }
-                        | Inst::Jal { .. }
-                        | Inst::Jalr { .. }
-                        | Inst::LpSetup { .. }
-                        | Inst::Barrier
-                        | Inst::Halt
-                )
-            });
+            // Shared with predecode's superblock table: the analyzer's
+            // SuperblockCandidate findings and the ISS replay layer use
+            // the same straight-line test by construction.
+            let straight_line =
+                crate::isa::predecode::is_straight_line_body(prog, body_start, body_end);
             let head = cfg.block_of[body_start];
             if let Some(l) = cfg
                 .loops

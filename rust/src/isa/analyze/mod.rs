@@ -15,8 +15,12 @@
 //!
 //! Everything lands in one severity-sorted [`AnalysisReport`] per
 //! (program, entry state). The CFG/loop output (straight-line hardware
-//! loops with static trip bounds) is the direct feedstock for the
-//! ROADMAP superblock/trace-execution item.
+//! loops with static trip bounds) is the same shape the ISS superblock
+//! layer consumes: a [`FindingKind::SuperblockCandidate`] here is the
+//! static view of what [`crate::iss::superblock`] promotes into a
+//! cached replay trace at run time — both sides share the
+//! straight-line-body test in
+//! [`crate::isa::predecode::is_straight_line_body`].
 
 pub mod cfg;
 pub mod dataflow;
@@ -37,7 +41,8 @@ pub fn analyze(prog: &Program, entry: &[(Reg, u32)]) -> AnalysisReport {
 
 /// [`analyze`], additionally returning the [`Cfg`] (with loop trip
 /// counts upgraded by constant propagation) for consumers that want the
-/// structure itself — the superblock work feeds on this.
+/// structure itself — the dynamic twin of this analysis,
+/// [`crate::iss::superblock`], feeds on the same loop shapes.
 pub fn analyze_full(prog: &Program, entry: &[(Reg, u32)]) -> (AnalysisReport, Cfg) {
     let mut report = AnalysisReport::new(&prog.name, prog.insts.len());
     let mut cfg = Cfg::build(prog, &mut report);

@@ -1,4 +1,5 @@
-//! Predecoded instruction stream (§Perf, hot-path layer 2).
+//! Predecoded instruction stream (§Perf, hot-path layer 2) and the
+//! superblock side-table that seeds hot-path layer 3.
 //!
 //! The ISS interprets the symbolic [`Inst`] enum, and the per-cycle path
 //! used to re-match the full enum and re-build `inst.srcs()` on every
@@ -10,8 +11,18 @@
 //! and single-bit tests. Purely a representation change: every decoded
 //! field is derived from the same `Inst` accessors the slow path used, so
 //! cycle counts and results are identical by construction.
+//!
+//! On top of the flat records, `predecode` also scans for hardware loops
+//! whose bodies pass [`is_straight_line_body`] — the same shape test the
+//! static analyzer uses to emit `SuperblockCandidate` findings — and
+//! packages each as a [`Superblock`]: a closed-form replay plan
+//! ([`SbStep`] effect list plus [`SbMemOp`] affine address summaries)
+//! that [`crate::iss::superblock`] can execute N iterations at a time.
+//! Building the table is pure analysis; whether a given dynamic entry is
+//! actually replayable (trip count, pending loads, address regions) is
+//! decided at run time by the ISS.
 
-use super::inst::{FpFmt, FpOp, Inst, InstClass, MemSize};
+use super::inst::{AluOp, FpFmt, FpOp, Inst, InstClass, MemSize, SimdFmt, SimdOp};
 use super::{Program, Reg};
 
 /// Per-cycle dispatch kind plus the operand fields each kind needs.
@@ -88,9 +99,190 @@ impl Decoded {
     }
 }
 
+/// True when `[body_start, body_end)` contains no control flow, barrier
+/// or halt — the straight-line hardware-loop shape. This is the single
+/// definition shared by the static analyzer (which reports such loops as
+/// `SuperblockCandidate` findings) and by the superblock side-table
+/// below, so the static and dynamic sides can never disagree about what
+/// counts as a candidate.
+pub fn is_straight_line_body(prog: &Program, body_start: usize, body_end: usize) -> bool {
+    (body_start..body_end).all(|p| {
+        !matches!(
+            prog.insts[p],
+            Inst::Branch { .. }
+                | Inst::Jal { .. }
+                | Inst::Jalr { .. }
+                | Inst::LpSetup { .. }
+                | Inst::Barrier
+                | Inst::Halt
+        )
+    })
+}
+
+/// One body instruction of a [`Superblock`], flattened into the exact
+/// effect the replay loop applies. Multi-cycle latencies are pre-baked
+/// as `extra` (cycles beyond the issue cycle) so the timing profile walk
+/// is pure arithmetic.
+#[derive(Debug, Clone, Copy)]
+pub enum SbStep {
+    Alu { op: AluOp, rd: Reg, rs1: Reg, rs2: Reg, extra: u64 },
+    AluImm { op: AluOp, rd: Reg, rs1: Reg, imm: i32, extra: u64 },
+    Li { rd: Reg, imm: i32 },
+    Mac { rd: Reg, rs1: Reg, rs2: Reg },
+    Msu { rd: Reg, rs1: Reg, rs2: Reg },
+    Simd { op: SimdOp, fmt: SimdFmt, rd: Reg, rs1: Reg, rs2: Reg },
+    Fp { op: FpOp, fmt: FpFmt, rd: Reg, rs1: Reg, rs2: Reg, extra: u64, divsqrt: bool },
+    /// `reg` is the load destination / store-data source; `op_idx`
+    /// indexes the plan's [`SbMemOp`] table for the address summary.
+    Mem { write: bool, size: MemSize, reg: Reg, rs1: Reg, imm: i32, post_inc: bool, op_idx: u16 },
+    Nop,
+}
+
+/// Affine address summary of one memory access in a superblock body:
+/// iteration `i` touches `entry[rs1] + offset + i * stride` (exact in
+/// `i64`; `offset` folds the post-increments that precede the access
+/// inside the body, `stride` is the base register's net advance per
+/// iteration). Valid only while `rs1` is not otherwise written in the
+/// body — the builder refuses a plan when it is.
+#[derive(Debug, Clone, Copy)]
+pub struct SbMemOp {
+    pub rs1: Reg,
+    pub offset: i64,
+    pub stride: i64,
+    pub bytes: u32,
+    pub write: bool,
+}
+
+/// The replayable effect of one loop body: the per-instruction effect
+/// list, the affine summary of every access, and the pending-load state
+/// a steady-state iteration hands to the next one (`Some` iff the body
+/// ends in a load, whose use-interlock then straddles the back edge).
+#[derive(Debug, Clone)]
+pub struct SbPlan {
+    pub steps: Vec<SbStep>,
+    pub mem_ops: Vec<SbMemOp>,
+    pub entry_pending: Option<Reg>,
+}
+
+/// A straight-line hardware-loop body promoted to a replay candidate.
+/// `plan` is `None` when the body is straight-line but not closed-form
+/// (an address base register is rewritten inside the body, e.g. a
+/// pointer chase) — the ISS then counts a bail and interprets normally.
+#[derive(Debug, Clone)]
+pub struct Superblock {
+    /// Hardware-loop channel (0 or 1) the setup targets.
+    pub lp: u8,
+    pub setup_pc: usize,
+    pub body_start: usize,
+    pub body_end: usize,
+    pub plan: Option<SbPlan>,
+}
+
+fn build_plan(prog: &Program, body_start: usize, body_end: usize) -> Option<SbPlan> {
+    let mut steps = Vec::with_capacity(body_end - body_start);
+    let mut mem_ops: Vec<SbMemOp> = Vec::new();
+    // Net post-increment applied to each register so far in the body
+    // (exact i64: the u32 wrap of the machine matches the i64 sum as
+    // long as the final address is range-checked, which replay does).
+    let mut inc = [0i64; 32];
+    let mut written = [false; 32];
+    for p in body_start..body_end {
+        let step = match prog.insts[p] {
+            Inst::Alu { op, rd, rs1, rs2 } => {
+                SbStep::Alu { op, rd, rs1, rs2, extra: op.cycles() - 1 }
+            }
+            Inst::AluImm { op, rd, rs1, imm } => {
+                SbStep::AluImm { op, rd, rs1, imm, extra: op.cycles() - 1 }
+            }
+            Inst::Li { rd, imm } => SbStep::Li { rd, imm },
+            Inst::Mac { rd, rs1, rs2 } => SbStep::Mac { rd, rs1, rs2 },
+            Inst::Msu { rd, rs1, rs2 } => SbStep::Msu { rd, rs1, rs2 },
+            Inst::Simd { op, fmt, rd, rs1, rs2 } => SbStep::Simd { op, fmt, rd, rs1, rs2 },
+            Inst::Fp { op, fmt, rd, rs1, rs2 } => SbStep::Fp {
+                op,
+                fmt,
+                rd,
+                rs1,
+                rs2,
+                extra: op.cycles() - 1,
+                divsqrt: op.is_divsqrt(),
+            },
+            Inst::Nop => SbStep::Nop,
+            Inst::Load { size, rd, rs1, imm, post_inc } => {
+                if mem_ops.len() >= u16::MAX as usize {
+                    return None;
+                }
+                let op_idx = mem_ops.len() as u16;
+                let offset = inc[rs1 as usize] + if post_inc { 0 } else { i64::from(imm) };
+                mem_ops.push(SbMemOp {
+                    rs1,
+                    offset,
+                    stride: 0,
+                    bytes: size.bytes(),
+                    write: false,
+                });
+                if post_inc && rs1 != 0 {
+                    inc[rs1 as usize] += i64::from(imm);
+                }
+                SbStep::Mem { write: false, size, reg: rd, rs1, imm, post_inc, op_idx }
+            }
+            Inst::Store { size, rs2, rs1, imm, post_inc } => {
+                if mem_ops.len() >= u16::MAX as usize {
+                    return None;
+                }
+                let op_idx = mem_ops.len() as u16;
+                let offset = inc[rs1 as usize] + if post_inc { 0 } else { i64::from(imm) };
+                mem_ops.push(SbMemOp {
+                    rs1,
+                    offset,
+                    stride: 0,
+                    bytes: size.bytes(),
+                    write: true,
+                });
+                if post_inc && rs1 != 0 {
+                    inc[rs1 as usize] += i64::from(imm);
+                }
+                SbStep::Mem { write: true, size, reg: rs2, rs1, imm, post_inc, op_idx }
+            }
+            Inst::Branch { .. }
+            | Inst::Jal { .. }
+            | Inst::Jalr { .. }
+            | Inst::LpSetup { .. }
+            | Inst::Barrier
+            | Inst::Halt => unreachable!("caller checked is_straight_line_body"),
+        };
+        if let Some(rd) = prog.insts[p].dst() {
+            if rd != 0 {
+                written[rd as usize] = true;
+            }
+        }
+        steps.push(step);
+    }
+    for op in &mut mem_ops {
+        op.stride = inc[op.rs1 as usize];
+    }
+    // An address base overwritten by anything other than its own
+    // post-increments is not affine — no closed form, no plan.
+    if mem_ops.iter().any(|op| written[op.rs1 as usize]) {
+        return None;
+    }
+    let entry_pending = match steps.last() {
+        Some(&SbStep::Mem { write: false, reg, .. }) => Some(reg),
+        _ => None,
+    };
+    Some(SbPlan { steps, mem_ops, entry_pending })
+}
+
 /// The predecoded side-table of a program, built once per run.
 pub struct PreDecoded {
     pub recs: Vec<Decoded>,
+    /// Replay candidates: one per hardware loop with a straight-line
+    /// body, in program order.
+    pub superblocks: Vec<Superblock>,
+    /// `body_start` pc → index into `superblocks` (body starts are
+    /// unique: one `LpSetup` per pc). O(1) lookup keeps the per-issue
+    /// poll in the cluster scheduler cheap when no superblock applies.
+    pub sb_at: Vec<Option<u16>>,
 }
 
 impl PreDecoded {
@@ -104,9 +296,32 @@ impl PreDecoded {
 }
 
 impl Program {
-    /// Flatten every instruction into its dense hot-path record.
+    /// Flatten every instruction into its dense hot-path record and
+    /// collect the superblock replay candidates.
     pub fn predecode(&self) -> PreDecoded {
-        PreDecoded { recs: self.insts.iter().map(Decoded::of).collect() }
+        let recs = self.insts.iter().map(Decoded::of).collect();
+        let mut superblocks = Vec::new();
+        let mut sb_at = vec![None; self.insts.len()];
+        for (pc, inst) in self.insts.iter().enumerate() {
+            let Inst::LpSetup { lp, body_end, .. } = *inst else { continue };
+            if lp >= 2
+                || body_end <= pc + 1
+                || body_end > self.insts.len()
+                || superblocks.len() >= u16::MAX as usize
+                || !is_straight_line_body(self, pc + 1, body_end)
+            {
+                continue;
+            }
+            sb_at[pc + 1] = Some(superblocks.len() as u16);
+            superblocks.push(Superblock {
+                lp,
+                setup_pc: pc,
+                body_start: pc + 1,
+                body_end,
+                plan: build_plan(self, pc + 1, body_end),
+            });
+        }
+        PreDecoded { recs, superblocks, sb_at }
     }
 }
 

@@ -55,11 +55,13 @@ pub enum Intent {
     Halted,
 }
 
+/// Hardware-loop channel state; `pub(super)` so the superblock replay
+/// layer can check entry conditions and commit batched trip counts.
 #[derive(Debug, Clone, Copy, Default)]
-struct HwLoop {
-    start: usize,
-    end: usize,
-    remaining: u32,
+pub(super) struct HwLoop {
+    pub(super) start: usize,
+    pub(super) end: usize,
+    pub(super) remaining: u32,
 }
 
 /// One RI5CY-class core.
@@ -69,13 +71,13 @@ pub struct Core {
     pub pc: usize,
     pub state: CoreState,
     pub stats: CoreStats,
-    loops: [HwLoop; 2],
+    pub(super) loops: [HwLoop; 2],
     /// Extra cycles the current instruction still occupies.
     busy: u64,
     /// Destination of a load retired in the previous cycle (interlock).
-    pending_load: Option<Reg>,
+    pub(super) pending_load: Option<Reg>,
     /// Per-core I$ footprint (PCs executed at least once).
-    seen: Vec<bool>,
+    pub(super) seen: Vec<bool>,
 }
 
 impl Core {

@@ -5,13 +5,35 @@
 //! divider, zero-overhead hardware loops, and packed-SIMD / smallFloat
 //! datapaths. Memory and FPU *timing* (bank conflicts, shared-FPU
 //! contention) are arbitrated by the owning fabric ([`crate::cluster`]) via
-//! the [`Core::intent`] / [`Core::retire`] two-phase protocol; the core
-//! itself is cycle-accurate for everything private to it.
+//! a two-phase protocol: [`Core::begin_cycle`] reports the core's
+//! [`Intent`] for the cycle, and the fabric answers with
+//! [`Core::retire_mem`] / [`Core::retire_fp`] or a denial. The core itself
+//! is cycle-accurate for everything private to it.
+//!
+//! # The three execution tiers (§Perf)
+//!
+//! The same instruction semantics run at three speeds, each held
+//! bit-identical to the one below it by `tests/scheduler_equivalence.rs`:
+//!
+//! 1. **Reference scheduler** (`SchedulerMode::Reference`) — the retained
+//!    one-cycle-per-loop-iteration cluster driver; the oracle.
+//! 2. **Fast interpreter** (`SchedulerMode::CycleSkip`, the default) —
+//!    the same per-cycle core model driven through the predecoded
+//!    side-table ([`crate::isa::predecode`]), with pure-stall windows
+//!    skipped in one step.
+//! 3. **Superblock replay** ([`superblock`]) — straight-line hardware-loop
+//!    bodies promoted to cached traces and replayed N iterations at a
+//!    time when the dynamic entry conditions match; any mismatch falls
+//!    back to tier 2 (`VEGA_SUPERBLOCKS=off` disables the tier).
+//!
+//! See `PERFORMANCE.md` at the repo root for how the tiers compose with
+//! the caching layers above them.
 
 pub mod core;
 pub mod exec;
 pub mod softfloat;
 pub mod stats;
+pub mod superblock;
 pub mod trace;
 
 pub use self::core::{Core, CoreState, Intent, MemReq};

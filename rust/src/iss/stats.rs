@@ -64,6 +64,20 @@ impl ClassCounts {
         }
     }
 
+    /// Add `k` copies of another count set in one step (the superblock
+    /// replay path commits `k` identical loop iterations at once).
+    pub fn add_scaled(&mut self, o: &ClassCounts, k: u64) {
+        self.alu += o.alu * k;
+        self.mul += o.mul * k;
+        self.div += o.div * k;
+        self.load += o.load * k;
+        self.store += o.store * k;
+        self.branch += o.branch * k;
+        self.fp += o.fp * k;
+        self.simd += o.simd * k;
+        self.control += o.control * k;
+    }
+
     pub fn total(&self) -> u64 {
         self.alu
             + self.mul

@@ -1,0 +1,430 @@
+//! Superblock trace replay (§Perf, hot-path layer 3).
+//!
+//! The predecode pass promotes every straight-line hardware-loop body —
+//! the same shape the static analyzer reports as a `SuperblockCandidate`
+//! finding — into a [`Superblock`]: an effect list plus an affine summary
+//! of every memory access. When the cluster's fast scheduler sees exactly
+//! one core able to issue (everyone else halted or parked at a barrier
+//! that cannot release), [`try_replay`] checks the *dynamic* entry
+//! conditions and, if they hold, executes `k` whole iterations as one
+//! batched effect: data writes replayed concretely, timing and statistics
+//! committed in closed form from a per-iteration profile walked over the
+//! predecoded records.
+//!
+//! # Entry conditions (any failure counts a bail and falls back)
+//!
+//! * the loop channel matches the superblock and has ≥ 2 trips left
+//!   (the final iteration is always interpreted, so loop-exit bookkeeping
+//!   stays on the oracle-verified path);
+//! * the body has a closed-form plan (no address base rewritten inside
+//!   the body), the other loop channel cannot steal a back edge inside
+//!   the window, every body pc is warm in the I$, and the pending-load
+//!   interlock state matches the steady-state profile;
+//! * every access's affine address range stays inside one memory region
+//!   (TCDM or L2) for the whole window, exact in wide arithmetic;
+//! * the shared DIV-SQRT unit is free by the window's first issue.
+//!
+//! # Why the batch is exact
+//!
+//! With a single requester there is no arbitration: every TCDM access is
+//! granted (round-robin pointer parked at `winner + 1`, the same value
+//! after every grant), every FPU issue succeeds, and consecutive DIV-SQRT
+//! issues are provably spaced by at least their latency (the profile
+//! advances past each issue by its full latency, so `cpi` bounds the
+//! spacing). The replay window ends exactly where the interpreter would
+//! issue the first instruction of the iteration after the window, with
+//! `busy = 0` and the profiled pending-load state — so the interpreter
+//! resumes mid-loop with no seam. `tests/scheduler_equivalence.rs` holds
+//! replay-on runs bit-identical (stats, memory, register files) to
+//! replay-off and to the reference scheduler across the whole
+//! `verify_targets()` suite.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use crate::cluster::{
+    FpuFabric, Tcdm, CLUSTER_TO_L2_LATENCY, L2_BASE, L2_SIZE, TCDM_BASE, TCDM_SIZE,
+};
+use crate::isa::predecode::{PreDecoded, SbMemOp, SbPlan, SbStep, Superblock};
+
+use super::core::Core;
+use super::exec;
+use super::stats::ClassCounts;
+use super::{FlatMem, Memory};
+
+/// Process-wide replay telemetry (`vega repro <id> --stats` prints it):
+/// windows replayed, entry-condition bails, iterations batched. Relaxed
+/// atomics — diagnostics only, never part of simulation results.
+static HITS: AtomicU64 = AtomicU64::new(0);
+static BAILS: AtomicU64 = AtomicU64::new(0);
+static ITERS: AtomicU64 = AtomicU64::new(0);
+
+/// (windows replayed, bails, iterations batched) since process start.
+pub fn counters() -> (u64, u64, u64) {
+    (
+        HITS.load(Ordering::Relaxed),
+        BAILS.load(Ordering::Relaxed),
+        ITERS.load(Ordering::Relaxed),
+    )
+}
+
+/// Process-default for [`crate::cluster::Cluster::superblocks`]:
+/// `VEGA_SUPERBLOCKS=off|0|false|no` disables replay (the escape hatch —
+/// results are bit-identical either way, only wall-clock changes).
+pub fn env_default() -> bool {
+    static DEFAULT: OnceLock<bool> = OnceLock::new();
+    *DEFAULT.get_or_init(|| match std::env::var("VEGA_SUPERBLOCKS") {
+        Ok(v) => !matches!(v.to_ascii_lowercase().as_str(), "off" | "0" | "false" | "no"),
+        Err(_) => true,
+    })
+}
+
+/// Per-iteration timing/statistics profile of one steady-state trip,
+/// walked from the predecoded records exactly as `Core::begin_cycle`
+/// would spend the cycles.
+struct IterProfile {
+    /// Cycles from one iteration's first dispatch to the next one's.
+    cpi: u64,
+    /// Load-use interlock stalls per iteration.
+    interlocks: u64,
+    /// `multicycle_busy` charged per iteration (ALU/FP latency + L2).
+    multicycle: u64,
+    int_ops: u64,
+    flops: u64,
+    bytes_loaded: u64,
+    bytes_stored: u64,
+    class: ClassCounts,
+    /// Pipelined FPU issues per iteration (excludes DIV-SQRT).
+    n_fp: u64,
+    /// DIV-SQRT issues per iteration, with first/last issue offsets and
+    /// the last issue's latency (for the unit's busy horizon).
+    n_ds: u64,
+    ds_first: u64,
+    ds_last: u64,
+    ds_last_lat: u64,
+    /// TCDM accesses per iteration (each granted: single requester).
+    n_tcdm: u64,
+}
+
+fn profile(pre: &PreDecoded, sb: &Superblock, plan: &SbPlan, tcdm_op: &[bool]) -> IterProfile {
+    let mut p = IterProfile {
+        cpi: 0,
+        interlocks: 0,
+        multicycle: 0,
+        int_ops: 0,
+        flops: 0,
+        bytes_loaded: 0,
+        bytes_stored: 0,
+        class: ClassCounts::default(),
+        n_fp: 0,
+        n_ds: 0,
+        ds_first: 0,
+        ds_last: 0,
+        ds_last_lat: 0,
+        n_tcdm: 0,
+    };
+    let mut t = 0u64;
+    let mut pending = plan.entry_pending;
+    for (j, step) in plan.steps.iter().enumerate() {
+        let dec = &pre.recs[sb.body_start + j];
+        // Load-use interlock: one stall cycle iff the previous step's
+        // load destination is in this instruction's source mask (the
+        // interlock test only runs on dispatch cycles, so the pending
+        // register survives any busy drain in between — same as the
+        // interpreter's take-on-issue semantics).
+        if let Some(ld) = pending.take() {
+            if dec.src_mask & (1u32 << ld) != 0 {
+                t += 1;
+                p.interlocks += 1;
+            }
+        }
+        let issue_at = t;
+        t += 1;
+        p.class.bump(dec.class);
+        p.int_ops += dec.int_ops;
+        p.flops += dec.flops;
+        match *step {
+            SbStep::Mem { write, reg, op_idx, .. } => {
+                let bytes = u64::from(plan.mem_ops[op_idx as usize].bytes);
+                if tcdm_op[op_idx as usize] {
+                    p.n_tcdm += 1;
+                } else {
+                    t += CLUSTER_TO_L2_LATENCY;
+                    p.multicycle += CLUSTER_TO_L2_LATENCY;
+                }
+                if write {
+                    p.bytes_stored += bytes;
+                } else {
+                    p.bytes_loaded += bytes;
+                    pending = Some(reg);
+                }
+            }
+            SbStep::Alu { extra, .. } | SbStep::AluImm { extra, .. } => {
+                t += extra;
+                p.multicycle += extra;
+            }
+            SbStep::Fp { extra, divsqrt, .. } => {
+                if divsqrt {
+                    if p.n_ds == 0 {
+                        p.ds_first = issue_at;
+                    }
+                    p.n_ds += 1;
+                    p.ds_last = issue_at;
+                    p.ds_last_lat = extra + 1;
+                }
+                if !divsqrt {
+                    p.n_fp += 1;
+                }
+                t += extra;
+                p.multicycle += extra;
+            }
+            SbStep::Li { .. }
+            | SbStep::Mac { .. }
+            | SbStep::Msu { .. }
+            | SbStep::Simd { .. }
+            | SbStep::Nop => {}
+        }
+    }
+    p.cpi = t;
+    p
+}
+
+/// Classify every access's address range over `k` iterations: `true` for
+/// TCDM-resident, `false` for L2-resident, `None` (bail) when a range
+/// leaves both regions or would wrap. Affine addresses are monotone in
+/// the iteration index, so checking both endpoints (in `i128`, exact)
+/// bounds every access in between.
+fn classify_regions(plan: &SbPlan, regs: &[u32; 32], k: u64, out: &mut Vec<bool>) -> bool {
+    const TCDM_LO: i128 = TCDM_BASE as i128;
+    const TCDM_HI: i128 = TCDM_BASE as i128 + TCDM_SIZE as i128;
+    const L2_LO: i128 = L2_BASE as i128;
+    const L2_HI: i128 = L2_BASE as i128 + L2_SIZE as i128;
+    out.clear();
+    for op in &plan.mem_ops {
+        let a0 = i128::from(regs[op.rs1 as usize]) + i128::from(op.offset);
+        let alast = a0 + (i128::from(k) - 1) * i128::from(op.stride);
+        let (lo, hi) = if a0 <= alast { (a0, alast) } else { (alast, a0) };
+        let hi = hi + i128::from(op.bytes) - 1;
+        if lo < 0 || hi > u32::MAX as i128 {
+            return false;
+        }
+        if lo >= TCDM_LO && hi < TCDM_HI {
+            out.push(true);
+        } else if lo >= L2_LO && hi < L2_HI {
+            out.push(false);
+        } else {
+            return false;
+        }
+    }
+    true
+}
+
+/// Banks touched by one TCDM-resident access over `k` iterations.
+/// `bank_of` depends only on `addr mod 64`, which is periodic in the
+/// iteration index with period ≤ 64 — enumerating `min(k, 64)`
+/// iterations covers the full orbit.
+fn touched_banks(op: &SbMemOp, regs: &[u32; 32], k: u64) -> u16 {
+    let a0 = i128::from(regs[op.rs1 as usize]) + i128::from(op.offset);
+    let mut m = 0u16;
+    for i in 0..k.min(64) {
+        let a = (a0 + i128::from(i) * i128::from(op.stride)) as u32;
+        m |= 1u16 << Tcdm::bank_of(a);
+    }
+    m
+}
+
+fn bail() -> Option<u64> {
+    BAILS.fetch_add(1, Ordering::Relaxed);
+    None
+}
+
+/// Attempt to replay a superblock window on `core`, which the caller
+/// guarantees is the only core able to issue this cycle (no arbitration).
+/// Returns the window length in cycles (stats, registers, memory, loop
+/// state and fabric bookkeeping already committed), or `None` to let the
+/// interpreter proceed. A `None` on a genuine candidate counts a bail;
+/// "not at a replayable loop entry at all" stays silent.
+pub(crate) fn try_replay(
+    pre: &PreDecoded,
+    core: &mut Core,
+    tcdm: &mut Tcdm,
+    l2: &mut FlatMem,
+    fpus: &mut FpuFabric,
+    cycle: u64,
+    max_cycles: u64,
+) -> Option<u64> {
+    let sb_idx = (*pre.sb_at.get(core.pc)?)?;
+    let sb = &pre.superblocks[sb_idx as usize];
+    let ch = sb.lp as usize;
+    let lp = core.loops[ch];
+    if lp.remaining < 2 || lp.start != sb.body_start || lp.end != sb.body_end {
+        // Final trip, dead channel, or a different loop configured on the
+        // same channel: the interpreter path is already the right one.
+        return None;
+    }
+    let Some(plan) = &sb.plan else {
+        return bail();
+    };
+    // The other loop channel must not be able to steal a back edge
+    // inside the body. An lp0 back edge at the shared body end outranks
+    // a replayed lp1 (the core checks lp0 first); the converse is safe
+    // because a replayed lp0 with trips left returns before lp1 is
+    // consulted.
+    let other = core.loops[1 - ch];
+    if other.remaining > 0 {
+        let mid_body = other.end > sb.body_start && other.end < sb.body_end;
+        let outranked = ch == 1 && other.end == sb.body_end;
+        if mid_body || outranked {
+            return bail();
+        }
+    }
+    if core.pending_load != plan.entry_pending {
+        // First arrival after LpSetup when the body ends in a load: the
+        // steady-state interlock profile doesn't hold yet. One
+        // interpreted iteration establishes it.
+        return bail();
+    }
+    if !core.seen[sb.body_start..sb.body_end].iter().all(|&s| s) {
+        // Cold I$ lines in the body: let the interpreter pay the
+        // compulsory misses, then replay from the next entry.
+        return bail();
+    }
+    let k_max = u64::from(lp.remaining - 1);
+    let mut regions = Vec::with_capacity(plan.mem_ops.len());
+    if !classify_regions(plan, &core.regs, k_max, &mut regions) {
+        return bail();
+    }
+    let prof = profile(pre, sb, plan, &regions);
+    debug_assert!(prof.cpi >= plan.steps.len() as u64);
+    if prof.n_ds > 0 && fpus.divsqrt_free_at() > cycle + prof.ds_first {
+        return bail();
+    }
+    let k = k_max.min((max_cycles - cycle) / prof.cpi);
+    if k == 0 {
+        return bail();
+    }
+
+    // Bank footprint from the *entry* register values (the replay below
+    // mutates the address bases).
+    let mut banks = 0u16;
+    if prof.n_tcdm > 0 {
+        for (op, &is_tcdm) in plan.mem_ops.iter().zip(&regions) {
+            if is_tcdm {
+                banks |= touched_banks(op, &core.regs, k);
+            }
+        }
+    }
+
+    // ---- Execute k iterations of concrete data effects. ----
+    let regs = &mut core.regs;
+    for _ in 0..k {
+        for step in &plan.steps {
+            match *step {
+                SbStep::Alu { op, rd, rs1, rs2, .. } => {
+                    let v = exec::alu(op, regs[rs1 as usize], regs[rs2 as usize]);
+                    if rd != 0 {
+                        regs[rd as usize] = v;
+                    }
+                }
+                SbStep::AluImm { op, rd, rs1, imm, .. } => {
+                    let v = exec::alu(op, regs[rs1 as usize], imm as u32);
+                    if rd != 0 {
+                        regs[rd as usize] = v;
+                    }
+                }
+                SbStep::Li { rd, imm } => {
+                    if rd != 0 {
+                        regs[rd as usize] = imm as u32;
+                    }
+                }
+                SbStep::Mac { rd, rs1, rs2 } => {
+                    let v = (regs[rd as usize] as i32).wrapping_add(
+                        (regs[rs1 as usize] as i32).wrapping_mul(regs[rs2 as usize] as i32),
+                    );
+                    if rd != 0 {
+                        regs[rd as usize] = v as u32;
+                    }
+                }
+                SbStep::Msu { rd, rs1, rs2 } => {
+                    let v = (regs[rd as usize] as i32).wrapping_sub(
+                        (regs[rs1 as usize] as i32).wrapping_mul(regs[rs2 as usize] as i32),
+                    );
+                    if rd != 0 {
+                        regs[rd as usize] = v as u32;
+                    }
+                }
+                SbStep::Simd { op, fmt, rd, rs1, rs2 } => {
+                    let v = exec::simd(
+                        op,
+                        fmt,
+                        regs[rs1 as usize],
+                        regs[rs2 as usize],
+                        regs[rd as usize],
+                    );
+                    if rd != 0 {
+                        regs[rd as usize] = v;
+                    }
+                }
+                SbStep::Fp { op, fmt, rd, rs1, rs2, .. } => {
+                    let v = exec::fp(
+                        op,
+                        fmt,
+                        regs[rs1 as usize],
+                        regs[rs2 as usize],
+                        regs[rd as usize],
+                    );
+                    if rd != 0 {
+                        regs[rd as usize] = v;
+                    }
+                }
+                SbStep::Mem { write, size, reg, rs1, imm, post_inc, op_idx } => {
+                    let addr = if post_inc {
+                        regs[rs1 as usize]
+                    } else {
+                        regs[rs1 as usize].wrapping_add(imm as u32)
+                    };
+                    let mem: &mut FlatMem =
+                        if regions[op_idx as usize] { &mut tcdm.mem } else { &mut *l2 };
+                    if write {
+                        mem.store(addr, size, regs[reg as usize]);
+                    } else {
+                        let v = mem.load(addr, size);
+                        if reg != 0 {
+                            regs[reg as usize] = v;
+                        }
+                    }
+                    if post_inc && rs1 != 0 {
+                        regs[rs1 as usize] = regs[rs1 as usize].wrapping_add(imm as u32);
+                    }
+                }
+                SbStep::Nop => {}
+            }
+        }
+    }
+
+    // ---- Commit timing, statistics and fabric bookkeeping. ----
+    let w = k * prof.cpi;
+    let s = &mut core.stats;
+    s.cycles += w;
+    s.retired += plan.steps.len() as u64 * k;
+    s.int_ops += prof.int_ops * k;
+    s.flops += prof.flops * k;
+    s.bytes_loaded += prof.bytes_loaded * k;
+    s.bytes_stored += prof.bytes_stored * k;
+    s.stall_loaduse += prof.interlocks * k;
+    s.multicycle_busy += prof.multicycle * k;
+    s.by_class.add_scaled(&prof.class, k);
+    core.loops[ch].remaining -= k as u32;
+    core.pending_load = plan.entry_pending;
+    if prof.n_tcdm > 0 {
+        tcdm.replay_commit(prof.n_tcdm * k, banks, core.id);
+    }
+    if prof.n_fp + prof.n_ds > 0 {
+        let ds_free = (prof.n_ds > 0)
+            .then(|| cycle + (k - 1) * prof.cpi + prof.ds_last + prof.ds_last_lat);
+        fpus.replay_commit((prof.n_fp + prof.n_ds) * k, prof.n_fp > 0, core.id, ds_free);
+    }
+    HITS.fetch_add(1, Ordering::Relaxed);
+    ITERS.fetch_add(k, Ordering::Relaxed);
+    Some(w)
+}

@@ -10,7 +10,9 @@
 //!
 //! * [`isa`] / [`iss`] — RV32IMF+Xpulp instruction set, in-Rust assembler,
 //!   and the per-core instruction-set simulator with the 4-stage timing
-//!   model (load-use stalls, branch penalty, hardware loops).
+//!   model (load-use stalls, branch penalty, hardware loops), executed
+//!   through three bit-identical speed tiers: reference scheduler, fast
+//!   interpreter, and superblock trace replay (`PERFORMANCE.md`).
 //! * [`cluster`] — the 9-core compute cluster: 16-bank word-interleaved L1
 //!   TCDM behind a logarithmic interconnect, 4 shared FPUs with static
 //!   core→FPU mapping, hierarchical instruction cache, event unit and
@@ -47,7 +49,9 @@
 //!   table and figure of the paper's evaluation.
 //!
 //! `README.md` is the newcomer entry point; `ARCHITECTURE.md` maps the
-//! sweep/exploration subsystem across modules.
+//! sweep/exploration subsystem across modules; `PERFORMANCE.md` collects
+//! the host-performance architecture (what makes the simulator fast and
+//! the invariant that keeps each layer honest).
 
 // The whole simulator is safe Rust by construction (guest memory is
 // Vec-backed, no FFI outside the gated PJRT bridge) — enforce it so a

@@ -8,7 +8,9 @@
 //!                           identical for any N — default VEGA_JOBS or
 //!                           the machine's parallelism); --stats prints
 //!                           the kernel- and network-cache counters
-//!                           (memory + both on-disk tiers) to stderr
+//!                           (memory + both on-disk tiers) and the
+//!                           superblock replay hit/bail counters to
+//!                           stderr
 //! vega sweep [--cores 1..9] [--precision int8,fp16,...]
 //!            [--dvfs-steps N] [--format csv|md|json] [--jobs N] [--stats]
 //!            [--resume] [--shard I/N] [--merge N]
@@ -61,8 +63,11 @@
 //! of the same grid or report serves everything from disk.
 //! `VEGA_CACHE=off|0|false|no`
 //! (case-insensitive) disables persistence — see
-//! `sweep::persist::DiskStore::open_default`. (Hand-rolled argument
-//! parsing: clap is unavailable offline, DESIGN.md §5.)
+//! `sweep::persist::DiskStore::open_default`. `VEGA_SUPERBLOCKS=off`
+//! (same spellings) disables the ISS superblock replay tier — results
+//! are bit-identical either way (see PERFORMANCE.md), only wall-clock
+//! changes. (Hand-rolled argument parsing: clap is unavailable offline,
+//! DESIGN.md §5.)
 //!
 //! Crash safety (ISSUE 7): every `sweep`/`faults`/`lifecycle` grid run
 //! journals one checksummed record per completed cell under
@@ -165,6 +170,11 @@ fn main() {
                      disk(sim): {}; disk(net): {}",
                     fmt_disk(eng.disk_counters(), we.0),
                     fmt_disk(eng.disk_net_counters(), we.1),
+                );
+                let (sbh, sbb, sbi) = vega::iss::superblock::counters();
+                eprintln!(
+                    "superblocks: {sbh} windows replayed / {sbb} bails / \
+                     {sbi} loop iterations batched"
                 );
             }
         }

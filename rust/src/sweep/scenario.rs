@@ -45,10 +45,15 @@ impl SimArena {
     /// Restore the freshly-built state in place. Pins the scheduler back
     /// to the default cycle-skip fast path too: the cache key has no
     /// scheduler component, so a scenario must never be simulated (and
-    /// cached) on anything but the default scheduler.
+    /// cached) on anything but the default scheduler. Superblock replay
+    /// is likewise pinned to the process default (`VEGA_SUPERBLOCKS`) —
+    /// also keyless, which is safe because replay is bit-identical to
+    /// the interpreter (tests/scheduler_equivalence.rs), so cached
+    /// results never depend on the setting.
     pub fn reset(&mut self) {
         self.cluster.reset();
         self.cluster.scheduler = crate::cluster::SchedulerMode::CycleSkip;
+        self.cluster.superblocks = crate::iss::superblock::env_default();
         self.l2.reset();
     }
 }

@@ -7,8 +7,16 @@
 //! (barrier parking), a DIV/REM-heavy microkernel (35-cycle busy drains),
 //! an FDIV/FSQRT kernel (shared DIV-SQRT unit) and L2-crossing loads
 //! (AXI-bridge latency), each at 1, 4 and 8 active cores.
+//!
+//! The superblock trace-replay tier (`vega::iss::superblock`) rides on
+//! the same contract: the `superblock_*` tests below assert bit-identity
+//! between replay-on and interpreter-only runs over every
+//! `vega verify` target, exercise the adversarial bail paths (trip
+//! counts mutated mid-run, pointer-chase bodies that defeat the affine
+//! address plan), and reconcile the batched `ClusterStats` against the
+//! instruction-by-instruction traced single-core run.
 
-use vega::cluster::{Cluster, SchedulerMode, L2_BASE, TCDM_BASE};
+use vega::cluster::{Cluster, SchedulerMode, L2_BASE, TCDM_BASE, TCDM_SIZE};
 use vega::common::Rng;
 use vega::isa::{Asm, Program, Reg, A0, A1, A2, A3, T0, T1, T2};
 use vega::iss::FlatMem;
@@ -222,4 +230,192 @@ fn run_program_reference_entry_point_matches() {
     let s2 =
         c2.run_program_reference(&prog, 4, &mut FlatMem::new(L2_BASE, 4096), init, 1_000_000);
     assert_eq!(s1, s2);
+}
+
+// ---------------------------------------------------------------------------
+// Superblock trace replay (vega::iss::superblock)
+// ---------------------------------------------------------------------------
+
+/// Run `prog` with the superblock replayer forced on and forced off and
+/// assert bit-identical end state. Both runs use the fast scheduler, so
+/// any divergence is attributable to the replay tier alone.
+fn assert_superblock_equivalent(
+    prog: &Program,
+    cores: usize,
+    setup: impl Fn(&mut Cluster, &mut FlatMem),
+    init: impl Fn(usize) -> Vec<(Reg, u32)> + Copy,
+    label: &str,
+) {
+    let run = |sb: bool| {
+        let mut cl = Cluster::new();
+        cl.superblocks = sb;
+        let mut l2 = FlatMem::new(L2_BASE, 64 * 1024);
+        setup(&mut cl, &mut l2);
+        let stats = cl.run_program(prog, cores, &mut l2, init, MAX_CYCLES);
+        (cl, l2, stats)
+    };
+    let (cl_on, l2_on, stats_on) = run(true);
+    let (cl_off, l2_off, stats_off) = run(false);
+
+    assert!(stats_on.cycles > 0, "{label}/c{cores}: empty run");
+    assert_eq!(stats_on, stats_off, "{label}/c{cores}: stats diverge");
+    assert_eq!(
+        cl_on.tcdm.mem.data, cl_off.tcdm.mem.data,
+        "{label}/c{cores}: TCDM contents diverge"
+    );
+    assert_eq!(l2_on.data, l2_off.data, "{label}/c{cores}: L2 contents diverge");
+    for (a, b) in cl_on.cores[..cores].iter().zip(&cl_off.cores[..cores]) {
+        assert_eq!(a.regs, b.regs, "{label}/c{cores}: core {} regfile diverges", a.id);
+    }
+}
+
+#[test]
+fn superblock_replay_bit_identical_on_all_verify_targets() {
+    // Every `vega verify` target — the full shipped kernel surface the
+    // static verifier covers — must be bit-identical with replay on vs
+    // off, both single-core (replay engages on every hot loop) and at
+    // the target's own core count (replay engages during barrier skew).
+    for t in vega::sweep::verify_targets() {
+        for cores in [1, t.n_cores] {
+            assert_superblock_equivalent(
+                &t.prog,
+                cores,
+                |_, _| {},
+                |i| t.entry[i].clone(),
+                &t.name,
+            );
+        }
+    }
+}
+
+#[test]
+fn superblock_trip_count_mutation_is_exact() {
+    // Adversarial: a Reg-count inner loop whose count register is
+    // mutated both *inside* the body and between outer iterations. The
+    // hardware snapshots the count at LpSetup time, so each replay must
+    // honour the snapshot, never the live register.
+    let mut a = Asm::new("trip-mutate");
+    let outer = a.label();
+    let end = a.label();
+    a.bind(outer);
+    a.lp_setup(0, T2, end);
+    a.lw_pi(T0, A0, 4);
+    a.add(A2, A2, T0);
+    a.addi(T2, T2, 1); // mutate the count reg mid-body: must not retrip
+    a.bind(end);
+    a.addi(A3, A3, 1);
+    a.addi(T2, T2, 3); // and between setups: next snapshot differs
+    a.bne(A3, A1, outer);
+    a.barrier();
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    let init = |i: usize| {
+        vec![
+            (A0, TCDM_BASE + 0x400 + 0x800 * i as u32),
+            (A1, 4u32),
+            (T2, 4u32),
+        ]
+    };
+    for cores in [1usize, 4] {
+        // Replay-on vs interpreter-only, and fast vs reference.
+        assert_superblock_equivalent(&prog, cores, |_, _| {}, init, "trip-mutate");
+        assert_prog_equivalent(&prog, cores, |_, _| {}, init, "trip-mutate");
+    }
+}
+
+#[test]
+fn superblock_pointer_chase_bails_to_interpreter() {
+    // A load whose base register is its own destination defeats the
+    // affine address plan (`SbPlan` is None), so every window entry must
+    // bail to the interpreter — and stay bit-identical doing so.
+    let mut a = Asm::new("ptr-chase");
+    let end = a.label();
+    a.lp_setup_imm(0, 16, end);
+    a.lw(A0, A0, 0);
+    a.addi(A2, A2, 1);
+    a.bind(end);
+    a.barrier();
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    let seed = |cl: &mut Cluster, _: &mut FlatMem| {
+        // Word-aligned pointer chain inside TCDM (every cell points at
+        // another cell; (i*28 + 4) mod 256 keeps 4-byte alignment).
+        let vals: Vec<i32> =
+            (0..64).map(|i| (TCDM_BASE + (i as u32 * 28 + 4) % 256) as i32).collect();
+        cl.tcdm.mem.write_i32s(TCDM_BASE, &vals);
+    };
+    let init = |_: usize| vec![(A0, TCDM_BASE)];
+    for cores in [1usize, 4] {
+        assert_superblock_equivalent(&prog, cores, seed, init, "ptr-chase");
+        assert_prog_equivalent(&prog, cores, seed, init, "ptr-chase");
+    }
+}
+
+#[test]
+fn superblock_counters_engage_on_hot_loop() {
+    // The --stats counters must actually move: a 100-iteration
+    // streaming loop on one core replays at least one window covering
+    // most iterations. Counters are process-wide monotonic atomics, so
+    // under parallel test threads the observed delta can only be >= the
+    // contribution of this run.
+    let mut a = Asm::new("sb-stream");
+    let end = a.label();
+    a.lp_setup_imm(0, 100, end);
+    a.lw_pi(T0, A0, 4);
+    a.add(A2, A2, T0);
+    a.bind(end);
+    a.halt();
+    let prog = a.finish().unwrap();
+
+    let (h0, _, i0) = vega::iss::superblock::counters();
+    let mut cl = Cluster::new();
+    cl.superblocks = true;
+    let mut l2 = FlatMem::new(L2_BASE, 4096);
+    let stats =
+        cl.run_program(&prog, 1, &mut l2, |_| vec![(A0, TCDM_BASE + 0x100)], MAX_CYCLES);
+    let (h1, _, i1) = vega::iss::superblock::counters();
+
+    assert!(stats.cycles > 0);
+    assert!(h1 - h0 >= 1, "expected at least one replayed window (got {})", h1 - h0);
+    assert!(
+        i1 - i0 >= 90,
+        "expected >=90 batched iterations from a 100-trip loop (got {})",
+        i1 - i0
+    );
+}
+
+#[test]
+fn superblock_stats_reconcile_with_traced_single_core() {
+    // Batched ClusterStats must agree *counter by counter* with the
+    // instruction-by-instruction traced run: same core model, same
+    // TCDM-resident addresses, no barrier (the event unit only exists
+    // cluster-side). This pins the per-iteration profile — retires,
+    // class counts, ops, bytes, load-use stalls — not just cycles.
+    let mut a = Asm::new("sb-reconcile");
+    let end = a.label();
+    a.lp_setup_imm(0, 64, end);
+    a.lw_pi(T0, A0, 4);
+    a.mul(T1, T0, T0);
+    a.add(A2, A2, T1);
+    a.sw_pi(A2, A1, 4);
+    a.bind(end);
+    a.lw(A3, A0, -4);
+    a.halt();
+    let prog = a.finish().unwrap();
+    let entry = vec![(A0, TCDM_BASE + 0x1000), (A1, TCDM_BASE + 0x2000), (A2, 3u32)];
+
+    let mut cl = Cluster::new();
+    cl.superblocks = true;
+    let mut l2 = FlatMem::new(L2_BASE, 4096);
+    let stats = cl.run_program(&prog, 1, &mut l2, |_| entry.clone(), MAX_CYCLES);
+
+    let mut mem = FlatMem::new(TCDM_BASE, TCDM_SIZE);
+    let trace = vega::iss::run_single_traced(&prog, &mut mem, &entry, MAX_CYCLES);
+
+    assert_eq!(
+        stats.per_core[0], trace.stats,
+        "replayed cluster core stats diverge from the traced single-core run"
+    );
 }

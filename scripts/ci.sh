@@ -27,11 +27,16 @@
 # cells, and drive the cache-degradation paths (unusable and read-only
 # store directories) to completed in-memory runs; the clippy
 # gate fails on any
-# non-allow-listed lint; and the key-stability gate runs the
+# non-allow-listed lint; the key-stability gate runs the
 # golden-vector tests that pin the on-disk cache-key byte encoding (a
 # drift there silently orphans every persisted entry everywhere — it must
 # only ever happen as a deliberate ISA_ENCODING_VERSION/
-# NET_ENCODING_VERSION bump that updates the vectors).
+# NET_ENCODING_VERSION bump that updates the vectors); the superblock
+# smoke re-runs the table5 repro with VEGA_SUPERBLOCKS=off and asserts
+# byte-identical output (the ISS trace-replay tier must be
+# behaviour-invisible, see PERFORMANCE.md); and the docs link gate fails
+# on any broken relative link between the top-level markdown docs
+# (README/ARCHITECTURE/PERFORMANCE/EXPERIMENTS).
 #
 # Runs on the toolchain pinned by rust-toolchain.toml; the GitHub Actions
 # workflow (.github/workflows/ci.yml) executes this script verbatim.
@@ -67,6 +72,36 @@ echo "== cargo doc --no-deps (warnings fatal) =="
 # cannot gate; the bin is a thin CLI over the documented library.
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --lib --quiet
 
+echo "== docs link gate (README/ARCHITECTURE/PERFORMANCE/EXPERIMENTS) =="
+# Every relative markdown link between the top-level docs must resolve
+# from the repo root (all four live there). External/fragment-only
+# targets are skipped; in-repo targets are checked with test -e after
+# stripping any #fragment. Pure grep/sed — no new tooling.
+(
+    cd ..
+    fail=0
+    for doc in README.md ARCHITECTURE.md PERFORMANCE.md EXPERIMENTS.md; do
+        if [ ! -f "$doc" ]; then
+            echo "FAIL: expected top-level doc $doc is missing"
+            fail=1
+            continue
+        fi
+        while IFS= read -r target; do
+            case "$target" in
+                http://*|https://*|mailto:*|'#'*) continue ;;
+            esac
+            path="${target%%#*}"
+            [ -n "$path" ] || continue
+            if [ ! -e "$path" ]; then
+                echo "FAIL: $doc links to missing path: $target"
+                fail=1
+            fi
+        done < <(grep -oE '\]\([^)]+\)' "$doc" | sed 's/^](//; s/)$//')
+    done
+    exit "$fail"
+)
+echo "every relative link between the top-level docs resolves"
+
 echo "== static-verifier gate (vega verify all + analyzer goldens) =="
 # ISSUE 9: every shipped kernel program must pass CFG/dataflow/memory-map
 # analysis with zero error-severity findings (exit 0), and each seeded
@@ -96,6 +131,14 @@ VEGA_CACHE=off ./target/release/vega repro table5 --jobs 1 > target/ci/repro_tab
 VEGA_CACHE=off ./target/release/vega repro table5 --jobs 2 > target/ci/repro_table5_jobs2.txt
 diff target/ci/repro_table5_serial.txt target/ci/repro_table5_jobs2.txt
 echo "parallel repro output is byte-identical to serial"
+
+echo "== superblock smoke (vega repro table5: VEGA_SUPERBLOCKS=off vs default) =="
+# The ISS trace-replay tier (PERFORMANCE.md) must be invisible in every
+# reproduced number: the same serial repro with replay disabled has to
+# produce the exact bytes of the default (replay-on) run above.
+VEGA_CACHE=off VEGA_SUPERBLOCKS=off ./target/release/vega repro table5 --jobs 1 > target/ci/repro_table5_nosb.txt
+diff target/ci/repro_table5_serial.txt target/ci/repro_table5_nosb.txt
+echo "superblock replay on vs off is byte-identical"
 
 echo "== vega sweep smoke grid (serial vs --jobs 2) =="
 SWEEP_GRID=(--cores 1..2 --precision int8,fp16 --dvfs-steps 5 --format csv)
